@@ -1,0 +1,45 @@
+//! Hardware/dataflow co-design sweep — the DSE loop MMEE is built for
+//! (paper §I: "dataflow mapping ... repeatedly invoked when evaluating
+//! various hardware architectures"). Sweeps buffer capacity and PE-array
+//! shape for a fixed workload and prints the EDP landscape.
+//!
+//! ```sh
+//! cargo run --release --example codesign_sweep
+//! ```
+
+use mmee::config::presets;
+use mmee::search::{MmeeEngine, Objective};
+
+fn main() {
+    let engine = MmeeEngine::native();
+    let w = presets::gpt3_13b(2048);
+
+    println!("== buffer-capacity sweep (32x32 PEs, GPT-3-13B @ 2K) ==");
+    println!("{:>8} {:>12} {:>12} {:>14} {:>12}", "buffer", "energy(mJ)", "lat(ms)", "EDP(mJ*ms)", "DA(Mwords)");
+    for kb in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let accel = presets::accel1().with_buffer_bytes(kb << 10);
+        let s = engine.optimize(&w, &accel, Objective::Edp);
+        println!(
+            "{:>6}KB {:>12.3} {:>12.3} {:>14.4} {:>12.2}",
+            kb,
+            s.metrics.energy * 1e3,
+            s.metrics.latency * 1e3,
+            s.metrics.edp() * 1e6,
+            s.metrics.da / 1e6
+        );
+    }
+
+    println!("\n== PE-array shape sweep (1 MB buffer, 1024 PEs, Fig. 27 style) ==");
+    println!("{:>10} {:>12} {:>12} {:>14}", "shape", "energy(mJ)", "lat(ms)", "EDP(mJ*ms)");
+    for (pr, pc) in [(8usize, 128usize), (16, 64), (32, 32), (64, 16), (128, 8)] {
+        let accel = presets::accel1().with_pe_shape(pr, pc);
+        let s = engine.optimize(&w, &accel, Objective::Edp);
+        println!(
+            "{:>5}x{:<4} {:>12.3} {:>12.3} {:>14.4}",
+            pr, pc,
+            s.metrics.energy * 1e3,
+            s.metrics.latency * 1e3,
+            s.metrics.edp() * 1e6
+        );
+    }
+}

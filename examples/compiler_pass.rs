@@ -1,0 +1,42 @@
+//! MMEE as a compiler scheduling pass (paper §VII-L): given a small
+//! transformer-layer "graph" (attention + FFN pair), pick a dataflow for
+//! each fusable operator pair and emit a textual schedule the backend
+//! code generator would consume.
+//!
+//! ```sh
+//! cargo run --release --example compiler_pass
+//! ```
+
+use mmee::config::presets;
+use mmee::search::{MmeeEngine, Objective};
+
+fn main() {
+    let engine = MmeeEngine::native();
+    let accel = presets::accel2();
+
+    // The layer's fusable pairs, as a high-level dialect would hand them
+    // to the pass: attention (softmax between the GEMMs) and the FFN.
+    let seq = 2048;
+    let graph = [
+        presets::gpt3_6_7b_attention(seq),
+        presets::gpt3_6_7b_ffn(seq),
+    ];
+
+    println!("// schedule emitted by the MMEE pass for {}", accel.name);
+    for w in &graph {
+        let s = engine.optimize(w, &accel, Objective::Edp);
+        println!("\n// pair {}: {} mappings explored in {:?}", w.name, s.evaluated, s.elapsed);
+        println!(
+            "fused_pair @{} {{ order = \"{}\", tiling = \"{}\", recompute = {}, stationary = (\"{}\", \"{}\") }}",
+            w.name,
+            s.candidate.order.name(),
+            s.tiling.name(),
+            s.candidate.recompute(),
+            s.candidate.sm1.name(),
+            s.candidate.sm2.name(),
+        );
+        for line in s.render_loopnest(w, &accel).lines() {
+            println!("//   {line}");
+        }
+    }
+}

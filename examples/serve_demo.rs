@@ -1,0 +1,23 @@
+//! The mapper-as-a-service loop: drives `coordinator::service` with a
+//! batch of requests, as an AI compiler or hardware-DSE client would.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use mmee::coordinator::service;
+use mmee::search::MmeeEngine;
+
+fn main() {
+    let engine = MmeeEngine::native();
+    let requests = r#"
+{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "energy"}
+{"workload": "bert-base", "seq": 4096, "accel": "accel2", "objective": "latency"}
+{"workload": "gpt3-13b", "seq": 2048, "accel": "accel2", "objective": "edp"}
+{"workload": "cc1", "accel": "accel1", "objective": "energy"}
+"#;
+    let mut out = Vec::new();
+    let served = service::serve_lines(&engine, requests.trim().as_bytes(), &mut out).unwrap();
+    print!("{}", String::from_utf8(out).unwrap());
+    eprintln!("served {served} mapping requests");
+}

@@ -1,0 +1,76 @@
+"""L1 performance analysis: VMEM footprint + MXU utilisation estimates.
+
+``interpret=True`` Pallas gives CPU-numpy timings only, which are not a
+TPU proxy — so the L1 optimization loop (EXPERIMENTS.md §Perf) reasons
+about *structure*: per-grid-step VMEM working set and MXU occupancy of
+the `(bc·S, F) × (F, bt)` contraction, for candidate block shapes.
+
+Run: ``python -m compile.analysis`` (prints the block-shape table the
+bucket choices in layout.py are based on).
+"""
+
+from dataclasses import dataclass
+
+from . import layout
+
+MXU_DIM = 128          # TPU systolic array edge
+VMEM_BYTES = 16 << 20  # ~16 MiB/core class
+F32 = 4
+
+
+@dataclass
+class BlockEstimate:
+    bc: int
+    bt: int
+    vmem_bytes: int
+    vmem_frac: float
+    mxu_m_util: float   # rows occupancy of the (bc*S) x F x bt matmul
+    mxu_k_util: float   # contraction-depth occupancy (F / MXU_DIM)
+    mxu_n_util: float
+    flops_per_byte: float
+
+
+def estimate(bc: int, bt: int, s: int = layout.NUM_SLOTS,
+             f: int = layout.NUM_FEATURES) -> BlockEstimate:
+    """Static per-grid-step resource estimate for the eval kernel."""
+    m = bc * s
+    # VMEM working set: qexp block + coef block + lnb block + out block
+    # + the (m, bt) intermediate before segment reduction.
+    vmem = F32 * (bc * s * f + bc * s + f * bt
+                  + bc * layout.NUM_PRIMITIVES * bt + m * bt)
+    flops = 2.0 * m * f * bt + 3.0 * m * bt  # matmul + exp/coef/sum passes
+    bytes_moved = F32 * (bc * s * f + f * bt + bc * layout.NUM_PRIMITIVES * bt)
+    return BlockEstimate(
+        bc=bc,
+        bt=bt,
+        vmem_bytes=vmem,
+        vmem_frac=vmem / VMEM_BYTES,
+        mxu_m_util=min(1.0, m / MXU_DIM) if m % MXU_DIM == 0 or m >= MXU_DIM
+        else (m % MXU_DIM) / MXU_DIM,
+        mxu_k_util=min(1.0, f / MXU_DIM),
+        mxu_n_util=min(1.0, bt / MXU_DIM),
+        flops_per_byte=flops / bytes_moved,
+    )
+
+
+def sweep(bcs=(8, 16, 32, 64, 128), bts=(128, 256, 512)):
+    return [estimate(bc, bt) for bc in bcs for bt in bts]
+
+
+def main():
+    print(f"{'bc':>4} {'bt':>5} {'VMEM':>10} {'%VMEM':>7} "
+          f"{'M-util':>7} {'K-util':>7} {'N-util':>7} {'F/B':>6}")
+    for e in sweep():
+        print(f"{e.bc:>4} {e.bt:>5} {e.vmem_bytes:>10} {e.vmem_frac:>6.1%} "
+              f"{e.mxu_m_util:>6.1%} {e.mxu_k_util:>6.1%} "
+              f"{e.mxu_n_util:>6.1%} {e.flops_per_byte:>6.1f}")
+    chosen = estimate(64, 256)
+    print(f"\nchosen main-bucket blocks (bc=64, bt=256): "
+          f"{chosen.vmem_frac:.1%} VMEM, M/N occupancy "
+          f"{chosen.mxu_m_util:.0%}/{chosen.mxu_n_util:.0%}; the K axis "
+          f"(F={layout.NUM_FEATURES}) is the paper-structural limit — the "
+          f"encoding is a thin contraction by design.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""AOT export: lower the L2 evaluation graphs to HLO text artifacts.
+
+Emits, per shape bucket in ``layout.BUCKETS``:
+
+* ``mmee_full_{name}.hlo.txt``   -- full metric surfaces
+* ``mmee_reduce_{name}.hlo.txt`` -- objective argmin/min reduction
+
+plus ``manifest.json`` describing shapes, slot layout and feature order so
+the rust side can verify its encoder matches (``runtime::artifacts``).
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import layout, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(bucket):
+    c, t, bc, bt = bucket["C"], bucket["T"], bucket["bc"], bucket["bt"]
+    args = model.example_args(c, layout.NUM_SLOTS, layout.NUM_FEATURES, t)
+    full = jax.jit(functools.partial(model.full_fn, bc=bc, bt=bt))
+    reduce = jax.jit(functools.partial(model.reduce_fn, bc=bc, bt=bt))
+    return (
+        to_hlo_text(full.lower(*args)),
+        to_hlo_text(reduce.lower(*args)),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for bucket in layout.BUCKETS:
+        full_txt, reduce_txt = lower_bucket(bucket)
+        for kind, txt in (("full", full_txt), ("reduce", reduce_txt)):
+            fname = f"mmee_{kind}_{bucket['name']}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(txt)
+            entries.append({
+                "kind": kind,
+                "bucket": bucket["name"],
+                "file": fname,
+                "C": bucket["C"],
+                "T": bucket["T"],
+                "bc": bucket["bc"],
+                "bt": bucket["bt"],
+            })
+            print(f"wrote {fname} ({len(txt)} chars)")
+
+    manifest = {
+        "layout_version": layout.LAYOUT_VERSION,
+        "num_slots": layout.NUM_SLOTS,
+        "num_features": layout.NUM_FEATURES,
+        "num_primitives": layout.NUM_PRIMITIVES,
+        "num_hw": layout.NUM_HW,
+        "features": layout.FEATURES,
+        "hw_params": layout.HW_PARAMS,
+        "segments": {
+            "bs1": list(layout.SEG_BS1), "bs2": list(layout.SEG_BS2),
+            "da": list(layout.SEG_DA), "br": list(layout.SEG_BR),
+            "mac": list(layout.SEG_MAC), "smx": list(layout.SEG_SMX),
+            "cl1": list(layout.SEG_CL1), "cl2": list(layout.SEG_CL2),
+        },
+        "big": layout.BIG,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: the MMEE matrix-multiplication-encoded evaluation.
+
+The paper's insight is that once candidate dataflows are encoded as
+monomial exponent rows (query matrix Q) and tilings as log-boundary
+columns (boundary matrix B), evaluating *every* (candidate, tiling) pair
+is one matrix multiplication ``exp(Q . ln B)`` (paper Eq. 11).  This
+kernel is that hot-spot, fused with the coefficient mask and the fixed
+slot->metric segment reduction, expressed as a Pallas kernel so the whole
+evaluation lowers into a single HLO module.
+
+TPU mapping (see DESIGN.md SHardware-Adaptation): the (C*S, F) x (F, T)
+contraction targets the MXU; ``exp`` and the coef scaling are VPU
+element-wise post-ops in the same kernel; the segment reduction is a
+static reshape-free slice-sum.  Blocking: a (bc, S, F) query block and an
+(F, bt) boundary block per grid step keep the working set in VMEM.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (pytest vs ref.py) plus AOT export
+both run on CPU.  Real-TPU performance is estimated analytically in
+DESIGN.md S9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import layout
+
+# Segment boundaries as a flat tuple so the kernel unrolls statically.
+_SEGS = (
+    layout.SEG_BS1, layout.SEG_BS2, layout.SEG_DA, layout.SEG_BR,
+    layout.SEG_MAC, layout.SEG_SMX, layout.SEG_CL1, layout.SEG_CL2,
+)
+
+
+def _eval_kernel(qexp_ref, coef_ref, lnb_ref, out_ref):
+    """One grid step: candidates block (bc) x tilings block (bt)."""
+    bc, s, f = qexp_ref.shape
+    bt = lnb_ref.shape[1]
+    q = qexp_ref[...].reshape(bc * s, f)
+    # MXU contraction over the feature axis, f32 accumulation.
+    r = jax.lax.dot_general(
+        q, lnb_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # VPU post-ops: exp + coefficient mask.  coef == 0 must *disable* the
+    # slot even if its exponent row would overflow exp (inf * 0 = nan), so
+    # mask with a select rather than a plain multiply.
+    coef = coef_ref[...][:, :, None]
+    r = jnp.where(coef == 0.0, 0.0, jnp.exp(r).reshape(bc, s, bt) * coef)
+    # Static slot->primitive segment sums (no gathers).
+    for m, (lo, hi) in enumerate(_SEGS):
+        out_ref[:, m, :] = jnp.sum(r[:, lo:hi, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bt"))
+def metric_primitives(qexp, coef, lnb, *, bc=64, bt=256):
+    """Pallas-tiled metric-primitive evaluation.
+
+    Args / returns: identical to ``ref.metric_primitives_ref``.
+    Requires C % bc == 0 and T % bt == 0 (the AOT buckets guarantee it;
+    rust pads to bucket shapes).
+    """
+    c, s, f = qexp.shape
+    t = lnb.shape[1]
+    assert c % bc == 0 and t % bt == 0, (c, t, bc, bt)
+    grid = (c // bc, t // bt)
+    return pl.pallas_call(
+        _eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, s, f), lambda ci, ti: (ci, 0, 0)),
+            pl.BlockSpec((bc, s), lambda ci, ti: (ci, 0)),
+            pl.BlockSpec((f, bt), lambda ci, ti: (0, ti)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bc, layout.NUM_PRIMITIVES, bt), lambda ci, ti: (ci, 0, ti)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (c, layout.NUM_PRIMITIVES, t), jnp.float32
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(qexp, coef, lnb)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the MMEE evaluation kernel.
+
+This is the correctness reference for the Pallas kernel in
+``mmee_eval.py``: same inputs, same outputs, no pallas, no tiling.  The
+pytest suite asserts ``assert_allclose`` between the two across swept
+shapes (hypothesis) and the L2 model can compose either implementation.
+"""
+
+import jax.numpy as jnp
+
+from .. import layout
+
+
+def metric_primitives_ref(qexp, coef, lnb):
+    """Evaluate every (candidate, tiling) pair and segment-sum the slots.
+
+    Args:
+      qexp: f32[C, S, F] monomial exponent rows (the query matrix).
+      coef: f32[C, S] per-slot scalar coefficients (0 disables a slot).
+      lnb:  f32[F, T] log-boundary feature columns (the boundary matrix).
+
+    Returns:
+      f32[C, P, T] metric primitives, P = layout.NUM_PRIMITIVES, channel
+      order ``layout.PRIMITIVES``.
+    """
+    # r[c,s,t] = coef[c,s] * exp( sum_f qexp[c,s,f] * lnb[f,t] )
+    r = jnp.einsum("csf,ft->cst", qexp, lnb)
+    c3 = coef[:, :, None]
+    r = jnp.where(c3 == 0.0, 0.0, jnp.exp(r) * c3)
+    segs = [
+        layout.SEG_BS1, layout.SEG_BS2, layout.SEG_DA, layout.SEG_BR,
+        layout.SEG_MAC, layout.SEG_SMX, layout.SEG_CL1, layout.SEG_CL2,
+    ]
+    prims = [r[:, lo:hi, :].sum(axis=1) for (lo, hi) in segs]
+    return jnp.stack(prims, axis=1)
+
+
+def combine_ref(prims, hw):
+    """Reference metric combination (mirrors model.combine).
+
+    Args:
+      prims: f32[C, P, T] from metric_primitives_ref.
+      hw: f32[NUM_HW] hardware parameter vector (layout.HW_PARAMS order).
+
+    Returns:
+      (energy, latency, da, bs), each f32[C, T].  Infeasible mappings
+      (peak buffer demand > capacity) get energy = latency = layout.BIG.
+    """
+    bs1, bs2, da, br, mac, smx, cl1, cl2 = [prims[:, i, :] for i in range(8)]
+    e_dram, e_buf, e_mac, e_sfu, e_bs, spw, spc, cap = [hw[i] for i in range(8)]
+    bs = jnp.maximum(bs1, bs2)
+    energy = e_dram * da + e_buf * br + e_mac * mac + e_sfu * smx + e_bs * bs
+    latency = jnp.maximum((cl1 + cl2) * spc, da * spw)
+    feasible = bs <= cap
+    energy = jnp.where(feasible, energy, layout.BIG)
+    latency = jnp.where(feasible, latency, layout.BIG)
+    return energy, latency, da, bs

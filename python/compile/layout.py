@@ -1,0 +1,77 @@
+"""Canonical slot/feature layout for the MMEE evaluation artifact.
+
+This module is the *contract* between the rust encoder (L3,
+``rust/src/encode/layout.rs``) and the JAX/Pallas evaluation graph (L1/L2).
+Both sides hard-code the same constants; ``python/tests/test_layout.py`` and
+the rust test ``encode::layout::tests`` assert they agree with the values
+baked into ``artifacts/manifest.json``.
+
+A *candidate* (one computation-ordering + buffering-level + stationary +
+recompute choice) is encoded as ``NUM_SLOTS`` monomial slots.  Each slot is
+an exponent row over ``NUM_FEATURES`` log-boundary features plus a scalar
+coefficient; slot value = ``coef * exp(q . ln b)``.  Fixed slot ranges are
+segment-summed into the metric primitives below.
+"""
+
+# ---------------------------------------------------------------- features
+# Order of the boundary feature vector (log-domain).  x_D = inter-tile loop
+# bound (DRAM-level tile count), x_G = granule (intra-tile) size,
+# `n*_r`/`n*_c` = PE-array *block counts* ceil(x_G / P_rows|P_cols), which
+# turn PE under-utilisation into monomials. `c_smx` carries the workload's
+# softmax factor (1e-30 for GEMM pairs so ln stays finite).
+FEATURES = [
+    "i_d", "k_d", "l_d", "j_d",          # 0..3
+    "i_g", "k_g", "l_g", "j_g",          # 4..7
+    "ni_r",                              # 8  ceil(i_G/P_r): M-blocks, both ops
+    "nk_r",                              # 9  ceil(k_G/P_r): Kr-blocks of op1
+    "nl_c",                              # 10 ceil(l_G/P_c): N-blocks of op1
+    "nl_r",                              # 11 ceil(l_G/P_r): Kr-blocks of op2
+    "nj_c",                              # 12 ceil(j_G/P_c): N-blocks of op2
+    "c_smx",                             # 13 softmax factor
+    "spare1", "spare2",                  # 14..15 (always ln 1 = 0)
+]
+NUM_FEATURES = 16
+
+# ------------------------------------------------------------------- slots
+# Segment ranges [lo, hi) over the NUM_SLOTS axis.
+SEG_BS1 = (0, 6)     # buffer size requirement of Op1 (Eq. 1): words
+SEG_BS2 = (6, 12)    # buffer size requirement of Op2 (Eq. 2): words
+SEG_DA = (12, 18)    # DRAM access (Eq. 7 + output spill terms): words
+SEG_BR = (18, 26)    # buffer<->register-file traffic: words
+SEG_MAC = (26, 28)   # MAC counts (op1 incl. recompute factor, op2)
+SEG_SMX = (28, 29)   # softmax work: c_softmax * i * l (* j_D if recompute)
+SEG_CL1 = (29, 30)   # op1 compute cycles (PE-padded)
+SEG_CL2 = (30, 31)   # op2 compute cycles (PE-padded)
+SEG_SPARE = (31, 32)
+NUM_SLOTS = 32
+
+# Metric-primitive channel order produced by the Pallas kernel.
+PRIMITIVES = ["bs1", "bs2", "da", "br", "mac", "smx", "cl1", "cl2"]
+NUM_PRIMITIVES = 8
+
+# ------------------------------------------------------------ hw parameters
+# Runtime scalar inputs to the compiled graph (so one artifact serves every
+# accelerator config).  Units: energies J/word or J/MAC; seconds.
+HW_PARAMS = [
+    "e_dram",      # J per word moved DRAM<->buffer
+    "e_buf",       # J per word moved buffer<->RF
+    "e_mac",       # J per MAC
+    "e_sfu",       # J per softmax-normalised element (c_softmax folded in Q)
+    "e_bs",        # J per word-of-peak-buffer-occupancy (leakage proxy)
+    "sec_per_word",  # bytes_per_word / DRAM_bandwidth
+    "sec_per_cycle",  # 1 / clock frequency
+    "capacity_words",  # on-chip buffer capacity in words (feasibility)
+]
+NUM_HW = 8
+
+BIG = 1.0e30  # infeasible-mapping sentinel
+
+# ------------------------------------------------------------ shape buckets
+# (C, T) evaluation-bucket shapes lowered by aot.py.  C = padded candidate
+# rows, T = padded tiling columns.  Rust chunks/pads to the best bucket.
+BUCKETS = [
+    {"name": "main", "C": 1536, "T": 512, "bc": 64, "bt": 256},
+    {"name": "small", "C": 256, "T": 128, "bc": 32, "bt": 128},
+]
+
+LAYOUT_VERSION = 4

@@ -1,0 +1,77 @@
+"""L2: the MMEE evaluation graph (JAX, build-time only).
+
+Composes the L1 Pallas kernel (``kernels.mmee_eval``) with the metric
+combination and the reductions the rust search engine needs.  Two graph
+variants are AOT-lowered per shape bucket:
+
+* ``full``   -> (energy, latency, da, bs), each f32[C, T].  Feeds Pareto
+  extraction and the figure harness, streamed bucket-by-bucket from rust.
+* ``reduce`` -> flat argmin/min for energy-driven, latency-driven and
+  EDP-driven objectives: 6 outputs
+  (min_e, arg_e, min_l, arg_l, min_edp, arg_edp) with args as i32 flat
+  indices into the C*T surface (rust decodes c = idx // T, t = idx % T).
+
+Hardware parameters are *runtime inputs* (layout.HW_PARAMS) so a single
+artifact serves every accelerator configuration; per-workload constant
+factors (head count, array-parallel heads) are applied on the rust side.
+"""
+
+import jax.numpy as jnp
+
+from . import layout
+from .kernels import mmee_eval
+
+
+def combine(prims, hw):
+    """Metric combination: primitives + hw params -> (energy, latency, da, bs).
+
+    energy  = e_dram*DA + e_buf*BR + e_mac*MAC + e_sfu*SMX + e_bs*BS   [J]
+    latency = max( (CL1+CL2) * sec_per_cycle , DA * sec_per_word )     [s]
+    BS      = max(BS_Op1, BS_Op2)  (paper Eq. 4), feasibility BS <= cap.
+    """
+    bs1 = prims[:, 0, :]
+    bs2 = prims[:, 1, :]
+    da = prims[:, 2, :]
+    br = prims[:, 3, :]
+    mac = prims[:, 4, :]
+    smx = prims[:, 5, :]
+    cl1 = prims[:, 6, :]
+    cl2 = prims[:, 7, :]
+    e_dram, e_buf, e_mac, e_sfu, e_bs, spw, spc, cap = [hw[i] for i in range(8)]
+    bs = jnp.maximum(bs1, bs2)
+    energy = e_dram * da + e_buf * br + e_mac * mac + e_sfu * smx + e_bs * bs
+    latency = jnp.maximum((cl1 + cl2) * spc, da * spw)
+    feasible = bs <= cap
+    energy = jnp.where(feasible, energy, layout.BIG)
+    latency = jnp.where(feasible, latency, layout.BIG)
+    return energy, latency, da, bs
+
+
+def full_fn(qexp, coef, lnb, hw, *, bc, bt):
+    """Full metric surfaces over the (candidate, tiling) grid."""
+    prims = mmee_eval.metric_primitives(qexp, coef, lnb, bc=bc, bt=bt)
+    return combine(prims, hw)
+
+
+def reduce_fn(qexp, coef, lnb, hw, *, bc, bt):
+    """Objective-driven flat minima over the evaluation surface."""
+    energy, latency, _, _ = full_fn(qexp, coef, lnb, hw, bc=bc, bt=bt)
+    e = energy.reshape(-1)
+    l = latency.reshape(-1)
+    # EDP on the feasibility-masked surfaces; BIG*BIG overflows f32 to inf,
+    # which argmin still orders correctly against finite values.
+    edp = e * l
+    arg_e = jnp.argmin(e).astype(jnp.int32)
+    arg_l = jnp.argmin(l).astype(jnp.int32)
+    arg_p = jnp.argmin(edp).astype(jnp.int32)
+    return e[arg_e], arg_e, l[arg_l], arg_l, edp[arg_p], arg_p
+
+
+def example_args(c, s, f, t):
+    """ShapeDtypeStructs for AOT lowering of one bucket."""
+    return (
+        jnp.zeros((c, s, f), jnp.float32),
+        jnp.zeros((c, s), jnp.float32),
+        jnp.zeros((f, t), jnp.float32),
+        jnp.zeros((layout.NUM_HW,), jnp.float32),
+    )

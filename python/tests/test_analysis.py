@@ -1,0 +1,24 @@
+"""Structural checks of the L1 block-shape analysis."""
+
+from compile import analysis, layout
+
+
+def test_chosen_buckets_fit_vmem():
+    for b in layout.BUCKETS:
+        e = analysis.estimate(b["bc"], b["bt"])
+        assert e.vmem_frac < 0.5, (b, e.vmem_frac)
+
+
+def test_estimates_monotone_in_block_size():
+    small = analysis.estimate(8, 128)
+    big = analysis.estimate(64, 512)
+    assert big.vmem_bytes > small.vmem_bytes
+    assert big.flops_per_byte >= small.flops_per_byte
+
+
+def test_mxu_utilisation_bounds():
+    for e in analysis.sweep():
+        for u in (e.mxu_m_util, e.mxu_k_util, e.mxu_n_util):
+            assert 0.0 < u <= 1.0
+    # The contraction depth is the structural ceiling: F=16 of 128 lanes.
+    assert abs(analysis.estimate(64, 256).mxu_k_util - 16 / 128) < 1e-9

@@ -1,0 +1,104 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+The Pallas kernel is the evaluation hot-spot that every MMEE search result
+flows through, so this is the core correctness signal of the python side.
+Hypothesis sweeps block shapes and value ranges; fixed tests pin the AOT
+bucket shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layout
+from compile.kernels import mmee_eval, ref
+
+S = layout.NUM_SLOTS
+F = layout.NUM_FEATURES
+
+
+def make_inputs(rng, c, t, exp_lo=0.0, exp_hi=3.0, ln_hi=6.0):
+    """Random but realistic inputs: small integer exponents, ln-boundaries
+    of plausible tile counts/sizes, sparse coef with sign structure."""
+    qexp = rng.integers(0, 4, size=(c, S, F)).astype(np.float32)
+    qexp *= rng.random((c, S, F)) < 0.3  # sparse exponent rows
+    coef = rng.choice(
+        np.array([0.0, 0.0, 1.0, 2.0, -1.0, 0.5], dtype=np.float32),
+        size=(c, S),
+    )
+    lnb = (rng.random((F, t)) * ln_hi).astype(np.float32)
+    return qexp, coef, lnb
+
+
+@pytest.mark.parametrize("c,t,bc,bt", [
+    (64, 128, 32, 128),
+    (128, 256, 64, 256),
+    (1536, 512, 64, 256),  # "main" AOT bucket shape
+    (256, 128, 32, 128),   # "small" AOT bucket shape
+])
+def test_kernel_matches_ref_bucket_shapes(c, t, bc, bt):
+    rng = np.random.default_rng(42 + c + t)
+    qexp, coef, lnb = make_inputs(rng, c, t)
+    got = mmee_eval.metric_primitives(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb), bc=bc, bt=bt)
+    want = ref.metric_primitives_ref(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cb=st.integers(1, 4),      # candidate blocks
+    tb=st.integers(1, 3),      # tiling blocks
+    bc=st.sampled_from([8, 16, 32]),
+    bt=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_swept(cb, tb, bc, bt, seed):
+    c, t = cb * bc, tb * bt
+    rng = np.random.default_rng(seed)
+    qexp, coef, lnb = make_inputs(rng, c, t)
+    got = mmee_eval.metric_primitives(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb), bc=bc, bt=bt)
+    want = ref.metric_primitives_ref(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_monomial_semantics():
+    """A single slot with known exponents must equal the closed form.
+
+    Pin slot 0 (BS1 segment) to the paper's Fig. 11 example
+    BS_A = k_D * i_G * k_G and check exp(q . ln b) reproduces it exactly.
+    """
+    c, t = 8, 128
+    qexp = np.zeros((c, S, F), np.float32)
+    coef = np.zeros((c, S), np.float32)
+    # features: k_d = idx 1, i_g = idx 4, k_g = idx 5
+    qexp[0, 0, 1] = 1.0
+    qexp[0, 0, 4] = 1.0
+    qexp[0, 0, 5] = 1.0
+    coef[0, 0] = 1.0
+    vals = np.zeros((F, t), np.float32)
+    vals[:, :] = 1.0
+    vals[1, 0], vals[4, 0], vals[5, 0] = 4.0, 32.0, 16.0  # k_D, i_G, k_G
+    lnb = np.log(vals)
+    out = mmee_eval.metric_primitives(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb), bc=8, bt=128)
+    bs1 = np.asarray(out)[0, 0, 0]
+    assert abs(bs1 - 4.0 * 32.0 * 16.0) < 1e-2
+    # all other candidates' primitives are zero (coef = 0)
+    assert np.all(np.asarray(out)[1:] == 0.0)
+
+
+def test_kernel_zero_coef_disables_slot():
+    rng = np.random.default_rng(0)
+    qexp, coef, lnb = make_inputs(rng, 16, 128)
+    coef[:] = 0.0
+    out = mmee_eval.metric_primitives(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb), bc=16, bt=128)
+    assert np.all(np.asarray(out) == 0.0)

@@ -1,0 +1,59 @@
+"""Layout contract: constants here must match rust/src/encode/layout.rs.
+
+The golden values below are duplicated on the rust side; a drift in either
+place fails this test (and the rust unit test) before it can corrupt an
+artifact.  If artifacts have been built, the manifest is cross-checked too.
+"""
+
+import json
+import os
+
+from compile import layout
+
+
+def test_golden_layout():
+    assert layout.NUM_FEATURES == 16
+    assert layout.NUM_SLOTS == 32
+    assert layout.NUM_PRIMITIVES == 8
+    assert layout.NUM_HW == 8
+    assert layout.SEG_BS1 == (0, 6)
+    assert layout.SEG_BS2 == (6, 12)
+    assert layout.SEG_DA == (12, 18)
+    assert layout.SEG_BR == (18, 26)
+    assert layout.SEG_MAC == (26, 28)
+    assert layout.SEG_SMX == (28, 29)
+    assert layout.SEG_CL1 == (29, 30)
+    assert layout.SEG_CL2 == (30, 31)
+    assert layout.FEATURES[:8] == [
+        "i_d", "k_d", "l_d", "j_d", "i_g", "k_g", "l_g", "j_g"]
+    assert layout.FEATURES[8:13] == ["ni_r", "nk_r", "nl_c", "nl_r", "nj_c"]
+    assert layout.FEATURES[13] == "c_smx"
+    assert layout.HW_PARAMS == [
+        "e_dram", "e_buf", "e_mac", "e_sfu", "e_bs",
+        "sec_per_word", "sec_per_cycle", "capacity_words"]
+    assert layout.BIG == 1.0e30
+
+
+def test_buckets_divisible():
+    for b in layout.BUCKETS:
+        assert b["C"] % b["bc"] == 0
+        assert b["T"] % b["bt"] == 0
+
+
+def test_manifest_consistency_if_built():
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        return  # artifacts not built yet; aot.py writes from layout anyway
+    with open(path) as f:
+        m = json.load(f)
+    assert m["layout_version"] == layout.LAYOUT_VERSION
+    assert m["num_slots"] == layout.NUM_SLOTS
+    assert m["num_features"] == layout.NUM_FEATURES
+    assert m["features"] == layout.FEATURES
+    assert m["segments"]["bs1"] == list(layout.SEG_BS1)
+    assert m["segments"]["cl2"] == list(layout.SEG_CL2)
+    names = {(a["kind"], a["bucket"]) for a in m["artifacts"]}
+    for b in layout.BUCKETS:
+        assert ("full", b["name"]) in names
+        assert ("reduce", b["name"]) in names

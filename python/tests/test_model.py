@@ -1,0 +1,100 @@
+"""L2 correctness: metric combination + reductions vs numpy composition."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layout, model
+from compile.kernels import ref
+from tests.test_kernel import make_inputs
+
+HW = np.array([
+    2.0e-10,   # e_dram J/word
+    6.0e-12,   # e_buf J/word
+    5.6e-13,   # e_mac J/MAC
+    5.6e-12,   # e_sfu
+    1.0e-14,   # e_bs
+    2.0 / 60e9,   # sec_per_word (2B @ 60GB/s)
+    1.0e-9,    # sec_per_cycle (1 GHz)
+    524288.0,  # capacity words (1MB @ 2B)
+], dtype=np.float32)
+
+
+def numpy_combine(prims, hw):
+    bs1, bs2, da, br, mac, smx, cl1, cl2 = [prims[:, i, :] for i in range(8)]
+    bs = np.maximum(bs1, bs2)
+    energy = hw[0]*da + hw[1]*br + hw[2]*mac + hw[3]*smx + hw[4]*bs
+    latency = np.maximum((cl1 + cl2) * hw[6], da * hw[5])
+    feas = bs <= hw[7]
+    return (np.where(feas, energy, layout.BIG),
+            np.where(feas, latency, layout.BIG), da, bs)
+
+
+def test_combine_matches_numpy():
+    rng = np.random.default_rng(7)
+    qexp, coef, lnb = make_inputs(rng, 64, 128)
+    prims = np.asarray(ref.metric_primitives_ref(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb)))
+    got = model.combine(jnp.asarray(prims), jnp.asarray(HW))
+    want = numpy_combine(prims, HW)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), w, rtol=1e-6)
+
+
+def test_full_fn_pallas_equals_ref_path():
+    rng = np.random.default_rng(9)
+    qexp, coef, lnb = make_inputs(rng, 64, 256)
+    got = model.full_fn(jnp.asarray(qexp), jnp.asarray(coef),
+                        jnp.asarray(lnb), jnp.asarray(HW), bc=32, bt=256)
+    prims = ref.metric_primitives_ref(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb))
+    want = ref.combine_ref(prims, jnp.asarray(HW))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_reduce_fn_argmin_consistent(seed):
+    rng = np.random.default_rng(seed)
+    qexp, coef, lnb = make_inputs(rng, 32, 128)
+    hw = jnp.asarray(HW)
+    args = (jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb), hw)
+    min_e, arg_e, min_l, arg_l, min_p, arg_p = [
+        np.asarray(x) for x in model.reduce_fn(*args, bc=32, bt=128)]
+    energy, latency, _, _ = [np.asarray(x)
+                             for x in model.full_fn(*args, bc=32, bt=128)]
+    e, l = energy.reshape(-1), latency.reshape(-1)
+    assert min_e == e.min() and e[arg_e] == min_e
+    assert min_l == l.min() and l[arg_l] == min_l
+    edp = e * l
+    assert edp[arg_p] == edp.min()
+
+
+def test_infeasible_mappings_masked():
+    """Tilings whose BS exceeds capacity must never win the argmin."""
+    c, t = 32, 128
+    qexp = np.zeros((c, layout.NUM_SLOTS, layout.NUM_FEATURES), np.float32)
+    coef = np.zeros((c, layout.NUM_SLOTS), np.float32)
+    # slot 0 = BS1 = i_g; slot 12 (DA) = i_g so energy tracks i_g
+    qexp[:, 0, 4] = 1.0
+    coef[:, 0] = 1.0
+    qexp[:, 12, 4] = 1.0
+    coef[:, 12] = 1.0
+    vals = np.ones((layout.NUM_FEATURES, t), np.float32)
+    vals[4, :] = np.linspace(1.0, 1e7, t)  # i_g sweeps past capacity
+    lnb = np.log(vals)
+    hw = HW.copy()
+    hw[7] = 1000.0  # tiny capacity
+    energy, latency, da, bs = model.full_fn(
+        jnp.asarray(qexp), jnp.asarray(coef), jnp.asarray(lnb),
+        jnp.asarray(hw), bc=32, bt=128)
+    energy = np.asarray(energy)
+    bs = np.asarray(bs)
+    assert np.all(energy[bs > 1000.0] == layout.BIG)
+    assert np.all(energy[bs <= 1000.0] < layout.BIG)

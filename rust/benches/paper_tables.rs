@@ -1,0 +1,29 @@
+//! End-to-end timing of the per-table/figure harness entries — the
+//! "runtime" rows of §VII-C/D at our scale (one bench per paper table,
+//! timing the full regeneration including all baselines).
+
+use mmee::report::{figures, tables, Report};
+use mmee::util::bench::Bench;
+
+fn main() {
+    let tmp = std::env::temp_dir().join("mmee_bench_tables");
+    let mut bench = Bench::new();
+
+    let mut r = Report::new(&tmp).unwrap();
+    bench.once("table1 (absolute E/L, 2 accels x 9 workloads)", || {
+        tables::table1(&mut r).unwrap()
+    });
+    bench.once("table3 (3 hardware designs incl. TileFlow GA+MCTS)", || {
+        tables::table3(&mut r).unwrap()
+    });
+    bench.once("table4 (conv chains + two-GEMMs)", || {
+        tables::table4(&mut r).unwrap()
+    });
+    bench.once("fig16 (DA-vs-buffer fronts, 4 mappers)", || {
+        figures::fig16(&mut r).unwrap()
+    });
+    bench.once("fig24 (decision-element ablation)", || {
+        figures::fig24(&mut r).unwrap()
+    });
+    println!("\nbench artifacts in {}", tmp.display());
+}

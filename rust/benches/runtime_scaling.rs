@@ -1,0 +1,42 @@
+//! Fig. 22 runtime scalability: MMEE optimization wall-time vs sequence
+//! length (log-log power fit). `cargo bench --bench runtime_scaling`.
+
+use mmee::config::presets;
+use mmee::search::MmeeEngine;
+use mmee::util::stats;
+
+fn main() {
+    let engine = MmeeEngine::native();
+    let accel = presets::accel1();
+    let max_seq: usize = std::env::var("MMEE_MAX_SEQ")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(131072);
+    // Warm the offline table outside the timed region (it is shared
+    // across workloads — the paper's offline/online split).
+    let t0 = std::time::Instant::now();
+    let _ = MmeeEngine::query();
+    println!("offline table build: {:?}", t0.elapsed());
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut seq = 1024usize;
+    println!("{:>8} {:>10} {:>14} {:>12}", "seq", "seconds", "mappings", "maps/s");
+    while seq <= max_seq {
+        let w = presets::gpt3_13b(seq);
+        let st = engine.stats_only(&w, &accel);
+        let secs = st.elapsed.as_secs_f64();
+        println!(
+            "{:>8} {:>10.3} {:>14.3e} {:>12.3e}",
+            seq,
+            secs,
+            st.mappings,
+            st.mappings / secs
+        );
+        xs.push(seq as f64);
+        ys.push(secs);
+        seq *= 2;
+    }
+    let (a, b) = stats::power_law_fit(&xs, &ys);
+    println!("power fit: t(n) = {a:.3e} * n^{b:.3}  (paper: ~n^0.4, <25 s at 128K)");
+}

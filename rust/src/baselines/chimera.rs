@@ -1,0 +1,74 @@
+//! Chimera [91]: analytical compute-intensive-operator fusion without
+//! buffer management or recomputation (paper Fig. 1: "medium decision
+//! space, analytical model, exhaustive"). Reproduced as exhaustive
+//! enumeration over all no-recompute orderings with streaming buffers
+//! (E accumulator optionally on-chip), exactly its block-fusion space.
+
+use std::sync::OnceLock;
+
+use super::Mapper;
+use crate::config::{Accelerator, Workload};
+use crate::encode::QueryMatrix;
+use crate::loopnest::dims::STATIONARIES;
+use crate::loopnest::{BufferingLevels, Candidate, Dim, LoopOrder};
+use crate::search::{MmeeEngine, Objective, Solution};
+
+pub struct Chimera;
+
+pub fn chimera_query() -> &'static QueryMatrix {
+    static Q: OnceLock<QueryMatrix> = OnceLock::new();
+    Q.get_or_init(|| {
+        let mut cands = Vec::new();
+        for order in LoopOrder::all() {
+            if order.recompute() {
+                continue;
+            }
+            for e in [4u8, order.pos(Dim::L) as u8] {
+                for sm1 in STATIONARIES {
+                    for sm2 in STATIONARIES {
+                        cands.push(Candidate {
+                            order,
+                            levels: BufferingLevels { a: 4, b: 4, d: 4, e },
+                            sm1,
+                            sm2,
+                        });
+                    }
+                }
+            }
+        }
+        QueryMatrix::build(cands)
+    })
+}
+
+impl Mapper for Chimera {
+    fn name(&self) -> &'static str {
+        "chimera"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        MmeeEngine::native().optimize_with_candidates(w, accel, obj, chimera_query())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn chimera_between_flat_and_mmee() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let c = Chimera.optimize(&w, &accel, Objective::Energy).metrics.energy;
+        let f = super::super::flat::Flat
+            .optimize(&w, &accel, Objective::Energy)
+            .metrics
+            .energy;
+        let m = MmeeEngine::native()
+            .optimize(&w, &accel, Objective::Energy)
+            .metrics
+            .energy;
+        assert!(c <= f * (1.0 + 1e-9), "chimera {c} vs flat {f}");
+        assert!(m <= c * (1.0 + 1e-9), "mmee {m} vs chimera {c}");
+    }
+}

@@ -1,0 +1,67 @@
+//! FLAT [37] (R-Gran): fused attention dataflow with exhaustive tiling
+//! but a *fixed* FlashAttention-style computation ordering, no buffer
+//! retention and no recomputation — the paper's "large tiling space,
+//! missing buffer management" comparison point (Fig. 1).
+
+use std::sync::OnceLock;
+
+use super::Mapper;
+use crate::config::{Accelerator, Workload};
+use crate::encode::QueryMatrix;
+use crate::loopnest::dims::STATIONARIES;
+use crate::loopnest::{BufferingLevels, Candidate, LoopOrder};
+use crate::search::{MmeeEngine, Objective, Solution};
+
+pub struct Flat;
+
+pub fn flat_query() -> &'static QueryMatrix {
+    static Q: OnceLock<QueryMatrix> = OnceLock::new();
+    Q.get_or_init(|| {
+        let mut cands = Vec::new();
+        // Fixed row-granular fused ordering (i, l, k, j); E accumulator
+        // on-chip (FlashAttention keeps O rows resident), everything else
+        // streamed tile-by-tile. Stationary modes are explored (FLAT
+        // evaluates dataflow styles).
+        for sm1 in STATIONARIES {
+            for sm2 in STATIONARIES {
+                cands.push(Candidate {
+                    order: LoopOrder::flash(),
+                    levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
+                    sm1,
+                    sm2,
+                });
+            }
+        }
+        QueryMatrix::build(cands)
+    })
+}
+
+impl Mapper for Flat {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        let engine = MmeeEngine::native();
+        let mut s = engine.optimize_with_candidates(w, accel, obj, flat_query());
+        s.workload = w.name.clone();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn flat_is_dominated_by_mmee() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let f = Flat.optimize(&w, &accel, Objective::Energy);
+        let m = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        assert!(m.metrics.energy <= f.metrics.energy * (1.0 + 1e-9));
+        assert!(f.metrics.feasible);
+        assert!(!f.candidate.recompute());
+    }
+}

@@ -1,0 +1,278 @@
+//! Single-operator analytical mapper — the intra-operator model the
+//! paper builds on ([46], §V "significant extension of an intra-operator
+//! model") and the engine behind the **no-fusion** baseline.
+//!
+//! One GEMM `O(M×N) = X(M×K)·W(K×N)` on the shared buffer: 6 loop
+//! orders × per-operand buffering levels × integer-factorized tilings,
+//! with the same blocker/effective-dimension DRAM model and the same
+//! energy/latency combination as the fused path.
+
+use crate::config::Accelerator;
+use crate::tiling::factorize::factor_pairs;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Per-mapping intra-op metrics (single instance, words/cycles).
+#[derive(Debug, Clone, Copy)]
+pub struct IntraMetrics {
+    pub da: f64,
+    pub bs: f64,
+    pub br: f64,
+    pub mac: f64,
+    pub cycles: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Mapping {
+    /// permutation of (m, k, n) as depth order
+    order: [usize; 3],
+    /// buffering levels for X, W, O in 0..=3
+    lx: usize,
+    lw: usize,
+    lo: usize,
+    /// stationary mode 0=WS 1=IS 2=OS
+    sm: usize,
+}
+
+const M: usize = 0;
+const K: usize = 1;
+const N: usize = 2;
+
+fn operand_dims(op: usize) -> [usize; 2] {
+    match op {
+        0 => [M, K], // X
+        1 => [K, N], // W
+        _ => [M, N], // O
+    }
+}
+
+fn all_orders() -> [[usize; 3]; 6] {
+    [
+        [M, K, N],
+        [M, N, K],
+        [K, M, N],
+        [K, N, M],
+        [N, M, K],
+        [N, K, M],
+    ]
+}
+
+impl Mapping {
+    fn pos(&self, d: usize) -> usize {
+        self.order.iter().position(|&x| x == d).unwrap()
+    }
+
+    /// Buffer footprint of an operand (granule × retained extents).
+    fn bs_op(&self, op: usize, lvl: usize, xd: &[f64; 3], xg: &[f64; 3]) -> f64 {
+        let dims = operand_dims(op);
+        let mut v = xg[dims[0]] * xg[dims[1]];
+        for d in dims {
+            if self.pos(d) >= lvl {
+                v *= xd[d];
+            }
+        }
+        v
+    }
+
+    /// DRAM traffic of input operand `op` (X or W): blocker logic.
+    fn da_input(&self, op: usize, lvl: usize, xd: &[f64; 3], xg: &[f64; 3]) -> f64 {
+        let dims = operand_dims(op);
+        let mut blocker = None;
+        for p in 0..lvl.min(3) {
+            if dims.contains(&self.order[p]) {
+                blocker = Some(p);
+            }
+        }
+        let bs = self.bs_op(op, lvl, xd, xg);
+        match blocker {
+            None => bs,
+            Some(p) => {
+                let mut v = bs * xd[self.order[p]];
+                for d in 0..3 {
+                    if self.pos(d) < p {
+                        v *= xd[d];
+                    }
+                }
+                v
+            }
+        }
+    }
+
+    /// Output traffic: written once if the accumulator outlives the `k`
+    /// loop, otherwise `(2·k_D − 1)·|O|` psum spilling.
+    fn da_output(&self, xd: &[f64; 3], xg: &[f64; 3]) -> f64 {
+        let full = xd[M] * xd[N] * xg[M] * xg[N];
+        let pk = self.pos(K);
+        let spills = self.lo > pk
+            || [M, N]
+                .iter()
+                .any(|&d| pk < self.pos(d) && self.pos(d) < self.lo);
+        if spills {
+            (2.0 * xd[K] - 1.0) * full
+        } else {
+            full
+        }
+    }
+
+    fn eval(&self, xd: &[f64; 3], xg: &[f64; 3], accel: &Accelerator) -> IntraMetrics {
+        let da = self.da_input(0, self.lx, xd, xg)
+            + self.da_input(1, self.lw, xd, xg)
+            + self.da_output(xd, xg);
+        let bs = self.bs_op(0, self.lx, xd, xg)
+            + self.bs_op(1, self.lw, xd, xg)
+            + self.bs_op(2, self.lo, xd, xg);
+        let stages = xd[M] * xd[K] * xd[N];
+        let (mg, kg, ng) = (xg[M], xg[K], xg[N]);
+        let nm = (mg / accel.pe_rows as f64).ceil();
+        let nk = (kg / accel.pe_rows as f64).ceil();
+        let nn = (ng / accel.pe_cols as f64).ceil();
+        let br = stages
+            * match self.sm {
+                0 => kg * ng + mg * kg * nn + mg * ng * (2.0 * nk - 1.0),
+                1 => mg * kg + kg * ng * nm + mg * ng * (2.0 * nk - 1.0),
+                _ => mg * ng + mg * kg * nn + kg * ng * nm,
+            };
+        let mac = stages * mg * kg * ng;
+        let cycles = stages * nm * nn * kg;
+        IntraMetrics { da, bs, br, mac, cycles }
+    }
+}
+
+/// Result of optimizing one GEMM under a buffer capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct IntraSolution {
+    pub metrics: IntraMetrics,
+    pub energy: f64,
+    pub latency: f64,
+}
+
+/// Exhaustively optimize a single GEMM. `score` picks the objective
+/// (energy/latency/EDP) from (energy, latency).
+pub fn optimize_gemm(
+    g: &Gemm,
+    accel: &Accelerator,
+    score: impl Fn(f64, f64) -> f64,
+) -> Option<IntraSolution> {
+    let hw = accel.hw_vector();
+    let cap = accel.capacity_words() as f64;
+    let mut best: Option<(f64, IntraSolution)> = None;
+    for (md, mg) in factor_pairs(g.m) {
+        for (kd, kg) in factor_pairs(g.k) {
+            for (nd, ng) in factor_pairs(g.n) {
+                let xd = [md as f64, kd as f64, nd as f64];
+                let xg = [mg as f64, kg as f64, ng as f64];
+                for order in all_orders() {
+                    for lx in 0..=3 {
+                        for lw in 0..=3 {
+                            for lo in 0..=3 {
+                                for sm in 0..3 {
+                                    let m = Mapping { order, lx, lw, lo, sm };
+                                    let im = m.eval(&xd, &xg, accel);
+                                    if im.bs > cap {
+                                        continue;
+                                    }
+                                    let energy = hw.e_dram * im.da
+                                        + hw.e_buf * im.br
+                                        + hw.e_mac * im.mac
+                                        + hw.e_bs * im.bs;
+                                    let latency = (im.cycles * hw.sec_per_cycle)
+                                        .max(im.da * hw.sec_per_word);
+                                    let s = score(energy, latency);
+                                    if best.map(|(b, _)| s < b).unwrap_or(true) {
+                                        best = Some((
+                                            s,
+                                            IntraSolution { metrics: im, energy, latency },
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    best.map(|(_, s)| s)
+}
+
+/// Minimum DRAM traffic achievable within each buffer budget: the
+/// (BS, DA) Pareto front of one GEMM (used by the no-fusion curves of
+/// Figs. 15/16).
+pub fn da_bs_front(g: &Gemm, accel: &Accelerator) -> Vec<(f64, f64)> {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for (md, mg) in factor_pairs(g.m) {
+        for (kd, kg) in factor_pairs(g.k) {
+            for (nd, ng) in factor_pairs(g.n) {
+                let xd = [md as f64, kd as f64, nd as f64];
+                let xg = [mg as f64, kg as f64, ng as f64];
+                for order in all_orders() {
+                    for lx in 0..=3 {
+                        for lw in 0..=3 {
+                            for lo in 0..=3 {
+                                let m = Mapping { order, lx, lw, lo, sm: 0 };
+                                let im = m.eval(&xd, &xg, accel);
+                                pts.push((im.bs, im.da));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // 2-D Pareto (min both): sort by bs, sweep min da.
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut front = Vec::new();
+    let mut best_da = f64::INFINITY;
+    for (bs, da) in pts {
+        if da < best_da {
+            front.push((bs, da));
+            best_da = da;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn small_gemm_minimum_traffic() {
+        // With a huge buffer, the optimum loads each operand once and
+        // writes the output once.
+        let mut accel = presets::accel1();
+        accel.buffer_bytes = 1 << 30;
+        let g = Gemm { m: 64, k: 32, n: 64 };
+        let s = optimize_gemm(&g, &accel, |e, _| e).unwrap();
+        let min = (g.m * g.k + g.k * g.n + g.m * g.n) as f64;
+        assert_eq!(s.metrics.da, min);
+    }
+
+    #[test]
+    fn tight_buffer_costs_traffic() {
+        let g = Gemm { m: 256, k: 256, n: 256 };
+        let large = presets::accel1(); // 1 MB
+        let mut small = presets::accel1();
+        small.buffer_bytes = 8 << 10; // 8 KB
+        let sl = optimize_gemm(&g, &large, |e, _| e).unwrap();
+        let ss = optimize_gemm(&g, &small, |e, _| e).unwrap();
+        assert!(ss.metrics.da > sl.metrics.da);
+        assert!(ss.metrics.bs <= small.capacity_words() as f64);
+    }
+
+    #[test]
+    fn front_is_monotone() {
+        let g = Gemm { m: 128, k: 64, n: 128 };
+        let front = da_bs_front(&g, &presets::accel1());
+        assert!(front.len() > 3);
+        for w in front.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 > w[1].1);
+        }
+    }
+}

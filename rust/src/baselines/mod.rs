@@ -1,0 +1,32 @@
+//! Baseline mappers (paper §VII): faithful reimplementations of the
+//! comparison points *within our cost model* (DESIGN.md §7):
+//!
+//! * [`intraop`] — single-operator analytical optimizer (the base model
+//!   the paper extends [46]); powers the **no-fusion** baseline.
+//! * [`flat`] — FLAT [37]: fused, exhaustive tiling, fixed
+//!   FlashAttention-style ordering, no retention, no recomputation.
+//! * [`orojenesis`] — Orojenesis [33]: template-restricted fusion
+//!   enumeration for the DRAM-vs-buffer tradeoff, plus the paper's
+//!   "O+BM" and "O+BM+Re" enhancement variants.
+//! * [`chimera`] — Chimera [91]: analytical fused mapper without buffer
+//!   retention or recomputation.
+//! * [`tileflow`] — TileFlow [90]: tree representation evaluated by
+//!   walking, genetic-algorithm pre-search of ordering/buffering, MCTS
+//!   tiling search; plus the enumeration-boosted TF+/TF+T/TF+T+BM
+//!   variants of §VII-G and Fig. 24.
+
+pub mod intraop;
+pub mod nofusion;
+pub mod flat;
+pub mod orojenesis;
+pub mod chimera;
+pub mod tileflow;
+
+use crate::config::{Accelerator, Workload};
+use crate::search::{Objective, Solution};
+
+/// Common mapper interface for the report harness.
+pub trait Mapper {
+    fn name(&self) -> &'static str;
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution;
+}

@@ -1,0 +1,158 @@
+//! No-fusion baseline: each operator optimized independently
+//! (paper §VII-C), with the intermediate `C` making a full DRAM
+//! round-trip between them.
+
+use super::intraop::{da_bs_front, optimize_gemm, Gemm};
+use super::Mapper;
+use crate::config::{Accelerator, Workload};
+use crate::loopnest::{BufferingLevels, Candidate, LoopOrder, Stationary};
+use crate::model::Metrics;
+use crate::search::{Objective, Solution};
+use crate::tiling::Tiling;
+
+pub struct NoFusion;
+
+impl NoFusion {
+    fn gemms(w: &Workload) -> (Gemm, Gemm) {
+        let g = w.gemm;
+        (
+            Gemm { m: g.i, k: g.k, n: g.l },
+            Gemm { m: g.i, k: g.l, n: g.j },
+        )
+    }
+
+    /// (BS, DA) front of the unfused pair: pointwise sum of the two
+    /// operators' fronts at each budget (C write + C read included).
+    pub fn da_bs_front(w: &Workload, accel: &Accelerator) -> Vec<(f64, f64)> {
+        let (g1, g2) = Self::gemms(w);
+        let f1 = da_bs_front(&g1, accel);
+        let f2 = da_bs_front(&g2, accel);
+        // Budgets: union of both fronts' BS coordinates. Note the C
+        // round-trip is already inside the fronts: g1's output traffic
+        // (>= |C| writes) and g2's input traffic (>= |C| reads).
+        let mut budgets: Vec<f64> = f1.iter().chain(&f2).map(|p| p.0).collect();
+        budgets.sort_by(f64::total_cmp);
+        budgets.dedup();
+        let min_at = |front: &[(f64, f64)], budget: f64| -> Option<f64> {
+            front
+                .iter()
+                .filter(|(bs, _)| *bs <= budget)
+                .map(|(_, da)| *da)
+                .fold(None, |acc: Option<f64>, da| {
+                    Some(acc.map_or(da, |a| a.min(da)))
+                })
+        };
+        let mut out = Vec::new();
+        let mut best = f64::INFINITY;
+        for b in budgets {
+            if let (Some(d1), Some(d2)) = (min_at(&f1, b), min_at(&f2, b)) {
+                let da = d1 + d2;
+                if da < best {
+                    out.push((b, da));
+                    best = da;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Mapper for NoFusion {
+    fn name(&self) -> &'static str {
+        "no-fusion"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        let t0 = std::time::Instant::now();
+        let (g1, g2) = Self::gemms(w);
+        let score = |e: f64, l: f64| obj.score(e, l);
+        let s1 = optimize_gemm(&g1, accel, score).expect("op1 infeasible");
+        let s2 = optimize_gemm(&g2, accel, score).expect("op2 infeasible");
+
+        // Sequential execution; softmax between ops costs SFU energy.
+        let hw = accel.hw_vector();
+        let smx = if w.has_softmax() {
+            w.c_softmax * (w.gemm.i * w.gemm.l) as f64
+        } else {
+            0.0
+        };
+        let mult = crate::model::Multipliers::for_workload(w, accel);
+        let em = mult.energy;
+        let energy = (s1.energy + s2.energy + hw.e_sfu * smx) * em;
+        // Sequential ops: each op's latency is the max of its (shared-
+        // bandwidth) DRAM time and its (array-split) compute time.
+        let op_lat = |s: &super::intraop::IntraSolution| {
+            (s.metrics.cycles * hw.sec_per_cycle * mult.lat_comp)
+                .max(s.metrics.da * hw.sec_per_word * mult.lat_dram)
+        };
+        let latency = op_lat(&s1) + op_lat(&s2);
+        let da = s1.metrics.da + s2.metrics.da;
+        let bs = s1.metrics.bs.max(s2.metrics.bs);
+
+        Solution {
+            workload: w.name.clone(),
+            accel: accel.name.clone(),
+            objective: obj,
+            // Representative candidate for reporting only: the unfused
+            // mapping has no fused loop nest.
+            candidate: Candidate {
+                order: LoopOrder::flash(),
+                levels: BufferingLevels::streaming(),
+                sm1: Stationary::Weight,
+                sm2: Stationary::Weight,
+            },
+            tiling: Tiling::unit(&w.gemm),
+            metrics: Metrics {
+                energy,
+                latency,
+                da,
+                bs,
+                feasible: true,
+                e_dram: hw.e_dram * da * em,
+                e_sram: hw.e_buf * (s1.metrics.br + s2.metrics.br) * em,
+                e_mac: hw.e_mac * (s1.metrics.mac + s2.metrics.mac) * em,
+                e_sfu: hw.e_sfu * smx * em,
+                lat_comp: (s1.metrics.cycles + s2.metrics.cycles)
+                    * hw.sec_per_cycle
+                    * mult.lat_comp,
+                lat_dram: da * hw.sec_per_word * mult.lat_dram,
+            },
+            evaluated: 0.0,
+            elapsed: t0.elapsed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::search::MmeeEngine;
+
+    #[test]
+    fn fusion_beats_no_fusion_on_dram_traffic() {
+        // The headline of the paper's Fig. 15/16: fusion avoids the C
+        // round-trip when buffers are tight relative to |C|.
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let nf = NoFusion.optimize(&w, &accel, Objective::Energy);
+        let fused = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        assert!(
+            fused.metrics.da < nf.metrics.da,
+            "fused {} !< no-fusion {}",
+            fused.metrics.da,
+            nf.metrics.da
+        );
+        assert!(fused.metrics.energy < nf.metrics.energy);
+    }
+
+    #[test]
+    fn nofusion_front_monotone() {
+        let w = presets::bert_base(512);
+        let front = NoFusion::da_bs_front(&w, &presets::accel1());
+        assert!(front.len() >= 2);
+        for p in front.windows(2) {
+            assert!(p[0].0 < p[1].0 && p[0].1 > p[1].1);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Orojenesis [33] and the paper's enhancement variants (§VII-C).
+//!
+//! Orojenesis explores fusion tilings exhaustively but only under a
+//! limited set of computation-ordering *templates*, without per-operand
+//! buffer retention and without recomputation. The paper adds:
+//! * **O+BM** — Orojenesis + fine-grained buffer management,
+//! * **O+BM+Re** — additionally recomputation (≈ MMEE's full space).
+
+use std::sync::OnceLock;
+
+use super::Mapper;
+use crate::config::{Accelerator, Workload};
+use crate::encode::QueryMatrix;
+use crate::loopnest::dims::STATIONARIES;
+use crate::loopnest::{BufferingLevels, Candidate, Dim, LoopOrder};
+use crate::search::{MmeeEngine, Objective, Solution};
+use crate::symbolic::prune::pruned_table;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Template orders, streaming buffers (optionally on-chip E row).
+    Base,
+    /// + buffer management (all buffering levels, no recompute orders).
+    BufferManagement,
+    /// + recomputation (the full pruned MMEE space).
+    Recompute,
+}
+
+pub struct Orojenesis(pub Variant);
+
+/// The ordering templates: the three natural fused-GEMM traversals
+/// (output-row major, K/V-stream major, naive-fusion) — a faithful
+/// "computation ordering templates" restriction.
+fn template_orders() -> [LoopOrder; 3] {
+    [
+        LoopOrder([Dim::I, Dim::L, Dim::K, Dim::J]),
+        LoopOrder([Dim::L, Dim::I, Dim::K, Dim::J]),
+        LoopOrder([Dim::I, Dim::K, Dim::L, Dim::J]),
+    ]
+}
+
+fn base_query() -> &'static QueryMatrix {
+    static Q: OnceLock<QueryMatrix> = OnceLock::new();
+    Q.get_or_init(|| {
+        let mut cands = Vec::new();
+        for order in template_orders() {
+            for e in [4u8, order.pos(Dim::L) as u8] {
+                for sm1 in STATIONARIES {
+                    for sm2 in STATIONARIES {
+                        cands.push(Candidate {
+                            order,
+                            levels: BufferingLevels { a: 4, b: 4, d: 4, e },
+                            sm1,
+                            sm2,
+                        });
+                    }
+                }
+            }
+        }
+        QueryMatrix::build(cands)
+    })
+}
+
+fn bm_query() -> &'static QueryMatrix {
+    static Q: OnceLock<QueryMatrix> = OnceLock::new();
+    Q.get_or_init(|| {
+        // Pruned no-recompute class only.
+        let mut cands = Vec::new();
+        for e in &pruned_table().classes[0] {
+            for sm1 in STATIONARIES {
+                for sm2 in STATIONARIES {
+                    cands.push(Candidate { order: e.order, levels: e.levels, sm1, sm2 });
+                }
+            }
+        }
+        QueryMatrix::build(cands)
+    })
+}
+
+pub fn variant_query(v: Variant) -> &'static QueryMatrix {
+    match v {
+        Variant::Base => base_query(),
+        Variant::BufferManagement => bm_query(),
+        Variant::Recompute => MmeeEngine::query(),
+    }
+}
+
+impl Orojenesis {
+    /// DRAM-vs-buffer Pareto front (the Fig. 14/15/16 output).
+    pub fn da_bs_front(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+    ) -> Vec<(f64, f64)> {
+        let engine = MmeeEngine::native();
+        let front =
+            engine.pareto_da_bs_with_candidates(w, accel, variant_query(self.0));
+        front.points().iter().map(|p| (p.x, p.y)).collect()
+    }
+}
+
+impl Mapper for Orojenesis {
+    fn name(&self) -> &'static str {
+        match self.0 {
+            Variant::Base => "orojenesis",
+            Variant::BufferManagement => "o+bm",
+            Variant::Recompute => "o+bm+re",
+        }
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        MmeeEngine::native().optimize_with_candidates(w, accel, obj, variant_query(self.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn variant_spaces_nest() {
+        let base = variant_query(Variant::Base).num_candidates();
+        let bm = variant_query(Variant::BufferManagement).num_candidates();
+        let re = variant_query(Variant::Recompute).num_candidates();
+        assert!(base < bm, "{base} {bm}");
+        assert!(bm < re, "{bm} {re}");
+    }
+
+    #[test]
+    fn enhancements_only_improve() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let e_base = Orojenesis(Variant::Base)
+            .optimize(&w, &accel, Objective::Energy)
+            .metrics
+            .energy;
+        let e_bm = Orojenesis(Variant::BufferManagement)
+            .optimize(&w, &accel, Objective::Energy)
+            .metrics
+            .energy;
+        let e_re = Orojenesis(Variant::Recompute)
+            .optimize(&w, &accel, Objective::Energy)
+            .metrics
+            .energy;
+        assert!(e_bm <= e_base * (1.0 + 1e-9));
+        assert!(e_re <= e_bm * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn front_in_base_variant_is_covered_by_bm() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let base = Orojenesis(Variant::Base).da_bs_front(&w, &accel);
+        let bm = Orojenesis(Variant::BufferManagement).da_bs_front(&w, &accel);
+        // For every base point some BM point is at least as good.
+        for (bs, da) in &base {
+            assert!(
+                bm.iter().any(|(b2, d2)| b2 <= bs && d2 <= da),
+                "base point ({bs}, {da}) not covered"
+            );
+        }
+    }
+}

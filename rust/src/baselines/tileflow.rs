@@ -1,0 +1,567 @@
+//! TileFlow [90] reimplementation: tree-based mapping representation
+//! evaluated by traversal, a genetic algorithm that pre-searches
+//! computation ordering + buffer management (as in the released TileFlow,
+//! where these are GA-fixed before tiling search), and Monte-Carlo Tree
+//! Search over tile sizes.
+//!
+//! Also provides the paper's enumeration-boosted variants:
+//! * **TF+** (§VII-G): TileFlow's decision space searched exhaustively.
+//! * **TF+T** (Fig. 24): GA-fixed ordering/buffering + exhaustive tiling.
+//! * **TF+T+BM** (Fig. 24): exhaustive buffering + tiling, GA ordering.
+
+use super::Mapper;
+use crate::config::{Accelerator, Workload};
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::loopnest::dims::STATIONARIES;
+use crate::loopnest::{BufferingLevels, Candidate, LoopOrder};
+use crate::model::{analytic, derive_slots, Multipliers};
+use crate::search::{MmeeEngine, Objective, Solution};
+use crate::tiling::{enumerate_tilings, factorize::factor_pairs, Tiling};
+use crate::util::rng::Rng;
+
+// ------------------------------------------------------------------ tree
+
+/// TileFlow's tree representation: Scope nodes hold loop bindings, Op
+/// leaves the two operators. Metrics are obtained by *walking* the tree
+/// (reconstructing the mapping, re-deriving its formulas) — the
+/// per-evaluation parse cost the paper contrasts with MMEE's matrices.
+#[derive(Debug, Clone)]
+pub enum TreeNode {
+    /// (dim index, inter-tile count, granule) loop binding + children.
+    Scope { loops: Vec<(usize, usize, usize)>, children: Vec<TreeNode> },
+    ProducerOp,
+    ConsumerOp,
+}
+
+#[derive(Debug, Clone)]
+pub struct MappingTree {
+    pub root: TreeNode,
+    candidate: Candidate,
+    tiling: Tiling,
+}
+
+impl MappingTree {
+    /// Build the tree for a mapping: shared loops above the transition
+    /// level, then a producer branch (the k loop) and a consumer branch.
+    pub fn build(candidate: Candidate, tiling: Tiling) -> MappingTree {
+        let t = candidate.order.pos(crate::loopnest::Dim::K);
+        let bind = |depth: usize| {
+            let d = candidate.order.dim_at(depth);
+            (d.index(), tiling.xd[d.index()], tiling.xg[d.index()])
+        };
+        let producer = TreeNode::Scope {
+            loops: (t..4)
+                .filter(|&p| candidate.order.dim_at(p) != crate::loopnest::Dim::J)
+                .map(bind)
+                .collect(),
+            children: vec![TreeNode::ProducerOp],
+        };
+        let consumer = TreeNode::Scope {
+            loops: (t..4)
+                .filter(|&p| candidate.order.dim_at(p) != crate::loopnest::Dim::K)
+                .map(bind)
+                .collect(),
+            children: vec![TreeNode::ConsumerOp],
+        };
+        let root = TreeNode::Scope {
+            loops: (0..t).map(bind).collect(),
+            children: vec![producer, consumer],
+        };
+        MappingTree { root, candidate, tiling }
+    }
+
+    /// Depth of the tree (sanity/introspection).
+    pub fn depth(&self) -> usize {
+        fn d(n: &TreeNode) -> usize {
+            match n {
+                TreeNode::Scope { children, .. } => {
+                    1 + children.iter().map(d).max().unwrap_or(0)
+                }
+                _ => 1,
+            }
+        }
+        d(&self.root)
+    }
+
+    /// Evaluate by traversal: walk the tree to recover the mapping, then
+    /// re-derive and evaluate its analytical formulas (per-mapping parse).
+    pub fn evaluate(&self, accel: &Accelerator, w: &Workload) -> (f64, f64) {
+        // Traversal pass: recompute loop products from the tree (this is
+        // the structural walk; the numbers feed a consistency check).
+        fn walk(n: &TreeNode, acc: &mut u64) {
+            match n {
+                TreeNode::Scope { loops, children } => {
+                    for (_, xd, _) in loops {
+                        *acc = acc.wrapping_mul(*xd as u64).max(1);
+                    }
+                    for c in children {
+                        walk(c, acc);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut acc = 1u64;
+        walk(&self.root, &mut acc);
+        debug_assert!(acc >= 1);
+        let slots = derive_slots(&self.candidate);
+        let (_, m) = analytic::evaluate(&slots, &self.tiling, accel, w);
+        (m.energy, m.latency)
+    }
+}
+
+// -------------------------------------------------------------------- GA
+
+#[derive(Debug, Clone, Copy)]
+struct Genome {
+    order_idx: usize,
+    levels: BufferingLevels,
+    sm1: usize,
+    sm2: usize,
+}
+
+impl Genome {
+    fn to_candidate(self, orders: &[LoopOrder]) -> Candidate {
+        Candidate {
+            order: orders[self.order_idx],
+            levels: self.levels,
+            sm1: STATIONARIES[self.sm1],
+            sm2: STATIONARIES[self.sm2],
+        }
+    }
+}
+
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig { population: 16, generations: 12, mutation_rate: 0.25, seed: 0x71EF_1011 }
+    }
+}
+
+/// GA over (ordering, buffering, stationary); fitness = best objective
+/// over a small sampled tiling set (the GA runs before tiling search).
+fn ga_search(
+    w: &Workload,
+    accel: &Accelerator,
+    obj: Objective,
+    cfg: &GaConfig,
+    orders: &[LoopOrder],
+) -> (Candidate, f64) {
+    let mut rng = Rng::new(cfg.seed ^ w.gemm.i as u64 ^ (w.gemm.l as u64) << 20);
+    let sample_tilings: Vec<Tiling> = {
+        let all = enumerate_tilings(&w.gemm, Some(accel.capacity_words() as f64));
+        let mut s = Vec::new();
+        for _ in 0..4.min(all.len()) {
+            s.push(*rng.choose(&all));
+        }
+        s
+    };
+    let fitness = |g: &Genome, rng: &mut Rng| -> f64 {
+        let cand = g.to_candidate(orders);
+        let mut best = f64::INFINITY;
+        for t in &sample_tilings {
+            let tree = MappingTree::build(cand, *t);
+            let (e, l) = tree.evaluate(accel, w);
+            best = best.min(obj.score(e, l));
+        }
+        let _ = rng;
+        best
+    };
+    let random_genome = |rng: &mut Rng| Genome {
+        order_idx: rng.below(orders.len()),
+        levels: BufferingLevels {
+            a: rng.below(5) as u8,
+            b: rng.below(5) as u8,
+            d: rng.below(5) as u8,
+            e: rng.below(5) as u8,
+        },
+        sm1: rng.below(3),
+        sm2: rng.below(3),
+    };
+
+    let mut pop: Vec<(Genome, f64)> = (0..cfg.population)
+        .map(|_| {
+            let g = random_genome(&mut rng);
+            let f = fitness(&g, &mut rng);
+            (g, f)
+        })
+        .collect();
+
+    for _ in 0..cfg.generations {
+        let mut next = Vec::with_capacity(cfg.population);
+        // Elitism: keep the best.
+        pop.sort_by(|a, b| a.1.total_cmp(&b.1));
+        next.push(pop[0]);
+        while next.len() < cfg.population {
+            // Tournament selection.
+            let pick = |rng: &mut Rng| {
+                let a = rng.below(pop.len());
+                let b = rng.below(pop.len());
+                if pop[a].1 < pop[b].1 { pop[a].0 } else { pop[b].0 }
+            };
+            let (p1, p2) = (pick(&mut rng), pick(&mut rng));
+            // Uniform crossover.
+            let mut child = Genome {
+                order_idx: if rng.bool() { p1.order_idx } else { p2.order_idx },
+                levels: BufferingLevels {
+                    a: if rng.bool() { p1.levels.a } else { p2.levels.a },
+                    b: if rng.bool() { p1.levels.b } else { p2.levels.b },
+                    d: if rng.bool() { p1.levels.d } else { p2.levels.d },
+                    e: if rng.bool() { p1.levels.e } else { p2.levels.e },
+                },
+                sm1: if rng.bool() { p1.sm1 } else { p2.sm1 },
+                sm2: if rng.bool() { p1.sm2 } else { p2.sm2 },
+            };
+            // Mutation.
+            if rng.f64() < cfg.mutation_rate {
+                match rng.below(4) {
+                    0 => child.order_idx = rng.below(orders.len()),
+                    1 => child.levels.a = rng.below(5) as u8,
+                    2 => child.levels.d = rng.below(5) as u8,
+                    _ => child.sm1 = rng.below(3),
+                }
+            }
+            let f = fitness(&child, &mut rng);
+            next.push((child, f));
+        }
+        pop = next;
+    }
+    pop.sort_by(|a, b| a.1.total_cmp(&b.1));
+    (pop[0].0.to_candidate(orders), pop[0].1)
+}
+
+// ------------------------------------------------------------------ MCTS
+
+/// MCTS over tile sizes: one tree level per dimension, actions = divisor
+/// pairs, UCB1 selection, random rollout completion.
+pub struct MctsConfig {
+    pub iterations: usize,
+    pub exploration: f64,
+    pub seed: u64,
+}
+
+impl Default for MctsConfig {
+    fn default() -> Self {
+        MctsConfig { iterations: 200, exploration: 1.4, seed: 0x7153_0a1b }
+    }
+}
+
+struct MctsNode {
+    visits: u64,
+    total: f64,
+    children: Vec<Option<Box<MctsNode>>>,
+}
+
+impl MctsNode {
+    fn new(n: usize) -> MctsNode {
+        MctsNode { visits: 0, total: 0.0, children: (0..n).map(|_| None).collect() }
+    }
+}
+
+fn mcts_search(
+    cand: Candidate,
+    w: &Workload,
+    accel: &Accelerator,
+    obj: Objective,
+    cfg: &MctsConfig,
+) -> (Tiling, f64, usize) {
+    let dims = w.gemm.dims();
+    let choices: Vec<Vec<(usize, usize)>> =
+        dims.iter().map(|&d| factor_pairs(d)).collect();
+    let mut rng = Rng::new(cfg.seed ^ dims[0] as u64);
+    let mut root = MctsNode::new(choices[0].len());
+    let mut best: (f64, Option<Tiling>) = (f64::INFINITY, None);
+    let mut evals = 0usize;
+
+    let score_of = |t: &Tiling| -> f64 {
+        let tree = MappingTree::build(cand, *t);
+        let (e, l) = tree.evaluate(accel, w);
+        obj.score(e, l)
+    };
+
+    for _ in 0..cfg.iterations {
+        // Selection + expansion down the 4 levels.
+        let mut picks = [0usize; 4];
+        let mut node: *mut MctsNode = &mut root;
+        for lvl in 0..4 {
+            let n = unsafe { &mut *node };
+            // UCB1 (minimization: reward = -score normalised by best).
+            let mut chosen = None;
+            for (i, child) in n.children.iter().enumerate() {
+                if child.is_none() {
+                    chosen = Some(i);
+                    break;
+                }
+            }
+            let i = chosen.unwrap_or_else(|| {
+                let lnv = (n.visits.max(1) as f64).ln();
+                let mut best_i = 0;
+                let mut best_u = f64::NEG_INFINITY;
+                for (i, child) in n.children.iter().enumerate() {
+                    let c = child.as_ref().unwrap();
+                    let mean = c.total / c.visits.max(1) as f64;
+                    let u = mean + cfg.exploration * (lnv / c.visits.max(1) as f64).sqrt();
+                    if u > best_u {
+                        best_u = u;
+                        best_i = i;
+                    }
+                }
+                best_i
+            });
+            picks[lvl] = i;
+            if n.children[i].is_none() {
+                let next_arms = if lvl + 1 < 4 { choices[lvl + 1].len() } else { 0 };
+                n.children[i] = Some(Box::new(MctsNode::new(next_arms)));
+                // Rollout: random completion of remaining levels.
+                for p in picks.iter_mut().take(4).skip(lvl + 1) {
+                    *p = rng.below(choices[3].len().max(1)).min(choices[3].len() - 1);
+                }
+                for (l2, pick) in picks.iter_mut().enumerate().skip(lvl + 1) {
+                    *pick = rng.below(choices[l2].len());
+                }
+                break;
+            }
+            node = n.children[i].as_mut().unwrap().as_mut();
+        }
+        let tiling = Tiling {
+            xd: [
+                choices[0][picks[0]].0,
+                choices[1][picks[1]].0,
+                choices[2][picks[2]].0,
+                choices[3][picks[3]].0,
+            ],
+            xg: [
+                choices[0][picks[0]].1,
+                choices[1][picks[1]].1,
+                choices[2][picks[2]].1,
+                choices[3][picks[3]].1,
+            ],
+        };
+        let s = score_of(&tiling);
+        evals += 1;
+        if s < best.0 {
+            best = (s, Some(tiling));
+        }
+        // Backprop: reward shaped as 1/(1+s/best) to stay bounded.
+        let reward = if s.is_finite() { best.0 / s.max(1e-30) } else { 0.0 };
+        let mut node: *mut MctsNode = &mut root;
+        for (lvl, &i) in picks.iter().enumerate() {
+            let n = unsafe { &mut *node };
+            n.visits += 1;
+            n.total += reward;
+            match n.children[i] {
+                Some(ref mut c) if lvl < 3 => node = c.as_mut(),
+                _ => break,
+            }
+        }
+    }
+    let t = best.1.unwrap_or_else(|| Tiling::unit(&w.gemm));
+    (t, best.0, evals)
+}
+
+// ----------------------------------------------------------- the mappers
+
+pub struct TileFlow {
+    pub ga: GaConfig,
+    pub mcts: MctsConfig,
+}
+
+impl Default for TileFlow {
+    fn default() -> Self {
+        TileFlow { ga: GaConfig::default(), mcts: MctsConfig::default() }
+    }
+}
+
+fn norec_orders() -> Vec<LoopOrder> {
+    LoopOrder::all().into_iter().filter(|o| !o.recompute()).collect()
+}
+
+impl TileFlow {
+    fn package(
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+        cand: Candidate,
+        tiling: Tiling,
+        evals: usize,
+        t0: std::time::Instant,
+    ) -> Solution {
+        let slots = derive_slots(&cand);
+        let (_, metrics) = analytic::evaluate(&slots, &tiling, accel, w);
+        Solution {
+            workload: w.name.clone(),
+            accel: accel.name.clone(),
+            objective: obj,
+            candidate: cand,
+            tiling,
+            metrics,
+            evaluated: evals as f64,
+            elapsed: t0.elapsed(),
+        }
+    }
+
+    /// GA-fixed candidate for a workload (used by the TF+T variants).
+    pub fn ga_candidate(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Candidate {
+        // TileFlow has no recomputation in its space.
+        ga_search(w, accel, obj, &self.ga, &norec_orders()).0
+    }
+}
+
+impl Mapper for TileFlow {
+    fn name(&self) -> &'static str {
+        "tileflow"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        let t0 = std::time::Instant::now();
+        let cand = self.ga_candidate(w, accel, obj);
+        let (tiling, _, evals) = mcts_search(cand, w, accel, obj, &self.mcts);
+        let ga_evals = self.ga.population * (self.ga.generations + 1) * 4;
+        Self::package(w, accel, obj, cand, tiling, evals + ga_evals, t0)
+    }
+}
+
+/// TF+ (§VII-G): TileFlow's decision space (no recompute) searched by
+/// exhaustive enumeration — isolates search efficiency from space.
+pub struct TfPlus;
+
+impl Mapper for TfPlus {
+    fn name(&self) -> &'static str {
+        "tf+"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        use super::orojenesis::{variant_query, Variant};
+        MmeeEngine::native().optimize_with_candidates(
+            w,
+            accel,
+            obj,
+            variant_query(Variant::BufferManagement),
+        )
+    }
+}
+
+/// TF+T (Fig. 24): GA-fixed ordering/buffering, exhaustive tiling.
+pub struct TfPlusT;
+
+impl Mapper for TfPlusT {
+    fn name(&self) -> &'static str {
+        "tf+t"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        let tf = TileFlow::default();
+        let cand = tf.ga_candidate(w, accel, obj);
+        let q = QueryMatrix::build(vec![cand]);
+        MmeeEngine::native().optimize_with_candidates(w, accel, obj, &q)
+    }
+}
+
+/// TF+T+BM (Fig. 24): GA ordering + exhaustive buffering and tiling.
+pub struct TfPlusTBm;
+
+impl Mapper for TfPlusTBm {
+    fn name(&self) -> &'static str {
+        "tf+t+bm"
+    }
+
+    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+        let tf = TileFlow::default();
+        let base = tf.ga_candidate(w, accel, obj);
+        let mut cands = Vec::new();
+        for levels in BufferingLevels::enumerate() {
+            for sm1 in STATIONARIES {
+                for sm2 in STATIONARIES {
+                    cands.push(Candidate { order: base.order, levels, sm1, sm2 });
+                }
+            }
+        }
+        let q = QueryMatrix::build(cands);
+        MmeeEngine::native().optimize_with_candidates(w, accel, obj, &q)
+    }
+}
+
+#[allow(unused)]
+fn boundary_for(w: &Workload, accel: &Accelerator) -> BoundaryMatrix {
+    let t = enumerate_tilings(&w.gemm, Some(accel.capacity_words() as f64));
+    BoundaryMatrix::build(t, accel, w)
+}
+
+#[allow(unused)]
+fn unit_mult() -> Multipliers {
+    Multipliers::unit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn tree_structure() {
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: STATIONARIES[0],
+            sm2: STATIONARIES[0],
+        };
+        let w = presets::bert_base(512);
+        let t = Tiling { xd: [8, 1, 8, 1], xg: [64, 64, 64, 64] };
+        let tree = MappingTree::build(cand, t);
+        assert_eq!(tree.depth(), 3); // root scope -> op scopes -> leaves
+        let (e, l) = tree.evaluate(&presets::accel1(), &w);
+        assert!(e > 0.0 && l > 0.0);
+    }
+
+    #[test]
+    fn tileflow_is_deterministic_and_feasible() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let tf = TileFlow::default();
+        let s1 = tf.optimize(&w, &accel, Objective::Energy);
+        let s2 = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+        assert_eq!(s1.tiling, s2.tiling);
+        assert!(s1.metrics.feasible);
+    }
+
+    #[test]
+    fn heuristic_search_does_not_beat_exhaustive() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+        let mmee = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        assert!(mmee.metrics.energy <= tf.metrics.energy * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn tfplus_matches_mmee_energy_when_no_recompute_wins() {
+        // §VII-G: with enumeration, TF+ matches MMEE under energy-driven
+        // optimization whenever the optimum does not need recomputation.
+        let w = presets::bert_base(512);
+        let accel = presets::accel2();
+        let tfp = TfPlus.optimize(&w, &accel, Objective::Energy);
+        let mmee = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        if !mmee.candidate.recompute() {
+            let rel = (tfp.metrics.energy - mmee.metrics.energy).abs() / mmee.metrics.energy;
+            assert!(rel < 1e-9, "tf+ {} vs mmee {}", tfp.metrics.energy, mmee.metrics.energy);
+        }
+    }
+
+    #[test]
+    fn variants_order_sanely() {
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy).metrics.energy;
+        let tft = TfPlusT.optimize(&w, &accel, Objective::Energy).metrics.energy;
+        let tftbm = TfPlusTBm.optimize(&w, &accel, Objective::Energy).metrics.energy;
+        // Adding enumeration never hurts.
+        assert!(tft <= tf * (1.0 + 1e-9), "tf+t {tft} vs tf {tf}");
+        assert!(tftbm <= tft * (1.0 + 1e-9), "tf+t+bm {tftbm} vs tf+t {tft}");
+    }
+}

@@ -1,0 +1,213 @@
+//! Spatial accelerator descriptions (paper §II-B, Fig. 2(b)).
+//!
+//! An accelerator is a set of PE arrays behind one shared on-chip buffer,
+//! with a DRAM channel and an SFU for softmax. The energy model follows
+//! Interstellar-style 28nm constants (paper §VII-A, [81]) and is fully
+//! user-overridable.
+
+use crate::util::json::Json;
+
+/// Per-word / per-MAC energy constants in joules. "word" = one element
+/// (bf16/fp16, 2 bytes) unless `bytes_per_word` says otherwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// DRAM <-> on-chip buffer, J/word (≈100 pJ/B class for LPDDR @28nm).
+    pub e_dram: f64,
+    /// On-chip buffer <-> register file, J/word (MB-scale SRAM).
+    pub e_buf: f64,
+    /// One MAC, J (16-bit @ 28nm).
+    pub e_mac: f64,
+    /// Softmax per element normalised work unit, J. The paper's
+    /// `c_softmax` multiplier is folded into the query encoding, so this
+    /// is the per-unit SFU energy.
+    pub e_sfu: f64,
+    /// Buffer-occupancy (leakage proxy) J/word of peak occupancy; gives
+    /// the "DRAM-buffer energy proportional to buffer size" term the
+    /// paper's optimality proof (§VI-C) relies on.
+    pub e_bs: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // 28nm-class constants per 2-byte word (Interstellar [81] style):
+        // DRAM ~100 pJ/B -> 200 pJ/word; large SRAM ~3 pJ/B -> 6 pJ/word;
+        // 16-bit MAC ~0.56 pJ; SFU exp/div unit ~0.56 pJ/op unit.
+        EnergyModel {
+            e_dram: 200.0e-12,
+            e_buf: 6.0e-12,
+            e_mac: 0.56e-12,
+            e_sfu: 0.56e-12,
+            e_bs: 0.01e-12,
+        }
+    }
+}
+
+/// One accelerator configuration (paper §VII-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Accelerator {
+    pub name: String,
+    /// Number of identical PE arrays (heads are mapped across arrays).
+    pub num_arrays: usize,
+    /// Logical PE array shape (rows x cols). Square for the main
+    /// experiments; Fig. 27 explores reshaping.
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// On-chip buffer capacity in bytes (shared, double-buffered).
+    pub buffer_bytes: usize,
+    /// DRAM bandwidth, bytes/second.
+    pub dram_bw: f64,
+    /// Clock, Hz.
+    pub freq: f64,
+    /// Element size in bytes (bf16 = 2).
+    pub bytes_per_word: usize,
+    pub energy: EnergyModel,
+}
+
+impl Accelerator {
+    pub fn capacity_words(&self) -> usize {
+        self.buffer_bytes / self.bytes_per_word
+    }
+
+    /// MACs per cycle across one PE array.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Seconds to move one word over DRAM.
+    pub fn sec_per_word(&self) -> f64 {
+        self.bytes_per_word as f64 / self.dram_bw
+    }
+
+    pub fn sec_per_cycle(&self) -> f64 {
+        1.0 / self.freq
+    }
+
+    /// The 8-entry hardware parameter vector consumed by the AOT
+    /// evaluation graph (layout.HW_PARAMS order) and the native evaluator.
+    pub fn hw_vector(&self) -> HwVector {
+        HwVector {
+            e_dram: self.energy.e_dram,
+            e_buf: self.energy.e_buf,
+            e_mac: self.energy.e_mac,
+            e_sfu: self.energy.e_sfu,
+            e_bs: self.energy.e_bs,
+            sec_per_word: self.sec_per_word(),
+            sec_per_cycle: self.sec_per_cycle(),
+            capacity_words: self.capacity_words() as f64,
+        }
+    }
+
+    /// Same accelerator with a different buffer size (Figs. 15/16 sweeps).
+    pub fn with_buffer_bytes(&self, bytes: usize) -> Accelerator {
+        Accelerator { buffer_bytes: bytes, ..self.clone() }
+    }
+
+    /// Same accelerator with a reshaped logical PE array (Fig. 27).
+    pub fn with_pe_shape(&self, rows: usize, cols: usize) -> Accelerator {
+        Accelerator { pe_rows: rows, pe_cols: cols, ..self.clone() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("num_arrays", Json::num(self.num_arrays as f64)),
+            ("pe_rows", Json::num(self.pe_rows as f64)),
+            ("pe_cols", Json::num(self.pe_cols as f64)),
+            ("buffer_bytes", Json::num(self.buffer_bytes as f64)),
+            ("dram_bw", Json::num(self.dram_bw)),
+            ("freq", Json::num(self.freq)),
+            ("bytes_per_word", Json::num(self.bytes_per_word as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Accelerator> {
+        let get = |k: &str| -> anyhow::Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("accelerator config missing '{k}'"))
+        };
+        Ok(Accelerator {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            num_arrays: get("num_arrays")? as usize,
+            pe_rows: get("pe_rows")? as usize,
+            pe_cols: get("pe_cols")? as usize,
+            buffer_bytes: get("buffer_bytes")? as usize,
+            dram_bw: get("dram_bw")?,
+            freq: get("freq")?,
+            bytes_per_word: get("bytes_per_word")? as usize,
+            energy: EnergyModel::default(),
+        })
+    }
+}
+
+/// Flat hardware parameter vector — the runtime input of the AOT graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwVector {
+    pub e_dram: f64,
+    pub e_buf: f64,
+    pub e_mac: f64,
+    pub e_sfu: f64,
+    pub e_bs: f64,
+    pub sec_per_word: f64,
+    pub sec_per_cycle: f64,
+    pub capacity_words: f64,
+}
+
+impl HwVector {
+    pub fn to_f32_array(&self) -> [f32; 8] {
+        [
+            self.e_dram as f32,
+            self.e_buf as f32,
+            self.e_mac as f32,
+            self.e_sfu as f32,
+            self.e_bs as f32,
+            self.sec_per_word as f32,
+            self.sec_per_cycle as f32,
+            self.capacity_words as f32,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn derived_quantities() {
+        let a = presets::accel1();
+        assert_eq!(a.capacity_words(), 1 << 20 >> 1); // 1 MB / 2B
+        assert_eq!(a.macs_per_cycle(), 32 * 32);
+        assert!((a.sec_per_cycle() - 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn hw_vector_matches_layout_order() {
+        let a = presets::accel2();
+        let v = a.hw_vector().to_f32_array();
+        assert_eq!(v[7], a.capacity_words() as f32);
+        assert!((v[5] - a.sec_per_word() as f32).abs() < 1e-18);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let a = presets::accel1();
+        let b = Accelerator::from_json(&a.to_json()).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.buffer_bytes, b.buffer_bytes);
+        assert_eq!(a.pe_rows, b.pe_rows);
+    }
+
+    #[test]
+    fn buffer_and_shape_overrides() {
+        let a = presets::accel1();
+        assert_eq!(a.with_buffer_bytes(65536).buffer_bytes, 65536);
+        let r = a.with_pe_shape(8, 128);
+        assert_eq!((r.pe_rows, r.pe_cols), (8, 128));
+        assert_eq!(r.buffer_bytes, a.buffer_bytes);
+    }
+}

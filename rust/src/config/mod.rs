@@ -1,0 +1,8 @@
+//! Accelerator, energy-model and workload configuration.
+
+pub mod accel;
+pub mod workload;
+pub mod presets;
+
+pub use accel::{Accelerator, EnergyModel, HwVector};
+pub use workload::{FusedGemm, Workload, WorkloadKind};

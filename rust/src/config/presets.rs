@@ -1,0 +1,218 @@
+//! Preset accelerators and workloads from the paper's evaluation.
+
+use super::accel::{Accelerator, EnergyModel};
+use super::workload::Workload;
+
+const MB: usize = 1 << 20;
+const KB: usize = 1 << 10;
+const GB: f64 = 1.0e9;
+
+/// Accel. 1 (paper §VII-A): NVDLA-like — 4 PE arrays, 1 MB buffer,
+/// 60 GB/s DRAM, 32×32 PEs, 1 GHz.
+pub fn accel1() -> Accelerator {
+    Accelerator {
+        name: "accel1-nvdla".into(),
+        num_arrays: 4,
+        pe_rows: 32,
+        pe_cols: 32,
+        buffer_bytes: MB,
+        dram_bw: 60.0 * GB,
+        freq: 1.0e9,
+        bytes_per_word: 2,
+        energy: EnergyModel::default(),
+    }
+}
+
+/// Accel. 2 (paper §VII-A): TPU-like — 4 PE arrays, 4 MB buffer,
+/// 128 GB/s DRAM, 128×128 PEs, 1 GHz.
+pub fn accel2() -> Accelerator {
+    Accelerator {
+        name: "accel2-tpu".into(),
+        num_arrays: 4,
+        pe_rows: 128,
+        pe_cols: 128,
+        buffer_bytes: 4 * MB,
+        dram_bw: 128.0 * GB,
+        freq: 1.0e9,
+        bytes_per_word: 2,
+        energy: EnergyModel::default(),
+    }
+}
+
+/// Coral NPU (paper Table III / Fig. 26): 1×16×16, 32 KB, 1.6 GB/s.
+pub fn coral() -> Accelerator {
+    Accelerator {
+        name: "coral".into(),
+        num_arrays: 1,
+        pe_rows: 16,
+        pe_cols: 16,
+        buffer_bytes: 32 * KB,
+        dram_bw: 1.6 * GB,
+        freq: 1.0e9,
+        bytes_per_word: 2,
+        energy: EnergyModel::default(),
+    }
+}
+
+/// Zheng et al. design [89] (Table III): 1×32×32, 512 KB, 2 GB/s.
+pub fn design89() -> Accelerator {
+    Accelerator {
+        name: "design89".into(),
+        num_arrays: 1,
+        pe_rows: 32,
+        pe_cols: 32,
+        buffer_bytes: 512 * KB,
+        dram_bw: 2.0 * GB,
+        freq: 1.0e9,
+        bytes_per_word: 2,
+        energy: EnergyModel::default(),
+    }
+}
+
+/// SET [9]/Crane [28] tiled architecture (Table III): 16×32×32, 16 MB, 8 GB/s.
+pub fn set_accel() -> Accelerator {
+    Accelerator {
+        name: "set".into(),
+        num_arrays: 16,
+        pe_rows: 32,
+        pe_cols: 32,
+        buffer_bytes: 16 * MB,
+        dram_bw: 8.0 * GB,
+        freq: 1.0e9,
+        bytes_per_word: 2,
+        energy: EnergyModel::default(),
+    }
+}
+
+/// GPU proxy for the Table II substitution (DESIGN.md §7): A100-40GB
+/// class — 108 SM-like arrays, 40 MB L2-as-buffer, 1.5 TB/s HBM2e,
+/// 1.41 GHz; an 8×16 "array" approximates one SM's tensor-core MAC rate
+/// (f16: 1024 MAC/cycle/SM ≈ 8×16×8; we keep a 2-D 32×32 logical shape
+/// with 1024 MACs/cycle).
+pub fn gpu_proxy() -> Accelerator {
+    Accelerator {
+        name: "gpu-a100-proxy".into(),
+        num_arrays: 108,
+        pe_rows: 32,
+        pe_cols: 32,
+        buffer_bytes: 40 * MB,
+        dram_bw: 1555.0 * GB,
+        freq: 1.41e9,
+        bytes_per_word: 2,
+        energy: EnergyModel::default(),
+    }
+}
+
+pub fn accel_by_name(name: &str) -> Option<Accelerator> {
+    match name {
+        "accel1" | "accel1-nvdla" | "nvdla" => Some(accel1()),
+        "accel2" | "accel2-tpu" | "tpu" => Some(accel2()),
+        "coral" => Some(coral()),
+        "design89" => Some(design89()),
+        "set" => Some(set_accel()),
+        "gpu" | "gpu-a100-proxy" => Some(gpu_proxy()),
+        _ => None,
+    }
+}
+
+// ----------------------------------------------------------------- models
+
+/// BERT-Base attention: d_model 768, 12 heads, d_head 64.
+pub fn bert_base(seq: usize) -> Workload {
+    Workload::attention("bert-base", seq, 64, 12)
+}
+
+/// GPT-3-13B attention: d_model 5120, 40 heads, d_head 128.
+pub fn gpt3_13b(seq: usize) -> Workload {
+    Workload::attention("gpt3-13b", seq, 128, 40)
+}
+
+/// PaLM-62B attention: d_model 8192, 32 heads, d_head 256.
+pub fn palm_62b(seq: usize) -> Workload {
+    Workload::attention("palm-62b", seq, 256, 32)
+}
+
+/// GPT-3-6.7B attention: d_model 4096, 32 heads, d_head 128 (Fig. 16).
+pub fn gpt3_6_7b_attention(seq: usize) -> Workload {
+    Workload::attention("gpt3-6.7b", seq, 128, 32)
+}
+
+/// GPT-3-6.7B fused FFN pair (Fig. 15): tokens × d_model × 4·d_model ×
+/// d_model, following Orojenesis's fused-FFN setup.
+pub fn gpt3_6_7b_ffn(tokens: usize) -> Workload {
+    Workload::gemm_pair("gpt3-6.7b-ffn", tokens, 4096, 16384, 4096)
+}
+
+/// Table IV workloads.
+pub fn cc1() -> Workload {
+    Workload::conv_chain("cc1", 112 * 112, 64, 192, 128, 3, 1)
+}
+pub fn cc2() -> Workload {
+    Workload::conv_chain("cc2", 56 * 56, 64, 64, 64, 1, 1)
+}
+pub fn mlp_chimera() -> Workload {
+    Workload::gemm_pair("mlp", 768, 64, 384, 64)
+}
+pub fn ffn_bert() -> Workload {
+    Workload::gemm_pair("ffn", 2048, 768, 3072, 768)
+}
+
+/// The paper's main 3×3 evaluation grid (Figs. 17/18, Table I).
+pub fn main_grid() -> Vec<Workload> {
+    vec![
+        bert_base(512),
+        bert_base(4096),
+        bert_base(16384),
+        gpt3_13b(2048),
+        gpt3_13b(4096),
+        gpt3_13b(16384),
+        palm_62b(2048),
+        palm_62b(4096),
+        palm_62b(16384),
+    ]
+}
+
+pub fn workload_by_name(name: &str, seq: usize) -> Option<Workload> {
+    match name {
+        "bert-base" | "bert" => Some(bert_base(seq)),
+        "gpt3-13b" | "gpt" => Some(gpt3_13b(seq)),
+        "palm-62b" | "palm" => Some(palm_62b(seq)),
+        "gpt3-6.7b" => Some(gpt3_6_7b_attention(seq)),
+        "gpt3-6.7b-ffn" => Some(gpt3_6_7b_ffn(seq)),
+        "cc1" => Some(cc1()),
+        "cc2" => Some(cc2()),
+        "mlp" => Some(mlp_chimera()),
+        "ffn" => Some(ffn_bert()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_accel_parameters() {
+        let a1 = accel1();
+        assert_eq!((a1.num_arrays, a1.pe_rows, a1.buffer_bytes), (4, 32, MB));
+        let a2 = accel2();
+        assert_eq!((a2.num_arrays, a2.pe_rows, a2.buffer_bytes), (4, 128, 4 * MB));
+        assert_eq!(set_accel().num_arrays, 16);
+        assert_eq!(coral().buffer_bytes, 32 * KB);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(accel_by_name("accel1").is_some());
+        assert!(accel_by_name("nope").is_none());
+        assert_eq!(workload_by_name("palm", 2048).unwrap().gemm.k, 256);
+        assert_eq!(workload_by_name("cc1", 0).unwrap().name, "cc1");
+    }
+
+    #[test]
+    fn main_grid_is_three_by_three() {
+        let grid = main_grid();
+        assert_eq!(grid.len(), 9);
+        assert!(grid.iter().all(|w| w.has_softmax()));
+    }
+}

@@ -1,0 +1,177 @@
+//! Workload specifications (paper §VII: attention of BERT-Base /
+//! GPT-3-13B / PaLM-62B, GPT-3-6.7B FFN pairs, conv chains via im2col,
+//! two-GEMM MLP/FFN shapes).
+//!
+//! Every workload normalizes to a [`FusedGemm`]: producer
+//! `A(I×K)·B(K×L) → C(I×L)`, consumer `C(I×L)·D(L×J) → E(I×J)`, with an
+//! optional softmax on C rows (attention) and a batch/head multiplier.
+
+/// A fused producer/consumer GEMM pair in the paper's `[I, K, L, J]`
+/// dimension convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FusedGemm {
+    pub i: usize,
+    pub k: usize,
+    pub l: usize,
+    pub j: usize,
+}
+
+impl FusedGemm {
+    pub fn dims(&self) -> [usize; 4] {
+        [self.i, self.k, self.l, self.j]
+    }
+    /// MACs of Op1 / Op2 (single head/batch instance).
+    pub fn macs_op1(&self) -> f64 {
+        self.i as f64 * self.k as f64 * self.l as f64
+    }
+    pub fn macs_op2(&self) -> f64 {
+        self.i as f64 * self.l as f64 * self.j as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// `softmax(Q·Kᵀ)·V`: I = L = seq_len, K = J = d_head.
+    Attention,
+    /// Plain fused GEMM chain (FFN, MLP, im2col'd conv chain).
+    GemmPair,
+}
+
+/// A named workload instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub kind: WorkloadKind,
+    pub gemm: FusedGemm,
+    /// Independent instances (attention heads × batch); instances map to
+    /// PE arrays (paper §V: "computations across different heads are
+    /// independent ... mapped onto separate PE arrays").
+    pub instances: usize,
+    /// Softmax cost factor `c_softmax` (paper §V-D; 10 in §VII-A).
+    pub c_softmax: f64,
+}
+
+impl Workload {
+    /// Encoder/prefill attention for one transformer layer, all heads.
+    pub fn attention(name: &str, seq: usize, d_head: usize, heads: usize) -> Workload {
+        Workload {
+            name: format!("{name}-{}", fmt_seq(seq)),
+            kind: WorkloadKind::Attention,
+            gemm: FusedGemm { i: seq, k: d_head, l: seq, j: d_head },
+            instances: heads,
+            c_softmax: 10.0,
+        }
+    }
+
+    /// A fused GEMM pair (no softmax).
+    pub fn gemm_pair(name: &str, i: usize, k: usize, l: usize, j: usize) -> Workload {
+        Workload {
+            name: name.to_string(),
+            kind: WorkloadKind::GemmPair,
+            gemm: FusedGemm { i, k, l, j },
+            instances: 1,
+            c_softmax: 0.0,
+        }
+    }
+
+    /// A convolution chain converted to a GEMM pair via im2col
+    /// (paper Table IV): shapes `[H×W, Cin, Cmid, Cout, k1², k2²]`.
+    /// Conv1: I = H·W output pixels, K = Cin·k1², L = Cmid.
+    /// Conv2 consumes conv1's output: reduction = Cmid·k2², J = Cout.
+    /// For k2 = 1 (pointwise) the intermediate is exactly C; for k2 > 1
+    /// the im2col re-reads neighbouring rows, which we conservatively
+    /// model with the same fused-GEMM shape (documented substitution).
+    pub fn conv_chain(
+        name: &str,
+        hw: usize,
+        cin: usize,
+        cmid: usize,
+        cout: usize,
+        k1: usize,
+        k2: usize,
+    ) -> Workload {
+        Workload {
+            name: name.to_string(),
+            kind: WorkloadKind::GemmPair,
+            gemm: FusedGemm {
+                i: hw,
+                k: cin * k1 * k1,
+                l: cmid * k2 * k2,
+                j: cout,
+            },
+            instances: 1,
+            c_softmax: 0.0,
+        }
+    }
+
+    pub fn has_softmax(&self) -> bool {
+        matches!(self.kind, WorkloadKind::Attention)
+    }
+
+    /// Total MACs across instances, no recomputation.
+    pub fn total_macs(&self) -> f64 {
+        (self.gemm.macs_op1() + self.gemm.macs_op2()) * self.instances as f64
+    }
+
+    /// Energy multiplier: all instances execute.
+    pub fn energy_multiplier(&self) -> f64 {
+        self.instances as f64
+    }
+
+    /// Latency multiplier given `num_arrays` PE arrays running instances
+    /// in parallel: ceil(instances / arrays) waves.
+    pub fn latency_multiplier(&self, num_arrays: usize) -> f64 {
+        (self.instances + num_arrays - 1).div_euclid(num_arrays).max(1) as f64
+    }
+}
+
+fn fmt_seq(seq: usize) -> String {
+    if seq % 1024 == 0 {
+        format!("{}k", seq / 1024)
+    } else {
+        format!("{seq}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_dims() {
+        let w = Workload::attention("bert-base", 512, 64, 12);
+        assert_eq!(w.gemm, FusedGemm { i: 512, k: 64, l: 512, j: 64 });
+        assert_eq!(w.instances, 12);
+        assert!(w.has_softmax());
+        assert_eq!(w.name, "bert-base-512");
+        let w4k = Workload::attention("bert-base", 4096, 64, 12);
+        assert_eq!(w4k.name, "bert-base-4k");
+    }
+
+    #[test]
+    fn mac_counts() {
+        let w = Workload::attention("t", 512, 64, 12);
+        // per head: 512*512*64 per op; both ops; ×12 heads
+        let expect = 2.0 * 512.0 * 512.0 * 64.0 * 12.0;
+        assert_eq!(w.total_macs(), expect);
+    }
+
+    #[test]
+    fn latency_multiplier_waves() {
+        let w = Workload::attention("t", 512, 64, 12);
+        assert_eq!(w.latency_multiplier(4), 3.0);
+        assert_eq!(w.latency_multiplier(16), 1.0);
+        assert_eq!(w.latency_multiplier(5), 3.0);
+    }
+
+    #[test]
+    fn conv_chain_im2col() {
+        // CC1 [112², 64, 192, 128, 3², 1²] (paper Table IV)
+        let w = Workload::conv_chain("cc1", 112 * 112, 64, 192, 128, 3, 1);
+        assert_eq!(w.gemm.i, 12544);
+        assert_eq!(w.gemm.k, 64 * 9);
+        assert_eq!(w.gemm.l, 192);
+        assert_eq!(w.gemm.j, 128);
+        assert!(!w.has_softmax());
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordination substrate: the thread pool that parallelizes surface
+//! evaluation and the request-service loop (`mmee serve`).
+//!
+//! Built from std primitives — no tokio/rayon in the offline build; the
+//! pool is part of the system's substrate inventory (DESIGN.md §5).
+
+pub mod pool;
+pub mod service;
+
+pub use pool::parallel_chunks;
+pub use service::{serve_lines, Request, Response};

@@ -1,0 +1,112 @@
+//! Scoped data-parallel execution over chunked index ranges.
+//!
+//! `parallel_chunks(n, chunk, f)` splits `0..n` into `chunk`-sized ranges
+//! and processes them on `min(available_parallelism, chunks)` worker
+//! threads with dynamic (atomic counter) load balancing — the shape of
+//! work MMEE's surface evaluation needs: many independent tiling blocks
+//! of slightly varying cost. Results are returned in chunk order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use for surface evaluation.
+pub fn default_workers() -> usize {
+    std::env::var("MMEE_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        })
+}
+
+/// Process `0..n` in `chunk`-sized ranges in parallel; `f(start, end)`
+/// returns a per-chunk result. Results come back ordered by chunk index.
+pub fn parallel_chunks<T: Send>(
+    n: usize,
+    chunk: usize,
+    f: impl Fn(usize, usize) -> T + Sync,
+) -> Vec<T> {
+    assert!(chunk > 0);
+    let num_chunks = n.div_ceil(chunk);
+    if num_chunks == 0 {
+        return Vec::new();
+    }
+    let workers = default_workers().min(num_chunks).max(1);
+    if workers == 1 {
+        return (0..num_chunks)
+            .map(|i| f(i * chunk, ((i + 1) * chunk).min(n)))
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> =
+        Mutex::new((0..num_chunks).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= num_chunks {
+                    break;
+                }
+                let out = f(i * chunk, ((i + 1) * chunk).min(n));
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("chunk not processed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_in_order() {
+        let out = parallel_chunks(1003, 17, |a, b| (a, b));
+        assert_eq!(out.len(), 1003usize.div_ceil(17));
+        let mut expect = 0;
+        for (a, b) in out {
+            assert_eq!(a, expect);
+            assert!(b > a && b <= 1003);
+            expect = b;
+        }
+        assert_eq!(expect, 1003);
+    }
+
+    #[test]
+    fn executes_work_exactly_once() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(10_000, 7, |a, b| {
+            let mut s = 0u64;
+            for i in a..b {
+                s += i as u64;
+            }
+            sum.fetch_add(s, Ordering::Relaxed);
+        });
+        assert_eq!(sum.into_inner(), (0..10_000u64).sum());
+    }
+
+    #[test]
+    fn empty_range() {
+        let out = parallel_chunks(0, 8, |a, b| (a, b));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn results_match_serial() {
+        let par = parallel_chunks(257, 16, |a, b| a * 31 + b);
+        let ser: Vec<usize> = (0..257usize.div_ceil(16))
+            .map(|i| {
+                let (a, b) = (i * 16, ((i + 1) * 16).min(257));
+                a * 31 + b
+            })
+            .collect();
+        assert_eq!(par, ser);
+    }
+}

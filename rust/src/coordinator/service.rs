@@ -1,0 +1,190 @@
+//! The request-service loop: `mmee serve` turns the optimizer into a
+//! long-lived mapper service (the role MMEE plays inside an AI compiler
+//! or a hardware-DSE loop, paper §I/§VII-L).
+//!
+//! Wire format: one JSON request per line on stdin (or a TCP stream),
+//! one JSON response per line out:
+//!
+//! ```json
+//! {"workload": "bert-base", "seq": 4096, "accel": "accel2", "objective": "energy"}
+//! ```
+
+use std::io::{BufRead, Write};
+
+use crate::config::presets;
+use crate::search::{MmeeEngine, Objective};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub workload: String,
+    pub seq: usize,
+    pub accel: String,
+    pub objective: Objective,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        let workload = j
+            .get("workload")
+            .and_then(Json::as_str)
+            .ok_or("missing 'workload'")?
+            .to_string();
+        let seq = j.get("seq").and_then(Json::as_usize).unwrap_or(512);
+        let accel = j
+            .get("accel")
+            .and_then(Json::as_str)
+            .unwrap_or("accel1")
+            .to_string();
+        let objective = Objective::parse(
+            j.get("objective").and_then(Json::as_str).unwrap_or("energy"),
+        )
+        .ok_or("bad 'objective'")?;
+        Ok(Request { workload, seq, accel, objective })
+    }
+}
+
+#[derive(Debug)]
+pub enum Response {
+    Ok(Json),
+    Err(String),
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Ok(j) => format!("{j}"),
+            Response::Err(e) => format!(
+                "{}",
+                Json::obj(vec![("error", Json::str(e.clone()))])
+            ),
+        }
+    }
+}
+
+/// Handle one request.
+pub fn handle(engine: &MmeeEngine, req: &Request) -> Response {
+    let Some(workload) = presets::workload_by_name(&req.workload, req.seq) else {
+        return Response::Err(format!("unknown workload '{}'", req.workload));
+    };
+    let Some(accel) = presets::accel_by_name(&req.accel) else {
+        return Response::Err(format!("unknown accel '{}'", req.accel));
+    };
+    let solution = engine.optimize(&workload, &accel, req.objective);
+    Response::Ok(solution.to_json())
+}
+
+/// Serve a TCP endpoint: one JSON request per line per connection,
+/// connections handled sequentially (the mapper is CPU-bound; clients
+/// pipeline requests over one connection for throughput).
+pub fn serve_tcp(engine: &MmeeEngine, addr: &str, max_conns: Option<usize>) -> std::io::Result<usize> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    eprintln!("mmee serve: listening on {}", listener.local_addr()?);
+    let mut total = 0;
+    let mut conns = 0;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        total += serve_lines(engine, reader, stream)?;
+        conns += 1;
+        if let Some(m) = max_conns {
+            if conns >= m {
+                break;
+            }
+        }
+    }
+    Ok(total)
+}
+
+/// Serve requests line-by-line until EOF. Returns requests served.
+pub fn serve_lines(
+    engine: &MmeeEngine,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> std::io::Result<usize> {
+    let mut served = 0;
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(&line) {
+            Ok(req) => handle(engine, &req),
+            Err(e) => Response::Err(e),
+        };
+        writeln!(output, "{}", resp.to_line())?;
+        output.flush()?;
+        served += 1;
+    }
+    Ok(served)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request() {
+        let r = Request::parse(
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "latency"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.workload, "bert-base");
+        assert_eq!(r.objective, Objective::Latency);
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse("not json").is_err());
+    }
+
+    #[test]
+    fn serve_tcp_roundtrip() {
+        use std::io::{BufRead, BufReader, Write};
+        // Bind on an ephemeral port in a thread, connect as a client.
+        // (The engine is constructed inside the server thread: PJRT-based
+        // backends are not Send, so engines never cross threads.)
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener); // free the port for serve_tcp
+        let addr = format!("{addr}");
+        let server = std::thread::spawn({
+            let addr = addr.clone();
+            move || {
+                let engine = MmeeEngine::native();
+                serve_tcp(&engine, &addr, Some(1)).unwrap()
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let mut conn = std::net::TcpStream::connect(&addr).unwrap();
+        conn.write_all(
+            b"{\"workload\": \"bert-base\", \"seq\": 512, \"accel\": \"accel1\"}\n",
+        )
+        .unwrap();
+        conn.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut line = String::new();
+        BufReader::new(conn).read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("energy_j").is_some(), "{line}");
+        assert_eq!(server.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn serve_roundtrip() {
+        let engine = MmeeEngine::native();
+        let input = concat!(
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n",
+            r#"{"workload": "nope"}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let ok = Json::parse(lines[0]).unwrap();
+        assert!(ok.get("energy_j").is_some());
+        let err = Json::parse(lines[1]).unwrap();
+        assert!(err.get("error").is_some());
+    }
+}

@@ -1,0 +1,78 @@
+//! Boundary matrix: one log-feature column per tiling (paper Eq. 10).
+
+use crate::config::{Accelerator, Workload};
+use crate::model::analytic::features;
+use crate::model::terms::NUM_FEATURES;
+use crate::tiling::Tiling;
+
+#[derive(Debug, Clone)]
+pub struct BoundaryMatrix {
+    pub tilings: Vec<Tiling>,
+    /// Raw feature columns, row-major `[num_tilings × NUM_FEATURES]`
+    /// (the native evaluator consumes these directly).
+    pub raw: Vec<f64>,
+    /// Log-domain columns, **column-major for the artifact**:
+    /// `[NUM_FEATURES × num_tilings]` so it uploads as `lnB[f, t]`.
+    pub ln: Vec<f32>,
+}
+
+impl BoundaryMatrix {
+    pub fn build(tilings: Vec<Tiling>, accel: &Accelerator, workload: &Workload) -> BoundaryMatrix {
+        let n = tilings.len();
+        let mut raw = vec![0.0f64; n * NUM_FEATURES];
+        let mut ln = vec![0.0f32; NUM_FEATURES * n];
+        for (t, tiling) in tilings.iter().enumerate() {
+            let f = features(tiling, accel, workload);
+            for (i, &v) in f.iter().enumerate() {
+                raw[t * NUM_FEATURES + i] = v;
+                ln[i * n + t] = v.ln() as f32;
+            }
+        }
+        BoundaryMatrix { tilings, raw, ln }
+    }
+
+    pub fn num_tilings(&self) -> usize {
+        self.tilings.len()
+    }
+
+    pub fn features_of(&self, t: usize) -> &[f64] {
+        &self.raw[t * NUM_FEATURES..(t + 1) * NUM_FEATURES]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::tiling::enumerate_tilings;
+
+    #[test]
+    fn columns_are_log_of_raw() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let tilings = enumerate_tilings(&w.gemm, None);
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        let n = b.num_tilings();
+        assert!(n > 100);
+        for t in [0, n / 2, n - 1] {
+            for f in 0..NUM_FEATURES {
+                let raw = b.raw[t * NUM_FEATURES + f];
+                let ln = b.ln[f * n + t] as f64;
+                assert!((raw.ln() - ln).abs() < 1e-5, "t={t} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_feature_column() {
+        let accel = presets::accel1();
+        let attn = presets::bert_base(512);
+        let ffn = presets::ffn_bert();
+        let t_attn = enumerate_tilings(&attn.gemm, None);
+        let b_attn = BoundaryMatrix::build(t_attn, &accel, &attn);
+        assert_eq!(b_attn.features_of(0)[crate::model::terms::feat::C_SMX], 10.0);
+        let t_ffn = enumerate_tilings(&ffn.gemm, None);
+        let b_ffn = BoundaryMatrix::build(t_ffn, &accel, &ffn);
+        assert_eq!(b_ffn.features_of(0)[crate::model::terms::feat::C_SMX], 1e-30);
+    }
+}

@@ -1,0 +1,8 @@
+//! Matrix encoding (paper §V-E, Eq. 8–11): candidates → query matrix,
+//! tilings → boundary matrix.
+
+pub mod query;
+pub mod boundary;
+
+pub use boundary::BoundaryMatrix;
+pub use query::QueryMatrix;

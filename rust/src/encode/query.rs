@@ -1,0 +1,264 @@
+//! Query matrix: each candidate's 32 monomial slots as exponent rows +
+//! coefficient vector (paper Eq. 9 generalised with coefficients).
+//!
+//! The same encoding feeds all three evaluation backends: the AOT
+//! JAX/Pallas graph consumes `(qexp, coef)` directly; the native
+//! evaluator uses the factored [`CompiledQuery`], which exploits the
+//! structure of the candidate space: BS/DA monomials depend only on the
+//! (order, levels) *pair* and BR/MAC/SMX/CL only on the
+//! (recompute, stationary) *group*, so a surface over C candidates costs
+//! ~C/9 pair evaluations + 18 group evaluations per tiling instead of C
+//! full rows (§Perf, EXPERIMENTS.md).
+
+use std::collections::HashMap;
+
+use crate::loopnest::{Candidate, Stationary};
+use crate::model::derive_slots;
+use crate::model::terms::{seg, Monomial, NUM_FEATURES, NUM_SLOTS};
+
+/// A compact (slot, monomial) pair for generic per-slot walkers.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotRow {
+    pub slot: usize,
+    pub mono: Monomial,
+}
+
+/// A monomial compiled to a flat factor-index list: evaluation is
+/// `coef · Π f[idx[0..n]]` — pure multiplies over the hot feature vector.
+#[derive(Debug, Clone, Copy)]
+pub struct CMono {
+    pub coef: f64,
+    pub n: u8,
+    pub idx: [u8; 8],
+}
+
+impl CMono {
+    pub fn compile(m: &Monomial) -> CMono {
+        let mut idx = [0u8; 8];
+        let mut n = 0usize;
+        for (f, &e) in m.exps.iter().enumerate() {
+            assert!(e >= 0, "negative exponents are not emitted by the model");
+            for _ in 0..e {
+                assert!(n < 8, "monomial degree exceeds compiled capacity");
+                idx[n] = f as u8;
+                n += 1;
+            }
+        }
+        CMono { coef: m.coef, n: n as u8, idx }
+    }
+
+    #[inline(always)]
+    pub fn eval(&self, f: &[f64; NUM_FEATURES]) -> f64 {
+        let mut v = self.coef;
+        for i in 0..self.n as usize {
+            v *= unsafe { *f.get_unchecked(self.idx[i] as usize) };
+        }
+        v
+    }
+}
+
+#[inline(always)]
+fn eval_sum(ms: &[CMono], f: &[f64; NUM_FEATURES]) -> f64 {
+    ms.iter().map(|m| m.eval(f)).sum()
+}
+
+/// Candidate-pair-level terms: BS^Op1, BS^Op2, DA (stationary-independent).
+#[derive(Debug, Clone, Default)]
+pub struct CompiledPair {
+    pub bs1: Vec<CMono>,
+    pub bs2: Vec<CMono>,
+    pub da: Vec<CMono>,
+}
+
+impl CompiledPair {
+    #[inline]
+    pub fn eval(&self, f: &[f64; NUM_FEATURES]) -> (f64, f64, f64) {
+        (eval_sum(&self.bs1, f), eval_sum(&self.bs2, f), eval_sum(&self.da, f))
+    }
+}
+
+/// Group-level terms shared by every candidate of a
+/// (recompute, stationary₁, stationary₂) group.
+#[derive(Debug, Clone, Default)]
+pub struct CompiledGroup {
+    pub br: Vec<CMono>,
+    pub mac: Vec<CMono>,
+    pub smx: Vec<CMono>,
+    pub cl1: Vec<CMono>,
+    pub cl2: Vec<CMono>,
+}
+
+impl CompiledGroup {
+    /// Returns (br, mac, smx, cl1, cl2).
+    #[inline]
+    pub fn eval(&self, f: &[f64; NUM_FEATURES]) -> (f64, f64, f64, f64, f64) {
+        (
+            eval_sum(&self.br, f),
+            eval_sum(&self.mac, f),
+            eval_sum(&self.smx, f),
+            eval_sum(&self.cl1, f),
+            eval_sum(&self.cl2, f),
+        )
+    }
+}
+
+/// The factored form of a candidate table.
+#[derive(Debug, Clone, Default)]
+pub struct CompiledQuery {
+    pub pairs: Vec<CompiledPair>,
+    pub groups: Vec<CompiledGroup>,
+    /// candidate → pair / group indices.
+    pub cand_pair: Vec<u32>,
+    pub cand_group: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct QueryMatrix {
+    pub candidates: Vec<Candidate>,
+    /// Row-major `[num_candidates × NUM_SLOTS × NUM_FEATURES]` exponents.
+    pub qexp: Vec<f32>,
+    /// Row-major `[num_candidates × NUM_SLOTS]` coefficients.
+    pub coef: Vec<f32>,
+    /// Sparse per-candidate slot list (skips empty slots).
+    pub rows: Vec<Vec<SlotRow>>,
+    /// Factored form for the native hot path.
+    pub compiled: CompiledQuery,
+}
+
+impl QueryMatrix {
+    pub fn build(candidates: Vec<Candidate>) -> QueryMatrix {
+        let n = candidates.len();
+        let mut qexp = vec![0.0f32; n * NUM_SLOTS * NUM_FEATURES];
+        let mut coef = vec![0.0f32; n * NUM_SLOTS];
+        let mut rows = Vec::with_capacity(n);
+        let mut compiled = CompiledQuery::default();
+        let mut pair_ids: HashMap<_, u32> = HashMap::new();
+        let mut group_ids: HashMap<(bool, Stationary, Stationary), u32> = HashMap::new();
+        for (c, cand) in candidates.iter().enumerate() {
+            let table = derive_slots(cand);
+            let mut row = Vec::new();
+            for (s, slot) in table.slots.iter().enumerate() {
+                if let Some(m) = slot {
+                    coef[c * NUM_SLOTS + s] = m.coef as f32;
+                    let base = (c * NUM_SLOTS + s) * NUM_FEATURES;
+                    for (f, &e) in m.exps.iter().enumerate() {
+                        qexp[base + f] = e as f32;
+                    }
+                    row.push(SlotRow { slot: s, mono: *m });
+                }
+            }
+
+            let pair_key = (cand.order, cand.levels);
+            let pid = *pair_ids.entry(pair_key).or_insert_with(|| {
+                let compile_seg = |sg: (usize, usize)| {
+                    table.segment(sg).iter().map(CMono::compile).collect()
+                };
+                compiled.pairs.push(CompiledPair {
+                    bs1: compile_seg(seg::BS1),
+                    bs2: compile_seg(seg::BS2),
+                    da: compile_seg(seg::DA),
+                });
+                (compiled.pairs.len() - 1) as u32
+            });
+            let group_key = (cand.recompute(), cand.sm1, cand.sm2);
+            let gid = *group_ids.entry(group_key).or_insert_with(|| {
+                let compile_seg = |sg: (usize, usize)| {
+                    table.segment(sg).iter().map(CMono::compile).collect()
+                };
+                compiled.groups.push(CompiledGroup {
+                    br: compile_seg(seg::BR),
+                    mac: compile_seg(seg::MAC),
+                    smx: compile_seg(seg::SMX),
+                    cl1: compile_seg(seg::CL1),
+                    cl2: compile_seg(seg::CL2),
+                });
+                (compiled.groups.len() - 1) as u32
+            });
+            compiled.cand_pair.push(pid);
+            compiled.cand_group.push(gid);
+            rows.push(row);
+        }
+        QueryMatrix { candidates, qexp, coef, rows, compiled }
+    }
+
+    pub fn num_candidates(&self) -> usize {
+        self.candidates.len()
+    }
+
+    /// Query matrix over the full pruned MMEE candidate space
+    /// (both recompute classes × 9 stationary combos).
+    pub fn mmee() -> QueryMatrix {
+        QueryMatrix::build(crate::symbolic::pruned_table().candidates())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopnest::{BufferingLevels, LoopOrder, Stationary};
+    use crate::model::terms::{feat, seg};
+
+    #[test]
+    fn dense_and_sparse_forms_agree() {
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Output,
+        };
+        let q = QueryMatrix::build(vec![cand]);
+        assert_eq!(q.num_candidates(), 1);
+        for sr in &q.rows[0] {
+            assert_eq!(q.coef[sr.slot], sr.mono.coef as f32);
+            for f in 0..NUM_FEATURES {
+                assert_eq!(q.qexp[sr.slot * NUM_FEATURES + f], sr.mono.exps[f] as f32);
+            }
+        }
+        // Unfilled slots have zero coef.
+        let filled: Vec<usize> = q.rows[0].iter().map(|r| r.slot).collect();
+        for s in 0..NUM_SLOTS {
+            if !filled.contains(&s) {
+                assert_eq!(q.coef[s], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fig11_row_contents() {
+        // The BS1 slot 0 of the Fig. 11 candidate is BS_A = k_D·i_G·k_G.
+        let cand = Candidate {
+            order: LoopOrder([
+                crate::loopnest::Dim::I,
+                crate::loopnest::Dim::L,
+                crate::loopnest::Dim::J,
+                crate::loopnest::Dim::K,
+            ]),
+            levels: BufferingLevels { a: 3, b: 4, d: 4, e: 2 },
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let q = QueryMatrix::build(vec![cand]);
+        let base = seg::BS1.0 * NUM_FEATURES;
+        assert_eq!(q.qexp[base + feat::K_D], 1.0);
+        assert_eq!(q.qexp[base + feat::I_G], 1.0);
+        assert_eq!(q.qexp[base + feat::K_G], 1.0);
+        assert_eq!(q.qexp[base + feat::I_D], 0.0);
+    }
+
+    #[test]
+    fn mmee_matrix_shape() {
+        let q = QueryMatrix::mmee();
+        // Both recompute classes × 9 stationary combos survive pruning.
+        assert_eq!(q.num_candidates() % 9, 0);
+        assert!(q.num_candidates() > 18, "too few candidates");
+        // The XLA eval path chunks candidates into AOT bucket rows of
+        // 1536; keep the table small enough that chunk count stays sane.
+        assert!(
+            q.num_candidates() < 16 * 1536,
+            "candidate count {} is unexpectedly huge",
+            q.num_candidates()
+        );
+        assert_eq!(q.qexp.len(), q.num_candidates() * NUM_SLOTS * NUM_FEATURES);
+        assert_eq!(q.coef.len(), q.num_candidates() * NUM_SLOTS);
+    }
+}

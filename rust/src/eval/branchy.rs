@@ -1,0 +1,85 @@
+//! The "if–else parsing" strawman backend (paper §V).
+//!
+//! Prior analytical frameworks (DNN-Chip Predictor [87], TileFlow's tree
+//! walk [90]) re-parse the mapping scenario for every evaluation: walk
+//! the loop nest, classify blockers/scenarios, pick formulas, *then*
+//! compute. This backend reproduces that cost structure faithfully by
+//! re-running the full offline derivation ([`derive_slots`]) for every
+//! (candidate, tiling) pair — the paper's runtime-comparison baseline.
+
+use super::{Block, EvalBackend};
+use crate::config::HwVector;
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::model::terms::NUM_FEATURES;
+use crate::model::{combine, derive_slots, Multipliers};
+
+pub struct BranchyBackend;
+
+impl EvalBackend for BranchyBackend {
+    fn name(&self) -> &'static str {
+        "branchy"
+    }
+
+    // Same thread-level parallelism as the native backend, so runtime
+    // comparisons isolate the per-mapping parsing cost, not threading.
+    fn argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Argmin3 {
+        super::parallel_argmin3(self, q, b, hw, mult)
+    }
+
+    fn fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Fronts {
+        super::parallel_fronts(self, q, b, hw, mult)
+    }
+
+    fn eval_block(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> Block {
+        let (c0, c1) = c_range;
+        let (t0, t1) = t_range;
+        let (nc, nt) = (c1 - c0, t1 - t0);
+        let mut out = Block {
+            c0,
+            t0,
+            nc,
+            nt,
+            energy: vec![0.0; nc * nt],
+            latency: vec![0.0; nc * nt],
+            da: vec![0.0; nc * nt],
+            bs: vec![0.0; nc * nt],
+        };
+        for (ci, c) in (c0..c1).enumerate() {
+            let cand = &q.candidates[c];
+            for (ti, t) in (t0..t1).enumerate() {
+                // The defining inefficiency: derivation ("parsing") inside
+                // the per-mapping loop instead of hoisted offline.
+                let slots = derive_slots(cand);
+                let f: &[f64; NUM_FEATURES] = b.features_of(t).try_into().unwrap();
+                let p = crate::model::analytic::primitives(&slots, f);
+                let m = combine(&p, hw, mult);
+                let i = ci * nt + ti;
+                out.energy[i] = m.energy as f32;
+                out.latency[i] = m.latency as f32;
+                out.da[i] = m.da as f32;
+                out.bs[i] = m.bs as f32;
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,189 @@
+//! Native rust evaluation backend.
+//!
+//! Uses the factored [`CompiledQuery`] (see `encode::query`): per tiling
+//! column it evaluates each distinct (order, levels) *pair* once
+//! (BS¹/BS²/DA) and each (recompute, stationary) *group* once
+//! (BR/MAC/SMX/CL), then combines per candidate with a handful of flops.
+//! No `exp`/`ln`, no branching per scenario — the matrix-encoded
+//! semantics at scalar granularity, restructured for redundancy
+//! elimination (§Perf iteration L3-1 in EXPERIMENTS.md).
+
+use super::{Block, EvalBackend};
+use crate::config::HwVector;
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::model::terms::NUM_FEATURES;
+use crate::model::{Metrics, Multipliers};
+
+pub struct NativeBackend;
+
+/// Scratch buffers reused across tiling columns within one block.
+struct Scratch {
+    /// per pair: (bs, feasible-premult energy part e_dram·da + e_bs·bs,
+    /// dram-latency part, da)
+    pair_e: Vec<f64>,
+    pair_l: Vec<f64>,
+    pair_da: Vec<f64>,
+    pair_bs: Vec<f64>,
+    /// per group: (shared energy, compute latency)
+    grp_e: Vec<f64>,
+    grp_l: Vec<f64>,
+}
+
+impl EvalBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Argmin3 {
+        super::parallel_argmin3(self, q, b, hw, mult)
+    }
+
+    fn fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Fronts {
+        super::parallel_fronts(self, q, b, hw, mult)
+    }
+
+    fn eval_block(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> Block {
+        let (c0, c1) = c_range;
+        let (t0, t1) = t_range;
+        let (nc, nt) = (c1 - c0, t1 - t0);
+        let mut out = Block {
+            c0,
+            t0,
+            nc,
+            nt,
+            energy: vec![0.0; nc * nt],
+            latency: vec![0.0; nc * nt],
+            da: vec![0.0; nc * nt],
+            bs: vec![0.0; nc * nt],
+        };
+        let hw = &hw.with_multipliers(mult);
+        let cq = &q.compiled;
+        let mut scratch = Scratch {
+            pair_e: vec![0.0; cq.pairs.len()],
+            pair_l: vec![0.0; cq.pairs.len()],
+            pair_da: vec![0.0; cq.pairs.len()],
+            pair_bs: vec![0.0; cq.pairs.len()],
+            grp_e: vec![0.0; cq.groups.len()],
+            grp_l: vec![0.0; cq.groups.len()],
+        };
+        let sentinel = Metrics::INFEASIBLE_SENTINEL;
+        for (ti, t) in (t0..t1).enumerate() {
+            let f: &[f64; NUM_FEATURES] = b.features_of(t).try_into().unwrap();
+            // Pair-level terms once per distinct (order, levels).
+            for (p, cp) in cq.pairs.iter().enumerate() {
+                let (bs1, bs2, da) = cp.eval(f);
+                let bs = bs1.max(bs2);
+                scratch.pair_bs[p] = bs;
+                scratch.pair_da[p] = da;
+                if bs <= hw.capacity_words {
+                    scratch.pair_e[p] = hw.e_dram * da + hw.e_bs * bs;
+                    scratch.pair_l[p] = da * hw.sec_per_word;
+                } else {
+                    scratch.pair_e[p] = f64::INFINITY;
+                    scratch.pair_l[p] = f64::INFINITY;
+                }
+            }
+            // Group-level terms once per (recompute, stationary) combo.
+            for (g, cg) in cq.groups.iter().enumerate() {
+                let (br, mac, smx, cl1, cl2) = cg.eval(f);
+                scratch.grp_e[g] = hw.e_buf * br + hw.e_mac * mac + hw.e_sfu * smx;
+                scratch.grp_l[g] = (cl1 + cl2) * hw.sec_per_cycle;
+            }
+            // Per-candidate combination (pure flops).
+            for (ci, c) in (c0..c1).enumerate() {
+                let p = cq.cand_pair[c] as usize;
+                let g = cq.cand_group[c] as usize;
+                let i = ci * nt + ti;
+                let pe = scratch.pair_e[p];
+                let (e, l) = if pe.is_finite() {
+                    (
+                        pe + scratch.grp_e[g],
+                        scratch.pair_l[p].max(scratch.grp_l[g]),
+                    )
+                } else {
+                    (sentinel, sentinel)
+                };
+                out.energy[i] = e as f32;
+                out.latency[i] = l as f32;
+                out.da[i] = scratch.pair_da[p] as f32;
+                out.bs[i] = scratch.pair_bs[p] as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::{analytic, derive_slots};
+    use crate::tiling::enumerate_tilings;
+
+    /// The backend must agree with the scalar reference path exactly.
+    #[test]
+    fn matches_scalar_model() {
+        let accel = presets::accel2();
+        let w = presets::bert_base(512);
+        let cands = crate::symbolic::pruned_table().candidates();
+        let q = QueryMatrix::build(cands[..32].to_vec());
+        let tilings: Vec<_> = enumerate_tilings(&w.gemm, None).into_iter().take(50).collect();
+        let b = BoundaryMatrix::build(tilings.clone(), &accel, &w);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(&w, &accel);
+        let block = NativeBackend.eval_all(&q, &b, &hw, &mult);
+        for (ci, cand) in q.candidates.iter().enumerate() {
+            let slots = derive_slots(cand);
+            for (ti, t) in tilings.iter().enumerate() {
+                let (_, m) = analytic::evaluate(&slots, t, &accel, &w);
+                let (e, l, da, bs) = block.at(ci, ti);
+                if m.feasible {
+                    assert!((e - m.energy).abs() <= 1e-5 * m.energy, "c{ci} t{ti}");
+                    assert!((l - m.latency).abs() <= 1e-5 * m.latency);
+                    assert!((da - m.da).abs() <= 1e-3 * m.da.max(1.0));
+                    assert!((bs - m.bs).abs() <= 1e-3 * m.bs.max(1.0));
+                } else {
+                    assert!(e >= 1e29, "infeasible must be sentinel");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sub_block_matches_full_surface() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let q = QueryMatrix::build(crate::symbolic::pruned_table().candidates()[..20].to_vec());
+        let tilings: Vec<_> = enumerate_tilings(&w.gemm, None).into_iter().take(40).collect();
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::unit();
+        let full = NativeBackend.eval_all(&q, &b, &hw, &mult);
+        let sub = NativeBackend.eval_block(&q, &b, &hw, &mult, (5, 15), (10, 30));
+        for c in 5..15 {
+            for t in 10..30 {
+                assert_eq!(sub.at(c, t), full.at(c, t));
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! XLA/PJRT evaluation backend — the AOT JAX/Pallas artifact path.
+//!
+//! Pads (candidate, tiling) chunks to the artifact bucket shapes and
+//! executes the compiled `coef ⊙ exp(Q·lnB)` graph. Padding is masked
+//! *inside the model's own semantics*: padded tiling columns get an
+//! `i_g = 1e30` feature (every candidate's BS blows past capacity →
+//! infeasible sentinel), padded candidate rows get a constant `2e30`
+//! buffer-size slot — so the in-graph argmin of the `reduce` artifact can
+//! never elect padding.
+
+use anyhow::Result;
+
+use super::{Block, EvalBackend};
+use crate::config::HwVector;
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::model::terms::{feat, NUM_FEATURES, NUM_SLOTS};
+use crate::model::Multipliers;
+use crate::runtime::{ArtifactEntry, ReduceOutput, Runtime};
+
+pub struct XlaBackend {
+    pub rt: Runtime,
+}
+
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
+        Ok(XlaBackend { rt: Runtime::new()? })
+    }
+
+    /// Assemble padded inputs for one (c-chunk, t-chunk).
+    fn pack(
+        entry: &ArtifactEntry,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (c0, c1) = c_range;
+        let (t0, t1) = t_range;
+        let (nc, nt) = (c1 - c0, t1 - t0);
+        let (cb, tb) = (entry.c, entry.t);
+        debug_assert!(nc <= cb && nt <= tb);
+
+        let mut qexp = vec![0.0f32; cb * NUM_SLOTS * NUM_FEATURES];
+        let mut coef = vec![0.0f32; cb * NUM_SLOTS];
+        let src_q = &q.qexp[c0 * NUM_SLOTS * NUM_FEATURES..c1 * NUM_SLOTS * NUM_FEATURES];
+        qexp[..src_q.len()].copy_from_slice(src_q);
+        let src_c = &q.coef[c0 * NUM_SLOTS..c1 * NUM_SLOTS];
+        coef[..src_c.len()].copy_from_slice(src_c);
+        // Mask padded candidate rows: constant-huge BS1 slot.
+        for c in nc..cb {
+            coef[c * NUM_SLOTS] = 2.0e30;
+        }
+
+        let total_t = b.num_tilings();
+        let mut lnb = vec![0.0f32; NUM_FEATURES * tb];
+        for f in 0..NUM_FEATURES {
+            let src = &b.ln[f * total_t + t0..f * total_t + t1];
+            lnb[f * tb..f * tb + nt].copy_from_slice(src);
+        }
+        // Mask padded tiling columns: astronomically large granule.
+        let huge = (1.0e30f32).ln();
+        for t in nt..tb {
+            lnb[feat::I_G * tb + t] = huge;
+        }
+        (qexp, coef, lnb)
+    }
+
+    /// Objective-driven reduction over the whole surface through the
+    /// `reduce` artifact: returns (energy-best, latency-best, edp-best)
+    /// as ((c, t), value) triples, already rescaled by the multipliers.
+    pub fn reduce(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Result<[((usize, usize), f64); 3]> {
+        let hw = &hw.with_multipliers(mult);
+        let nt_total = b.num_tilings();
+        let entry = self
+            .rt
+            .manifest
+            .pick("reduce", q.num_candidates(), nt_total)
+            .expect("no reduce artifact")
+            .clone();
+        let mut best: [((usize, usize), f64); 3] =
+            [((0, 0), f64::INFINITY), ((0, 0), f64::INFINITY), ((0, 0), f64::INFINITY)];
+        for c0 in (0..q.num_candidates()).step_by(entry.c) {
+            let c1 = (c0 + entry.c).min(q.num_candidates());
+            for t0 in (0..nt_total).step_by(entry.t) {
+                let t1 = (t0 + entry.t).min(nt_total);
+                let (qexp, coef, lnb) = Self::pack(&entry, q, b, (c0, c1), (t0, t1));
+                let r: ReduceOutput = self.rt.run_reduce(&entry, &qexp, &coef, &lnb, hw)?;
+                let decode = |arg: usize| -> (usize, usize) {
+                    (c0 + arg / entry.t, t0 + arg % entry.t)
+                };
+                let cands = [
+                    (decode(r.arg_energy), r.min_energy as f64),
+                    (decode(r.arg_latency), r.min_latency as f64),
+                    (decode(r.arg_edp), r.min_edp as f64),
+                ];
+                for (slot, cand) in best.iter_mut().zip(cands) {
+                    if cand.1 < slot.1 {
+                        *slot = cand;
+                    }
+                }
+            }
+        }
+        Ok(best)
+    }
+}
+
+impl EvalBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    /// Objective argmin through the in-graph `reduce` artifact (XLA
+    /// parallelizes the matmul internally; only scalars come back).
+    fn argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Argmin3 {
+        let best = self.reduce(q, b, hw, mult).expect("xla reduce failed");
+        [
+            (best[0].1, best[0].0 .0, best[0].0 .1),
+            (best[1].1, best[1].0 .0, best[1].0 .1),
+            (best[2].1, best[2].0 .0, best[2].0 .1),
+        ]
+    }
+
+    fn eval_block(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> Block {
+        let hw = &hw.with_multipliers(mult);
+        let (c0r, c1r) = c_range;
+        let (t0r, t1r) = t_range;
+        let (nc, nt) = (c1r - c0r, t1r - t0r);
+        let entry = self
+            .rt
+            .manifest
+            .pick("full", nc, nt)
+            .expect("no full artifact")
+            .clone();
+        let mut out = Block {
+            c0: c0r,
+            t0: t0r,
+            nc,
+            nt,
+            energy: vec![0.0; nc * nt],
+            latency: vec![0.0; nc * nt],
+            da: vec![0.0; nc * nt],
+            bs: vec![0.0; nc * nt],
+        };
+        for c0 in (c0r..c1r).step_by(entry.c) {
+            let c1 = (c0 + entry.c).min(c1r);
+            for t0 in (t0r..t1r).step_by(entry.t) {
+                let t1 = (t0 + entry.t).min(t1r);
+                let (qexp, coef, lnb) = Self::pack(&entry, q, b, (c0, c1), (t0, t1));
+                let full = self
+                    .rt
+                    .run_full(&entry, &qexp, &coef, &lnb, hw)
+                    .expect("xla execution failed");
+                for c in c0..c1 {
+                    for t in t0..t1 {
+                        let src = (c - c0) * entry.t + (t - t0);
+                        let dst = (c - c0r) * nt + (t - t0r);
+                        out.energy[dst] = full.energy[src];
+                        out.latency[dst] = full.latency[src];
+                        out.da[dst] = full.da[src];
+                        out.bs[dst] = full.bs[src];
+                    }
+                }
+            }
+        }
+        out
+    }
+}

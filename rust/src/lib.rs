@@ -1,0 +1,35 @@
+//! # MMEE — Matrix Multiplication Encoded Enumeration
+//!
+//! A production-grade reproduction of *"Fast Cross-Operator Optimization of
+//! Attention Dataflow"* (CS.AR 2026): a dataflow mapper for fused
+//! two-operator workloads (attention, FFN GEMM pairs, conv chains) on
+//! spatial accelerators.
+//!
+//! Architecture (three layers, python never on the request path):
+//!
+//! * **L3 (this crate)** — decision-space enumeration, offline symbolic
+//!   pruning, query/boundary matrix encoding, tiling factorization, the
+//!   stage-accurate validation simulator, all baseline mappers, the search
+//!   engine, a thread-pool coordinator and the report harness.
+//! * **L2/L1 (build-time JAX + Pallas)** — the batched evaluation graph
+//!   `coef ⊙ exp(Q · ln B)` + metric combination, AOT-lowered to HLO text
+//!   in `artifacts/`, loaded and executed here through PJRT
+//!   ([`runtime`], [`eval`]).
+//!
+//! Entry points: [`search::MmeeEngine`] for optimization,
+//! [`sim::Simulator`] for validation, [`report`] for paper artifacts.
+
+pub mod util;
+pub mod config;
+pub mod loopnest;
+pub mod model;
+pub mod symbolic;
+pub mod encode;
+pub mod tiling;
+pub mod sim;
+pub mod eval;
+pub mod runtime;
+pub mod search;
+pub mod baselines;
+pub mod coordinator;
+pub mod report;

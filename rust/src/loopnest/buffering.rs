@@ -1,0 +1,156 @@
+//! Buffering levels — fine-grained buffer management (paper §III-D,
+//! §IV-A.3).
+//!
+//! Each operand is assigned a loop layer `ℓ ∈ 0..=4` of the inter-tile
+//! nest. Semantics: the operand's buffer allocation lives at depth `ℓ` —
+//! loops at depth `≥ ℓ` iterate *inside* the allocation's lifetime, so
+//! the footprint covers their extents (for the operand's own dims) and
+//! the data is protected from eviction by anything at depth `≥ ℓ`.
+//! `ℓ = 4` is tile-granular streaming (no retention); `ℓ = 0` keeps the
+//! whole matrix resident.
+//!
+//! `C`'s level is **forced** to `pos(k)`: partial sums of `C` must stay
+//! on-chip until the `k` accumulation completes (No-Psum-Propagation) and
+//! `C` never travels to DRAM, so any deeper level is illegal and any
+//! shallower level is useless (`C` tiles are fully consumed at the
+//! producer→consumer transition).
+
+use super::dims::{Dim, Operand};
+use super::order::LoopOrder;
+
+/// Buffering level per explicitly-chosen operand (A, B, D, E).
+/// `C` is derived from the order; see [`BufferingLevels::level`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufferingLevels {
+    pub a: u8,
+    pub b: u8,
+    pub d: u8,
+    pub e: u8,
+}
+
+impl BufferingLevels {
+    /// The effective level of any operand under a given order.
+    pub fn level(&self, op: Operand, order: &LoopOrder) -> usize {
+        match op {
+            Operand::A => self.a as usize,
+            Operand::B => self.b as usize,
+            Operand::C => order.pos(Dim::K),
+            Operand::D => self.d as usize,
+            Operand::E => self.e as usize,
+        }
+    }
+
+    /// Retention indicator τ (paper Eq. 1/2): the operand occupies buffer
+    /// during the *other* operator's execution.
+    ///
+    /// Producer-side operands (A, B) stay resident through the consumer
+    /// phase of the same k-structure iff their allocation is
+    /// phase-protected (`ℓ ≤ pos(k)`): no loop ticks between the two
+    /// phases. Consumer-side operands (D, E) can only be resident during
+    /// a *later* producer phase, i.e. they must additionally survive the
+    /// transition between adjacent k-structures — the tick of the loop
+    /// directly enclosing the k loop (depth `pos(k) − 1`).
+    pub fn retained_across_phases(&self, op: Operand, order: &LoopOrder) -> bool {
+        let t = order.pos(Dim::K);
+        let lvl = self.level(op, order);
+        if lvl > t {
+            return false;
+        }
+        if !op.is_consumer_side() {
+            return true;
+        }
+        if t == 0 {
+            // k outermost: the single consumer phase follows *all*
+            // producer phases; nothing of D/E precedes a producer phase.
+            return false;
+        }
+        let enclosing = order.dim_at(t - 1);
+        !(op.dims().contains(&enclosing) && t - 1 < lvl)
+    }
+
+    /// `E` accumulates over the consumer reduction `l`; its partial sums
+    /// spill to DRAM iff something flushes the accumulator *between
+    /// consecutive uses* across the `l` loop:
+    /// * a producer phase intervenes (`l` outside the `k` structure and
+    ///   `E` not phase-protected), or
+    /// * a loop over one of `E`'s own dims ticks between `l` iterations
+    ///   (inside `l` but outside the allocation).
+    pub fn e_spills(&self, order: &LoopOrder) -> bool {
+        let le = self.e as usize;
+        let pl = order.pos(Dim::L);
+        let t = order.pos(Dim::K);
+        if pl < t && le > t {
+            return true;
+        }
+        [Dim::I, Dim::J]
+            .iter()
+            .any(|d| pl < order.pos(*d) && order.pos(*d) < le)
+    }
+
+    /// Enumerate all level assignments `(a, b, d, e) ∈ {0..4}⁴`.
+    /// Redundant assignments (levels between two of the operand's dim
+    /// loops produce identical footprints) are *deduplicated later* by
+    /// the symbolic pruner, which collapses candidates whose full
+    /// BS/DA monomial signatures coincide.
+    pub fn enumerate() -> Vec<BufferingLevels> {
+        let mut out = Vec::with_capacity(5 * 5 * 5 * 5);
+        for a in 0..=4u8 {
+            for b in 0..=4u8 {
+                for d in 0..=4u8 {
+                    for e in 0..=4u8 {
+                        out.push(BufferingLevels { a, b, d, e });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Tile-granular streaming for everything (FLAT-like baselines).
+    pub fn streaming() -> BufferingLevels {
+        BufferingLevels { a: 4, b: 4, d: 4, e: 4 }
+    }
+
+    pub fn name(&self) -> String {
+        format!("A{}B{}D{}E{}", self.a, self.b, self.d, self.e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_level_is_forced_to_k_pos() {
+        let lv = BufferingLevels::streaming();
+        let flash = LoopOrder::flash(); // (i, l, k, j): k at depth 2
+        assert_eq!(lv.level(Operand::C, &flash), 2);
+        let fig11 = LoopOrder([Dim::I, Dim::L, Dim::J, Dim::K]);
+        assert_eq!(lv.level(Operand::C, &fig11), 3);
+    }
+
+    #[test]
+    fn retention_across_phases() {
+        let order = LoopOrder([Dim::I, Dim::L, Dim::J, Dim::K]); // k at 3
+        // Paper Fig. 11: D streams (level 4) -> tau_D = 0; E at level <= 3
+        // -> tau_E = 1 (Eq. 3: BS^Op1 = BS_A + BS_B + BS_C + BS_E).
+        let lv = BufferingLevels { a: 3, b: 4, d: 4, e: 2 };
+        assert!(!lv.retained_across_phases(Operand::D, &order));
+        assert!(lv.retained_across_phases(Operand::E, &order));
+        assert!(lv.retained_across_phases(Operand::A, &order));
+        // C is always retained across phases by construction.
+        assert!(lv.retained_across_phases(Operand::C, &order));
+    }
+
+    #[test]
+    fn e_spill_condition() {
+        let flash = LoopOrder::flash(); // l at depth 1
+        assert!(!BufferingLevels { a: 4, b: 4, d: 4, e: 1 }.e_spills(&flash));
+        assert!(BufferingLevels { a: 4, b: 4, d: 4, e: 3 }.e_spills(&flash));
+    }
+
+    #[test]
+    fn enumeration_size() {
+        assert_eq!(BufferingLevels::enumerate().len(), 625);
+    }
+}

@@ -1,0 +1,112 @@
+//! Mapping candidates: the offline-enumerable part of the decision space.
+//!
+//! A [`Candidate`] is `(order, levels, stationary₁, stationary₂)`; the
+//! recomputation flag is implied by the order. Candidates cross with the
+//! online-enumerated tilings to form complete mappings (paper Fig. 12's
+//! decision-space decoupling).
+
+use super::buffering::BufferingLevels;
+use super::dims::{Stationary, STATIONARIES};
+use super::order::LoopOrder;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub order: LoopOrder,
+    pub levels: BufferingLevels,
+    pub sm1: Stationary,
+    pub sm2: Stationary,
+}
+
+impl Candidate {
+    pub fn recompute(&self) -> bool {
+        self.order.recompute()
+    }
+
+    /// Group id (paper §VI-B): 18 groups = 2 recompute × 9 stationary.
+    pub fn group(&self) -> usize {
+        (self.recompute() as usize) * 9 + self.sm1.index() * 3 + self.sm2.index()
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "{}/{}/{}-{}{}",
+            self.order.name(),
+            self.levels.name(),
+            self.sm1.name(),
+            self.sm2.name(),
+            if self.recompute() { "/R" } else { "" }
+        )
+    }
+}
+
+/// The raw offline candidate table: every (order, levels) pair crossed
+/// with every stationary combination.
+#[derive(Debug, Clone)]
+pub struct CandidateTable {
+    pub candidates: Vec<Candidate>,
+}
+
+impl CandidateTable {
+    /// Full enumeration: 24 orders × 625 level assignments × 9 stationary
+    /// combos = 135 000 raw candidates (the paper's "20K rows per group"
+    /// scale: 135 000 / 18 groups = 7 500 raw rows each before pruning).
+    pub fn full() -> CandidateTable {
+        let mut candidates = Vec::new();
+        for order in LoopOrder::all() {
+            for levels in BufferingLevels::enumerate() {
+                for sm1 in STATIONARIES {
+                    for sm2 in STATIONARIES {
+                        candidates.push(Candidate { order, levels, sm1, sm2 });
+                    }
+                }
+            }
+        }
+        CandidateTable { candidates }
+    }
+
+    /// Orders/levels only (one stationary combo) — used by the symbolic
+    /// pruner, whose BS/DA criteria are stationary-independent.
+    pub fn orders_and_levels() -> Vec<(LoopOrder, BufferingLevels)> {
+        let mut out = Vec::new();
+        for order in LoopOrder::all() {
+            for levels in BufferingLevels::enumerate() {
+                out.push((order, levels));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopnest::dims::Dim;
+
+    #[test]
+    fn full_table_size() {
+        assert_eq!(CandidateTable::full().candidates.len(), 24 * 625 * 9);
+        assert_eq!(CandidateTable::orders_and_levels().len(), 24 * 625);
+    }
+
+    #[test]
+    fn groups_partition_into_18() {
+        let table = CandidateTable::full();
+        let mut counts = [0usize; 18];
+        for c in &table.candidates {
+            counts[c.group()] += 1;
+        }
+        assert!(counts.iter().all(|&n| n == 24 * 625 / 2));
+    }
+
+    #[test]
+    fn candidate_name_mentions_recompute() {
+        let c = Candidate {
+            order: LoopOrder([Dim::I, Dim::L, Dim::J, Dim::K]),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Output,
+        };
+        assert!(c.name().ends_with("/R"));
+        assert!(c.name().contains("WS-OS"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Dimensions, operands and stationary modes for the fused pair
+//! `A(I×K)·B(K×L) → C(I×L)`, `C(I×L)·D(L×J) → E(I×J)`.
+
+/// The four problem dimensions in the paper's `[I, K, L, J]` convention.
+/// `K` is the producer's reduction dimension, `L` the consumer's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    I,
+    K,
+    L,
+    J,
+}
+
+pub const DIMS: [Dim; 4] = [Dim::I, Dim::K, Dim::L, Dim::J];
+
+impl Dim {
+    pub fn index(self) -> usize {
+        match self {
+            Dim::I => 0,
+            Dim::K => 1,
+            Dim::L => 2,
+            Dim::J => 3,
+        }
+    }
+    pub fn from_index(i: usize) -> Dim {
+        DIMS[i]
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::I => "i",
+            Dim::K => "k",
+            Dim::L => "l",
+            Dim::J => "j",
+        }
+    }
+}
+
+/// The five operand matrices of the fused pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Operand {
+    A,
+    B,
+    C,
+    D,
+    E,
+}
+
+pub const OPERANDS: [Operand; 5] = [Operand::A, Operand::B, Operand::C, Operand::D, Operand::E];
+
+impl Operand {
+    /// The operand's own dimensions (paper §V-A "operand's dimensions").
+    pub fn dims(self) -> &'static [Dim] {
+        match self {
+            Operand::A => &[Dim::I, Dim::K],
+            Operand::B => &[Dim::K, Dim::L],
+            Operand::C => &[Dim::I, Dim::L],
+            Operand::D => &[Dim::L, Dim::J],
+            Operand::E => &[Dim::I, Dim::J],
+        }
+    }
+
+    /// Operands exclusively associated with Op1 (paper Δ^Op1 = {A, B}).
+    pub fn is_producer_side(self) -> bool {
+        matches!(self, Operand::A | Operand::B)
+    }
+
+    /// Operands exclusively associated with Op2 (paper Δ^Op2 = {D, E}).
+    pub fn is_consumer_side(self) -> bool {
+        matches!(self, Operand::D | Operand::E)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Operand::A => "A",
+            Operand::B => "B",
+            Operand::C => "C",
+            Operand::D => "D",
+            Operand::E => "E",
+        }
+    }
+}
+
+/// Intra-operator stationary mode (paper §V-D: weight / input / output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stationary {
+    Weight,
+    Input,
+    Output,
+}
+
+pub const STATIONARIES: [Stationary; 3] =
+    [Stationary::Weight, Stationary::Input, Stationary::Output];
+
+impl Stationary {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stationary::Weight => "WS",
+            Stationary::Input => "IS",
+            Stationary::Output => "OS",
+        }
+    }
+    pub fn index(self) -> usize {
+        match self {
+            Stationary::Weight => 0,
+            Stationary::Input => 1,
+            Stationary::Output => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim_index_roundtrip() {
+        for d in DIMS {
+            assert_eq!(Dim::from_index(d.index()), d);
+        }
+    }
+
+    #[test]
+    fn operand_dims_match_paper() {
+        assert_eq!(Operand::A.dims(), &[Dim::I, Dim::K]);
+        assert_eq!(Operand::C.dims(), &[Dim::I, Dim::L]);
+        assert_eq!(Operand::E.dims(), &[Dim::I, Dim::J]);
+        assert!(Operand::A.is_producer_side());
+        assert!(Operand::D.is_consumer_side());
+        assert!(!Operand::C.is_producer_side() && !Operand::C.is_consumer_side());
+    }
+}

@@ -1,0 +1,19 @@
+//! Pseudo nested loop representation (paper §IV).
+//!
+//! A fused dataflow is `(LoopOrder, BufferingLevels, StationaryPair)`:
+//! * the **loop order** — a permutation of the four inter-tile loops
+//!   `{i, k, l, j}` — fixes the computation ordering (§III-C) and implies
+//!   whether recomputation occurs (§III-C, Fig. 7);
+//! * the **buffering levels** — one loop layer per operand — fix buffer
+//!   management / retention (§III-D);
+//! * the **stationary pair** fixes intra-operator register-file dataflow.
+
+pub mod dims;
+pub mod order;
+pub mod buffering;
+pub mod candidate;
+
+pub use candidate::{Candidate, CandidateTable};
+pub use dims::{Dim, Operand, Stationary, DIMS, OPERANDS};
+pub use order::LoopOrder;
+pub use buffering::BufferingLevels;

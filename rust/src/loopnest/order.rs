@@ -1,0 +1,125 @@
+//! Inter-tile loop orders (computation ordering, paper §III-C / §IV-B.2).
+//!
+//! One permutation of `{i, k, l, j}` determines both operators' iteration
+//! spaces: the producer's order is the permutation restricted to
+//! `{i, k, l}`, the consumer's restricted to `{i, l, j}`, and execution
+//! transitions producer→consumer each time a `C` tile completes its `k`
+//! accumulation (the *No-Psum-Propagation* constraint).
+//!
+//! Recomputation (§III-C, Fig. 7) is implied by the order: if the
+//! consumer-only loop `j` is **outside** the producer reduction `k`, every
+//! `j` iteration regenerates the `C` tiles it consumes.
+
+use super::dims::{Dim, DIMS};
+
+/// A permutation of the four inter-tile loops, outermost first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LoopOrder(pub [Dim; 4]);
+
+impl LoopOrder {
+    /// Depth (0 = outermost) of a dimension's inter-tile loop.
+    pub fn pos(&self, d: Dim) -> usize {
+        self.0.iter().position(|&x| x == d).unwrap()
+    }
+
+    /// Dimension at a given depth.
+    pub fn dim_at(&self, depth: usize) -> Dim {
+        self.0[depth]
+    }
+
+    /// Recomputation is implied iff `j` is outside `k`: the producer
+    /// loops re-run inside each `j` iteration (paper Fig. 7(b)).
+    pub fn recompute(&self) -> bool {
+        self.pos(Dim::J) < self.pos(Dim::K)
+    }
+
+    /// All 24 permutations. Every one is a *representable* fusion
+    /// dataflow under the No-Psum-Propagation execution semantics (`C`'s
+    /// buffering level is forced to the `k` loop depth, see
+    /// [`super::buffering`]); orders only differ in cost, never validity.
+    pub fn all() -> Vec<LoopOrder> {
+        let mut out = Vec::with_capacity(24);
+        let mut perm = DIMS;
+        permute(&mut perm, 0, &mut out);
+        out
+    }
+
+    /// The FlashAttention-2-style order `(i, l, k, j)`: stream K/V tiles
+    /// (`l`), accumulate scores (`k`), immediately consume (`j`).
+    pub fn flash() -> LoopOrder {
+        LoopOrder([Dim::I, Dim::L, Dim::K, Dim::J])
+    }
+
+    /// Producer-restricted order (dims `{i, k, l}` in nest order).
+    pub fn producer_order(&self) -> Vec<Dim> {
+        self.0.iter().copied().filter(|d| *d != Dim::J).collect()
+    }
+
+    /// Consumer-restricted order (dims `{i, l, j}` in nest order).
+    pub fn consumer_order(&self) -> Vec<Dim> {
+        self.0.iter().copied().filter(|d| *d != Dim::K).collect()
+    }
+
+    pub fn name(&self) -> String {
+        self.0.iter().map(|d| d.name()).collect::<Vec<_>>().join("")
+    }
+}
+
+fn permute(arr: &mut [Dim; 4], k: usize, out: &mut Vec<LoopOrder>) {
+    if k == 4 {
+        out.push(LoopOrder(*arr));
+        return;
+    }
+    for i in k..4 {
+        arr.swap(k, i);
+        permute(arr, k + 1, out);
+        arr.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn all_orders_are_24_unique_permutations() {
+        let orders = LoopOrder::all();
+        assert_eq!(orders.len(), 24);
+        let set: HashSet<_> = orders.iter().map(|o| o.0).collect();
+        assert_eq!(set.len(), 24);
+        for o in &orders {
+            let mut dims = o.0;
+            dims.sort();
+            assert_eq!(dims, DIMS);
+        }
+    }
+
+    #[test]
+    fn recompute_classification() {
+        // FlashAttention order: j innermost, inside k -> no recompute.
+        assert!(!LoopOrder::flash().recompute());
+        // Paper Fig. 11 order (i, l, j, k): j outside k -> recompute.
+        let fig11 = LoopOrder([Dim::I, Dim::L, Dim::J, Dim::K]);
+        assert!(fig11.recompute());
+        // Exactly half the permutations are recompute orders.
+        let n = LoopOrder::all().iter().filter(|o| o.recompute()).count();
+        assert_eq!(n, 12);
+    }
+
+    #[test]
+    fn restricted_orders() {
+        let o = LoopOrder([Dim::I, Dim::L, Dim::K, Dim::J]);
+        assert_eq!(o.producer_order(), vec![Dim::I, Dim::L, Dim::K]);
+        assert_eq!(o.consumer_order(), vec![Dim::I, Dim::L, Dim::J]);
+        assert_eq!(o.name(), "ilkj");
+    }
+
+    #[test]
+    fn positions() {
+        let o = LoopOrder([Dim::L, Dim::I, Dim::J, Dim::K]);
+        assert_eq!(o.pos(Dim::L), 0);
+        assert_eq!(o.pos(Dim::K), 3);
+        assert_eq!(o.dim_at(2), Dim::J);
+    }
+}

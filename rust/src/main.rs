@@ -1,0 +1,233 @@
+//! `mmee` — the MMEE dataflow-mapper CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! mmee optimize --workload bert-base --seq 4096 --accel accel2 \
+//!               --objective energy [--backend native|xla|branchy]
+//! mmee pareto   --workload palm-62b --seq 4096 --accel accel2
+//! mmee validate [--charts]          # model vs simulator
+//! mmee serve                        # JSON-lines mapping service on stdio
+//! mmee bench-fig <13..27|all>       # regenerate paper figures
+//! mmee bench-table <1..4|all>       # regenerate paper tables
+//! mmee bench-all [--out results]    # everything + summary.md
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use mmee::baselines::tileflow::TileFlow;
+use mmee::baselines::Mapper;
+use mmee::config::presets;
+use mmee::coordinator::service;
+use mmee::eval::{branchy::BranchyBackend, native::NativeBackend, xla::XlaBackend, EvalBackend};
+use mmee::report::{figures, tables, Report};
+use mmee::search::{MmeeEngine, Objective};
+use mmee::util::cli::Args;
+
+fn engine_for(backend: &str) -> Result<MmeeEngine> {
+    let b: Box<dyn EvalBackend> = match backend {
+        "native" => Box::new(NativeBackend),
+        "branchy" => Box::new(BranchyBackend),
+        "xla" => Box::new(XlaBackend::new()?),
+        other => bail!("unknown backend '{other}' (native|branchy|xla)"),
+    };
+    Ok(MmeeEngine::with_backend(b))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("optimize") => cmd_optimize(&args),
+        Some("pareto") => cmd_pareto(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-fig") => cmd_bench_fig(&args),
+        Some("bench-table") => cmd_bench_table(&args),
+        Some("bench-all") => cmd_bench_all(&args),
+        _ => {
+            eprintln!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "mmee — Matrix Multiplication Encoded Enumeration dataflow mapper
+subcommands: optimize | pareto | validate | serve | bench-fig | bench-table | bench-all
+see rust/src/main.rs header for flags";
+
+fn workload_from(args: &Args) -> Result<mmee::config::Workload> {
+    let name = args.flag_or("workload", "bert-base");
+    let seq = args.usize_flag("seq", 512);
+    presets::workload_by_name(name, seq).ok_or_else(|| anyhow!("unknown workload '{name}'"))
+}
+
+fn accel_from(args: &Args) -> Result<mmee::config::Accelerator> {
+    let name = args.flag_or("accel", "accel1");
+    presets::accel_by_name(name).ok_or_else(|| anyhow!("unknown accel '{name}'"))
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let w = workload_from(args)?;
+    let accel = accel_from(args)?;
+    let obj = Objective::parse(args.flag_or("objective", "energy"))
+        .ok_or_else(|| anyhow!("bad --objective"))?;
+    let engine = engine_for(args.flag_or("backend", "native"))?;
+    let s = if args.has("tileflow") {
+        TileFlow::default().optimize(&w, &accel, obj)
+    } else {
+        engine.optimize(&w, &accel, obj)
+    };
+    println!("{:#}", s.to_json());
+    if args.has("loopnest") {
+        println!("\n{}", s.render_loopnest(&w, &accel));
+    }
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let w = workload_from(args)?;
+    let accel = accel_from(args)?;
+    let engine = engine_for(args.flag_or("backend", "native"))?;
+    let (front, stats) = engine.pareto_energy_latency(&w, &accel);
+    println!(
+        "# {} on {}: {} Pareto points / {} mappings in {:?}",
+        w.name,
+        accel.name,
+        front.len(),
+        stats.mappings,
+        stats.elapsed
+    );
+    println!("energy_j,latency_s,recompute");
+    for p in front.points() {
+        println!(
+            "{},{},{}",
+            p.x,
+            p.y,
+            MmeeEngine::candidates()[p.candidate].recompute()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let mut r = Report::new(args.flag_or("out", "results"))?;
+    figures::fig13(&mut r)?;
+    figures::fig14(&mut r)?;
+    if args.has("charts") {
+        use mmee::loopnest::{BufferingLevels, Candidate, LoopOrder, Stationary};
+        use mmee::sim::charts;
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let t = mmee::tiling::Tiling { xd: [8, 1, 8, 1], xg: [64, 64, 64, 64] };
+        let ch = charts::charts(&cand, &t, &accel, &w);
+        println!("{}", charts::ascii_chart(&ch.occupancy, 8, "buffer utilisation (Fig. 5a)"));
+        println!("{}", charts::ascii_chart(&ch.dram_per_stage, 8, "DRAM access curve (Fig. 5b)"));
+    }
+    r.finish("validate.md")?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = engine_for(args.flag_or("backend", "native"))?;
+    let n = if let Some(addr) = args.flag("tcp") {
+        service::serve_tcp(&engine, addr, None)?
+    } else {
+        eprintln!(
+            "mmee serve: JSON requests on stdin, one per line (backend: {})",
+            engine.backend_name()
+        );
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        service::serve_lines(&engine, stdin.lock(), stdout.lock())?
+    };
+    eprintln!("served {n} requests");
+    Ok(())
+}
+
+fn run_fig(n: &str, r: &mut Report, max_seq: usize) -> Result<()> {
+    match n {
+        "13" => figures::fig13(r),
+        "14" => figures::fig14(r),
+        "15" => figures::fig15(r),
+        "16" => figures::fig16(r),
+        "17" => figures::fig17_18(r, &presets::accel1(), "fig17"),
+        "18" => figures::fig17_18(r, &presets::accel2(), "fig18"),
+        "19" => figures::fig19(r),
+        "20" => figures::fig20(r),
+        "21" => figures::fig21(r),
+        "22" => figures::fig22(r, max_seq),
+        "23" => figures::fig23(r, max_seq.max(8192)),
+        "24" => figures::fig24(r),
+        "25" => figures::fig25(r),
+        "26" => figures::fig26(r),
+        "27" => figures::fig27(r),
+        other => bail!("unknown figure '{other}'"),
+    }
+}
+
+const ALL_FIGS: [&str; 15] = [
+    "13", "14", "15", "16", "17", "18", "19", "20", "21", "22", "23", "24", "25", "26", "27",
+];
+const ALL_TABLES: [&str; 5] = ["1", "2", "3", "4", "pruning"];
+
+fn cmd_bench_fig(args: &Args) -> Result<()> {
+    let mut r = Report::new(args.flag_or("out", "results"))?;
+    let max_seq = args.usize_flag("max-seq", 131072);
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    if which == "all" {
+        for n in ALL_FIGS {
+            run_fig(n, &mut r, max_seq)?;
+        }
+    } else {
+        run_fig(which, &mut r, max_seq)?;
+    }
+    r.finish(&format!("fig{which}.md"))?;
+    Ok(())
+}
+
+fn run_table(n: &str, r: &mut Report) -> Result<()> {
+    match n {
+        "1" => tables::table1(r),
+        "2" => tables::table2(r),
+        "3" => tables::table3(r),
+        "4" => tables::table4(r),
+        "pruning" => tables::pruning_check(r),
+        other => bail!("unknown table '{other}'"),
+    }
+}
+
+fn cmd_bench_table(args: &Args) -> Result<()> {
+    let mut r = Report::new(args.flag_or("out", "results"))?;
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    if which == "all" {
+        for n in ALL_TABLES {
+            run_table(n, &mut r)?;
+        }
+    } else {
+        run_table(which, &mut r)?;
+    }
+    r.finish(&format!("table{which}.md"))?;
+    Ok(())
+}
+
+fn cmd_bench_all(args: &Args) -> Result<()> {
+    let mut r = Report::new(args.flag_or("out", "results"))?;
+    let max_seq = args.usize_flag("max-seq", 131072);
+    r.line(&format!(
+        "# MMEE paper reproduction run — {} candidates in the pruned offline table",
+        MmeeEngine::query().num_candidates()
+    ));
+    for n in ALL_FIGS {
+        run_fig(n, &mut r, max_seq)?;
+    }
+    for n in ALL_TABLES {
+        run_table(n, &mut r)?;
+    }
+    r.finish("summary.md")?;
+    println!("\nwrote {}", r.out_dir.join("summary.md").display());
+    Ok(())
+}

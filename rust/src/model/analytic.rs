@@ -1,0 +1,276 @@
+//! Scalar analytical evaluation: feature-vector construction and the
+//! metric combination shared by every evaluator backend (native rust,
+//! branchy baseline and the AOT JAX graph all implement exactly this).
+
+use super::terms::{feat, seg, SlotTable, NUM_FEATURES};
+use crate::config::{Accelerator, HwVector, Workload};
+use crate::tiling::Tiling;
+
+/// Raw (non-log) boundary feature vector for one tiling on one
+/// accelerator/workload. The log of this vector is a boundary-matrix
+/// column on the XLA path.
+pub type FeatureVec = [f64; NUM_FEATURES];
+
+pub fn features(t: &Tiling, accel: &Accelerator, workload: &Workload) -> FeatureVec {
+    let mut f = [1.0f64; NUM_FEATURES];
+    for d in 0..4 {
+        f[feat::XD[d]] = t.xd[d] as f64;
+        f[feat::XG[d]] = t.xg[d] as f64;
+    }
+    let ceil = |x: usize, p: usize| -> f64 { x.div_ceil(p) as f64 };
+    f[feat::NI_R] = ceil(t.xg[0], accel.pe_rows);
+    f[feat::NK_R] = ceil(t.xg[1], accel.pe_rows);
+    f[feat::NL_C] = ceil(t.xg[2], accel.pe_cols);
+    f[feat::NL_R] = ceil(t.xg[2], accel.pe_rows);
+    f[feat::NJ_C] = ceil(t.xg[3], accel.pe_cols);
+    // ln must stay finite for GEMM pairs: ~0 instead of 0.
+    f[feat::C_SMX] = if workload.has_softmax() { workload.c_softmax } else { 1e-30 };
+    f
+}
+
+/// The eight metric primitives (one per slot segment).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Primitives {
+    pub bs1: f64,
+    pub bs2: f64,
+    pub da: f64,
+    pub br: f64,
+    pub mac: f64,
+    pub smx: f64,
+    pub cl1: f64,
+    pub cl2: f64,
+}
+
+pub fn primitives(slots: &SlotTable, f: &FeatureVec) -> Primitives {
+    Primitives {
+        bs1: slots.eval_segment(seg::BS1, f),
+        bs2: slots.eval_segment(seg::BS2, f),
+        da: slots.eval_segment(seg::DA, f),
+        br: slots.eval_segment(seg::BR, f),
+        mac: slots.eval_segment(seg::MAC, f),
+        smx: slots.eval_segment(seg::SMX, f),
+        cl1: slots.eval_segment(seg::CL1, f),
+        cl2: slots.eval_segment(seg::CL2, f),
+    }
+}
+
+/// Workload-level constant multipliers applied to the per-instance model:
+///
+/// * **energy** — all instances (heads) execute: ×instances.
+/// * **compute latency** — instances fill the PE arrays in
+///   ⌈instances/arrays⌉ waves; when arrays outnumber instances, the
+///   spare arrays split each instance's `i` dimension
+///   (head-parallel + row-parallel hybrid), dividing compute time.
+/// * **DRAM latency** — bandwidth is *shared* across arrays, so
+///   concurrent instances serialize on the DRAM channel: ×instances.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Multipliers {
+    pub energy: f64,
+    pub lat_comp: f64,
+    pub lat_dram: f64,
+}
+
+impl Multipliers {
+    pub fn for_workload(w: &Workload, accel: &Accelerator) -> Multipliers {
+        let inst = w.instances as f64;
+        let arrays = accel.num_arrays as f64;
+        let waves = (w.instances as f64 / arrays).ceil();
+        let arrays_per_inst = (arrays / inst.min(arrays)).floor().max(1.0);
+        Multipliers {
+            energy: inst,
+            lat_comp: waves / arrays_per_inst,
+            lat_dram: inst,
+        }
+    }
+    pub fn unit() -> Multipliers {
+        Multipliers { energy: 1.0, lat_comp: 1.0, lat_dram: 1.0 }
+    }
+}
+
+impl crate::config::HwVector {
+    /// Fold the workload multipliers into the hardware vector so every
+    /// backend (including the AOT artifact, which knows nothing about
+    /// workload instances) computes final metrics directly.
+    pub fn with_multipliers(&self, m: &Multipliers) -> crate::config::HwVector {
+        crate::config::HwVector {
+            e_dram: self.e_dram * m.energy,
+            e_buf: self.e_buf * m.energy,
+            e_mac: self.e_mac * m.energy,
+            e_sfu: self.e_sfu * m.energy,
+            e_bs: self.e_bs * m.energy,
+            sec_per_word: self.sec_per_word * m.lat_dram,
+            sec_per_cycle: self.sec_per_cycle * m.lat_comp,
+            capacity_words: self.capacity_words,
+        }
+    }
+}
+
+/// Final mapping metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    /// Joules (all instances).
+    pub energy: f64,
+    /// Seconds (wall clock across instance waves).
+    pub latency: f64,
+    /// DRAM words moved (one instance).
+    pub da: f64,
+    /// Peak buffer occupancy, words.
+    pub bs: f64,
+    pub feasible: bool,
+    /// Energy breakdown (all instances), J.
+    pub e_dram: f64,
+    pub e_sram: f64,
+    pub e_mac: f64,
+    pub e_sfu: f64,
+    /// Latency breakdown (per wave × waves), s.
+    pub lat_comp: f64,
+    pub lat_dram: f64,
+}
+
+impl Metrics {
+    pub const INFEASIBLE_SENTINEL: f64 = 1.0e30;
+
+    pub fn edp(&self) -> f64 {
+        self.energy * self.latency
+    }
+
+    /// Compute utilisation (paper Fig. 19): arithmetic-optimum cycles over
+    /// modeled compute cycles.
+    pub fn utilization(&self, prims: &Primitives, accel: &Accelerator) -> f64 {
+        let ideal = prims.mac / accel.macs_per_cycle() as f64;
+        ideal / (prims.cl1 + prims.cl2)
+    }
+}
+
+/// The shared metric combination (mirrors `python/compile/model.py`):
+///
+/// ```text
+/// BS      = max(BS₁, BS₂)                  (Eq. 4)
+/// energy  = e_dram·DA + e_buf·BR + e_mac·MAC + e_sfu·SMX + e_bs·BS
+/// latency = max((CL₁+CL₂)·sec_per_cycle, DA·sec_per_word)
+/// ```
+pub fn combine(p: &Primitives, hw: &HwVector, mult: &Multipliers) -> Metrics {
+    let bs = p.bs1.max(p.bs2);
+    let feasible = bs <= hw.capacity_words;
+    let e_dram = hw.e_dram * p.da * mult.energy;
+    let e_sram = hw.e_buf * p.br * mult.energy;
+    let e_mac = hw.e_mac * p.mac * mult.energy;
+    let e_sfu = hw.e_sfu * p.smx * mult.energy;
+    let e_bs = hw.e_bs * bs * mult.energy;
+    let lat_comp = (p.cl1 + p.cl2) * hw.sec_per_cycle * mult.lat_comp;
+    let lat_dram = p.da * hw.sec_per_word * mult.lat_dram;
+    let (energy, latency) = if feasible {
+        (e_dram + e_sram + e_mac + e_sfu + e_bs, lat_comp.max(lat_dram))
+    } else {
+        (Metrics::INFEASIBLE_SENTINEL, Metrics::INFEASIBLE_SENTINEL)
+    };
+    Metrics {
+        energy,
+        latency,
+        da: p.da,
+        bs,
+        feasible,
+        e_dram,
+        e_sram,
+        e_mac,
+        e_sfu,
+        lat_comp,
+        lat_dram,
+    }
+}
+
+/// One-call scalar evaluation of a candidate's slot table on a concrete
+/// tiling (the reference path; the hot paths batch this).
+pub fn evaluate(
+    slots: &SlotTable,
+    t: &Tiling,
+    accel: &Accelerator,
+    workload: &Workload,
+) -> (Primitives, Metrics) {
+    let f = features(t, accel, workload);
+    let p = primitives(slots, &f);
+    let mult = Multipliers::for_workload(workload, accel);
+    let m = combine(&p, &accel.hw_vector(), &mult);
+    (p, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::loopnest::{BufferingLevels, Candidate, LoopOrder, Stationary};
+    use crate::model::derive_slots;
+
+    fn flash_candidate() -> Candidate {
+        Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        }
+    }
+
+    #[test]
+    fn feature_vector_contents() {
+        let accel = presets::accel1(); // 32×32 PEs
+        let w = presets::bert_base(512);
+        let t = Tiling { xd: [8, 1, 8, 1], xg: [64, 64, 64, 64] };
+        let f = features(&t, &accel, &w);
+        assert_eq!(f[feat::I_D], 8.0);
+        assert_eq!(f[feat::I_G], 64.0);
+        assert_eq!(f[feat::NI_R], 2.0); // ceil(64/32)
+        assert_eq!(f[feat::NL_C], 2.0);
+        assert_eq!(f[feat::C_SMX], 10.0);
+        assert_eq!(f[feat::SPARE1], 1.0);
+    }
+
+    #[test]
+    fn macs_match_workload_closed_form() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let t = Tiling { xd: [8, 1, 8, 1], xg: [64, 64, 64, 64] };
+        let slots = derive_slots(&flash_candidate());
+        let (p, _) = evaluate(&slots, &t, &accel, &w);
+        // per instance: 2 · 512·512·64 MACs
+        assert_eq!(p.mac, 2.0 * 512.0 * 512.0 * 64.0);
+    }
+
+    #[test]
+    fn feasibility_gates_metrics() {
+        let accel = presets::coral(); // 32 KB buffer
+        let w = presets::palm_62b(2048);
+        let t = Tiling::unit(&w.gemm); // everything in one tile: infeasible
+        let slots = derive_slots(&flash_candidate());
+        let (_, m) = evaluate(&slots, &t, &accel, &w);
+        assert!(!m.feasible);
+        assert_eq!(m.energy, Metrics::INFEASIBLE_SENTINEL);
+    }
+
+    #[test]
+    fn latency_is_max_of_compute_and_dram() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let t = Tiling { xd: [8, 1, 8, 1], xg: [64, 64, 64, 64] };
+        let slots = derive_slots(&flash_candidate());
+        let (p, m) = evaluate(&slots, &t, &accel, &w);
+        assert!(m.feasible);
+        let mult = Multipliers::for_workload(&w, &accel);
+        let comp = (p.cl1 + p.cl2) * accel.sec_per_cycle() * mult.lat_comp;
+        let dram = p.da * accel.sec_per_word() * mult.lat_dram;
+        assert!((m.latency - comp.max(dram)).abs() < 1e-12);
+        assert!(m.energy > 0.0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let accel = presets::accel2(); // 128×128: small tiles under-utilise
+        let w = presets::bert_base(512);
+        let t = Tiling { xd: [16, 2, 16, 2], xg: [32, 32, 32, 32] };
+        let slots = derive_slots(&flash_candidate());
+        let (p, m) = evaluate(&slots, &t, &accel, &w);
+        let u = m.utilization(&p, &accel);
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+        // 32-wide tiles on a 128-wide array: at most 1/16 of the MXU.
+        assert!(u <= 0.0626, "expected heavy under-utilisation, got {u}");
+    }
+}

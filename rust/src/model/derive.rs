@@ -1,0 +1,455 @@
+//! Offline derivation: candidate → 32-slot monomial table.
+//!
+//! Implements the paper's analytical models:
+//! * buffer size requirements per operand / operator (§V-B, Eq. 1–3),
+//! * DRAM access with blockers, effective dimensions, Scenario 1/2 and
+//!   recomputation (§V-C, Eq. 5–7) plus output-psum spill terms,
+//! * buffer↔RF traffic per stationary mode, MAC counts, softmax work and
+//!   PE-padded compute cycles (§V-D).
+//!
+//! Everything here runs offline (once per candidate table); the outputs
+//! are pure monomials evaluated on the online hot path.
+
+use super::terms::{feat, seg, Monomial, SlotTable};
+use crate::loopnest::{Candidate, Dim, Operand};
+
+/// Granule (single-tile) footprint of an operand, in words.
+pub fn granule(op: Operand) -> Monomial {
+    let mut m = Monomial::one();
+    for &d in op.dims() {
+        m = m.with(feat::XG[d.index()], 1);
+    }
+    m
+}
+
+/// Operand buffer-size requirement (paper §V-B): granule × the inter-tile
+/// extents of the operand's dims at/below its buffering level.
+pub fn buffer_size(op: Operand, cand: &Candidate) -> Monomial {
+    let lvl = cand.levels.level(op, &cand.order);
+    let mut m = granule(op);
+    for &d in op.dims() {
+        if cand.order.pos(d) >= lvl {
+            m = m.with(feat::XD[d.index()], 1);
+        }
+    }
+    m
+}
+
+/// Effective dimensions (paper §V-A): producer operands gain the
+/// consumer-only dim `j` under recomputation.
+pub fn effective_dims(op: Operand, recompute: bool) -> Vec<Dim> {
+    match op {
+        Operand::A | Operand::B => {
+            let mut d = vec![Dim::I, Dim::K, Dim::L];
+            if recompute {
+                d.push(Dim::J);
+            }
+            d
+        }
+        Operand::C => vec![Dim::I, Dim::K, Dim::L, Dim::J],
+        Operand::D | Operand::E => vec![Dim::I, Dim::L, Dim::J],
+    }
+}
+
+/// DRAM access of an *input* operand (A, B or D), paper §V-C.
+///
+/// The blocker is the innermost loop **outside** the operand's buffering
+/// level whose iteration invalidates the buffered data: a loop over one
+/// of the operand's own dims (Scenario 1), or — for consumer inputs —
+/// the producer's reduction loop `k`, whose body (a producer phase)
+/// flushes unprotected consumer tiles (Scenario 2).
+pub fn dram_access_input(op: Operand, cand: &Candidate) -> Monomial {
+    debug_assert!(matches!(op, Operand::A | Operand::B | Operand::D));
+    let order = &cand.order;
+    let lvl = cand.levels.level(op, order);
+    let bs = buffer_size(op, cand);
+
+    let mut blocker: Option<usize> = None;
+    for p in 0..lvl.min(4) {
+        let d = order.dim_at(p);
+        let own = op.dims().contains(&d);
+        let scenario2 = op == Operand::D && d == Dim::K;
+        if own || scenario2 {
+            blocker = Some(p);
+        }
+    }
+
+    let Some(p) = blocker else {
+        // Loaded exactly once; the working set is never invalidated.
+        return bs;
+    };
+
+    let blocker_dim = order.dim_at(p);
+    let eff = effective_dims(op, cand.recompute());
+    let mut m = bs;
+    if op.dims().contains(&blocker_dim) {
+        // Scenario 1: the blocker itself multiplies.
+        m = m.with(feat::XD[blocker_dim.index()], 1);
+    }
+    // Scenario 1 and 2: all effective dims strictly above the blocker.
+    for &d in &eff {
+        if order.pos(d) < p {
+            m = m.with(feat::XD[d.index()], 1);
+        }
+    }
+    m
+}
+
+/// DRAM traffic of the output `E`: written once if its accumulator
+/// outlives the consumer reduction loop `l`; otherwise each of the `l_D`
+/// visits spills (read + write), minus the initial read of zeros:
+/// `(2·l_D − 1)·|E|`.
+pub fn dram_access_output(cand: &Candidate) -> Vec<Monomial> {
+    let full_e = Monomial::one()
+        .with(feat::I_D, 1)
+        .with(feat::J_D, 1)
+        .with(feat::I_G, 1)
+        .with(feat::J_G, 1);
+    if cand.levels.e_spills(&cand.order) {
+        vec![
+            full_e.with(feat::L_D, 1).scaled(2.0),
+            full_e.scaled(-1.0),
+        ]
+    } else {
+        vec![full_e]
+    }
+}
+
+/// Per-operator inter-tile stage count (op1 re-runs per `j` iteration
+/// under recomputation).
+fn stages(op1: bool, recompute: bool) -> Monomial {
+    let mut m = Monomial::one().with(feat::I_D, 1).with(feat::L_D, 1);
+    if op1 {
+        m = m.with(feat::K_D, 1);
+        if recompute {
+            m = m.with(feat::J_D, 1);
+        }
+    } else {
+        m = m.with(feat::J_D, 1);
+    }
+    m
+}
+
+/// Buffer↔RF traffic of one operator per stationary mode, as monomials
+/// (classic systolic-array counts; ceil-blocks are features, DESIGN.md §4).
+///
+/// Granule GEMM M×Kr×N on a `P_r × P_c` array:
+/// * WS: weights once `Kr·N`; activations `M·Kr·⌈N/P_c⌉`;
+///   psums `M·N·(2⌈Kr/P_r⌉ − 1)`.
+/// * IS: activations once `M·Kr`; weights `Kr·N·⌈M/P_r⌉`;
+///   psums `M·N·(2⌈Kr/P_r⌉ − 1)`.
+/// * OS: outputs once `M·N`; activations `M·Kr·⌈N/P_c⌉`;
+///   weights `Kr·N·⌈M/P_r⌉`.
+fn buffer_rf_terms(op1: bool, cand: &Candidate) -> Vec<Monomial> {
+    use crate::loopnest::Stationary::*;
+    let st = stages(op1, cand.recompute());
+    // (M, Kr, N) granule features and their block-count features.
+    let (m_f, kr_f, n_f) = if op1 {
+        (feat::I_G, feat::K_G, feat::L_G)
+    } else {
+        (feat::I_G, feat::L_G, feat::J_G)
+    };
+    let (nm_f, nkr_f, nn_f) = if op1 {
+        (feat::NI_R, feat::NK_R, feat::NL_C)
+    } else {
+        (feat::NI_R, feat::NL_R, feat::NJ_C)
+    };
+    let sm = if op1 { cand.sm1 } else { cand.sm2 };
+
+    let mk = Monomial::one().with(m_f, 1).with(kr_f, 1);
+    let krn = Monomial::one().with(kr_f, 1).with(n_f, 1);
+    let mn = Monomial::one().with(m_f, 1).with(n_f, 1);
+
+    let terms = match sm {
+        Weight => vec![
+            krn,
+            mk.with(nn_f, 1),
+            mn.with(nkr_f, 1).scaled(2.0),
+            mn.scaled(-1.0),
+        ],
+        Input => vec![
+            mk,
+            krn.with(nm_f, 1),
+            mn.with(nkr_f, 1).scaled(2.0),
+            mn.scaled(-1.0),
+        ],
+        Output => vec![mn, mk.with(nn_f, 1), krn.with(nm_f, 1)],
+    };
+    terms.into_iter().map(|t| t.mul(&st)).collect()
+}
+
+/// Full offline derivation of one candidate's slot table.
+pub fn derive_slots(cand: &Candidate) -> SlotTable {
+    let mut t = SlotTable::empty();
+    let rec = cand.recompute();
+    let order = &cand.order;
+
+    // ---- BS^Op1 (Eq. 1) and BS^Op2 (Eq. 2) ----
+    for op in [Operand::A, Operand::B, Operand::C] {
+        t.push(seg::BS1, buffer_size(op, cand));
+    }
+    for op in [Operand::D, Operand::E] {
+        if cand.levels.retained_across_phases(op, order) {
+            t.push(seg::BS1, buffer_size(op, cand));
+        }
+    }
+    for op in [Operand::C, Operand::D, Operand::E] {
+        t.push(seg::BS2, buffer_size(op, cand));
+    }
+    for op in [Operand::A, Operand::B] {
+        if cand.levels.retained_across_phases(op, order) {
+            t.push(seg::BS2, buffer_size(op, cand));
+        }
+    }
+
+    // ---- DRAM access (Eq. 7): DA_C = 0, never written to DRAM ----
+    for op in [Operand::A, Operand::B, Operand::D] {
+        t.push(seg::DA, dram_access_input(op, cand));
+    }
+    for m in dram_access_output(cand) {
+        t.push(seg::DA, m);
+    }
+
+    // ---- buffer <-> register file traffic ----
+    for m in buffer_rf_terms(true, cand) {
+        t.push(seg::BR, m);
+    }
+    for m in buffer_rf_terms(false, cand) {
+        t.push(seg::BR, m);
+    }
+
+    // ---- MAC counts ----
+    let mut mac1 = Monomial::one()
+        .with(feat::I_D, 1).with(feat::K_D, 1).with(feat::L_D, 1)
+        .with(feat::I_G, 1).with(feat::K_G, 1).with(feat::L_G, 1);
+    if rec {
+        mac1 = mac1.with(feat::J_D, 1);
+    }
+    t.push(seg::MAC, mac1);
+    t.push(
+        seg::MAC,
+        Monomial::one()
+            .with(feat::I_D, 1).with(feat::L_D, 1).with(feat::J_D, 1)
+            .with(feat::I_G, 1).with(feat::L_G, 1).with(feat::J_G, 1),
+    );
+
+    // ---- softmax: c_softmax · i · l (· j_D under recomputation) ----
+    let mut smx = Monomial::one()
+        .with(feat::C_SMX, 1)
+        .with(feat::I_D, 1).with(feat::L_D, 1)
+        .with(feat::I_G, 1).with(feat::L_G, 1);
+    if rec {
+        smx = smx.with(feat::J_D, 1);
+    }
+    t.push(seg::SMX, smx);
+
+    // ---- compute cycles (PE-padded; per array) ----
+    let cl1 = stages(true, rec)
+        .with(feat::NI_R, 1)
+        .with(feat::NL_C, 1)
+        .with(feat::K_G, 1);
+    t.push(seg::CL1, cl1);
+    let cl2 = stages(false, rec)
+        .with(feat::NI_R, 1)
+        .with(feat::NJ_C, 1)
+        .with(feat::L_G, 1);
+    t.push(seg::CL2, cl2);
+
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopnest::{BufferingLevels, LoopOrder, Stationary};
+
+    /// Paper Fig. 11: order (i, l, j, k), A buffered at the k level,
+    /// D/E streaming-ish, recomputation implied.
+    fn fig11_candidate() -> Candidate {
+        let order = LoopOrder([Dim::I, Dim::L, Dim::J, Dim::K]);
+        Candidate {
+            order,
+            levels: BufferingLevels { a: 3, b: 4, d: 4, e: 2 },
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        }
+    }
+
+    fn exps(pairs: &[(usize, i8)]) -> Monomial {
+        let mut m = Monomial::one();
+        for &(f, e) in pairs {
+            m = m.with(f, e);
+        }
+        m
+    }
+
+    #[test]
+    fn fig11_bs_a() {
+        // BS_A = k_D · i_G · k_G
+        let c = fig11_candidate();
+        let bs = buffer_size(Operand::A, &c);
+        assert_eq!(bs, exps(&[(feat::K_D, 1), (feat::I_G, 1), (feat::K_G, 1)]));
+    }
+
+    #[test]
+    fn fig11_da_a_scenario1() {
+        // DA_A = BS_A · i_D  (Eq. 5): blocker is the i loop, nothing above.
+        let c = fig11_candidate();
+        let da = dram_access_input(Operand::A, &c);
+        assert_eq!(
+            da,
+            exps(&[(feat::K_D, 1), (feat::I_G, 1), (feat::K_G, 1), (feat::I_D, 1)])
+        );
+    }
+
+    #[test]
+    fn fig11_da_d_scenario2() {
+        // DA_D = BS_D · l_D · j_D · i_D (Eq. 6): blocker is the producer
+        // reduction k (innermost), which does NOT multiply.
+        let c = fig11_candidate();
+        let da = dram_access_input(Operand::D, &c);
+        assert_eq!(
+            da,
+            exps(&[
+                (feat::L_G, 1), (feat::J_G, 1),
+                (feat::L_D, 1), (feat::J_D, 1), (feat::I_D, 1)
+            ])
+        );
+    }
+
+    #[test]
+    fn fig11_bs_op1_includes_e_not_d() {
+        // Eq. 3: BS^Op1 = BS_A + BS_B + BS_C + BS_E  (tau_D = 0, tau_E = 1)
+        let c = fig11_candidate();
+        let t = derive_slots(&c);
+        let seg_bs1 = t.segment(seg::BS1);
+        assert_eq!(seg_bs1.len(), 4);
+        // The E term is present: granule i_g·j_g with j_D extent (level 2,
+        // j at depth 2 >= 2).
+        let bse = buffer_size(Operand::E, &c);
+        assert!(seg_bs1.contains(&bse));
+        let bsd = buffer_size(Operand::D, &c);
+        assert!(!seg_bs1.contains(&bsd));
+    }
+
+    #[test]
+    fn flash_order_da_matches_flashattention() {
+        // Order (i, l, k, j), all streaming: A tile row reloads per l
+        // (DA_A = |A| · l_D), B streams once per i (DA_B = |B| · i_D),
+        // D reloads per i (DA_D = |D| · i_D) ... with granule-level
+        // buffering everywhere.
+        let c = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Output,
+            sm2: Stationary::Output,
+        };
+        let full = |op: Operand| {
+            let mut m = Monomial::one();
+            for &d in op.dims() {
+                m = m.with(feat::XD[d.index()], 1).with(feat::XG[d.index()], 1);
+            }
+            m
+        };
+        assert_eq!(
+            dram_access_input(Operand::A, &c),
+            full(Operand::A).with(feat::L_D, 1)
+        );
+        // B: blocker = k (own, depth 2); above: l, i in eff dims.
+        assert_eq!(
+            dram_access_input(Operand::B, &c),
+            full(Operand::B).with(feat::I_D, 1)
+        );
+        // D: blocker j (own, innermost); above: l, i.
+        assert_eq!(
+            dram_access_input(Operand::D, &c),
+            full(Operand::D).with(feat::I_D, 1)
+        );
+    }
+
+    #[test]
+    fn whole_matrix_resident_loads_once() {
+        // Level 0 on A: DA_A = BS_A = |A| regardless of order.
+        for order in LoopOrder::all() {
+            let c = Candidate {
+                order,
+                levels: BufferingLevels { a: 0, b: 4, d: 4, e: 4 },
+                sm1: Stationary::Weight,
+                sm2: Stationary::Weight,
+            };
+            let da = dram_access_input(Operand::A, &c);
+            let bs = buffer_size(Operand::A, &c);
+            assert_eq!(da, bs, "order {}", order.name());
+            assert_eq!(
+                bs,
+                exps(&[(feat::I_D, 1), (feat::K_D, 1), (feat::I_G, 1), (feat::K_G, 1)])
+            );
+        }
+    }
+
+    #[test]
+    fn recompute_inflates_op1_work() {
+        let rec = fig11_candidate(); // (i,l,j,k): recompute
+        let t = derive_slots(&rec);
+        let mac1 = t.slots[seg::MAC.0].unwrap();
+        assert_eq!(mac1.exps[feat::J_D], 1, "op1 MACs scale with j_D");
+        let smx = t.slots[seg::SMX.0].unwrap();
+        assert_eq!(smx.exps[feat::J_D], 1);
+        assert_eq!(smx.exps[feat::C_SMX], 1);
+
+        let norec = Candidate { order: LoopOrder::flash(), ..rec };
+        let t2 = derive_slots(&norec);
+        assert_eq!(t2.slots[seg::MAC.0].unwrap().exps[feat::J_D], 0);
+    }
+
+    #[test]
+    fn e_spill_terms() {
+        // Flash order, E spilled (level 4 > pos(l) = 1): 2·l_D·|E| − |E|.
+        let c = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let terms = dram_access_output(&c);
+        assert_eq!(terms.len(), 2);
+        assert_eq!(terms[0].coef, 2.0);
+        assert_eq!(terms[0].exps[feat::L_D], 1);
+        assert_eq!(terms[1].coef, -1.0);
+        // Retained E: single write.
+        let c2 = Candidate {
+            levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
+            ..c
+        };
+        let terms2 = dram_access_output(&c2);
+        assert_eq!(terms2.len(), 1);
+        assert_eq!(terms2[0].coef, 1.0);
+    }
+
+    #[test]
+    fn br_weight_stationary_term_structure() {
+        let c = fig11_candidate();
+        let t = derive_slots(&c);
+        let br = t.segment(seg::BR);
+        assert_eq!(br.len(), 8); // 4 (WS op1) + 4 (WS op2)
+        // Every op1 BR term carries the recompute j_D factor via stages.
+        for m in &br[..4] {
+            assert!(m.exps[feat::J_D] >= 1, "op1 stages must include j_D under recompute");
+        }
+    }
+
+    #[test]
+    fn compute_cycle_slots_use_block_counts() {
+        let c = fig11_candidate();
+        let t = derive_slots(&c);
+        let cl1 = t.slots[seg::CL1.0].unwrap();
+        assert_eq!(cl1.exps[feat::NI_R], 1);
+        assert_eq!(cl1.exps[feat::NL_C], 1);
+        assert_eq!(cl1.exps[feat::K_G], 1);
+        assert_eq!(cl1.exps[feat::J_D], 1); // recompute
+        let cl2 = t.slots[seg::CL2.0].unwrap();
+        assert_eq!(cl2.exps[feat::NJ_C], 1);
+        assert_eq!(cl2.exps[feat::L_G], 1);
+        assert_eq!(cl2.exps[feat::J_D], 1); // op2 stages always have j_D
+    }
+}

@@ -1,0 +1,18 @@
+//! The branch-free analytical performance model (paper §V).
+//!
+//! Every metric — buffer sizes (Eq. 1–4), DRAM access (§V-C), buffer↔RF
+//! traffic, MAC counts, softmax work and compute cycles — is derived
+//! *offline* per candidate as a set of **monomials** over the 16
+//! log-boundary features ([`terms::Monomial`]). Online evaluation is then
+//! pure arithmetic: scalar ([`analytic`]), vectorized rust
+//! ([`crate::eval::native`]) or one batched `exp(Q·lnB)` matmul through
+//! the AOT JAX/Pallas artifact ([`crate::eval::xla`]) — no "if–else"
+//! parsing on any hot path.
+
+pub mod terms;
+pub mod derive;
+pub mod analytic;
+
+pub use analytic::{combine, FeatureVec, Metrics, Multipliers, Primitives};
+pub use derive::derive_slots;
+pub use terms::{Monomial, SlotTable};

@@ -1,0 +1,214 @@
+//! Monomials over the boundary features, and the 32-slot candidate
+//! encoding (the rust half of the layout contract in
+//! `python/compile/layout.py`).
+
+/// Feature indices of the extended boundary vector. `ND_*` entries are
+/// PE-array *block counts* (`ceil(x_G / P)`), which turn PE
+//  under-utilisation into monomials (DESIGN.md §4).
+pub mod feat {
+    pub const I_D: usize = 0;
+    pub const K_D: usize = 1;
+    pub const L_D: usize = 2;
+    pub const J_D: usize = 3;
+    pub const I_G: usize = 4;
+    pub const K_G: usize = 5;
+    pub const L_G: usize = 6;
+    pub const J_G: usize = 7;
+    /// ceil(i_G / P_rows): M-blocks of both operators.
+    pub const NI_R: usize = 8;
+    /// ceil(k_G / P_rows): Kr-blocks of Op1.
+    pub const NK_R: usize = 9;
+    /// ceil(l_G / P_cols): N-blocks of Op1.
+    pub const NL_C: usize = 10;
+    /// ceil(l_G / P_rows): Kr-blocks of Op2.
+    pub const NL_R: usize = 11;
+    /// ceil(j_G / P_cols): N-blocks of Op2.
+    pub const NJ_C: usize = 12;
+    /// Workload softmax factor c_softmax (1e-30 ≈ 0 for GEMM pairs; never
+    /// exactly 0 so `ln` stays finite).
+    pub const C_SMX: usize = 13;
+    pub const SPARE1: usize = 14;
+    pub const SPARE2: usize = 15;
+
+    pub const XD: [usize; 4] = [I_D, K_D, L_D, J_D];
+    pub const XG: [usize; 4] = [I_G, K_G, L_G, J_G];
+}
+
+pub const NUM_FEATURES: usize = 16;
+pub const NUM_SLOTS: usize = 32;
+
+/// Slot segment ranges — must equal `python/compile/layout.py`.
+pub mod seg {
+    pub const BS1: (usize, usize) = (0, 6);
+    pub const BS2: (usize, usize) = (6, 12);
+    pub const DA: (usize, usize) = (12, 18);
+    pub const BR: (usize, usize) = (18, 26);
+    pub const MAC: (usize, usize) = (26, 28);
+    pub const SMX: (usize, usize) = (28, 29);
+    pub const CL1: (usize, usize) = (29, 30);
+    pub const CL2: (usize, usize) = (30, 31);
+    pub const SPARE: (usize, usize) = (31, 32);
+}
+
+/// `coef · Π_f feature_f ^ exps_f`. Exponents are tiny non-negative
+/// integers (i8 leaves headroom for composed terms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Monomial {
+    pub coef: f64,
+    pub exps: [i8; NUM_FEATURES],
+}
+
+impl Monomial {
+    pub const fn one() -> Monomial {
+        Monomial { coef: 1.0, exps: [0; NUM_FEATURES] }
+    }
+
+    pub fn with(mut self, feature: usize, exp: i8) -> Monomial {
+        self.exps[feature] += exp;
+        self
+    }
+
+    pub fn scaled(mut self, coef: f64) -> Monomial {
+        self.coef *= coef;
+        self
+    }
+
+    /// Product of two monomials.
+    pub fn mul(mut self, other: &Monomial) -> Monomial {
+        self.coef *= other.coef;
+        for (a, b) in self.exps.iter_mut().zip(&other.exps) {
+            *a += b;
+        }
+        self
+    }
+
+    /// Evaluate against a raw (non-log) feature vector.
+    pub fn eval(&self, features: &[f64; NUM_FEATURES]) -> f64 {
+        let mut v = self.coef;
+        for (f, &e) in features.iter().zip(&self.exps) {
+            match e {
+                0 => {}
+                1 => v *= f,
+                2 => v *= f * f,
+                3 => v *= f * f * f,
+                e if e > 0 => v *= f.powi(e as i32),
+                e => v *= f.powi(e as i32),
+            }
+        }
+        v
+    }
+
+    /// Symbolic pointwise dominance: `self(x) ≥ other(x)` for every
+    /// feature vector with all entries ≥ 1. Sufficient condition:
+    /// coef ≥ coef' and exponent-wise ≥ (both coefs must be ≥ 0 for the
+    /// argument to hold).
+    pub fn dominates(&self, other: &Monomial) -> bool {
+        self.coef >= other.coef
+            && other.coef >= 0.0
+            && self.exps.iter().zip(&other.exps).all(|(a, b)| a >= b)
+    }
+}
+
+/// A candidate's full 32-slot encoding. `None` slots contribute nothing
+/// (encoded as coef = 0 with a zero exponent row on the matrix path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotTable {
+    pub slots: [Option<Monomial>; NUM_SLOTS],
+}
+
+impl SlotTable {
+    pub fn empty() -> SlotTable {
+        SlotTable { slots: [None; NUM_SLOTS] }
+    }
+
+    /// Fill the next free slot within a segment; panics if the segment
+    /// overflows (a derivation bug, not a runtime condition).
+    pub fn push(&mut self, segment: (usize, usize), m: Monomial) {
+        for idx in segment.0..segment.1 {
+            if self.slots[idx].is_none() {
+                self.slots[idx] = Some(m);
+                return;
+            }
+        }
+        panic!("slot segment {segment:?} overflow");
+    }
+
+    /// Sum a segment against a raw feature vector.
+    pub fn eval_segment(&self, segment: (usize, usize), features: &[f64; NUM_FEATURES]) -> f64 {
+        self.slots[segment.0..segment.1]
+            .iter()
+            .flatten()
+            .map(|m| m.eval(features))
+            .sum()
+    }
+
+    /// Monomials of one segment (for the symbolic pruner).
+    pub fn segment(&self, segment: (usize, usize)) -> Vec<Monomial> {
+        self.slots[segment.0..segment.1].iter().flatten().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monomial_eval_matches_closed_form() {
+        // BS_A = k_D * i_G * k_G (paper Fig. 11)
+        let m = Monomial::one()
+            .with(feat::K_D, 1)
+            .with(feat::I_G, 1)
+            .with(feat::K_G, 1);
+        let mut f = [1.0; NUM_FEATURES];
+        f[feat::K_D] = 4.0;
+        f[feat::I_G] = 32.0;
+        f[feat::K_G] = 16.0;
+        assert_eq!(m.eval(&f), 4.0 * 32.0 * 16.0);
+    }
+
+    #[test]
+    fn monomial_algebra() {
+        let a = Monomial::one().with(feat::I_D, 1).scaled(2.0);
+        let b = Monomial::one().with(feat::I_D, 1).with(feat::J_D, 2);
+        let ab = a.mul(&b);
+        assert_eq!(ab.coef, 2.0);
+        assert_eq!(ab.exps[feat::I_D], 2);
+        assert_eq!(ab.exps[feat::J_D], 2);
+    }
+
+    #[test]
+    fn dominance_is_sound_on_samples() {
+        let hi = Monomial::one().with(feat::I_D, 2).with(feat::L_D, 1);
+        let lo = Monomial::one().with(feat::I_D, 1);
+        assert!(hi.dominates(&lo));
+        assert!(!lo.dominates(&hi));
+        for id in [1.0, 2.0, 7.0] {
+            for ld in [1.0, 3.0] {
+                let mut f = [1.0; NUM_FEATURES];
+                f[feat::I_D] = id;
+                f[feat::L_D] = ld;
+                assert!(hi.eval(&f) >= lo.eval(&f));
+            }
+        }
+    }
+
+    #[test]
+    fn slot_push_and_segment_sum() {
+        let mut t = SlotTable::empty();
+        t.push(seg::DA, Monomial::one().scaled(3.0));
+        t.push(seg::DA, Monomial::one().with(feat::I_D, 1));
+        let mut f = [1.0; NUM_FEATURES];
+        f[feat::I_D] = 5.0;
+        assert_eq!(t.eval_segment(seg::DA, &f), 8.0);
+        assert_eq!(t.segment(seg::DA).len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn slot_overflow_panics() {
+        let mut t = SlotTable::empty();
+        for _ in 0..2 {
+            t.push(seg::SMX, Monomial::one());
+        }
+    }
+}

@@ -1,0 +1,656 @@
+//! Figure regeneration (paper Figs. 13–27). Each function writes
+//! `results/figNN*.csv` and a markdown section, and prints headline
+//! comparisons. Absolute numbers are ours (our simulator substrate);
+//! the *shapes* — who wins, by what factor, where crossovers fall — are
+//! the reproduction target (DESIGN.md §7).
+
+use anyhow::Result;
+
+use super::Report;
+use crate::baselines::{
+    chimera::Chimera,
+    flat::Flat,
+    nofusion::NoFusion,
+    orojenesis::{Orojenesis, Variant},
+    tileflow::{TfPlus, TfPlusT, TfPlusTBm, TileFlow},
+    Mapper,
+};
+use crate::config::{presets, Accelerator, Workload};
+use crate::loopnest::{BufferingLevels, Candidate, LoopOrder};
+use crate::model::{analytic, derive_slots};
+use crate::search::{MmeeEngine, Objective, Solution};
+use crate::sim::validate::{summarize, validate_mapping};
+use crate::tiling::{enumerate_tilings, Tiling};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+fn util_of(s: &Solution, accel: &Accelerator, w: &Workload) -> f64 {
+    let slots = derive_slots(&s.candidate);
+    let (p, m) = analytic::evaluate(&slots, &s.tiling, accel, w);
+    m.utilization(&p, accel)
+}
+
+fn rel(v: f64, base: f64) -> String {
+    format!("{:.2}", v / base)
+}
+
+// --------------------------------------------------------------- Fig. 13
+
+/// Model validation against the stage-accurate simulator: 3 hardware
+/// configs × 4 GEMM-pair problems × ~118 random mappings = ~1400 points
+/// (paper: 1410 mappings vs Timeloop, R² > 0.9999).
+pub fn fig13(r: &mut Report) -> Result<()> {
+    r.section("Fig. 13 — model validation (analytical vs stage-accurate simulator)");
+    let hws = [presets::accel1(), presets::accel2(), presets::coral()];
+    let probs = [
+        Workload::gemm_pair("prob1", 128, 64, 128, 64),
+        Workload::gemm_pair("prob2", 256, 32, 128, 32),
+        Workload::gemm_pair("prob3", 64, 64, 256, 16),
+        Workload::attention("prob4", 128, 32, 4),
+    ];
+    let mut rng = Rng::new(0xF16_13);
+    let orders = LoopOrder::all();
+    let mut points = Vec::new();
+    for accel in &hws {
+        for w in &probs {
+            let tilings: Vec<Tiling> = enumerate_tilings(&w.gemm, None)
+                .into_iter()
+                .filter(|t| crate::sim::Simulator::stage_count(&dummy_cand(&orders[0]), t) < 3e4)
+                .collect();
+            for _ in 0..118 {
+                let cand = Candidate {
+                    order: *rng.choose(&orders),
+                    levels: BufferingLevels {
+                        a: rng.below(5) as u8,
+                        b: rng.below(5) as u8,
+                        d: rng.below(5) as u8,
+                        e: rng.below(5) as u8,
+                    },
+                    sm1: *rng.choose(&crate::loopnest::dims::STATIONARIES),
+                    sm2: *rng.choose(&crate::loopnest::dims::STATIONARIES),
+                };
+                let t = *rng.choose(&tilings);
+                points.push(validate_mapping(&cand, &t, accel, w));
+            }
+        }
+    }
+    let s = summarize(&points);
+    r.csv(
+        "fig13_points.csv",
+        &["name", "da_model", "da_sim", "energy_model", "energy_sim", "latency_model", "latency_sim"],
+        &points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.name.replace(',', ";"),
+                    format!("{}", p.da_model),
+                    format!("{}", p.da_sim),
+                    format!("{}", p.energy_model),
+                    format!("{}", p.energy_sim),
+                    format!("{}", p.latency_model),
+                    format!("{}", p.latency_sim),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+    r.table(
+        &["metric", "R²", "mean err", "max err"],
+        &[
+            vec!["energy".into(), format!("{:.6}", s.r2_energy), format!("{:.4}%", s.mean_err_energy * 100.0), format!("{:.4}%", s.max_err_energy * 100.0)],
+            vec!["latency".into(), format!("{:.6}", s.r2_latency), format!("{:.4}%", s.mean_err_latency * 100.0), format!("{:.4}%", s.max_err_latency * 100.0)],
+            vec!["dram access".into(), format!("{:.6}", s.r2_da), format!("{:.4}%", s.mean_err_da * 100.0), format!("{:.4}%", s.max_err_da * 100.0)],
+        ],
+    );
+    r.line(&format!("*n = {} mappings; paper: R² > 0.9999, max err 0.5% (energy), 0.05% (latency)*", s.n));
+    Ok(())
+}
+
+fn dummy_cand(order: &LoopOrder) -> Candidate {
+    Candidate {
+        order: *order,
+        levels: BufferingLevels::streaming(),
+        sm1: crate::loopnest::Stationary::Weight,
+        sm2: crate::loopnest::Stationary::Weight,
+    }
+}
+
+// --------------------------------------------------------------- Fig. 14
+
+/// DA / BS estimation vs the executed dataflow for *fusion* mappings on
+/// two workloads (paper: vs Orojenesis, mean err 0.33%/0.25%).
+pub fn fig14(r: &mut Report) -> Result<()> {
+    r.section("Fig. 14 — fused DA & buffer-size estimation vs executed dataflow");
+    let accel = presets::accel1();
+    let loads = [
+        Workload::gemm_pair("ffn-s", 256, 128, 512, 128),
+        Workload::attention("attn-s", 256, 64, 4),
+    ];
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(0xF16_14);
+    let orders = LoopOrder::all();
+    for w in &loads {
+        let tilings: Vec<Tiling> = enumerate_tilings(&w.gemm, None)
+            .into_iter()
+            .filter(|t| crate::sim::Simulator::stage_count(&dummy_cand(&orders[0]), t) < 3e4)
+            .collect();
+        let mut pts = Vec::new();
+        for _ in 0..200 {
+            let cand = Candidate {
+                order: *rng.choose(&orders),
+                levels: BufferingLevels {
+                    a: rng.below(5) as u8,
+                    b: rng.below(5) as u8,
+                    d: rng.below(5) as u8,
+                    e: rng.below(5) as u8,
+                },
+                sm1: crate::loopnest::Stationary::Weight,
+                sm2: crate::loopnest::Stationary::Weight,
+            };
+            pts.push(validate_mapping(&cand, rng.choose(&tilings), &accel, w));
+        }
+        let s = summarize(&pts);
+        rows.push(vec![
+            w.name.clone(),
+            format!("{:.4}%", s.mean_err_da * 100.0),
+            format!("{:.4}%", s.max_err_da * 100.0),
+            format!("{:.4}%", s.mean_err_bs * 100.0),
+            format!("{:.4}%", s.max_err_bs * 100.0),
+        ]);
+    }
+    r.table(&["workload", "DA mean err", "DA max err", "BS mean err", "BS max err"], &rows);
+    r.line("*paper: mean 0.33%/0.25%, max 0.78%/0.68% on its two workloads*");
+    Ok(())
+}
+
+// --------------------------------------------------------- Figs. 15 & 16
+
+fn front_min_at(front: &[(f64, f64)], budget: f64) -> Option<f64> {
+    front.iter().filter(|(bs, _)| *bs <= budget).map(|(_, da)| *da).reduce(f64::min)
+}
+
+/// Fused FFN of GPT-3-6.7B: DA vs buffer-size curves for no-fusion,
+/// Orojenesis-style templates, and MMEE (paper Fig. 15).
+pub fn fig15(r: &mut Report) -> Result<()> {
+    r.section("Fig. 15 — fusing the FFN pair of GPT-3-6.7B (DA vs buffer size)");
+    let accel = presets::accel1();
+    let w = presets::gpt3_6_7b_ffn(2048);
+    da_bs_comparison(r, &accel, &w, "fig15", &[(1 << 20, "1MB"), (30 << 20, "30MB")])
+}
+
+/// Fused attention of GPT-3-6.7B with the O / O+BM / O+BM+Re split
+/// (paper Fig. 16, buffers 64 KB – 4 MB).
+pub fn fig16(r: &mut Report) -> Result<()> {
+    r.section("Fig. 16 — fusing attention of GPT-3-6.7B (DA vs buffer size)");
+    let accel = presets::accel1();
+    let w = presets::gpt3_6_7b_attention(2048);
+    da_bs_comparison(
+        r,
+        &accel,
+        &w,
+        "fig16",
+        &[(64 << 10, "64KB"), (1 << 20, "1MB"), (4 << 20, "4MB")],
+    )
+}
+
+fn da_bs_comparison(
+    r: &mut Report,
+    accel: &Accelerator,
+    w: &Workload,
+    stem: &str,
+    budgets: &[(usize, &str)],
+) -> Result<()> {
+    let engine = MmeeEngine::native();
+    let mmee: Vec<(f64, f64)> =
+        engine.pareto_da_bs(w, accel).points().iter().map(|p| (p.x, p.y)).collect();
+    let oro = Orojenesis(Variant::Base).da_bs_front(w, accel);
+    let obm = Orojenesis(Variant::BufferManagement).da_bs_front(w, accel);
+    let nof = NoFusion::da_bs_front(w, accel);
+
+    let mut rows = Vec::new();
+    for &(series, name) in
+        [(&mmee, "mmee"), (&oro, "orojenesis"), (&obm, "o+bm"), (&nof, "no-fusion")].iter()
+    {
+        for (bs, da) in series.iter() {
+            rows.push(vec![name.to_string(), format!("{bs}"), format!("{da}")]);
+        }
+    }
+    r.csv(&format!("{stem}_fronts.csv"), &["mapper", "buffer_words", "dram_words"], &rows)?;
+
+    let mut out = Vec::new();
+    for &(bytes, label) in budgets {
+        let budget = (bytes / accel.bytes_per_word) as f64;
+        let m = front_min_at(&mmee, budget);
+        let o = front_min_at(&oro, budget);
+        let ob = front_min_at(&obm, budget);
+        let n = front_min_at(&nof, budget);
+        out.push(vec![
+            label.to_string(),
+            m.map(|v| super::fmt_si(v)).unwrap_or("-".into()),
+            o.map(|v| super::fmt_si(v)).unwrap_or("-".into()),
+            ob.map(|v| super::fmt_si(v)).unwrap_or("-".into()),
+            n.map(|v| super::fmt_si(v)).unwrap_or("-".into()),
+            match (m, n) {
+                (Some(m), Some(n)) => format!("{:.2}x", n / m),
+                _ => "-".into(),
+            },
+            match (m, o) {
+                (Some(m), Some(o)) => format!("{:.2}x", o / m),
+                _ => "-".into(),
+            },
+        ]);
+    }
+    r.table(
+        &["buffer", "MMEE DA", "Oro DA", "O+BM DA", "NoFusion DA", "vs NoFusion", "vs Oro"],
+        &out,
+    );
+    Ok(())
+}
+
+// --------------------------------------------------------- Figs. 17 & 18
+
+/// Energy + latency with breakdowns for FLAT / Chimera / TileFlow /
+/// MMEE(E-driven) / MMEE(L-driven) over the 3×3 model grid.
+pub fn fig17_18(r: &mut Report, accel: &Accelerator, stem: &str) -> Result<()> {
+    r.section(&format!(
+        "Fig. {} — energy & latency on {}",
+        if stem == "fig17" { "17" } else { "18" },
+        accel.name
+    ));
+    let engine = MmeeEngine::native();
+    let grid = presets::main_grid();
+    let mut csv_rows = Vec::new();
+    let mut md_rows = Vec::new();
+    let mut e_ratios = Vec::new();
+    let mut l_ratios = Vec::new();
+    for w in &grid {
+        let flat = Flat.optimize(w, accel, Objective::Energy);
+        let chim = Chimera.optimize(w, accel, Objective::Energy);
+        let tf = TileFlow::default().optimize(w, accel, Objective::Energy);
+        let me = engine.optimize(w, accel, Objective::Energy);
+        let ml = engine.optimize(w, accel, Objective::Latency);
+        for s in [&flat, &chim, &tf, &me, &ml] {
+            let tag = if std::ptr::eq(s, &me) {
+                "mmee-e"
+            } else if std::ptr::eq(s, &ml) {
+                "mmee-l"
+            } else if std::ptr::eq(s, &flat) {
+                "flat"
+            } else if std::ptr::eq(s, &chim) {
+                "chimera"
+            } else {
+                "tileflow"
+            };
+            csv_rows.push(vec![
+                w.name.clone(),
+                tag.to_string(),
+                format!("{}", s.metrics.energy),
+                format!("{}", s.metrics.latency),
+                format!("{}", s.metrics.e_dram),
+                format!("{}", s.metrics.e_sram),
+                format!("{}", s.metrics.e_mac),
+                format!("{}", s.metrics.e_sfu),
+                format!("{}", s.metrics.lat_comp),
+                format!("{}", s.metrics.lat_dram),
+            ]);
+        }
+        e_ratios.push(me.metrics.energy / tf.metrics.energy);
+        l_ratios.push(ml.metrics.latency / tf.metrics.latency);
+        md_rows.push(vec![
+            w.name.clone(),
+            rel(flat.metrics.energy, me.metrics.energy),
+            rel(chim.metrics.energy, me.metrics.energy),
+            rel(tf.metrics.energy, me.metrics.energy),
+            "1.00".into(),
+            rel(tf.metrics.latency, ml.metrics.latency),
+        ]);
+    }
+    r.csv(
+        &format!("{stem}_breakdown.csv"),
+        &["workload", "mapper", "energy_j", "latency_s", "e_dram", "e_sram", "e_mac", "e_sfu", "lat_comp", "lat_dram"],
+        &csv_rows,
+    )?;
+    r.table(
+        &["workload", "FLAT E/", "Chimera E/", "TileFlow E/", "MMEE E", "TileFlow L/ (L-driven)"],
+        &md_rows,
+    );
+    let e_red = (1.0 - stats::geomean(&e_ratios)) * 100.0;
+    let l_red = (1.0 - stats::geomean(&l_ratios)) * 100.0;
+    r.line(&format!(
+        "**MMEE vs TileFlow: {:.0}% energy reduction, {:.0}% latency reduction (geomean)** — paper: 48–50% / 31–69%",
+        e_red, l_red
+    ));
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 19
+
+/// Compute utilisation of TileFlow vs MMEE winners (paper Fig. 19).
+pub fn fig19(r: &mut Report) -> Result<()> {
+    r.section("Fig. 19 — compute utilisation (latency-driven)");
+    let engine = MmeeEngine::native();
+    let mut rows = Vec::new();
+    for accel in [presets::accel1(), presets::accel2()] {
+        for w in presets::main_grid() {
+            let tf = TileFlow::default().optimize(&w, &accel, Objective::Latency);
+            let me = engine.optimize(&w, &accel, Objective::Latency);
+            rows.push(vec![
+                accel.name.clone(),
+                w.name.clone(),
+                format!("{:.3}", util_of(&tf, &accel, &w)),
+                format!("{:.3}", util_of(&me, &accel, &w)),
+            ]);
+        }
+    }
+    r.csv("fig19_utilization.csv", &["accel", "workload", "tileflow", "mmee"], &rows)?;
+    r.table(&["accel", "workload", "TileFlow util", "MMEE util"], &rows);
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 20
+
+/// Energy–latency Pareto fronts with recomputation split (paper Fig. 20).
+pub fn fig20(r: &mut Report) -> Result<()> {
+    r.section("Fig. 20 — energy-latency trade-off on Accel. 2 (seq 4096)");
+    let engine = MmeeEngine::native();
+    let accel = presets::accel2();
+    let mut rows = Vec::new();
+    for w in [presets::bert_base(4096), presets::palm_62b(4096)] {
+        let (front, stats) = engine.pareto_energy_latency(&w, &accel);
+        let n_rec = front
+            .points()
+            .iter()
+            .filter(|p| MmeeEngine::candidates()[p.candidate].recompute())
+            .count();
+        r.line(&format!(
+            "{}: {} Pareto points out of {} mappings evaluated ({} recompute-enabled)",
+            w.name,
+            front.len(),
+            super::fmt_si(stats.mappings),
+            n_rec
+        ));
+        for p in front.points() {
+            rows.push(vec![
+                w.name.clone(),
+                format!("{}", p.x),
+                format!("{}", p.y),
+                format!("{}", MmeeEngine::candidates()[p.candidate].recompute()),
+            ]);
+        }
+    }
+    r.csv("fig20_pareto.csv", &["workload", "energy_j", "latency_s", "recompute"], &rows)?;
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 21
+
+/// Decision space vs search efficiency (TF / TF+ / FLAT / MMEE) at base
+/// sequence lengths on Accel. 2 (paper Fig. 21).
+pub fn fig21(r: &mut Report) -> Result<()> {
+    r.section("Fig. 21 — sources of improvement (Accel. 2, base lengths)");
+    let engine = MmeeEngine::native();
+    let accel = presets::accel2();
+    let loads = [presets::bert_base(512), presets::gpt3_13b(2048), presets::palm_62b(2048)];
+    for obj in [Objective::Energy, Objective::Latency] {
+        let mut rows = Vec::new();
+        for w in &loads {
+            let tf = TileFlow::default().optimize(w, &accel, obj);
+            let tfp = TfPlus.optimize(w, &accel, obj);
+            let fl = Flat.optimize(w, &accel, obj);
+            let me = engine.optimize(w, &accel, obj);
+            let base = obj.score(me.metrics.energy, me.metrics.latency);
+            let pick = |s: &Solution| obj.score(s.metrics.energy, s.metrics.latency);
+            rows.push(vec![
+                w.name.clone(),
+                rel(pick(&tf), base),
+                rel(pick(&tfp), base),
+                rel(pick(&fl), base),
+                "1.00".into(),
+            ]);
+        }
+        r.line(&format!("*{}-driven (relative to MMEE = 1.0)*", obj.name()));
+        r.table(&["workload", "TF", "TF+", "FLAT", "MMEE"], &rows);
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 22
+
+/// Runtime scaling with sequence length (log-log power fit, paper
+/// Fig. 22: sub-linear, < 25 s at 128K).
+pub fn fig22(r: &mut Report, max_seq: usize) -> Result<()> {
+    r.section("Fig. 22 — MMEE runtime vs sequence length (Accel. 1)");
+    let engine = MmeeEngine::native();
+    let accel = presets::accel1();
+    let mut rows = Vec::new();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut seq = 1024usize;
+    while seq <= max_seq {
+        let w = presets::gpt3_13b(seq);
+        let st = engine.stats_only(&w, &accel);
+        rows.push(vec![
+            format!("{seq}"),
+            format!("{:.3}", st.elapsed.as_secs_f64()),
+            format!("{}", st.mappings),
+            format!("{}", st.tilings),
+        ]);
+        xs.push(seq as f64);
+        ys.push(st.elapsed.as_secs_f64());
+        seq *= 2;
+    }
+    let (a, b) = stats::power_law_fit(&xs, &ys);
+    r.csv("fig22_runtime.csv", &["seq", "seconds", "mappings", "tilings"], &rows)?;
+    r.table(&["seq", "seconds", "mappings", "tilings"], &rows);
+    r.line(&format!(
+        "power fit: runtime ≈ {:.3e} · n^{:.2} (paper: ∝ n^0.4 average; < 25 s at 128K)",
+        a, b
+    ));
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 23
+
+/// Long-sequence sensitivity, GPT-3-13B energy-driven on Accel. 1
+/// (paper Fig. 23: 8K → 128K, TileFlow limited to 32K).
+pub fn fig23(r: &mut Report, max_seq: usize) -> Result<()> {
+    r.section("Fig. 23 — scaling sequence length (GPT-3-13B, Accel. 1, energy-driven)");
+    let engine = MmeeEngine::native();
+    let accel = presets::accel1();
+    let mut rows = Vec::new();
+    let mut seq = 8192usize;
+    while seq <= max_seq {
+        let w = presets::gpt3_13b(seq);
+        let me = engine.optimize(&w, &accel, Objective::Energy);
+        // Paper note: TileFlow's released code crashes past 32K; we keep
+        // the comparison to 32K for fidelity of the figure.
+        let tf_cell = if seq <= 32768 {
+            let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+            format!("{:.2}", tf.metrics.energy * 1e3)
+        } else {
+            "-".into()
+        };
+        rows.push(vec![
+            format!("{seq}"),
+            format!("{:.2}", me.metrics.energy * 1e3),
+            format!("{:.2}", me.metrics.latency * 1e3),
+            format!("{:.2}", me.metrics.e_dram * 1e3),
+            format!("{:.2}", me.metrics.e_sram * 1e3),
+            format!("{:.2}", (me.metrics.e_mac + me.metrics.e_sfu) * 1e3),
+            tf_cell,
+        ]);
+        seq *= 2;
+    }
+    r.csv(
+        "fig23_seqscale.csv",
+        &["seq", "mmee_energy_mj", "mmee_latency_ms", "e_dram_mj", "e_sram_mj", "e_comp_mj", "tileflow_energy_mj"],
+        &rows,
+    )?;
+    r.table(
+        &["seq", "MMEE E (mJ)", "MMEE L (ms)", "DRAM", "SRAM", "comp", "TileFlow E (mJ)"],
+        &rows,
+    );
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 24
+
+/// Decision-element ablation: TF → +tiling → +buffer management → MMEE
+/// (paper Fig. 24, Accel. 1, energy-driven).
+pub fn fig24(r: &mut Report) -> Result<()> {
+    r.section("Fig. 24 — decision-element analysis (Accel. 1, energy-driven)");
+    let engine = MmeeEngine::native();
+    let accel = presets::accel1();
+    let mut rows = Vec::new();
+    for w in [presets::bert_base(512), presets::gpt3_13b(2048), presets::palm_62b(2048)] {
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+        let tft = TfPlusT.optimize(&w, &accel, Objective::Energy);
+        let tftbm = TfPlusTBm.optimize(&w, &accel, Objective::Energy);
+        let me = engine.optimize(&w, &accel, Objective::Energy);
+        rows.push(vec![
+            w.name.clone(),
+            rel(tf.metrics.energy, me.metrics.energy),
+            rel(tft.metrics.energy, me.metrics.energy),
+            rel(tftbm.metrics.energy, me.metrics.energy),
+            "1.00".into(),
+            rel(tf.metrics.latency, me.metrics.latency),
+            rel(tft.metrics.latency, me.metrics.latency),
+        ]);
+    }
+    r.csv(
+        "fig24_ablation.csv",
+        &["workload", "tf_e", "tf+t_e", "tf+t+bm_e", "mmee_e", "tf_l", "tf+t_l"],
+        &rows,
+    )?;
+    r.table(
+        &["workload", "TF E/", "TF+T E/", "TF+T+BM E/", "MMEE", "TF L/", "TF+T L/"],
+        &rows,
+    );
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 25
+
+/// Recomputation sensitivity: Chimera / TileFlow / Orojenesis / MMEE*
+/// (no recompute) / MMEE on PaLM-62B, latency-driven (paper Fig. 25).
+pub fn fig25(r: &mut Report) -> Result<()> {
+    r.section("Fig. 25 — recomputation sensitivity (PaLM-62B, latency-driven)");
+    let engine = MmeeEngine::native();
+    let mut rows = Vec::new();
+    for accel in [presets::accel1(), presets::accel2()] {
+        for seq in [2048usize, 4096] {
+            let w = presets::palm_62b(seq);
+            let ch = Chimera.optimize(&w, &accel, Objective::Latency);
+            let tf = TileFlow::default().optimize(&w, &accel, Objective::Latency);
+            let mstar = Orojenesis(Variant::BufferManagement).optimize(&w, &accel, Objective::Latency);
+            let me = engine.optimize(&w, &accel, Objective::Latency);
+            rows.push(vec![
+                accel.name.clone(),
+                format!("{seq}"),
+                format!("{:.2}/{:.2}/{}", ch.metrics.energy * 1e3, ch.metrics.latency * 1e3, super::fmt_si(ch.metrics.da)),
+                format!("{:.2}/{:.2}/{}", tf.metrics.energy * 1e3, tf.metrics.latency * 1e3, super::fmt_si(tf.metrics.da)),
+                format!("{:.2}/{:.2}/{}", mstar.metrics.energy * 1e3, mstar.metrics.latency * 1e3, super::fmt_si(mstar.metrics.da)),
+                format!("{:.2}/{:.2}/{}", me.metrics.energy * 1e3, me.metrics.latency * 1e3, super::fmt_si(me.metrics.da)),
+                format!("{}", me.candidate.recompute()),
+            ]);
+        }
+    }
+    r.table(
+        &["accel", "seq", "Chimera E/L/DA", "TileFlow E/L/DA", "MMEE* E/L/DA", "MMEE E/L/DA", "MMEE recomputes"],
+        &rows,
+    );
+    r.line("*paper: on Accel. 2, recomputation reduces latency and DA by 1.30× vs MMEE\\**");
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 26
+
+/// Coral-NPU case study, MMEE* vs MMEE with EDP (paper Fig. 26).
+pub fn fig26(r: &mut Report) -> Result<()> {
+    r.section("Fig. 26 — industrial edge accelerator case study (Coral, BERT-Base 512)");
+    let engine = MmeeEngine::native();
+    let accel = presets::coral();
+    let w = presets::bert_base(512);
+    let mstar = Orojenesis(Variant::BufferManagement).optimize(&w, &accel, Objective::Edp);
+    let me = engine.optimize(&w, &accel, Objective::Edp);
+    let rows = vec![
+        vec![
+            "mmee* (no recompute)".to_string(),
+            format!("{:.3}", mstar.metrics.energy * 1e3),
+            format!("{:.3}", mstar.metrics.latency * 1e3),
+            format!("{:.4}", mstar.metrics.edp() * 1e6),
+            super::fmt_si(mstar.metrics.da),
+        ],
+        vec![
+            "mmee".to_string(),
+            format!("{:.3}", me.metrics.energy * 1e3),
+            format!("{:.3}", me.metrics.latency * 1e3),
+            format!("{:.4}", me.metrics.edp() * 1e6),
+            super::fmt_si(me.metrics.da),
+        ],
+    ];
+    r.table(&["mapper", "energy (mJ)", "latency (ms)", "EDP (mJ·ms)", "DA (words)"], &rows);
+    r.line(&format!(
+        "EDP ratio MMEE*/MMEE = {:.2} (paper: recomputation yields 1.31× EDP reduction when memory-bound)",
+        mstar.metrics.edp() / me.metrics.edp()
+    ));
+    Ok(())
+}
+
+// --------------------------------------------------------------- Fig. 27
+
+/// Reconfigurable PE arrays under EDP-driven optimization (paper Fig. 27).
+pub fn fig27(r: &mut Report) -> Result<()> {
+    r.section("Fig. 27 — reconfigurable PE arrays (EDP-driven, Accel. 1 base)");
+    use crate::encode::QueryMatrix;
+    let engine = MmeeEngine::native();
+    let shapes = [(8usize, 128usize), (16, 64), (32, 32), (64, 16), (128, 8)];
+    let ws_query = {
+        let cands: Vec<Candidate> = MmeeEngine::candidates()
+            .iter()
+            .filter(|c| {
+                c.sm1 == crate::loopnest::Stationary::Weight
+                    && c.sm2 == crate::loopnest::Stationary::Weight
+            })
+            .copied()
+            .collect();
+        QueryMatrix::build(cands)
+    };
+    let mut rows = Vec::new();
+    for w in [presets::bert_base(512), presets::gpt3_13b(2048), presets::palm_62b(2048)] {
+        let base = presets::accel1();
+        // Fixed: 32×32 weight-stationary.
+        let fixed = engine
+            .optimize_with_candidates(&w, &base, Objective::Edp, &ws_query)
+            .metrics
+            .edp();
+        // Ideal Flow: 32×32, stationary modes free.
+        let flow = engine.optimize(&w, &base, Objective::Edp).metrics.edp();
+        // Ideal Shape: WS, best logical shape.
+        let shape = shapes
+            .iter()
+            .map(|&(pr, pc)| {
+                let a = base.with_pe_shape(pr, pc);
+                engine.optimize_with_candidates(&w, &a, Objective::Edp, &ws_query).metrics.edp()
+            })
+            .fold(f64::INFINITY, f64::min);
+        // Ideal Shape & Dataflow.
+        let both = shapes
+            .iter()
+            .map(|&(pr, pc)| {
+                let a = base.with_pe_shape(pr, pc);
+                engine.optimize(&w, &a, Objective::Edp).metrics.edp()
+            })
+            .fold(f64::INFINITY, f64::min);
+        rows.push(vec![
+            w.name.clone(),
+            "1.00".into(),
+            rel(flow, fixed),
+            rel(shape, fixed),
+            rel(both, fixed),
+        ]);
+    }
+    r.csv("fig27_reconfig.csv", &["workload", "fixed", "ideal_flow", "ideal_shape", "ideal_both"], &rows)?;
+    r.table(&["workload", "Fixed", "Ideal Flow", "Ideal Shape", "Ideal Shape&Flow"], &rows);
+    r.line("*paper: array reshaping provides greater benefit than stationary-mode flexibility*");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! The paper-reproduction harness: one function per evaluation table and
+//! figure (DESIGN.md §6 experiment index). Each emits a CSV under the
+//! results directory plus a human-readable markdown section, and returns
+//! its headline numbers for EXPERIMENTS.md.
+
+pub mod figures;
+pub mod tables;
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+/// Accumulates CSVs + a markdown summary for one harness run.
+pub struct Report {
+    pub out_dir: PathBuf,
+    pub md: String,
+}
+
+impl Report {
+    pub fn new(out_dir: impl Into<PathBuf>) -> Result<Report> {
+        let out_dir = out_dir.into();
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Report { out_dir, md: String::new() })
+    }
+
+    pub fn section(&mut self, title: &str) {
+        let _ = writeln!(self.md, "\n## {title}\n");
+        println!("\n== {title} ==");
+    }
+
+    pub fn line(&mut self, text: &str) {
+        let _ = writeln!(self.md, "{text}");
+        println!("{text}");
+    }
+
+    /// Write a CSV file: header row + data rows.
+    pub fn csv(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+        let mut text = header.join(",");
+        text.push('\n');
+        for row in rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        std::fs::write(self.out_dir.join(name), text)?;
+        Ok(())
+    }
+
+    /// Markdown table helper.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let _ = writeln!(self.md, "| {} |", header.join(" | "));
+        let _ = writeln!(self.md, "|{}|", vec!["---"; header.len()].join("|"));
+        for row in rows {
+            let _ = writeln!(self.md, "| {} |", row.join(" | "));
+        }
+        // Console mirror (compact).
+        println!("{}", header.join("\t"));
+        for row in rows {
+            println!("{}", row.join("\t"));
+        }
+    }
+
+    pub fn finish(&self, name: &str) -> Result<()> {
+        std::fs::write(self.out_dir.join(name), &self.md)?;
+        Ok(())
+    }
+}
+
+/// Pretty engineering formats.
+pub fn fmt_si(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.3}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.3}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.3}K", v / 1e3)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+pub fn fmt_mj_ms(energy_j: f64, latency_s: f64) -> String {
+    format!("{:.2}/{:.3}", energy_j * 1e3, latency_s * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_writes_files() {
+        let dir = std::env::temp_dir().join("mmee_report_test");
+        let mut r = Report::new(&dir).unwrap();
+        r.section("Test");
+        r.table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        r.csv("t.csv", &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        r.finish("summary.md").unwrap();
+        assert!(dir.join("t.csv").exists());
+        let md = std::fs::read_to_string(dir.join("summary.md")).unwrap();
+        assert!(md.contains("| a | b |"));
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_si(1.5e6), "1.500M");
+        assert_eq!(fmt_mj_ms(1.11e-3, 1.0e-4), "1.11/0.100");
+    }
+}

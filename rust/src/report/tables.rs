@@ -1,0 +1,221 @@
+//! Table regeneration (paper Tables I–IV).
+
+use anyhow::Result;
+
+use super::{fmt_mj_ms, Report};
+use crate::baselines::{nofusion::NoFusion, tileflow::TileFlow, Mapper};
+use crate::config::presets;
+use crate::encode::QueryMatrix;
+use crate::loopnest::{BufferingLevels, Candidate, LoopOrder, Stationary};
+use crate::search::{MmeeEngine, Objective};
+use crate::tiling::Tiling;
+
+/// Table I: absolute energy/latency (mJ/ms) of MMEE in E- and L-driven
+/// modes on both accelerators.
+pub fn table1(r: &mut Report) -> Result<()> {
+    r.section("Table I — absolute MMEE energy/latency (mJ/ms)");
+    let engine = MmeeEngine::native();
+    let mut rows = Vec::new();
+    for w in presets::main_grid() {
+        let mut row = vec![w.name.clone()];
+        for accel in [presets::accel1(), presets::accel2()] {
+            for obj in [Objective::Energy, Objective::Latency] {
+                let s = engine.optimize(&w, &accel, obj);
+                row.push(fmt_mj_ms(s.metrics.energy, s.metrics.latency));
+            }
+        }
+        rows.push(row);
+    }
+    r.csv(
+        "table1_absolute.csv",
+        &["workload", "a1_e", "a1_l", "a2_e", "a2_l"],
+        &rows,
+    )?;
+    r.table(
+        &["workload", "Accel1 E-driven", "Accel1 L-driven", "Accel2 E-driven", "Accel2 L-driven"],
+        &rows,
+    );
+    r.line("*paper Table I reference points: BERT-512 Accel1 1.11/0.10, Accel2 0.92/0.03*");
+    Ok(())
+}
+
+/// Table II: GPU deployment — substituted with the A100-proxy accelerator
+/// config (DESIGN.md §7.3). FA2 is the published fixed FlashAttention-2
+/// tiling (Br=128, Bc=64); "Auto" additionally frees the logical array
+/// shape (the stand-in for hardware-specific autotuning).
+pub fn table2(r: &mut Report) -> Result<()> {
+    r.section("Table II — GPU-proxy deployment latency (ms)");
+    let engine = MmeeEngine::native();
+    let gpu = presets::gpu_proxy();
+    let mut rows = Vec::new();
+    for w in presets::main_grid() {
+        let tf = TileFlow::default().optimize(&w, &gpu, Objective::Latency);
+        let me = engine.optimize(&w, &gpu, Objective::Latency);
+        // FA2 fixed mapping: flash order, Br=128 / Bc=64 tiles, O rows
+        // on-chip, no retention of K/V.
+        let g = w.gemm;
+        let fa2_cell = if g.i % 128 == 0 && g.l % 64 == 0 {
+            let cand = Candidate {
+                order: LoopOrder::flash(),
+                levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
+                sm1: Stationary::Weight,
+                sm2: Stationary::Weight,
+            };
+            let tiling = Tiling {
+                xd: [g.i / 128, 1, g.l / 64, 1],
+                xg: [128, g.k, 64, g.j],
+            };
+            let slots = crate::model::derive_slots(&cand);
+            let (_, m) = crate::model::analytic::evaluate(&slots, &tiling, &gpu, &w);
+            if m.feasible {
+                // The paper reports OOM for PaLM-62B (d_head 256) FA2.
+                if g.k >= 256 {
+                    format!("{:.2} (paper: OOM)", m.latency * 1e3)
+                } else {
+                    format!("{:.2}", m.latency * 1e3)
+                }
+            } else {
+                "OOM".to_string()
+            }
+        } else {
+            "-".to_string()
+        };
+        // Auto: free the logical array shape as well.
+        let auto = [(8usize, 128usize), (16, 64), (32, 32), (64, 16), (128, 8)]
+            .iter()
+            .map(|&(pr, pc)| {
+                engine
+                    .optimize(&w, &gpu.with_pe_shape(pr, pc), Objective::Latency)
+                    .metrics
+                    .latency
+            })
+            .fold(f64::INFINITY, f64::min);
+        rows.push(vec![
+            w.name.clone(),
+            format!("{:.2}", tf.metrics.latency * 1e3),
+            fa2_cell,
+            format!("{:.2}", auto * 1e3),
+            format!("{:.2}", me.metrics.latency * 1e3),
+        ]);
+    }
+    r.csv("table2_gpu.csv", &["workload", "tileflow_ms", "fa2_ms", "auto_ms", "mmee_ms"], &rows)?;
+    r.table(&["workload", "TileFlow", "FA2 (fixed)", "Auto", "MMEE"], &rows);
+    r.line("*paper: MMEE ≈ 2.56× faster than TileFlow, 1.18× over FA2; Auto ≤ MMEE*");
+    Ok(())
+}
+
+/// Table III: three hardware designs, TileFlow vs MMEE (normalized E/L).
+pub fn table3(r: &mut Report) -> Result<()> {
+    r.section("Table III — across hardware designs (BERT-Base 512, normalized to MMEE)");
+    let engine = MmeeEngine::native();
+    let w = presets::bert_base(512);
+    let mut rows = Vec::new();
+    for accel in [presets::coral(), presets::design89(), presets::set_accel()] {
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+        let me = engine.optimize(&w, &accel, Objective::Energy);
+        rows.push(vec![
+            accel.name.clone(),
+            format!(
+                "{:.2}/{:.2}",
+                tf.metrics.energy / me.metrics.energy,
+                tf.metrics.latency / me.metrics.latency
+            ),
+            "1/1".to_string(),
+        ]);
+    }
+    r.csv("table3_hw.csv", &["hw", "tileflow_rel", "mmee_rel"], &rows)?;
+    r.table(&["hw design", "TileFlow (E/L)", "MMEE (E/L)"], &rows);
+    r.line("*paper: 1.95/1.59 (Coral), 2.24/1.18 (design [89]), 4.17/2.56 (SET)*");
+    Ok(())
+}
+
+/// Table IV: conv chains (im2col) and two-GEMM workloads on Accel. 1;
+/// baseline = better of TileFlow and no-fusion intra-op.
+pub fn table4(r: &mut Report) -> Result<()> {
+    r.section("Table IV — conv chains and two-GEMM workloads (Accel. 1)");
+    let engine = MmeeEngine::native();
+    let accel = presets::accel1();
+    let mut rows = Vec::new();
+    for w in [presets::cc1(), presets::cc2(), presets::mlp_chimera(), presets::ffn_bert()] {
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+        let nf = NoFusion.optimize(&w, &accel, Objective::Energy);
+        let me = engine.optimize(&w, &accel, Objective::Energy);
+        let base_e = tf.metrics.energy.min(nf.metrics.energy);
+        let base_l = tf.metrics.latency.min(nf.metrics.latency);
+        rows.push(vec![
+            w.name.clone(),
+            format!("{:.2}/{:.2}", base_e / me.metrics.energy, base_l / me.metrics.latency),
+            "1/1".to_string(),
+        ]);
+    }
+    r.csv("table4_workloads.csv", &["workload", "baseline_rel", "mmee_rel"], &rows)?;
+    r.table(&["workload", "baseline (E/L, rel)", "MMEE"], &rows);
+    r.line("*paper: CC1 2.34/1.16, CC2 1.20/1.50, MLP 1.93/1.00, FFN 1.08/1.14*");
+    Ok(())
+}
+
+/// §VII-I.4 pruning sensitivity: repeat an optimization with the
+/// unpruned (deduplicated) table and verify identical optima; report the
+/// row-count and runtime ratio.
+pub fn pruning_check(r: &mut Report) -> Result<()> {
+    r.section("Pruning sensitivity (§VII-I.4) — optimality preserved");
+    use crate::loopnest::dims::STATIONARIES;
+    use crate::symbolic::prune::{deduped_unpruned, pruned_table};
+    let engine = MmeeEngine::native();
+    let accel = presets::accel1();
+    let w = presets::bert_base(512);
+
+    let mut unpruned_cands = Vec::new();
+    for rec in [false, true] {
+        for e in deduped_unpruned(rec) {
+            for sm1 in STATIONARIES {
+                for sm2 in STATIONARIES {
+                    unpruned_cands.push(Candidate {
+                        order: e.order,
+                        levels: e.levels,
+                        sm1,
+                        sm2,
+                    });
+                }
+            }
+        }
+    }
+    let q_unpruned = QueryMatrix::build(unpruned_cands);
+
+    let t0 = std::time::Instant::now();
+    let s_pruned = engine.optimize(&w, &accel, Objective::Energy);
+    let t_pruned = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let s_full = engine.optimize_with_candidates(&w, &accel, Objective::Energy, &q_unpruned);
+    let t_full = t1.elapsed();
+
+    let pt = pruned_table();
+    r.table(
+        &["", "rows (cand)", "runtime", "best energy (mJ)"],
+        &[
+            vec![
+                "pruned".into(),
+                format!("{}", MmeeEngine::query().num_candidates()),
+                format!("{:.2?}", t_pruned),
+                format!("{:.4}", s_pruned.metrics.energy * 1e3),
+            ],
+            vec![
+                "unpruned".into(),
+                format!("{}", q_unpruned.num_candidates()),
+                format!("{:.2?}", t_full),
+                format!("{:.4}", s_full.metrics.energy * 1e3),
+            ],
+        ],
+    );
+    let same = (s_pruned.metrics.energy - s_full.metrics.energy).abs()
+        <= 1e-9 * s_full.metrics.energy;
+    r.line(&format!(
+        "optimality preserved: **{}**; speedup {:.1}×; offline reduction {} → {} (order,level) rows/class",
+        same,
+        t_full.as_secs_f64() / t_pruned.as_secs_f64().max(1e-9),
+        pt.distinct_per_class[0].max(pt.distinct_per_class[1]),
+        pt.classes[0].len().max(pt.classes[1].len()),
+    ));
+    anyhow::ensure!(same, "pruning changed the optimum!");
+    Ok(())
+}

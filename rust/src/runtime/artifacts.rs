@@ -1,0 +1,159 @@
+//! Artifact discovery + manifest validation.
+//!
+//! `manifest.json` (written by `python/compile/aot.py`) records the slot
+//! layout the artifacts were compiled against; we refuse to run if it
+//! disagrees with this crate's encoder constants — a drifted layout would
+//! silently mis-evaluate every mapping.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::terms::{seg, NUM_FEATURES, NUM_SLOTS};
+use crate::util::json::Json;
+
+pub const LAYOUT_VERSION: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kind: String,
+    pub bucket: String,
+    pub file: PathBuf,
+    pub c: usize,
+    pub t: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Default search order: `$MMEE_ARTIFACTS`, `./artifacts`,
+    /// `<crate root>/artifacts`.
+    pub fn discover() -> Result<Manifest> {
+        let mut cands: Vec<PathBuf> = Vec::new();
+        if let Ok(p) = std::env::var("MMEE_ARTIFACTS") {
+            cands.push(PathBuf::from(p));
+        }
+        cands.push(PathBuf::from("artifacts"));
+        cands.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        for dir in cands {
+            if dir.join("manifest.json").exists() {
+                return Self::load(&dir);
+            }
+        }
+        bail!("no artifacts found; run `make artifacts` first")
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        validate_layout(&j)?;
+        let mut entries = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let get = |k: &str| -> Result<&Json> {
+                a.get(k).ok_or_else(|| anyhow!("artifact entry missing '{k}'"))
+            };
+            entries.push(ArtifactEntry {
+                kind: get("kind")?.as_str().unwrap_or_default().to_string(),
+                bucket: get("bucket")?.as_str().unwrap_or_default().to_string(),
+                file: dir.join(get("file")?.as_str().unwrap_or_default()),
+                c: get("C")?.as_usize().unwrap_or(0),
+                t: get("T")?.as_usize().unwrap_or(0),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// The smallest bucket of `kind` whose (C, T) covers the request, or
+    /// the largest bucket otherwise (the caller chunks).
+    pub fn pick(&self, kind: &str, _c: usize, t: usize) -> Option<&ArtifactEntry> {
+        let mut of_kind: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.kind == kind).collect();
+        of_kind.sort_by_key(|e| e.c * e.t);
+        of_kind
+            .iter()
+            .find(|e| e.t >= t)
+            .copied()
+            .or_else(|| of_kind.last().copied())
+    }
+}
+
+fn validate_layout(j: &Json) -> Result<()> {
+    let expect = |cond: bool, what: &str| -> Result<()> {
+        if cond {
+            Ok(())
+        } else {
+            bail!("artifact layout mismatch: {what}; re-run `make artifacts`")
+        }
+    };
+    expect(
+        j.get("layout_version").and_then(Json::as_usize) == Some(LAYOUT_VERSION),
+        "layout_version",
+    )?;
+    expect(j.get("num_slots").and_then(Json::as_usize) == Some(NUM_SLOTS), "num_slots")?;
+    expect(
+        j.get("num_features").and_then(Json::as_usize) == Some(NUM_FEATURES),
+        "num_features",
+    )?;
+    let segs = j.get("segments").ok_or_else(|| anyhow!("manifest missing segments"))?;
+    let check_seg = |name: &str, s: (usize, usize)| -> Result<()> {
+        let got = segs
+            .get(name)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("segment {name} missing"))?;
+        expect(
+            got.len() == 2
+                && got[0].as_usize() == Some(s.0)
+                && got[1].as_usize() == Some(s.1),
+            &format!("segment {name}"),
+        )
+    };
+    check_seg("bs1", seg::BS1)?;
+    check_seg("bs2", seg::BS2)?;
+    check_seg("da", seg::DA)?;
+    check_seg("br", seg::BR)?;
+    check_seg("mac", seg::MAC)?;
+    check_seg("smx", seg::SMX)?;
+    check_seg("cl1", seg::CL1)?;
+    check_seg("cl2", seg::CL2)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_and_validate_if_built() {
+        match Manifest::discover() {
+            Ok(m) => {
+                assert!(m.entries.len() >= 4);
+                assert!(m.pick("full", 1000, 300).is_some());
+                assert!(m.pick("reduce", 1, 1).is_some());
+                let small = m.pick("full", 10, 10).unwrap();
+                assert!(small.t >= 10);
+                for e in &m.entries {
+                    assert!(e.file.exists(), "{} missing", e.file.display());
+                }
+            }
+            Err(e) => {
+                // Artifacts not built in this environment; fine for unit runs.
+                assert!(e.to_string().contains("make artifacts"), "{e}");
+            }
+        }
+    }
+
+    #[test]
+    fn layout_mismatch_is_rejected() {
+        let j = Json::parse(r#"{"layout_version": 1}"#).unwrap();
+        assert!(validate_layout(&j).is_err());
+    }
+}

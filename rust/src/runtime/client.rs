@@ -1,0 +1,208 @@
+//! PJRT client wrapper: compile-once executable cache + typed execution
+//! of the two artifact kinds (full surfaces / objective reduction).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{ArtifactEntry, Manifest};
+use crate::config::HwVector;
+use crate::model::terms::{NUM_FEATURES, NUM_SLOTS};
+
+/// Outputs of the `full` artifact (padded bucket shapes, row-major C×T).
+#[derive(Debug, Clone)]
+pub struct FullOutput {
+    pub c: usize,
+    pub t: usize,
+    pub energy: Vec<f32>,
+    pub latency: Vec<f32>,
+    pub da: Vec<f32>,
+    pub bs: Vec<f32>,
+}
+
+/// Outputs of the `reduce` artifact: flat argmins over the C×T surface.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceOutput {
+    pub min_energy: f32,
+    pub arg_energy: usize,
+    pub min_latency: f32,
+    pub arg_latency: usize,
+    pub min_edp: f32,
+    pub arg_edp: usize,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    execs: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let manifest = Manifest::discover()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { manifest, client, execs: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile (once) and cache the executable for an artifact.
+    /// Executables are leaked intentionally: they live for the process
+    /// lifetime and sidestep non-`Clone` handle plumbing.
+    fn executable(&self, entry: &ArtifactEntry) -> Result<&'static xla::PjRtLoadedExecutable> {
+        let key = entry.file.display().to_string();
+        let mut execs = self.execs.lock().unwrap();
+        if let Some(e) = execs.get(&key) {
+            return Ok(e);
+        }
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| anyhow!("loading {}: {e}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", entry.file.display()))?;
+        let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
+        execs.insert(key, leaked);
+        Ok(leaked)
+    }
+
+    fn make_inputs(
+        entry: &ArtifactEntry,
+        qexp: &[f32],
+        coef: &[f32],
+        lnb: &[f32],
+        hw: &HwVector,
+    ) -> Result<[xla::Literal; 4]> {
+        let (c, t) = (entry.c, entry.t);
+        anyhow::ensure!(qexp.len() == c * NUM_SLOTS * NUM_FEATURES, "qexp shape");
+        anyhow::ensure!(coef.len() == c * NUM_SLOTS, "coef shape");
+        anyhow::ensure!(lnb.len() == NUM_FEATURES * t, "lnb shape");
+        let q = xla::Literal::vec1(qexp)
+            .reshape(&[c as i64, NUM_SLOTS as i64, NUM_FEATURES as i64])
+            .map_err(|e| anyhow!("qexp reshape: {e}"))?;
+        let cf = xla::Literal::vec1(coef)
+            .reshape(&[c as i64, NUM_SLOTS as i64])
+            .map_err(|e| anyhow!("coef reshape: {e}"))?;
+        let b = xla::Literal::vec1(lnb)
+            .reshape(&[NUM_FEATURES as i64, t as i64])
+            .map_err(|e| anyhow!("lnb reshape: {e}"))?;
+        let hwv = xla::Literal::vec1(&hw.to_f32_array()[..]);
+        Ok([q, cf, b, hwv])
+    }
+
+    /// Execute the `full` artifact for one padded bucket.
+    pub fn run_full(
+        &self,
+        entry: &ArtifactEntry,
+        qexp: &[f32],
+        coef: &[f32],
+        lnb: &[f32],
+        hw: &HwVector,
+    ) -> Result<FullOutput> {
+        let exe = self.executable(entry)?;
+        let inputs = Self::make_inputs(entry, qexp, coef, lnb, hw)?;
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute full: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        anyhow::ensure!(tuple.len() == 4, "full artifact returns 4 outputs");
+        let mut vecs = tuple.into_iter().map(|l| {
+            l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+        });
+        Ok(FullOutput {
+            c: entry.c,
+            t: entry.t,
+            energy: vecs.next().unwrap()?,
+            latency: vecs.next().unwrap()?,
+            da: vecs.next().unwrap()?,
+            bs: vecs.next().unwrap()?,
+        })
+    }
+
+    /// Execute the `reduce` artifact for one padded bucket.
+    pub fn run_reduce(
+        &self,
+        entry: &ArtifactEntry,
+        qexp: &[f32],
+        coef: &[f32],
+        lnb: &[f32],
+        hw: &HwVector,
+    ) -> Result<ReduceOutput> {
+        let exe = self.executable(entry)?;
+        let inputs = Self::make_inputs(entry, qexp, coef, lnb, hw)?;
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute reduce: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        anyhow::ensure!(tuple.len() == 6, "reduce artifact returns 6 outputs");
+        let scalar_f = |l: &xla::Literal| -> Result<f32> {
+            Ok(l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0])
+        };
+        let scalar_i = |l: &xla::Literal| -> Result<usize> {
+            Ok(l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?[0] as usize)
+        };
+        Ok(ReduceOutput {
+            min_energy: scalar_f(&tuple[0])?,
+            arg_energy: scalar_i(&tuple[1])?,
+            min_latency: scalar_f(&tuple[2])?,
+            arg_latency: scalar_i(&tuple[3])?,
+            min_edp: scalar_f(&tuple[4])?,
+            arg_edp: scalar_i(&tuple[5])?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke: load + compile + execute the small bucket with a trivial
+    /// single-monomial query; verify against the closed form.
+    #[test]
+    fn full_artifact_roundtrip() {
+        let Ok(rt) = Runtime::new() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let entry = rt.manifest.pick("full", 1, 1).unwrap().clone();
+        let (c, t) = (entry.c, entry.t);
+        let mut qexp = vec![0.0f32; c * NUM_SLOTS * NUM_FEATURES];
+        let mut coef = vec![0.0f32; c * NUM_SLOTS];
+        // Candidate 0, slot 12 (DA segment): monomial i_d * i_g.
+        qexp[12 * NUM_FEATURES] = 1.0; // i_d
+        qexp[12 * NUM_FEATURES + 4] = 1.0; // i_g
+        coef[12] = 1.0;
+        // lnb: tiling column 0 with i_d = 8, i_g = 64; rest 1.
+        let mut lnb = vec![0.0f32; NUM_FEATURES * t];
+        lnb[0] = (8.0f32).ln();
+        lnb[4 * t] = (64.0f32).ln();
+        let hw = HwVector {
+            e_dram: 1.0,
+            e_buf: 0.0,
+            e_mac: 0.0,
+            e_sfu: 0.0,
+            e_bs: 0.0,
+            sec_per_word: 1.0,
+            sec_per_cycle: 0.0,
+            capacity_words: 1e9,
+        };
+        let out = rt.run_full(&entry, &qexp, &coef, &lnb, &hw).unwrap();
+        // energy[0,0] = e_dram * DA = 8 * 64 = 512.
+        assert!((out.energy[0] - 512.0).abs() < 1e-2, "{}", out.energy[0]);
+        assert!((out.da[0] - 512.0).abs() < 1e-2);
+        // Other candidates: zero DA, zero energy (feasible, bs=0).
+        assert_eq!(out.energy[t], 0.0);
+    }
+}

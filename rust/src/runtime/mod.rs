@@ -1,0 +1,11 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas evaluation graphs
+//! (`artifacts/*.hlo.txt`) and execute them from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path interface to the compiled L1/L2 stack.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use client::{FullOutput, ReduceOutput, Runtime};

@@ -1,0 +1,246 @@
+//! The MMEE optimization engine.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::config::{Accelerator, Workload};
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::eval::{native::NativeBackend, EvalBackend};
+use crate::loopnest::Candidate;
+use crate::model::{analytic, derive_slots, Multipliers};
+use crate::search::pareto::Front;
+use crate::search::result::{Objective, Solution};
+use crate::tiling::{enumerate_tilings, Tiling};
+
+/// Search statistics for runtime reporting (paper §VII-C/H).
+#[derive(Debug, Clone)]
+pub struct SearchStats {
+    pub candidates: usize,
+    pub tilings: usize,
+    pub mappings: f64,
+    pub elapsed: std::time::Duration,
+}
+
+pub struct MmeeEngine {
+    backend: Box<dyn EvalBackend>,
+}
+
+fn mmee_query() -> &'static QueryMatrix {
+    static Q: OnceLock<QueryMatrix> = OnceLock::new();
+    Q.get_or_init(QueryMatrix::mmee)
+}
+
+impl MmeeEngine {
+    /// Default engine: native backend over the full pruned space.
+    pub fn native() -> MmeeEngine {
+        MmeeEngine { backend: Box::new(NativeBackend) }
+    }
+
+    pub fn with_backend(backend: Box<dyn EvalBackend>) -> MmeeEngine {
+        MmeeEngine { backend }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The shared offline candidate table (pruned, all 18 groups).
+    pub fn candidates() -> &'static [Candidate] {
+        &mmee_query().candidates
+    }
+
+    pub fn query() -> &'static QueryMatrix {
+        mmee_query()
+    }
+
+    fn boundary(&self, workload: &Workload, accel: &Accelerator) -> BoundaryMatrix {
+        let tilings =
+            enumerate_tilings(&workload.gemm, Some(accel.capacity_words() as f64));
+        BoundaryMatrix::build(tilings, accel, workload)
+    }
+
+    /// Optimize one workload for one objective. One surface pass yields
+    /// all three objectives (paper: "MMEE evaluates all dataflows and
+    /// metrics simultaneously"); the requested one is returned.
+    pub fn optimize(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        objective: Objective,
+    ) -> Solution {
+        self.optimize_with_candidates(workload, accel, objective, mmee_query())
+    }
+
+    /// Optimize over a restricted candidate table (baseline variants).
+    pub fn optimize_with_candidates(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        objective: Objective,
+        q: &QueryMatrix,
+    ) -> Solution {
+        let t0 = Instant::now();
+        let b = self.boundary(workload, accel);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(workload, accel);
+        let best = self.backend.argmin3(q, &b, &hw, &mult);
+        let (score, c, t) = best[match objective {
+            Objective::Energy => 0,
+            Objective::Latency => 1,
+            Objective::Edp => 2,
+        }];
+        assert!(
+            score.is_finite() && score < 1e29,
+            "no feasible mapping for {} on {}",
+            workload.name,
+            accel.name
+        );
+        self.package(workload, accel, objective, q, &b.tilings, c, t, t0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn package(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        objective: Objective,
+        q: &QueryMatrix,
+        tilings: &[Tiling],
+        c: usize,
+        t: usize,
+        t0: Instant,
+    ) -> Solution {
+        let cand = q.candidates[c];
+        let tiling = tilings[t];
+        // Exact scalar metrics for the winner (breakdowns included).
+        let slots = derive_slots(&cand);
+        let (_, metrics) = analytic::evaluate(&slots, &tiling, accel, workload);
+        Solution {
+            workload: workload.name.clone(),
+            accel: accel.name.clone(),
+            objective,
+            candidate: cand,
+            tiling,
+            metrics,
+            evaluated: q.num_candidates() as f64 * tilings.len() as f64,
+            elapsed: t0.elapsed(),
+        }
+    }
+
+    /// Energy–latency Pareto front over the full surface (paper Fig. 20).
+    pub fn pareto_energy_latency(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+    ) -> (Front, SearchStats) {
+        let t0 = Instant::now();
+        let q = mmee_query();
+        let b = self.boundary(workload, accel);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(workload, accel);
+        let (el, _) = self.backend.fronts(q, &b, &hw, &mult);
+        let stats = SearchStats {
+            candidates: q.num_candidates(),
+            tilings: b.num_tilings(),
+            mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+            elapsed: t0.elapsed(),
+        };
+        (el, stats)
+    }
+
+    /// DRAM-access vs buffer-size Pareto front (paper Figs. 15/16): for
+    /// each achievable buffer budget, the minimum DRAM traffic. Uses an
+    /// *uncapped* tiling enumeration so the sweep covers large buffers.
+    pub fn pareto_da_bs(&self, workload: &Workload, accel: &Accelerator) -> Front {
+        self.pareto_da_bs_with_candidates(workload, accel, mmee_query())
+    }
+
+    pub fn pareto_da_bs_with_candidates(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        q: &QueryMatrix,
+    ) -> Front {
+        let tilings = enumerate_tilings(&workload.gemm, None);
+        let b = BoundaryMatrix::build(tilings, accel, workload);
+        // Feasibility must not clip the sweep: lift the capacity.
+        let mut hw = accel.hw_vector();
+        hw.capacity_words = f64::MAX;
+        let mult = Multipliers::unit();
+        let (_, bsda) = self.backend.fronts(q, &b, &hw, &mult);
+        bsda
+    }
+
+    /// Full optimize pass returning only search statistics (Fig. 22).
+    pub fn stats_only(&self, workload: &Workload, accel: &Accelerator) -> SearchStats {
+        let t0 = Instant::now();
+        let s = self.optimize(workload, accel, Objective::Energy);
+        let nc = mmee_query().num_candidates();
+        SearchStats {
+            candidates: nc,
+            tilings: (s.evaluated / nc as f64) as usize,
+            mappings: s.evaluated,
+            elapsed: t0.elapsed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn optimize_small_attention_is_feasible_and_sane() {
+        let engine = MmeeEngine::native();
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let s = engine.optimize(&w, &accel, Objective::Energy);
+        assert!(s.metrics.feasible);
+        assert!(s.metrics.bs <= accel.capacity_words() as f64);
+        assert!(s.metrics.energy > 0.0 && s.metrics.energy < 1.0, "{}", s.metrics.energy);
+        assert!(s.metrics.latency > 0.0 && s.metrics.latency < 1.0);
+        assert!(s.evaluated > 1e5);
+    }
+
+    #[test]
+    fn objectives_order_correctly() {
+        let engine = MmeeEngine::native();
+        let w = presets::bert_base(512);
+        let accel = presets::accel2();
+        let se = engine.optimize(&w, &accel, Objective::Energy);
+        let sl = engine.optimize(&w, &accel, Objective::Latency);
+        assert!(se.metrics.energy <= sl.metrics.energy + 1e-12);
+        assert!(sl.metrics.latency <= se.metrics.latency + 1e-12);
+    }
+
+    #[test]
+    fn pareto_extremes_match_single_objective_optima() {
+        let engine = MmeeEngine::native();
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let (front, stats) = engine.pareto_energy_latency(&w, &accel);
+        assert!(!front.is_empty());
+        assert!(stats.mappings > 0.0);
+        let se = engine.optimize(&w, &accel, Objective::Energy);
+        let sl = engine.optimize(&w, &accel, Objective::Latency);
+        let min_e = front.points().first().unwrap();
+        let min_l = front.points().last().unwrap();
+        assert!((min_e.x - se.metrics.energy).abs() <= 1e-3 * se.metrics.energy);
+        assert!((min_l.y - sl.metrics.latency).abs() <= 1e-3 * sl.metrics.latency);
+    }
+
+    #[test]
+    fn da_bs_front_is_monotone() {
+        let engine = MmeeEngine::native();
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let front = engine.pareto_da_bs(&w, &accel);
+        assert!(front.len() > 3);
+        // Larger buffer budget -> strictly less DRAM traffic along front.
+        for pair in front.points().windows(2) {
+            assert!(pair[0].x < pair[1].x);
+            assert!(pair[0].y > pair[1].y);
+        }
+    }
+}

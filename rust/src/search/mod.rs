@@ -1,0 +1,15 @@
+//! The MMEE search engine (paper §VI, Fig. 12).
+//!
+//! Pipeline: offline pruned candidate table (cached) → online tiling
+//! enumeration (integer factorization, capacity-prefiltered) → batched
+//! evaluation over the (candidate × tiling) surface → objective argmin /
+//! Pareto extraction. Exhaustive within the decision space; optimal
+//! within the model (§VI-C, property-tested).
+
+pub mod engine;
+pub mod pareto;
+pub mod result;
+
+pub use engine::{MmeeEngine, SearchStats};
+pub use pareto::{pareto_front, ParetoPoint};
+pub use result::{Objective, Solution};

@@ -1,0 +1,133 @@
+//! Incremental 2-D Pareto front maintenance (minimization on both axes).
+
+/// A non-dominated point with its mapping provenance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoPoint {
+    pub x: f64,
+    pub y: f64,
+    pub candidate: usize,
+    pub tiling: usize,
+}
+
+/// Running Pareto front: kept sorted by `x` ascending (thus `y` strictly
+/// descending). Insertion is O(log n + k) per point.
+#[derive(Debug, Clone, Default)]
+pub struct Front {
+    points: Vec<ParetoPoint>,
+}
+
+impl Front {
+    pub fn new() -> Front {
+        Front::default()
+    }
+
+    pub fn insert(&mut self, p: ParetoPoint) {
+        if !p.x.is_finite() || !p.y.is_finite() {
+            return;
+        }
+        // Find insertion slot by x.
+        let i = self.points.partition_point(|q| q.x < p.x);
+        // Dominated by a point with x <= p.x and y <= p.y?
+        if i > 0 && self.points[i - 1].y <= p.y {
+            return;
+        }
+        if i < self.points.len() && self.points[i].x == p.x && self.points[i].y <= p.y {
+            return;
+        }
+        // Remove points p dominates (x >= p.x with y >= p.y).
+        let mut j = i;
+        while j < self.points.len() && self.points[j].y >= p.y {
+            j += 1;
+        }
+        self.points.splice(i..j, [p]);
+    }
+
+    pub fn points(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &Front) {
+        for p in &other.points {
+            self.insert(*p);
+        }
+    }
+}
+
+/// One-shot front extraction from a point cloud.
+pub fn pareto_front(points: impl IntoIterator<Item = ParetoPoint>) -> Front {
+    let mut f = Front::new();
+    for p in points {
+        f.insert(p);
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn pp(x: f64, y: f64) -> ParetoPoint {
+        ParetoPoint { x, y, candidate: 0, tiling: 0 }
+    }
+
+    #[test]
+    fn basic_dominance() {
+        let f = pareto_front([pp(1.0, 5.0), pp(2.0, 3.0), pp(2.5, 4.0), pp(3.0, 1.0)]);
+        let xs: Vec<f64> = f.points().iter().map(|p| p.x).collect();
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn duplicates_and_ties() {
+        let f = pareto_front([pp(1.0, 1.0), pp(1.0, 1.0), pp(1.0, 2.0), pp(2.0, 1.0)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0], pp(1.0, 1.0));
+    }
+
+    #[test]
+    fn infinite_points_ignored() {
+        let f = pareto_front([pp(f64::INFINITY, 1.0), pp(1.0, f64::NAN), pp(2.0, 2.0)]);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn prop_front_is_mutually_nondominated_and_complete() {
+        prop::quick(
+            64,
+            0x9A17,
+            |rng: &mut Rng, size| {
+                (0..size.max(2) * 4)
+                    .map(|_| pp((rng.below(50) + 1) as f64, (rng.below(50) + 1) as f64))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let f = pareto_front(pts.iter().copied());
+                // (1) mutual non-domination
+                for a in f.points() {
+                    for b in f.points() {
+                        if a != b && a.x <= b.x && a.y <= b.y && (a.x < b.x || a.y < b.y) {
+                            return Err(format!("{b:?} dominated by {a:?}"));
+                        }
+                    }
+                }
+                // (2) completeness: every input is dominated-or-equal by
+                // some front point
+                for p in pts {
+                    if !f.points().iter().any(|q| q.x <= p.x && q.y <= p.y) {
+                        return Err(format!("{p:?} not covered"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

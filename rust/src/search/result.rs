@@ -1,0 +1,203 @@
+//! Search objectives and solution reporting.
+
+use crate::config::{Accelerator, Workload};
+use crate::loopnest::{Candidate, Dim, Operand};
+use crate::model::Metrics;
+use crate::tiling::Tiling;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Energy,
+    Latency,
+    Edp,
+}
+
+impl Objective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Energy => "energy",
+            Objective::Latency => "latency",
+            Objective::Edp => "edp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s {
+            "energy" | "e" => Some(Objective::Energy),
+            "latency" | "l" => Some(Objective::Latency),
+            "edp" => Some(Objective::Edp),
+            _ => None,
+        }
+    }
+
+    pub fn score(&self, energy: f64, latency: f64) -> f64 {
+        match self {
+            Objective::Energy => energy,
+            Objective::Latency => latency,
+            Objective::Edp => energy * latency,
+        }
+    }
+}
+
+/// A complete mapping solution.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub workload: String,
+    pub accel: String,
+    pub objective: Objective,
+    pub candidate: Candidate,
+    pub tiling: Tiling,
+    pub metrics: Metrics,
+    /// Mappings evaluated to find this solution.
+    pub evaluated: f64,
+    pub elapsed: std::time::Duration,
+}
+
+impl Solution {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.clone())),
+            ("accel", Json::str(self.accel.clone())),
+            ("objective", Json::str(self.objective.name())),
+            ("candidate", Json::str(self.candidate.name())),
+            ("tiling", Json::str(self.tiling.name())),
+            ("energy_j", Json::num(self.metrics.energy)),
+            ("latency_s", Json::num(self.metrics.latency)),
+            ("edp", Json::num(self.metrics.edp())),
+            ("dram_words", Json::num(self.metrics.da)),
+            ("buffer_words", Json::num(self.metrics.bs)),
+            ("recompute", Json::Bool(self.candidate.recompute())),
+            ("mappings_evaluated", Json::num(self.evaluated)),
+            ("elapsed_s", Json::num(self.elapsed.as_secs_f64())),
+        ])
+    }
+
+    /// Render the pseudo nested loop of this mapping (paper Fig. 9/10
+    /// style) — the human-readable dataflow description.
+    pub fn render_loopnest(&self, workload: &Workload, _accel: &Accelerator) -> String {
+        let cand = &self.candidate;
+        let t = &self.tiling;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "# {} on {} — {}-driven{}\n",
+            workload.name,
+            self.accel,
+            self.objective.name(),
+            if cand.recompute() { " (recompute)" } else { "" }
+        ));
+        out.push_str(&format!(
+            "# stationary: op1 {} / op2 {}\n",
+            cand.sm1.name(),
+            cand.sm2.name()
+        ));
+        let mut indent = 0;
+        let levels: Vec<(Operand, usize)> = crate::loopnest::OPERANDS
+            .iter()
+            .map(|&op| (op, cand.levels.level(op, &cand.order)))
+            .collect();
+        for depth in 0..4 {
+            for (op, lvl) in &levels {
+                if *lvl == depth {
+                    out.push_str(&format!(
+                        "{}# buffer {} here\n",
+                        "  ".repeat(indent),
+                        op.name()
+                    ));
+                }
+            }
+            let d = cand.order.dim_at(depth);
+            let (xd, xg) = (t.xd[d.index()], t.xg[d.index()]);
+            out.push_str(&format!(
+                "{}for {}2 in 0..{}:   # granule {}\n",
+                "  ".repeat(indent),
+                d.name(),
+                xd,
+                xg
+            ));
+            indent += 1;
+            if d == Dim::K {
+                out.push_str(&format!(
+                    "{}C[i2,l2] += A[i2,k2] @ B[k2,l2]   # producer (intra-tile on PE array)\n",
+                    "  ".repeat(indent)
+                ));
+            }
+        }
+        let tpos = cand.order.pos(Dim::K);
+        out.push_str(&format!(
+            "{}# -- k complete: online softmax, then consumer loops --\n",
+            "  ".repeat(tpos + 1)
+        ));
+        out.push_str(&format!(
+            "{}E[i2,j2] += softmax(C)[i2,l2] @ D[l2,j2]  # consumer\n",
+            "  ".repeat(tpos + 1)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::loopnest::{BufferingLevels, LoopOrder, Stationary};
+
+    fn dummy_solution() -> Solution {
+        Solution {
+            workload: "bert-base-512".into(),
+            accel: "accel1-nvdla".into(),
+            objective: Objective::Energy,
+            candidate: Candidate {
+                order: LoopOrder::flash(),
+                levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
+                sm1: Stationary::Weight,
+                sm2: Stationary::Output,
+            },
+            tiling: Tiling { xd: [8, 1, 8, 1], xg: [64, 64, 64, 64] },
+            metrics: Metrics {
+                energy: 1.1e-3,
+                latency: 1.0e-4,
+                da: 1e6,
+                bs: 1e5,
+                feasible: true,
+                e_dram: 5e-4,
+                e_sram: 3e-4,
+                e_mac: 2e-4,
+                e_sfu: 1e-4,
+                lat_comp: 1e-4,
+                lat_dram: 5e-5,
+            },
+            evaluated: 1e6,
+            elapsed: std::time::Duration::from_millis(42),
+        }
+    }
+
+    #[test]
+    fn objective_parse_and_score() {
+        assert_eq!(Objective::parse("energy"), Some(Objective::Energy));
+        assert_eq!(Objective::parse("edp"), Some(Objective::Edp));
+        assert!(Objective::parse("x").is_none());
+        assert_eq!(Objective::Edp.score(2.0, 3.0), 6.0);
+    }
+
+    #[test]
+    fn solution_json_fields() {
+        let s = dummy_solution();
+        let j = s.to_json();
+        assert_eq!(j.get("workload").unwrap().as_str(), Some("bert-base-512"));
+        assert!(j.get("energy_j").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("recompute").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn loopnest_rendering() {
+        let s = dummy_solution();
+        let w = presets::bert_base(512);
+        let a = presets::accel1();
+        let text = s.render_loopnest(&w, &a);
+        assert!(text.contains("for i2 in 0..8"));
+        assert!(text.contains("for k2 in 0..1"));
+        assert!(text.contains("softmax"));
+        assert!(text.contains("buffer E here"));
+    }
+}

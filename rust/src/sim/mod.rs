@@ -1,0 +1,21 @@
+//! Stage-accurate dataflow simulator — the validation substrate.
+//!
+//! The paper validates its analytical model against Timeloop (Fig. 13)
+//! and Orojenesis (Fig. 14). Neither is available offline, so we built
+//! this simulator as the ground-truth reference (DESIGN.md §7): it
+//! *executes* a mapping — unrolls the pseudo nested loop into producer /
+//! consumer compute stages, runs the buffer with the retention policy the
+//! buffering levels imply, counts every DRAM transfer and every cycle —
+//! and exposes per-stage traces (the buffer-utilisation chart of
+//! Fig. 5(a)/10(c) and the DRAM-access curve of Fig. 5(b)).
+//!
+//! The eviction discipline mirrors the analytical model exactly
+//! (documented at [`simulator::Simulator`]), so model-vs-simulator
+//! agreement is a *meaningful* check of the closed forms, not a
+//! tautology: the simulator counts by executing, the model by algebra.
+
+pub mod simulator;
+pub mod charts;
+pub mod validate;
+
+pub use simulator::{SimResult, Simulator};

@@ -1,0 +1,503 @@
+//! The dataflow executor.
+//!
+//! Execution semantics of a `(Candidate, Tiling)` mapping:
+//!
+//! * The inter-tile nest follows the candidate's loop order. At the `k`
+//!   loop's depth `t`, each full `k` sweep accumulates a set of `C` tiles
+//!   (producer phase, inner producer dims at depth > t), runs softmax on
+//!   the completed tiles, then the consumer loops at depth > t consume
+//!   them (consumer phase) — the No-Psum-Propagation transition.
+//! * Buffer policy (identical to the analytical model's assumptions):
+//!   an operand allocated at level `ℓ` is flushed whenever an *enclosing*
+//!   loop (depth < ℓ) over one of its own dims starts a new iteration,
+//!   and — if not phase-protected (`ℓ > t`) — whenever the opposite
+//!   phase begins (Scenario 2). `C` lives from first accumulation to the
+//!   end of its consumer phase and never touches DRAM. `E` tiles are
+//!   dirty accumulators: flushing one mid-reduction spills it (DRAM
+//!   write) and its next use re-reads it.
+//! * Costs: every A/B/D miss and every E spill/fill/final-write moves the
+//!   tile's words over DRAM; each stage contributes PE-padded compute
+//!   cycles and stationary-mode buffer↔RF words; each completed `C` tile
+//!   contributes `c_softmax·i_G·l_G` SFU work.
+
+use std::collections::HashSet;
+
+use crate::config::{Accelerator, Workload};
+use crate::loopnest::{Candidate, Dim, Operand};
+use crate::tiling::Tiling;
+
+type TileKey = [usize; 2];
+
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// DRAM words moved (loads + E spills/fills/writes).
+    pub da: f64,
+    /// Peak buffer occupancy in words.
+    pub peak_bs: f64,
+    /// Buffer↔RF words.
+    pub br: f64,
+    pub mac: f64,
+    pub smx: f64,
+    /// Compute cycles per operator (one PE array, one instance).
+    pub cl1: f64,
+    pub cl2: f64,
+    pub stages: usize,
+    /// (occupancy words, cumulative DRAM words) after each stage.
+    pub trace: Vec<(f64, f64)>,
+}
+
+pub struct Simulator<'a> {
+    cand: &'a Candidate,
+    tiling: &'a Tiling,
+    accel: &'a Accelerator,
+    c_smx: f64,
+    /// k-loop depth (the producer→consumer transition level).
+    t: usize,
+    /// Residency per operand: tile keys currently in the buffer.
+    resident: [HashSet<TileKey>; 5],
+    /// E tiles that have been spilled to DRAM mid-reduction.
+    e_spilled: HashSet<TileKey>,
+    /// Current loop indices per dim.
+    idx: [usize; 4],
+    res: SimResult,
+    record_trace: bool,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(
+        cand: &'a Candidate,
+        tiling: &'a Tiling,
+        accel: &'a Accelerator,
+        workload: &'a Workload,
+    ) -> Simulator<'a> {
+        Simulator {
+            cand,
+            tiling,
+            accel,
+            c_smx: if workload.has_softmax() { workload.c_softmax } else { 0.0 },
+            t: cand.order.pos(Dim::K),
+            resident: Default::default(),
+            e_spilled: HashSet::new(),
+            idx: [0; 4],
+            res: SimResult::default(),
+            record_trace: false,
+        }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.record_trace = true;
+        self
+    }
+
+    /// Number of stages this mapping unrolls to (cheap feasibility guard
+    /// for callers before `run`).
+    pub fn stage_count(cand: &Candidate, tiling: &Tiling) -> f64 {
+        let xd = |d: Dim| tiling.xd[d.index()] as f64;
+        let prod = xd(Dim::I) * xd(Dim::K) * xd(Dim::L)
+            * if cand.recompute() { xd(Dim::J) } else { 1.0 };
+        prod + xd(Dim::I) * xd(Dim::L) * xd(Dim::J)
+    }
+
+    pub fn run(mut self) -> SimResult {
+        self.walk(0);
+        // Final writeback of dirty E tiles.
+        let dirty: Vec<TileKey> = self.resident[Operand::E as usize].drain().collect();
+        for _ in dirty {
+            self.res.da += self.granule_words(Operand::E);
+        }
+        self.res
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    fn xd(&self, d: Dim) -> usize {
+        self.tiling.xd[d.index()]
+    }
+
+    fn granule_words(&self, op: Operand) -> f64 {
+        op.dims()
+            .iter()
+            .map(|d| self.tiling.xg[d.index()] as f64)
+            .product()
+    }
+
+    fn tile_key(&self, op: Operand) -> TileKey {
+        let ds = op.dims();
+        [self.idx[ds[0].index()], self.idx[ds[1].index()]]
+    }
+
+    fn level(&self, op: Operand) -> usize {
+        self.cand.levels.level(op, &self.cand.order)
+    }
+
+    /// Observed occupancy: words of tiles physically present (drives the
+    /// buffer-utilisation chart, Fig. 5(a)/10(c)).
+    fn occupancy(&self) -> f64 {
+        crate::loopnest::OPERANDS
+            .iter()
+            .map(|&op| self.resident[op as usize].len() as f64 * self.granule_words(op))
+            .sum()
+    }
+
+    /// Reserved capacity: a live allocation (any tile resident) reserves
+    /// its full footprint — granule × the extents of the operand's dims
+    /// at/below its buffering level — exactly the static allocation the
+    /// analytical BS model (Eq. 1–4) describes. Peak reserved capacity is
+    /// the buffer size a mapping actually requires.
+    fn reserved(&self) -> f64 {
+        crate::loopnest::OPERANDS
+            .iter()
+            .map(|&op| {
+                if self.resident[op as usize].is_empty() {
+                    return 0.0;
+                }
+                let lvl = self.level(op);
+                let mut words = self.granule_words(op);
+                for &d in op.dims() {
+                    if self.cand.order.pos(d) >= lvl {
+                        words *= self.xd(d) as f64;
+                    }
+                }
+                words
+            })
+            .sum()
+    }
+
+    /// A loop over `dim` at `depth` starts a new iteration: flush every
+    /// operand allocated deeper whose working set depends on `dim`.
+    fn loop_tick(&mut self, depth: usize, dim: Dim) {
+        for op in crate::loopnest::OPERANDS {
+            if op == Operand::C {
+                continue; // C's lifetime is phase-managed below.
+            }
+            if depth < self.level(op) && op.dims().contains(&dim) {
+                self.flush(op);
+            }
+        }
+    }
+
+    /// Opposite-phase entry (Scenario 2): unprotected operands of the
+    /// other operator are flushed.
+    fn phase_flush(&mut self, entering_producer: bool) {
+        for op in crate::loopnest::OPERANDS {
+            let cross = if entering_producer {
+                op.is_consumer_side()
+            } else {
+                op.is_producer_side()
+            };
+            if cross && self.level(op) > self.t {
+                self.flush(op);
+            }
+        }
+    }
+
+    fn flush(&mut self, op: Operand) {
+        let tiles: Vec<TileKey> = self.resident[op as usize].drain().collect();
+        if op == Operand::E {
+            // Dirty accumulators spill.
+            for key in tiles {
+                self.res.da += self.granule_words(Operand::E);
+                self.e_spilled.insert(key);
+            }
+        }
+    }
+
+    /// Input access: load on miss.
+    fn touch_input(&mut self, op: Operand) {
+        let key = self.tile_key(op);
+        if self.resident[op as usize].insert(key) {
+            self.res.da += self.granule_words(op);
+        }
+    }
+
+    /// Output access: allocate on miss, refill if previously spilled.
+    fn touch_output(&mut self) {
+        let key = self.tile_key(Operand::E);
+        if self.resident[Operand::E as usize].insert(key) {
+            if self.e_spilled.contains(&key) {
+                self.res.da += self.granule_words(Operand::E);
+            }
+        }
+    }
+
+    fn record_stage(&mut self) {
+        self.res.stages += 1;
+        self.res.peak_bs = self.res.peak_bs.max(self.reserved());
+        if self.record_trace {
+            self.res.trace.push((self.occupancy(), self.res.da));
+        }
+    }
+
+    // ----------------------------------------------------------- the nest
+
+    fn walk(&mut self, depth: usize) {
+        if depth == self.t {
+            self.k_structure(depth);
+            return;
+        }
+        let dim = self.cand.order.dim_at(depth);
+        for v in 0..self.xd(dim) {
+            self.idx[dim.index()] = v;
+            self.loop_tick(depth, dim);
+            self.walk(depth + 1);
+        }
+    }
+
+    /// The `k` loop and the producer→consumer transition at depth `t`.
+    fn k_structure(&mut self, depth: usize) {
+        for k2 in 0..self.xd(Dim::K) {
+            self.idx[Dim::K.index()] = k2;
+            self.loop_tick(depth, Dim::K);
+            self.phase_flush(true);
+            self.producer_nest(depth + 1);
+        }
+        // Softmax over the freshly completed C tiles.
+        let completed: f64 = [Dim::I, Dim::L]
+            .iter()
+            .filter(|d| self.cand.order.pos(**d) > self.t)
+            .map(|d| self.xd(*d) as f64)
+            .product();
+        self.res.smx +=
+            completed * self.c_smx * self.granule_words(Operand::C);
+        self.phase_flush(false);
+        self.consumer_nest(depth + 1);
+        // C tiles fully consumed; free them (never written to DRAM).
+        self.resident[Operand::C as usize].clear();
+    }
+
+    fn producer_nest(&mut self, depth: usize) {
+        if depth == 4 {
+            self.producer_stage();
+            return;
+        }
+        let dim = self.cand.order.dim_at(depth);
+        if dim == Dim::J {
+            self.producer_nest(depth + 1);
+            return;
+        }
+        for v in 0..self.xd(dim) {
+            self.idx[dim.index()] = v;
+            self.loop_tick(depth, dim);
+            self.producer_nest(depth + 1);
+        }
+    }
+
+    fn consumer_nest(&mut self, depth: usize) {
+        if depth == 4 {
+            self.consumer_stage();
+            return;
+        }
+        let dim = self.cand.order.dim_at(depth);
+        if dim == Dim::K {
+            self.consumer_nest(depth + 1);
+            return;
+        }
+        for v in 0..self.xd(dim) {
+            self.idx[dim.index()] = v;
+            self.loop_tick(depth, dim);
+            self.consumer_nest(depth + 1);
+        }
+    }
+
+    // ------------------------------------------------------------- stages
+
+    fn stage_costs(&mut self, op1: bool) {
+        let [ig, kg, lg, jg] = self.tiling.xg;
+        let (m, kr, n) = if op1 { (ig, kg, lg) } else { (ig, lg, jg) };
+        let nm = m.div_ceil(self.accel.pe_rows) as f64;
+        let nkr = kr.div_ceil(self.accel.pe_rows) as f64;
+        let nn = n.div_ceil(self.accel.pe_cols) as f64;
+        let (mf, krf, nf) = (m as f64, kr as f64, n as f64);
+
+        self.res.mac += mf * krf * nf;
+        let cycles = nm * nn * krf;
+        if op1 {
+            self.res.cl1 += cycles;
+        } else {
+            self.res.cl2 += cycles;
+        }
+        use crate::loopnest::Stationary::*;
+        let sm = if op1 { self.cand.sm1 } else { self.cand.sm2 };
+        self.res.br += match sm {
+            Weight => krf * nf + mf * krf * nn + mf * nf * (2.0 * nkr - 1.0),
+            Input => mf * krf + krf * nf * nm + mf * nf * (2.0 * nkr - 1.0),
+            Output => mf * nf + mf * krf * nn + krf * nf * nm,
+        };
+    }
+
+    fn producer_stage(&mut self) {
+        self.touch_input(Operand::A);
+        self.touch_input(Operand::B);
+        // C psum tile materialises in the buffer on first accumulation.
+        let key = self.tile_key(Operand::C);
+        self.resident[Operand::C as usize].insert(key);
+        self.stage_costs(true);
+        self.record_stage();
+    }
+
+    fn consumer_stage(&mut self) {
+        debug_assert!(
+            self.resident[Operand::C as usize].contains(&self.tile_key(Operand::C)),
+            "consumer reads a C tile that was never produced (order {})",
+            self.cand.order.name()
+        );
+        self.touch_input(Operand::D);
+        self.touch_output();
+        self.stage_costs(false);
+        self.record_stage();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::loopnest::{BufferingLevels, LoopOrder, Stationary};
+
+    fn small_setup() -> (Workload, Accelerator) {
+        let mut w = presets::bert_base(512);
+        w.gemm = crate::config::FusedGemm { i: 16, k: 4, l: 16, j: 4 };
+        (w, presets::accel1())
+    }
+
+    fn run(cand: &Candidate, t: &Tiling, w: &Workload, a: &Accelerator) -> SimResult {
+        Simulator::new(cand, t, a, w).run()
+    }
+
+    #[test]
+    fn stage_count_matches_closed_form() {
+        let (w, a) = small_setup();
+        let t = Tiling { xd: [4, 2, 4, 2], xg: [4, 2, 4, 2] };
+        for order in LoopOrder::all() {
+            let cand = Candidate {
+                order,
+                levels: BufferingLevels::streaming(),
+                sm1: Stationary::Weight,
+                sm2: Stationary::Output,
+            };
+            let r = run(&cand, &t, &w, &a);
+            assert_eq!(
+                r.stages as f64,
+                Simulator::stage_count(&cand, &t),
+                "order {}",
+                order.name()
+            );
+        }
+    }
+
+    #[test]
+    fn untiled_mapping_loads_everything_once() {
+        let (w, a) = small_setup();
+        let t = Tiling::unit(&w.gemm);
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let r = run(&cand, &t, &w, &a);
+        let g = w.gemm;
+        let expect = (g.i * g.k + g.k * g.l + g.l * g.j + g.i * g.j) as f64;
+        assert_eq!(r.da, expect);
+        // Streaming levels: producer phase holds A+B+C, consumer C+D+E;
+        // the peak is the larger of the two (here they tie).
+        let prod = (g.i * g.k + g.k * g.l + g.i * g.l) as f64;
+        let cons = (g.i * g.l + g.l * g.j + g.i * g.j) as f64;
+        assert_eq!(r.peak_bs, prod.max(cons));
+    }
+
+    #[test]
+    fn mac_count_is_tiling_invariant() {
+        let (w, a) = small_setup();
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Input,
+            sm2: Stationary::Input,
+        };
+        let g = w.gemm;
+        let expect = (g.i * g.k * g.l + g.i * g.l * g.j) as f64;
+        for t in [
+            Tiling::unit(&g),
+            Tiling { xd: [4, 2, 4, 2], xg: [4, 2, 4, 2] },
+            Tiling { xd: [16, 4, 16, 4], xg: [1, 1, 1, 1] },
+        ] {
+            let r = run(&cand, &t, &w, &a);
+            assert_eq!(r.mac, expect, "tiling {}", t.name());
+        }
+    }
+
+    #[test]
+    fn recompute_order_multiplies_producer_macs() {
+        let (w, a) = small_setup();
+        let t = Tiling { xd: [4, 2, 4, 2], xg: [4, 2, 4, 2] };
+        let rec = Candidate {
+            order: LoopOrder([Dim::I, Dim::L, Dim::J, Dim::K]),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let r = run(&rec, &t, &w, &a);
+        let g = w.gemm;
+        let jd = 2.0;
+        let expect = jd * (g.i * g.k * g.l) as f64 + (g.i * g.l * g.j) as f64;
+        assert_eq!(r.mac, expect);
+    }
+
+    #[test]
+    fn retention_reduces_dram_traffic() {
+        let (w, a) = small_setup();
+        let t = Tiling { xd: [4, 2, 4, 2], xg: [4, 2, 4, 2] };
+        let streaming = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let retained = Candidate {
+            levels: BufferingLevels { a: 0, b: 0, d: 0, e: 0 },
+            ..streaming
+        };
+        let rs = run(&streaming, &t, &w, &a);
+        let rr = run(&retained, &t, &w, &a);
+        assert!(rr.da < rs.da, "retention {} !< streaming {}", rr.da, rs.da);
+        assert!(rr.peak_bs > rs.peak_bs);
+        // Full retention: minimal possible traffic.
+        let g = w.gemm;
+        let min = (g.i * g.k + g.k * g.l + g.l * g.j + g.i * g.j) as f64;
+        assert_eq!(rr.da, min);
+    }
+
+    #[test]
+    fn softmax_counted_once_per_c_element() {
+        let (w, a) = small_setup(); // attention, c_softmax = 10
+        let t = Tiling { xd: [4, 2, 4, 2], xg: [4, 2, 4, 2] };
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let r = run(&cand, &t, &w, &a);
+        assert_eq!(r.smx, 10.0 * (w.gemm.i * w.gemm.l) as f64);
+    }
+
+    #[test]
+    fn trace_is_recorded_per_stage() {
+        let (w, a) = small_setup();
+        let t = Tiling { xd: [2, 2, 2, 2], xg: [8, 2, 8, 2] };
+        let cand = Candidate {
+            order: LoopOrder::flash(),
+            levels: BufferingLevels::streaming(),
+            sm1: Stationary::Weight,
+            sm2: Stationary::Weight,
+        };
+        let r = Simulator::new(&cand, &t, &a, &w).with_trace().run();
+        assert_eq!(r.trace.len(), r.stages);
+        // Cumulative DRAM is monotone.
+        for pair in r.trace.windows(2) {
+            assert!(pair[1].1 >= pair[0].1);
+        }
+        assert!(r.trace.iter().any(|&(occ, _)| occ == r.peak_bs));
+    }
+}

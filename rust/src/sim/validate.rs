@@ -1,0 +1,195 @@
+//! Model-vs-simulator validation (our Fig. 13/14 machinery).
+
+use crate::config::{Accelerator, Workload};
+use crate::loopnest::Candidate;
+use crate::model::{self, derive_slots};
+use crate::sim::Simulator;
+use crate::tiling::Tiling;
+use crate::util::stats;
+
+/// Per-mapping comparison of analytical vs simulated metrics.
+#[derive(Debug, Clone)]
+pub struct ValidationPoint {
+    pub name: String,
+    pub da_model: f64,
+    pub da_sim: f64,
+    pub bs_model: f64,
+    pub bs_sim: f64,
+    pub cl_model: f64,
+    pub cl_sim: f64,
+    pub br_model: f64,
+    pub br_sim: f64,
+    pub energy_model: f64,
+    pub energy_sim: f64,
+    pub latency_model: f64,
+    pub latency_sim: f64,
+}
+
+/// Run one mapping through both paths.
+pub fn validate_mapping(
+    cand: &Candidate,
+    tiling: &Tiling,
+    accel: &Accelerator,
+    workload: &Workload,
+) -> ValidationPoint {
+    let slots = derive_slots(cand);
+    let (p, m) = model::analytic::evaluate(&slots, tiling, accel, workload);
+    let sim = Simulator::new(cand, tiling, accel, workload).run();
+
+    // Energy/latency for the simulator: the same combination formula fed
+    // with *simulated* primitives (the simulator measures resource usage;
+    // joules-per-access constants are shared).
+    let sim_prims = model::Primitives {
+        bs1: sim.peak_bs,
+        bs2: sim.peak_bs,
+        da: sim.da,
+        br: sim.br,
+        mac: sim.mac,
+        smx: sim.smx,
+        cl1: sim.cl1,
+        cl2: sim.cl2,
+    };
+    let mult = model::Multipliers::for_workload(workload, accel);
+    let sim_m = model::combine(&sim_prims, &accel.hw_vector(), &mult);
+
+    ValidationPoint {
+        name: format!("{} @ {}", cand.name(), tiling.name()),
+        da_model: p.da,
+        da_sim: sim.da,
+        bs_model: m.bs,
+        bs_sim: sim.peak_bs,
+        cl_model: p.cl1 + p.cl2,
+        cl_sim: sim.cl1 + sim.cl2,
+        br_model: p.br,
+        br_sim: sim.br,
+        energy_model: m.energy,
+        energy_sim: sim_m.energy,
+        latency_model: m.latency,
+        latency_sim: sim_m.latency,
+    }
+}
+
+/// Summary statistics over a batch of validation points.
+#[derive(Debug, Clone)]
+pub struct ValidationSummary {
+    pub n: usize,
+    pub r2_da: f64,
+    pub r2_energy: f64,
+    pub r2_latency: f64,
+    pub mean_err_da: f64,
+    pub max_err_da: f64,
+    pub mean_err_bs: f64,
+    pub max_err_bs: f64,
+    pub mean_err_energy: f64,
+    pub max_err_energy: f64,
+    pub mean_err_latency: f64,
+    pub max_err_latency: f64,
+}
+
+pub fn summarize(points: &[ValidationPoint]) -> ValidationSummary {
+    let col = |f: fn(&ValidationPoint) -> (f64, f64)| -> (Vec<f64>, Vec<f64>) {
+        points.iter().map(f).unzip()
+    };
+    let (da_m, da_s) = col(|p| (p.da_model, p.da_sim));
+    let (bs_m, bs_s) = col(|p| (p.bs_model, p.bs_sim));
+    let (e_m, e_s) = col(|p| (p.energy_model, p.energy_sim));
+    let (l_m, l_s) = col(|p| (p.latency_model, p.latency_sim));
+    let (mean_da, max_da) = stats::rel_errors(&da_m, &da_s);
+    let (mean_bs, max_bs) = stats::rel_errors(&bs_m, &bs_s);
+    let (mean_e, max_e) = stats::rel_errors(&e_m, &e_s);
+    let (mean_l, max_l) = stats::rel_errors(&l_m, &l_s);
+    ValidationSummary {
+        n: points.len(),
+        r2_da: stats::r_squared(&da_m, &da_s),
+        r2_energy: stats::r_squared(&e_m, &e_s),
+        r2_latency: stats::r_squared(&l_m, &l_s),
+        mean_err_da: mean_da,
+        max_err_da: max_da,
+        mean_err_bs: mean_bs,
+        max_err_bs: max_bs,
+        mean_err_energy: mean_e,
+        max_err_energy: max_e,
+        mean_err_latency: mean_l,
+        max_err_latency: max_l,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::loopnest::{BufferingLevels, LoopOrder, Stationary};
+    use crate::util::rng::Rng;
+
+    fn sample_candidate(rng: &mut Rng) -> Candidate {
+        let orders = LoopOrder::all();
+        Candidate {
+            order: *rng.choose(&orders),
+            levels: BufferingLevels {
+                a: rng.below(5) as u8,
+                b: rng.below(5) as u8,
+                d: rng.below(5) as u8,
+                e: rng.below(5) as u8,
+            },
+            sm1: *rng.choose(&crate::loopnest::dims::STATIONARIES),
+            sm2: *rng.choose(&crate::loopnest::dims::STATIONARIES),
+        }
+    }
+
+    /// The core validation property: the closed-form model reproduces the
+    /// executed dataflow exactly for DA/CL/BR/SMX, and BS matches when
+    /// every inter-tile loop actually iterates (xd >= 2; with single-trip
+    /// loops the simulator can only observe a subset of the reserved
+    /// working set, so model >= sim there).
+    #[test]
+    fn model_matches_simulator_on_random_mappings() {
+        let accel = presets::accel1();
+        let mut w = presets::bert_base(512);
+        w.gemm = crate::config::FusedGemm { i: 16, k: 8, l: 16, j: 8 };
+        let mut rng = Rng::new(0xAB1DE);
+        let mut checked = 0;
+        for _ in 0..400 {
+            let cand = sample_candidate(&mut rng);
+            let t = crate::tiling::Tiling { xd: [4, 2, 4, 2], xg: [4, 4, 4, 4] };
+            let v = validate_mapping(&cand, &t, &accel, &w);
+            assert!(
+                (v.da_model - v.da_sim).abs() < 1e-6,
+                "DA mismatch for {}: model {} sim {}",
+                v.name, v.da_model, v.da_sim
+            );
+            assert!(
+                (v.bs_model - v.bs_sim).abs() < 1e-6,
+                "BS mismatch for {}: model {} sim {}",
+                v.name, v.bs_model, v.bs_sim
+            );
+            assert!((v.cl_model - v.cl_sim).abs() < 1e-6, "CL mismatch for {}", v.name);
+            assert!((v.br_model - v.br_sim).abs() < 1e-6, "BR mismatch for {}", v.name);
+            checked += 1;
+        }
+        assert_eq!(checked, 400);
+    }
+
+    #[test]
+    fn model_bounds_simulator_with_single_trip_loops() {
+        let accel = presets::accel1();
+        let mut w = presets::bert_base(512);
+        w.gemm = crate::config::FusedGemm { i: 8, k: 4, l: 8, j: 4 };
+        let mut rng = Rng::new(0xF00);
+        for _ in 0..200 {
+            let cand = sample_candidate(&mut rng);
+            // xd entries of 1 exercise the degenerate-loop corner.
+            let t = crate::tiling::Tiling { xd: [2, 1, 4, 1], xg: [4, 4, 2, 4] };
+            let v = validate_mapping(&cand, &t, &accel, &w);
+            assert!(
+                v.da_model >= v.da_sim - 1e-6,
+                "model must upper-bound sim DA: {} vs {} ({})",
+                v.da_model, v.da_sim, v.name
+            );
+            assert!(
+                v.bs_model >= v.bs_sim - 1e-6,
+                "model must upper-bound sim BS: {} vs {} ({})",
+                v.bs_model, v.bs_sim, v.name
+            );
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Symbolic comparison of sums of monomials.
+//!
+//! All boundary features are ≥ 1 (tile counts, granule sizes, block
+//! counts; c_softmax never appears in pruned segments), so a monomial
+//! with exponent-wise-≥ exponents and ≥ coefficient dominates pointwise,
+//! and an injective dominating matching between two sums proves `V ≥ U`
+//! for *every* tiling — the soundness core of offline pruning.
+
+use crate::model::terms::Monomial;
+
+/// Replace negative terms by folding them into a dominating positive
+/// partner, producing a pointwise **lower bound** of the sum.
+/// (The only negative terms the model emits are `-X` paired with
+/// `2·l_D·X`; folding yields `l_D·X ≤ (2·l_D − 1)·X`.)
+fn lower_bound(sum: &[Monomial]) -> Option<Vec<Monomial>> {
+    let mut pos: Vec<Monomial> = sum.iter().filter(|m| m.coef > 0.0).copied().collect();
+    for neg in sum.iter().filter(|m| m.coef < 0.0) {
+        let need = -neg.coef;
+        let partner = pos.iter_mut().find(|p| {
+            p.coef > need && p.exps.iter().zip(&neg.exps).all(|(a, b)| a >= b)
+        })?;
+        partner.coef -= need;
+    }
+    Some(pos)
+}
+
+/// Drop negative terms: a pointwise **upper bound** of the sum.
+fn upper_bound(sum: &[Monomial]) -> Vec<Monomial> {
+    sum.iter().filter(|m| m.coef > 0.0).copied().collect()
+}
+
+/// Backtracking injective matching: every `u` monomial is covered by a
+/// distinct dominating `v` monomial. Lists are tiny (≤ 8), so the
+/// worst-case factorial search is irrelevant.
+fn match_all(v: &[Monomial], u: &[Monomial], used: &mut Vec<bool>, idx: usize) -> bool {
+    if idx == u.len() {
+        return true;
+    }
+    for (vi, vm) in v.iter().enumerate() {
+        if !used[vi] && vm.dominates(&u[idx]) {
+            used[vi] = true;
+            if match_all(v, u, used, idx + 1) {
+                return true;
+            }
+            used[vi] = false;
+        }
+    }
+    false
+}
+
+/// Sufficient symbolic test for `Σv ≥ Σu` over all feature vectors ≥ 1.
+pub fn sum_dominates(v: &[Monomial], u: &[Monomial]) -> bool {
+    let Some(v_lo) = lower_bound(v) else { return false };
+    let u_hi = upper_bound(u);
+    if u_hi.len() > v_lo.len() {
+        return false;
+    }
+    let mut used = vec![false; v_lo.len()];
+    match_all(&v_lo, &u_hi, &mut used, 0)
+}
+
+/// Canonical form for exact-equality dedup: sorted (coef, exps) list.
+pub fn canonical(sum: &[Monomial]) -> Vec<(u64, [i8; crate::model::terms::NUM_FEATURES])> {
+    let mut out: Vec<_> = sum.iter().map(|m| (m.coef.to_bits(), m.exps)).collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::terms::feat;
+    use crate::util::{prop, rng::Rng};
+
+    fn m(coef: f64, pairs: &[(usize, i8)]) -> Monomial {
+        let mut mm = Monomial { coef, exps: [0; 16] };
+        for &(f, e) in pairs {
+            mm.exps[f] += e;
+        }
+        mm
+    }
+
+    #[test]
+    fn single_term_dominance() {
+        let v = [m(1.0, &[(feat::I_D, 1), (feat::L_D, 1)])];
+        let u = [m(1.0, &[(feat::I_D, 1)])];
+        assert!(sum_dominates(&v, &u));
+        assert!(!sum_dominates(&u, &v));
+        assert!(sum_dominates(&u, &u)); // reflexive
+    }
+
+    #[test]
+    fn sum_matching_is_injective() {
+        // v = x + x cannot cover u = x + x + x.
+        let x = m(1.0, &[(feat::I_D, 1)]);
+        assert!(!sum_dominates(&[x, x], &[x, x, x]));
+        assert!(sum_dominates(&[x, x, x], &[x, x]));
+    }
+
+    #[test]
+    fn spilled_e_dominates_retained_e() {
+        // spilled: 2·l_D·|E| − |E|  vs  retained: |E|
+        let full_e = m(1.0, &[(feat::I_D, 1), (feat::J_D, 1), (feat::I_G, 1), (feat::J_G, 1)]);
+        let spilled = [full_e.with(feat::L_D, 1).scaled(2.0), full_e.scaled(-1.0)];
+        let retained = [full_e];
+        assert!(sum_dominates(&spilled, &retained));
+        assert!(!sum_dominates(&retained, &spilled));
+    }
+
+    #[test]
+    fn prop_dominance_implies_numeric_ordering() {
+        // Whenever the symbolic test claims V >= U, random feature
+        // vectors (entries >= 1) must agree.
+        prop::quick(
+            200,
+            0x5EED,
+            |rng: &mut Rng, size| {
+                let nterms = 1 + rng.below(3);
+                let gen_sum = |rng: &mut Rng| {
+                    (0..nterms)
+                        .map(|_| {
+                            let mut mm = Monomial { coef: (1 + rng.below(3)) as f64, exps: [0; 16] };
+                            for _ in 0..3 {
+                                mm.exps[rng.below(8)] += rng.below(2) as i8;
+                            }
+                            mm
+                        })
+                        .collect::<Vec<_>>()
+                };
+                let v = gen_sum(rng);
+                let u = gen_sum(rng);
+                let mut f = [1.0f64; 16];
+                for slot in f.iter_mut().take(8) {
+                    *slot = (1 + rng.below(size.max(2))) as f64;
+                }
+                (v, u, f)
+            },
+            |(v, u, f)| {
+                if sum_dominates(v, u) {
+                    let sv: f64 = v.iter().map(|mm| mm.eval(f)).sum();
+                    let su: f64 = u.iter().map(|mm| mm.eval(f)).sum();
+                    if sv + 1e-9 < su {
+                        return Err(format!("claimed dominance but {sv} < {su}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn canonical_is_order_independent() {
+        let a = m(1.0, &[(feat::I_D, 1)]);
+        let b = m(2.0, &[(feat::L_D, 1)]);
+        assert_eq!(canonical(&[a, b]), canonical(&[b, a]));
+        assert_ne!(canonical(&[a]), canonical(&[b]));
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline symbolic pruning (paper §VI-B / §VI-C).
+//!
+//! Computation-ordering + buffer-management solutions are compared
+//! *symbolically* — independent of workload and tiling — and dominated
+//! ones removed without losing any energy–latency-optimal point.
+
+pub mod expr;
+pub mod prune;
+
+pub use expr::sum_dominates;
+pub use prune::{pruned_table, PrunedTable};

@@ -1,0 +1,87 @@
+//! Integer factorization helpers with memoization.
+//!
+//! Tiling enumeration is the dominant *online* cost of MMEE (paper
+//! §VII-H: runtime is dominated by integer factorization and scales
+//! ∝ n^0.4); divisor lists are cached per dimension value.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::sync::OnceLock;
+
+/// Sorted divisors of `n` (ascending).
+pub fn divisors(n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    static CACHE: OnceLock<Mutex<HashMap<usize, Vec<usize>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(d) = cache.lock().unwrap().get(&n) {
+        return d.clone();
+    }
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d * d != n {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    cache.lock().unwrap().insert(n, small.clone());
+    small
+}
+
+/// All ordered pairs `(x_D, x_G)` with `x_D · x_G = n`.
+pub fn factor_pairs(n: usize) -> Vec<(usize, usize)> {
+    divisors(n).into_iter().map(|d| (d, n / d)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(64).len(), 7);
+        assert_eq!(divisors(4096).len(), 13);
+    }
+
+    #[test]
+    fn pairs_multiply_back() {
+        for n in [1usize, 7, 36, 100, 4096] {
+            for (a, b) in factor_pairs(n) {
+                assert_eq!(a * b, n);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_divisor_list_complete_and_sorted() {
+        prop::quick(
+            128,
+            0xD17,
+            |rng, size| rng.range(1, size * 50),
+            |&n| {
+                let ds = divisors(n);
+                for w in ds.windows(2) {
+                    if w[0] >= w[1] {
+                        return Err(format!("not sorted for {n}"));
+                    }
+                }
+                for d in 1..=n {
+                    let is_div = n % d == 0;
+                    if is_div != ds.contains(&d) {
+                        return Err(format!("divisor set wrong at {d} for {n}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Online tiling enumeration (paper Fig. 12 right branch).
+//!
+//! Tile sizes are integer factorizations of the workload dimensions:
+//! `X = x_D · x_G`. All divisor pairs of each dimension are enumerated
+//! and crossed; a cheap footprint prefilter drops tilings whose minimal
+//! working set can never fit the buffer.
+
+pub mod factorize;
+
+pub use factorize::{divisors, factor_pairs};
+
+use crate::config::workload::FusedGemm;
+
+/// One concrete tiling: inter-tile counts `xd` and granule sizes `xg`
+/// per dimension `[i, k, l, j]`, with `xd[d] * xg[d] = dim[d]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tiling {
+    pub xd: [usize; 4],
+    pub xg: [usize; 4],
+}
+
+impl Tiling {
+    /// The untiled mapping (one giant tile per dimension).
+    pub fn unit(g: &FusedGemm) -> Tiling {
+        Tiling { xd: [1; 4], xg: g.dims() }
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "i{}x{} k{}x{} l{}x{} j{}x{}",
+            self.xd[0], self.xg[0], self.xd[1], self.xg[1],
+            self.xd[2], self.xg[2], self.xd[3], self.xg[3]
+        )
+    }
+}
+
+/// Enumerate every tiling of a fused GEMM, optionally prefiltered by a
+/// lower bound on the on-chip working set: any fused mapping needs at
+/// least one granule tile of A, B, C, D and E simultaneously
+/// (`min_footprint`), so tilings exceeding `capacity_words` are dropped
+/// before evaluation. `capacity_words = None` disables the prefilter.
+pub fn enumerate_tilings(g: &FusedGemm, capacity_words: Option<f64>) -> Vec<Tiling> {
+    let fi = factor_pairs(g.i);
+    let fk = factor_pairs(g.k);
+    let fl = factor_pairs(g.l);
+    let fj = factor_pairs(g.j);
+    let mut out = Vec::with_capacity(fi.len() * fk.len() * fl.len() * fj.len());
+    for &(id, ig) in &fi {
+        for &(kd, kg) in &fk {
+            for &(ld, lg) in &fl {
+                for &(jd, jg) in &fj {
+                    let t = Tiling { xd: [id, kd, ld, jd], xg: [ig, kg, lg, jg] };
+                    if let Some(cap) = capacity_words {
+                        if min_footprint(&t) > cap {
+                            continue;
+                        }
+                    }
+                    out.push(t);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Lower bound on any mapping's working set for this tiling: one granule
+/// of each operand (C's granule is the i×l tile it must fully hold).
+pub fn min_footprint(t: &Tiling) -> f64 {
+    let [ig, kg, lg, jg] = [t.xg[0] as f64, t.xg[1] as f64, t.xg[2] as f64, t.xg[3] as f64];
+    ig * kg + kg * lg + ig * lg + lg * jg + ig * jg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn unit_tiling() {
+        let g = FusedGemm { i: 512, k: 64, l: 512, j: 64 };
+        let t = Tiling::unit(&g);
+        assert_eq!(t.xd, [1, 1, 1, 1]);
+        assert_eq!(t.xg, [512, 64, 512, 64]);
+    }
+
+    #[test]
+    fn enumeration_counts_match_divisor_products() {
+        let g = FusedGemm { i: 16, k: 4, l: 8, j: 4 };
+        let tilings = enumerate_tilings(&g, None);
+        assert_eq!(
+            tilings.len(),
+            divisors(16).len() * divisors(4).len() * divisors(8).len() * divisors(4).len()
+        );
+    }
+
+    #[test]
+    fn every_tiling_factors_exactly() {
+        let g = FusedGemm { i: 48, k: 6, l: 20, j: 9 };
+        for t in enumerate_tilings(&g, None) {
+            assert_eq!(t.xd[0] * t.xg[0], 48);
+            assert_eq!(t.xd[1] * t.xg[1], 6);
+            assert_eq!(t.xd[2] * t.xg[2], 20);
+            assert_eq!(t.xd[3] * t.xg[3], 9);
+        }
+    }
+
+    #[test]
+    fn prefilter_only_drops_infeasible() {
+        let g = FusedGemm { i: 64, k: 16, l: 64, j: 16 };
+        let all = enumerate_tilings(&g, None);
+        let cap = 4096.0;
+        let kept = enumerate_tilings(&g, Some(cap));
+        assert!(kept.len() < all.len());
+        for t in &all {
+            let keep = min_footprint(t) <= cap;
+            assert_eq!(kept.contains(t), keep, "tiling {t:?}");
+        }
+    }
+
+    #[test]
+    fn prop_min_footprint_positive_and_monotone_in_granules() {
+        prop::quick(
+            64,
+            0xF00D,
+            |rng, size| {
+                let s = size.max(2);
+                Tiling {
+                    xd: [1; 4],
+                    xg: [
+                        rng.range(1, s),
+                        rng.range(1, s),
+                        rng.range(1, s),
+                        rng.range(1, s),
+                    ],
+                }
+            },
+            |t| {
+                let f = min_footprint(t);
+                if f <= 0.0 {
+                    return Err("non-positive footprint".into());
+                }
+                let mut bigger = *t;
+                bigger.xg[0] *= 2;
+                if min_footprint(&bigger) <= f {
+                    return Err("not monotone in i_g".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Cargo bench targets use `harness = false` and call [`Bench::run`]
+//! directly: warmup, adaptive iteration count targeting a wall-time
+//! budget, and median/mean/p10/p90 statistics over per-iteration samples.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>10.3?} median  {:>10.3?} mean  [{:>9.3?} .. {:>9.3?}]  ({} iters)",
+            self.name, self.median, self.mean, self.p10, self.p90, self.iters
+        )
+    }
+}
+
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    /// Minimum / maximum sample counts.
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_secs(2),
+            min_samples: 5,
+            max_samples: 200,
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, which performs one logical iteration and may return a
+    /// value (black-boxed to prevent dead-code elimination).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        // Warmup: one untimed call (fills caches, compiles executables...).
+        std::hint::black_box(f());
+
+        // Pilot to estimate per-iter cost.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let pilot = t0.elapsed().max(Duration::from_nanos(50));
+
+        let est = (self.budget.as_secs_f64() / pilot.as_secs_f64()) as usize;
+        let n = est.clamp(self.min_samples, self.max_samples);
+
+        let mut times = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        times.sort();
+        let mean = times.iter().sum::<Duration>() / n as u32;
+        let sample = Sample {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median: times[n / 2],
+            p10: times[n / 10],
+            p90: times[(n * 9) / 10],
+        };
+        println!("{}", sample.report());
+        self.samples.push(sample.clone());
+        sample
+    }
+
+    /// Time a single shot (for long-running end-to-end measurements where
+    /// repetition is impractical — e.g. whole paper-table regenerations).
+    pub fn once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (Sample, T) {
+        let t = Instant::now();
+        let out = std::hint::black_box(f());
+        let d = t.elapsed();
+        let sample = Sample {
+            name: name.to_string(),
+            iters: 1,
+            mean: d,
+            median: d,
+            p10: d,
+            p90: d,
+        };
+        println!("{}", sample.report());
+        self.samples.push(sample.clone());
+        (sample, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_records() {
+        let mut b = Bench { budget: Duration::from_millis(20), ..Bench::default() };
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median > Duration::ZERO);
+        assert_eq!(b.samples.len(), 1);
+    }
+
+    #[test]
+    fn once_records_single_sample() {
+        let mut b = Bench::new();
+        let (s, v) = b.once("one", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(s.iters, 1);
+    }
+}

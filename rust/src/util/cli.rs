@@ -1,0 +1,114 @@
+//! Minimal CLI argument parser (no `clap` offline).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional...]`
+//! which covers the `mmee` CLI surface (optimize / validate / bench-fig /
+//! bench-table / bench-all / serve / charts).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--switch`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flag(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("optimize --workload bert-base --seq 4096 --xla");
+        assert_eq!(a.subcommand.as_deref(), Some("optimize"));
+        assert_eq!(a.flag("workload"), Some("bert-base"));
+        assert_eq!(a.usize_flag("seq", 0), 4096);
+        assert!(a.has("xla"));
+    }
+
+    #[test]
+    fn eq_form_and_positional() {
+        let a = parse("bench-fig 17 --out=results");
+        assert_eq!(a.subcommand.as_deref(), Some("bench-fig"));
+        assert_eq!(a.positional, vec!["17"]);
+        assert_eq!(a.flag("out"), Some("results"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("validate --charts");
+        assert!(a.has("charts"));
+        assert!(a.flag("charts").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_flag("n", 7), 7);
+        assert_eq!(a.flag_or("mode", "energy"), "energy");
+        assert!((a.f64_flag("eps", 0.5) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates built from scratch for the offline environment:
+//! JSON, deterministic RNG, a property-test runner, a micro-bench harness
+//! and a small CLI parser (no serde / proptest / criterion / clap offline).
+
+pub mod json;
+pub mod rng;
+pub mod prop;
+pub mod bench;
+pub mod cli;
+pub mod stats;

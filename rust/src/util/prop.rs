@@ -1,0 +1,118 @@
+//! Tiny property-based testing harness (no `proptest` offline).
+//!
+//! `check(cases, gen, prop)` draws `cases` random inputs from `gen` and
+//! asserts `prop`. On failure it retries the failing seed with a bounded
+//! shrink loop (`gen` is re-invoked with smaller "size" hints) and reports
+//! the seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (scaled up over cases).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run a property: `gen(rng, size)` produces an input, `prop(input)`
+/// returns `Err(reason)` on violation.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        // Grow the size hint over the run: small cases first for cheap
+        // shrink-free debugging, larger ones later for coverage.
+        let size = 1 + (cfg.max_size * (case + 1)) / cfg.cases;
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(reason) = prop(&input) {
+            // Bounded shrink: re-draw at smaller sizes from the same seed
+            // family and keep the smallest failing input.
+            let mut best: (usize, T, String) = (size, input, reason);
+            for shrink_size in (1..size).rev().take(16) {
+                let mut srng = Rng::new(case_seed);
+                let candidate = gen(&mut srng, shrink_size);
+                if let Err(r) = prop(&candidate) {
+                    best = (shrink_size, candidate, r);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, size {}):\n  input: {:?}\n  reason: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config and a fixed per-test seed.
+pub fn quick<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    gen: impl FnMut(&mut Rng, usize) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(&Config { cases, seed, ..Config::default() }, gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quick(
+            64,
+            1,
+            |rng, size| rng.below(size.max(1)),
+            |&v| if v < 64 { Ok(()) } else { Err(format!("{v} too big")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        quick(
+            64,
+            2,
+            |rng, _| rng.below(100),
+            |&v| if v < 5 { Ok(()) } else { Err("nope".into()) },
+        );
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = Vec::new();
+        quick(
+            16,
+            42,
+            |rng, size| {
+                let v = rng.below(size.max(1));
+                first.push(v);
+                v
+            },
+            |_| Ok(()),
+        );
+        let mut second = Vec::new();
+        quick(
+            16,
+            42,
+            |rng, size| {
+                let v = rng.below(size.max(1));
+                second.push(v);
+                v
+            },
+            |_| Ok(()),
+        );
+        assert_eq!(first, second);
+    }
+}

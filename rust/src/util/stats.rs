@@ -1,0 +1,92 @@
+//! Small statistics helpers used by the validation and report harnesses
+//! (R², mean/max relative error, power-law fits for Fig. 22).
+
+/// Coefficient of determination between predictions and references.
+pub fn r_squared(pred: &[f64], refv: &[f64]) -> f64 {
+    assert_eq!(pred.len(), refv.len());
+    assert!(!refv.is_empty());
+    let mean = refv.iter().sum::<f64>() / refv.len() as f64;
+    let ss_tot: f64 = refv.iter().map(|r| (r - mean).powi(2)).sum();
+    let ss_res: f64 = pred
+        .iter()
+        .zip(refv)
+        .map(|(p, r)| (p - r).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 { 1.0 } else { 0.0 }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Mean and max relative error |p-r|/|r| (r == 0 pairs are skipped).
+pub fn rel_errors(pred: &[f64], refv: &[f64]) -> (f64, f64) {
+    let mut sum = 0.0;
+    let mut max = 0.0f64;
+    let mut n = 0usize;
+    for (p, r) in pred.iter().zip(refv) {
+        if *r == 0.0 {
+            continue;
+        }
+        let e = ((p - r) / r).abs();
+        sum += e;
+        max = max.max(e);
+        n += 1;
+    }
+    (if n == 0 { 0.0 } else { sum / n as f64 }, max)
+}
+
+/// Least-squares fit of `y = a * x^b` in log-log space; returns (a, b).
+pub fn power_law_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let lx: Vec<f64> = x.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.ln()).collect();
+    let n = lx.len() as f64;
+    let sx: f64 = lx.iter().sum();
+    let sy: f64 = ly.iter().sum();
+    let sxx: f64 = lx.iter().map(|v| v * v).sum();
+    let sxy: f64 = lx.iter().zip(&ly).map(|(a, b)| a * b).sum();
+    let b = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let a = ((sy - b * sx) / n).exp();
+    (a, b)
+}
+
+/// Geometric mean (used for average speedup/ratio reporting).
+pub fn geomean(vals: &[f64]) -> f64 {
+    assert!(!vals.is_empty());
+    (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r2_perfect_and_poor() {
+        let r = [1.0, 2.0, 3.0, 4.0];
+        assert!((r_squared(&r, &r) - 1.0).abs() < 1e-12);
+        let bad = [4.0, 1.0, 3.0, 2.0];
+        assert!(r_squared(&bad, &r) < 0.5);
+    }
+
+    #[test]
+    fn rel_error_basic() {
+        let (mean, max) = rel_errors(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!((max - 0.1).abs() < 1e-12);
+        assert!((mean - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_fit_recovers_exponent() {
+        let x: Vec<f64> = (1..=20).map(|i| i as f64 * 100.0).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v.powf(0.4)).collect();
+        let (a, b) = power_law_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-6, "a={a}");
+        assert!((b - 0.4).abs() < 1e-9, "b={b}");
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

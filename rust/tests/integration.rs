@@ -1,0 +1,229 @@
+//! Cross-module integration tests: pruning optimality, backend agreement
+//! (native / branchy / XLA-PJRT), service loop, and model-vs-simulator
+//! properties on randomized workload shapes.
+
+use mmee::config::{presets, FusedGemm, Workload};
+use mmee::encode::{BoundaryMatrix, QueryMatrix};
+use mmee::eval::{branchy::BranchyBackend, native::NativeBackend, xla::XlaBackend, EvalBackend};
+use mmee::loopnest::dims::STATIONARIES;
+use mmee::loopnest::{BufferingLevels, Candidate, LoopOrder};
+use mmee::model::Multipliers;
+use mmee::search::{MmeeEngine, Objective};
+use mmee::sim::validate::validate_mapping;
+use mmee::symbolic::prune::deduped_unpruned;
+use mmee::tiling::{enumerate_tilings, Tiling};
+use mmee::util::rng::Rng;
+
+fn small_attention() -> Workload {
+    let mut w = presets::bert_base(512);
+    w.gemm = FusedGemm { i: 32, k: 8, l: 32, j: 8 };
+    w
+}
+
+/// Paper §VI-C: pruning must not change the optimum of ANY objective.
+/// Exhaustive check on a small workload where the unpruned space is
+/// tractable.
+#[test]
+fn pruning_preserves_all_objectives() {
+    let engine = MmeeEngine::native();
+    let w = small_attention();
+    let mut unpruned = Vec::new();
+    for rec in [false, true] {
+        for e in deduped_unpruned(rec) {
+            for sm1 in STATIONARIES {
+                for sm2 in STATIONARIES {
+                    unpruned.push(Candidate { order: e.order, levels: e.levels, sm1, sm2 });
+                }
+            }
+        }
+    }
+    let q_unpruned = QueryMatrix::build(unpruned);
+    for accel in [presets::accel1(), presets::coral()] {
+        for obj in [Objective::Energy, Objective::Latency, Objective::Edp] {
+            let sp = engine.optimize(&w, &accel, obj);
+            let su = engine.optimize_with_candidates(&w, &accel, obj, &q_unpruned);
+            let (vp, vu) = (
+                obj.score(sp.metrics.energy, sp.metrics.latency),
+                obj.score(su.metrics.energy, su.metrics.latency),
+            );
+            assert!(
+                (vp - vu).abs() <= 1e-9 * vu.abs(),
+                "{} on {}: pruned {vp} vs unpruned {vu}",
+                obj.name(),
+                accel.name
+            );
+        }
+    }
+}
+
+/// All three backends must produce the same metric surfaces.
+#[test]
+fn all_backends_agree_on_surface() {
+    let accel = presets::accel1();
+    let w = presets::bert_base(512);
+    let q = QueryMatrix::build(MmeeEngine::candidates()[..128].to_vec());
+    let tilings: Vec<Tiling> =
+        enumerate_tilings(&w.gemm, None).into_iter().take(200).collect();
+    let b = BoundaryMatrix::build(tilings, &accel, &w);
+    let hw = accel.hw_vector();
+    let mult = Multipliers::for_workload(&w, &accel);
+
+    let native = NativeBackend.eval_all(&q, &b, &hw, &mult);
+    let branchy = BranchyBackend.eval_all(&q, &b, &hw, &mult);
+    for i in 0..native.energy.len() {
+        assert!(
+            (native.energy[i] - branchy.energy[i]).abs()
+                <= 1e-4 * native.energy[i].abs().max(1e-12),
+            "native vs branchy energy at {i}"
+        );
+    }
+
+    match XlaBackend::new() {
+        Ok(xla) => {
+            let xb = xla.eval_all(&q, &b, &hw, &mult);
+            let mut checked = 0;
+            for i in 0..native.energy.len() {
+                let (n, x) = (native.energy[i], xb.energy[i]);
+                if n >= 1e29 {
+                    assert!(x >= 1e29, "feasibility disagreement at {i}");
+                    continue;
+                }
+                // f32 matmul in log domain: allow small relative slack.
+                assert!(
+                    (n - x).abs() <= 3e-3 * n.abs().max(1e-12),
+                    "native {n} vs xla {x} at {i}"
+                );
+                checked += 1;
+            }
+            assert!(checked > 1000, "too few feasible comparisons: {checked}");
+        }
+        Err(e) => eprintln!("skipping xla agreement ({e}); run `make artifacts`"),
+    }
+}
+
+/// The XLA reduce artifact and the native argmin agree on optima.
+#[test]
+fn xla_reduce_matches_native_argmin() {
+    let Ok(xla) = XlaBackend::new() else {
+        eprintln!("artifacts missing; skipped");
+        return;
+    };
+    let accel = presets::accel2();
+    let w = presets::bert_base(512);
+    let q = MmeeEngine::query();
+    let tilings = enumerate_tilings(&w.gemm, Some(accel.capacity_words() as f64));
+    let b = BoundaryMatrix::build(tilings, &accel, &w);
+    let hw = accel.hw_vector();
+    let mult = Multipliers::for_workload(&w, &accel);
+    let n = NativeBackend.argmin3(q, &b, &hw, &mult);
+    let x = xla.argmin3(q, &b, &hw, &mult);
+    for i in 0..3 {
+        let rel = (n[i].0 - x[i].0).abs() / n[i].0.max(1e-30);
+        assert!(rel < 1e-3, "objective {i}: native {} vs xla {}", n[i].0, x[i].0);
+    }
+}
+
+/// Randomized model-vs-simulator agreement across workload shapes
+/// (the Fig. 13 property at test scale).
+#[test]
+fn model_equals_simulator_random_shapes() {
+    let mut rng = Rng::new(0x1772);
+    let accel = presets::accel1();
+    let orders = LoopOrder::all();
+    for trial in 0..60 {
+        let g = FusedGemm {
+            i: 8 << rng.below(3),
+            k: 4 << rng.below(2),
+            l: 8 << rng.below(3),
+            j: 4 << rng.below(2),
+        };
+        let mut w = presets::bert_base(512);
+        w.gemm = g;
+        let cand = Candidate {
+            order: *rng.choose(&orders),
+            levels: BufferingLevels {
+                a: rng.below(5) as u8,
+                b: rng.below(5) as u8,
+                d: rng.below(5) as u8,
+                e: rng.below(5) as u8,
+            },
+            sm1: *rng.choose(&STATIONARIES),
+            sm2: *rng.choose(&STATIONARIES),
+        };
+        // All-xd >= 2 tiling: the exact-equality regime.
+        let pick = |n: usize, rng: &mut Rng| -> (usize, usize) {
+            let pairs: Vec<(usize, usize)> = mmee::tiling::factor_pairs(n)
+                .into_iter()
+                .filter(|&(d, _)| d >= 2)
+                .collect();
+            *rng.choose(&pairs)
+        };
+        let (id, ig) = pick(g.i, &mut rng);
+        let (kd, kg) = pick(g.k, &mut rng);
+        let (ld, lg) = pick(g.l, &mut rng);
+        let (jd, jg) = pick(g.j, &mut rng);
+        let t = Tiling { xd: [id, kd, ld, jd], xg: [ig, kg, lg, jg] };
+        let v = validate_mapping(&cand, &t, &accel, &w);
+        assert!(
+            (v.da_model - v.da_sim).abs() <= 1e-6 * v.da_sim.max(1.0),
+            "trial {trial}: DA {} vs {} ({})",
+            v.da_model,
+            v.da_sim,
+            v.name
+        );
+        assert!(
+            (v.bs_model - v.bs_sim).abs() <= 1e-6 * v.bs_sim.max(1.0),
+            "trial {trial}: BS {} vs {} ({})",
+            v.bs_model,
+            v.bs_sim,
+            v.name
+        );
+    }
+}
+
+/// Compiled (pair/group) query form is consistent: candidates in the
+/// same group share BR/MAC/SMX/CL monomials exactly.
+#[test]
+fn compiled_group_sharing_is_sound() {
+    use mmee::model::derive_slots;
+    use mmee::model::terms::seg;
+    let cands = MmeeEngine::candidates();
+    let mut rng = Rng::new(0x6077);
+    for _ in 0..100 {
+        let a = rng.choose(cands);
+        let b = rng.choose(cands);
+        if a.recompute() == b.recompute() && a.sm1 == b.sm1 && a.sm2 == b.sm2 {
+            let sa = derive_slots(a);
+            let sb = derive_slots(b);
+            for sg in [seg::BR, seg::MAC, seg::SMX, seg::CL1, seg::CL2] {
+                assert_eq!(sa.segment(sg), sb.segment(sg), "{} vs {}", a.name(), b.name());
+            }
+        }
+    }
+}
+
+/// End-to-end service loop (the L3 leader path).
+#[test]
+fn service_handles_mixed_batch() {
+    let engine = MmeeEngine::native();
+    let input = concat!(
+        r#"{"workload": "bert-base", "seq": 512, "accel": "accel2", "objective": "edp"}"#,
+        "\n",
+        r#"{"workload": "cc2", "accel": "accel1", "objective": "energy"}"#,
+        "\n",
+        r#"{"workload": "bert-base", "seq": 511, "accel": "accel1"}"#,
+        "\n",
+    );
+    let mut out = Vec::new();
+    let served =
+        mmee::coordinator::service::serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+    assert_eq!(served, 3);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // seq 511 still works (dims need not be powers of two).
+    for line in &lines {
+        let j = mmee::util::json::Json::parse(line).unwrap();
+        assert!(j.get("energy_j").is_some() || j.get("error").is_some());
+    }
+    assert!(lines.iter().all(|l| !l.contains("\"error\"")));
+}
