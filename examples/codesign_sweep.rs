@@ -1,45 +1,81 @@
 //! Hardware/dataflow co-design sweep — the DSE loop MMEE is built for
 //! (paper §I: "dataflow mapping ... repeatedly invoked when evaluating
 //! various hardware architectures"). Sweeps buffer capacity and PE-array
-//! shape for a fixed workload and prints the EDP landscape.
+//! shape for a fixed workload via inline `AccelSpec`s and prints the
+//! EDP landscape. Every point is one `MappingRequest` against a shared
+//! engine. Note each sweep point changes the hardware, so the sweep
+//! itself is all cache misses by design — the re-query of the winning
+//! configuration at the end is what lands in the plan cache, the
+//! pattern of a DSE driver revisiting its best candidates.
 //!
 //! ```sh
 //! cargo run --release --example codesign_sweep
 //! ```
 
-use mmee::config::presets;
-use mmee::search::{MmeeEngine, Objective};
+use mmee::{AccelSpec, MappingRequest, MmeeEngine, Objective, WorkloadSpec};
 
-fn main() {
-    let engine = MmeeEngine::native();
-    let w = presets::gpt3_13b(2048);
+fn main() -> mmee::Result<()> {
+    let engine = MmeeEngine::builder().cache_capacity(128).build();
+    let workload = WorkloadSpec::preset("gpt3-13b", 2048);
+    let base = AccelSpec::preset("accel1").resolve()?;
 
     println!("== buffer-capacity sweep (32x32 PEs, GPT-3-13B @ 2K) ==");
     println!("{:>8} {:>12} {:>12} {:>14} {:>12}", "buffer", "energy(mJ)", "lat(ms)", "EDP(mJ*ms)", "DA(Mwords)");
     for kb in [64usize, 128, 256, 512, 1024, 2048, 4096] {
-        let accel = presets::accel1().with_buffer_bytes(kb << 10);
-        let s = engine.optimize(&w, &accel, Objective::Edp);
-        println!(
-            "{:>6}KB {:>12.3} {:>12.3} {:>14.4} {:>12.2}",
-            kb,
-            s.metrics.energy * 1e3,
-            s.metrics.latency * 1e3,
-            s.metrics.edp() * 1e6,
-            s.metrics.da / 1e6
+        let req = MappingRequest::new(
+            workload.clone(),
+            AccelSpec::inline(base.with_buffer_bytes(kb << 10)),
+            Objective::Edp,
         );
+        match engine.plan(&req) {
+            Ok(plan) => {
+                let m = &plan.solution.metrics;
+                println!(
+                    "{:>6}KB {:>12.3} {:>12.3} {:>14.4} {:>12.2}",
+                    kb,
+                    m.energy * 1e3,
+                    m.latency * 1e3,
+                    m.edp() * 1e6,
+                    m.da / 1e6
+                );
+            }
+            // Tiny buffers may simply not fit the workload: the typed
+            // error keeps the sweep going instead of aborting it.
+            Err(e) => println!("{:>6}KB {:>12}", kb, format!("({})", e.kind())),
+        }
     }
 
     println!("\n== PE-array shape sweep (1 MB buffer, 1024 PEs, Fig. 27 style) ==");
     println!("{:>10} {:>12} {:>12} {:>14}", "shape", "energy(mJ)", "lat(ms)", "EDP(mJ*ms)");
     for (pr, pc) in [(8usize, 128usize), (16, 64), (32, 32), (64, 16), (128, 8)] {
-        let accel = presets::accel1().with_pe_shape(pr, pc);
-        let s = engine.optimize(&w, &accel, Objective::Edp);
+        let req = MappingRequest::new(
+            workload.clone(),
+            AccelSpec::inline(base.with_pe_shape(pr, pc)),
+            Objective::Edp,
+        );
+        let plan = engine.plan(&req)?;
+        let m = &plan.solution.metrics;
         println!(
             "{:>5}x{:<4} {:>12.3} {:>12.3} {:>14.4}",
             pr, pc,
-            s.metrics.energy * 1e3,
-            s.metrics.latency * 1e3,
-            s.metrics.edp() * 1e6
+            m.energy * 1e3,
+            m.latency * 1e3,
+            m.edp() * 1e6
         );
     }
+    // A DSE driver re-examines its shortlisted configurations: the
+    // repeat query is served from the plan cache without a new search.
+    let revisit = MappingRequest::new(
+        workload.clone(),
+        AccelSpec::inline(base.with_pe_shape(32, 32)),
+        Objective::Edp,
+    );
+    let again = engine.plan(&revisit)?;
+    eprintln!(
+        "revisit of 32x32: cache_hit={} in {:?}",
+        again.provenance.cache_hit, again.stats.elapsed
+    );
+    let (hits, misses) = engine.plan_cache_stats();
+    eprintln!("plan cache over the run: {hits} hits / {misses} misses");
+    Ok(())
 }

@@ -1,31 +1,38 @@
 //! MMEE as a compiler scheduling pass (paper §VII-L): given a small
 //! transformer-layer "graph" (attention + FFN pair), pick a dataflow for
 //! each fusable operator pair and emit a textual schedule the backend
-//! code generator would consume.
+//! code generator would consume. Each pair is one typed
+//! `MappingRequest`; the pass consumes `MappingPlan`s.
 //!
 //! ```sh
 //! cargo run --release --example compiler_pass
 //! ```
 
-use mmee::config::presets;
-use mmee::search::{MmeeEngine, Objective};
+use mmee::{AccelSpec, MappingRequest, MmeeEngine, Objective, WorkloadSpec};
 
-fn main() {
-    let engine = MmeeEngine::native();
-    let accel = presets::accel2();
+fn main() -> mmee::Result<()> {
+    let engine = MmeeEngine::builder().build();
+    let accel_spec = AccelSpec::preset("accel2");
+    let accel = accel_spec.resolve()?;
 
     // The layer's fusable pairs, as a high-level dialect would hand them
     // to the pass: attention (softmax between the GEMMs) and the FFN.
     let seq = 2048;
     let graph = [
-        presets::gpt3_6_7b_attention(seq),
-        presets::gpt3_6_7b_ffn(seq),
+        WorkloadSpec::preset("gpt3-6.7b", seq),
+        WorkloadSpec::preset("gpt3-6.7b-ffn", seq),
     ];
 
     println!("// schedule emitted by the MMEE pass for {}", accel.name);
-    for w in &graph {
-        let s = engine.optimize(w, &accel, Objective::Edp);
-        println!("\n// pair {}: {} mappings explored in {:?}", w.name, s.evaluated, s.elapsed);
+    for spec in &graph {
+        let req = MappingRequest::new(spec.clone(), accel_spec.clone(), Objective::Edp);
+        let plan = engine.plan(&req)?;
+        let w = spec.resolve()?;
+        let s = &plan.solution;
+        println!(
+            "\n// pair {}: {} mappings explored in {:?} ({})",
+            w.name, plan.stats.mappings, plan.stats.elapsed, plan.provenance.backend
+        );
         println!(
             "fused_pair @{} {{ order = \"{}\", tiling = \"{}\", recompute = {}, stationary = (\"{}\", \"{}\") }}",
             w.name,
@@ -35,8 +42,9 @@ fn main() {
             s.candidate.sm1.name(),
             s.candidate.sm2.name(),
         );
-        for line in s.render_loopnest(w, &accel).lines() {
+        for line in s.render_loopnest(&w, &accel).lines() {
             println!("//   {line}");
         }
     }
+    Ok(())
 }

@@ -4,11 +4,13 @@
 //! What this proves composes (DESIGN.md §2):
 //!   L1/L2 — the AOT JAX/Pallas evaluation graph, loaded from
 //!           `artifacts/*.hlo.txt` and executed via PJRT (python was only
-//!           involved at `make artifacts` time);
+//!           involved at `make artifacts` time); requires a `pjrt`-
+//!           feature build — default builds fall back to native only;
 //!   L3   — offline symbolic pruning, query/boundary encoding, tiling
 //!           enumeration, batched evaluation, argmin/Pareto extraction,
 //!           the stage-accurate simulator cross-check, and the TileFlow
-//!           baseline it must beat.
+//!           baseline it must beat — all through the typed
+//!           MappingRequest → MappingPlan pipeline.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_paper_repro
@@ -16,12 +18,20 @@
 
 use mmee::baselines::tileflow::TileFlow;
 use mmee::baselines::Mapper;
-use mmee::config::presets;
+use mmee::error::MmeeError;
 use mmee::eval::xla::XlaBackend;
-use mmee::search::{MmeeEngine, Objective};
 use mmee::sim::validate::validate_mapping;
+use mmee::{MappingRequest, MmeeEngine, Objective};
 
-fn main() -> anyhow::Result<()> {
+fn ensure(cond: bool, what: &str) -> mmee::Result<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(MmeeError::Internal(what.to_string()))
+    }
+}
+
+fn main() -> mmee::Result<()> {
     println!("=== MMEE end-to-end reproduction driver ===\n");
 
     // --- L1/L2: the compiled evaluation graph through PJRT ------------
@@ -40,41 +50,40 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    let w = presets::bert_base(4096);
-    let accel = presets::accel2();
+    let request = MappingRequest::preset("bert-base", 4096, "accel2", Objective::Energy);
+    let (w, accel) = request.resolve()?;
     println!("\nworkload: {} on {}\n", w.name, accel.name);
 
     // --- L3 search: native engine ------------------------------------
-    let native = MmeeEngine::native();
-    let t0 = std::time::Instant::now();
-    let s_native = native.optimize(&w, &accel, Objective::Energy);
+    let native = MmeeEngine::builder().build();
+    let p_native = native.plan(&request)?;
+    let s_native = &p_native.solution;
     println!(
         "[native ] best energy {:.3} mJ / {:.3} ms  ({:.2e} mappings, {:?})",
         s_native.metrics.energy * 1e3,
         s_native.metrics.latency * 1e3,
-        s_native.evaluated,
-        t0.elapsed()
+        p_native.stats.mappings,
+        p_native.stats.elapsed
     );
 
     // --- L3 search through the compiled L1/L2 artifact -----------------
     if let Some(xla) = xla {
-        let engine = MmeeEngine::with_backend(Box::new(xla));
-        let t1 = std::time::Instant::now();
-        let s_xla = engine.optimize(&w, &accel, Objective::Energy);
+        let engine = MmeeEngine::builder().backend(Box::new(xla)).build();
+        let p_xla = engine.plan(&request)?;
         println!(
             "[xla    ] best energy {:.3} mJ / {:.3} ms  ({:?})",
-            s_xla.metrics.energy * 1e3,
-            s_xla.metrics.latency * 1e3,
-            t1.elapsed()
+            p_xla.solution.metrics.energy * 1e3,
+            p_xla.solution.metrics.latency * 1e3,
+            p_xla.stats.elapsed
         );
-        let rel = (s_xla.metrics.energy - s_native.metrics.energy).abs()
+        let rel = (p_xla.solution.metrics.energy - s_native.metrics.energy).abs()
             / s_native.metrics.energy;
-        anyhow::ensure!(rel < 1e-3, "backend disagreement: {rel}");
+        ensure(rel < 1e-3, &format!("backend disagreement: {rel}"))?;
         println!("[check  ] native == xla optimum (rel err {rel:.2e})");
     }
 
     // --- headline comparison vs TileFlow -------------------------------
-    let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+    let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy)?;
     println!(
         "[tileflow] energy {:.3} mJ / {:.3} ms  ->  MMEE saves {:.0}% energy, {:.0}% latency",
         tf.metrics.energy * 1e3,
@@ -90,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     };
     let t = mmee::tiling::Tiling { xd: [4, 2, 4, 2], xg: [16, 8, 16, 8] };
     let v = validate_mapping(&s_native.candidate, &t, &accel, &small);
-    anyhow::ensure!((v.da_model - v.da_sim).abs() < 1e-6, "model/sim drift");
+    ensure((v.da_model - v.da_sim).abs() < 1e-6, "model/sim drift")?;
     println!(
         "[sim    ] winning dataflow executed: DA model {} == sim {} (exact)",
         v.da_model, v.da_sim

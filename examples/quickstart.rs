@@ -1,29 +1,30 @@
-//! Quickstart: optimize one attention workload and print the solution,
-//! its pseudo-nested-loop dataflow, and the energy/latency breakdown.
+//! Quickstart: build a typed `MappingRequest`, plan it, and print the
+//! solution, its pseudo-nested-loop dataflow, and the energy/latency
+//! breakdown plus search stats.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use mmee::config::presets;
-use mmee::search::{MmeeEngine, Objective};
+use mmee::{MappingRequest, MmeeEngine, Objective};
 
-fn main() {
+fn main() -> mmee::Result<()> {
     // BERT-Base attention (one layer, all 12 heads) on the TPU-like
     // Accel. 2 from the paper's evaluation.
-    let workload = presets::bert_base(4096);
-    let accel = presets::accel2();
+    let engine = MmeeEngine::builder().build();
+    let request = MappingRequest::preset("bert-base", 4096, "accel2", Objective::Energy);
 
-    let engine = MmeeEngine::native();
-    let solution = engine.optimize(&workload, &accel, Objective::Energy);
+    let plan = engine.plan(&request)?;
+    println!("{:#}\n", plan.to_json());
 
-    println!("{:#}\n", solution.to_json());
-    println!("{}", solution.render_loopnest(&workload, &accel));
-    let m = &solution.metrics;
+    let (workload, accel) = request.resolve()?;
+    println!("{}", plan.solution.render_loopnest(&workload, &accel));
+    let m = &plan.solution.metrics;
     println!("energy breakdown (mJ): dram {:.3}  sram {:.3}  mac {:.3}  sfu {:.3}",
         m.e_dram * 1e3, m.e_sram * 1e3, m.e_mac * 1e3, m.e_sfu * 1e3);
     println!("latency (ms): compute {:.3}  dram {:.3}  -> {:.3}",
         m.lat_comp * 1e3, m.lat_dram * 1e3, m.latency * 1e3);
     println!("\nevaluated {:.2e} mappings in {:?} ({})",
-        solution.evaluated, solution.elapsed, engine.backend_name());
+        plan.stats.mappings, plan.stats.elapsed, plan.provenance.backend);
+    Ok(())
 }

@@ -1,5 +1,8 @@
 //! The mapper-as-a-service loop: drives `coordinator::service` with a
 //! batch of requests, as an AI compiler or hardware-DSE client would.
+//! The batch repeats a query and ends with a bad one, showing the
+//! cached serving path and the structured error line (the loop never
+//! panics on bad input).
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
@@ -9,15 +12,24 @@ use mmee::coordinator::service;
 use mmee::search::MmeeEngine;
 
 fn main() {
-    let engine = MmeeEngine::native();
+    let engine = MmeeEngine::builder().cache_capacity(64).build();
     let requests = r#"
 {"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "energy"}
-{"workload": "bert-base", "seq": 4096, "accel": "accel2", "objective": "latency"}
+{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "latency"}
+{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "energy"}
 {"workload": "gpt3-13b", "seq": 2048, "accel": "accel2", "objective": "edp"}
 {"workload": "cc1", "accel": "accel1", "objective": "energy"}
+{"workload": "not-a-model", "accel": "accel1"}
 "#;
     let mut out = Vec::new();
     let served = service::serve_lines(&engine, requests.trim().as_bytes(), &mut out).unwrap();
     print!("{}", String::from_utf8(out).unwrap());
-    eprintln!("served {served} mapping requests");
+    let (plan_hits, plan_misses) = engine.plan_cache_stats();
+    let (b_hits, b_misses) = engine.boundary_cache_stats();
+    eprintln!(
+        "served {served} mapping requests; plan cache {plan_hits}/{} hits, \
+         boundary cache {b_hits}/{} hits",
+        plan_hits + plan_misses,
+        b_hits + b_misses,
+    );
 }

@@ -44,17 +44,19 @@ fn main() {
 
     let mut bench = Bench::new();
     let p = bench.run("optimize with pruned table", || {
-        engine.optimize(&w, &accel, Objective::Energy).metrics.energy
+        engine.optimize(&w, &accel, Objective::Energy).unwrap().metrics.energy
     });
     let u = bench.run("optimize with unpruned table", || {
         engine
             .optimize_with_candidates(&w, &accel, Objective::Energy, &q_unpruned)
+            .unwrap()
             .metrics
             .energy
     });
-    let ep = engine.optimize(&w, &accel, Objective::Energy).metrics.energy;
+    let ep = engine.optimize(&w, &accel, Objective::Energy).unwrap().metrics.energy;
     let eu = engine
         .optimize_with_candidates(&w, &accel, Objective::Energy, &q_unpruned)
+        .unwrap()
         .metrics
         .energy;
     assert!((ep - eu).abs() <= 1e-9 * eu, "pruning changed the optimum");

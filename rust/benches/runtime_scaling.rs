@@ -24,7 +24,7 @@ fn main() {
     println!("{:>8} {:>10} {:>14} {:>12}", "seq", "seconds", "mappings", "maps/s");
     while seq <= max_seq {
         let w = presets::gpt3_13b(seq);
-        let st = engine.stats_only(&w, &accel);
+        let st = engine.stats_only(&w, &accel).unwrap();
         let secs = st.elapsed.as_secs_f64();
         println!(
             "{:>8} {:>10.3} {:>14.3e} {:>12.3e}",

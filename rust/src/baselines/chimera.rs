@@ -9,6 +9,7 @@ use std::sync::OnceLock;
 use super::Mapper;
 use crate::config::{Accelerator, Workload};
 use crate::encode::QueryMatrix;
+use crate::error::MmeeError;
 use crate::loopnest::dims::STATIONARIES;
 use crate::loopnest::{BufferingLevels, Candidate, Dim, LoopOrder};
 use crate::search::{MmeeEngine, Objective, Solution};
@@ -45,7 +46,12 @@ impl Mapper for Chimera {
         "chimera"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         MmeeEngine::native().optimize_with_candidates(w, accel, obj, chimera_query())
     }
 }
@@ -59,13 +65,15 @@ mod tests {
     fn chimera_between_flat_and_mmee() {
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let c = Chimera.optimize(&w, &accel, Objective::Energy).metrics.energy;
+        let c = Chimera.optimize(&w, &accel, Objective::Energy).unwrap().metrics.energy;
         let f = super::super::flat::Flat
             .optimize(&w, &accel, Objective::Energy)
+            .unwrap()
             .metrics
             .energy;
         let m = MmeeEngine::native()
             .optimize(&w, &accel, Objective::Energy)
+            .unwrap()
             .metrics
             .energy;
         assert!(c <= f * (1.0 + 1e-9), "chimera {c} vs flat {f}");

@@ -8,6 +8,7 @@ use std::sync::OnceLock;
 use super::Mapper;
 use crate::config::{Accelerator, Workload};
 use crate::encode::QueryMatrix;
+use crate::error::MmeeError;
 use crate::loopnest::dims::STATIONARIES;
 use crate::loopnest::{BufferingLevels, Candidate, LoopOrder};
 use crate::search::{MmeeEngine, Objective, Solution};
@@ -41,11 +42,16 @@ impl Mapper for Flat {
         "flat"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         let engine = MmeeEngine::native();
-        let mut s = engine.optimize_with_candidates(w, accel, obj, flat_query());
+        let mut s = engine.optimize_with_candidates(w, accel, obj, flat_query())?;
         s.workload = w.name.clone();
-        s
+        Ok(s)
     }
 }
 
@@ -58,8 +64,8 @@ mod tests {
     fn flat_is_dominated_by_mmee() {
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let f = Flat.optimize(&w, &accel, Objective::Energy);
-        let m = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        let f = Flat.optimize(&w, &accel, Objective::Energy).unwrap();
+        let m = MmeeEngine::native().optimize(&w, &accel, Objective::Energy).unwrap();
         assert!(m.metrics.energy <= f.metrics.energy * (1.0 + 1e-9));
         assert!(f.metrics.feasible);
         assert!(!f.candidate.recompute());

@@ -23,10 +23,19 @@ pub mod chimera;
 pub mod tileflow;
 
 use crate::config::{Accelerator, Workload};
+use crate::error::MmeeError;
 use crate::search::{Objective, Solution};
 
-/// Common mapper interface for the report harness.
+/// Common mapper interface for the report harness. Like
+/// [`crate::search::MmeeEngine::optimize`], baselines report infeasible
+/// (workload, accel) pairs as [`MmeeError::Infeasible`] instead of
+/// panicking, so comparison sweeps survive undersized accelerators.
 pub trait Mapper {
     fn name(&self) -> &'static str;
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution;
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError>;
 }

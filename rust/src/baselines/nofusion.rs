@@ -5,6 +5,7 @@
 use super::intraop::{da_bs_front, optimize_gemm, Gemm};
 use super::Mapper;
 use crate::config::{Accelerator, Workload};
+use crate::error::MmeeError;
 use crate::loopnest::{BufferingLevels, Candidate, LoopOrder, Stationary};
 use crate::model::Metrics;
 use crate::search::{Objective, Solution};
@@ -62,12 +63,21 @@ impl Mapper for NoFusion {
         "no-fusion"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         let t0 = std::time::Instant::now();
         let (g1, g2) = Self::gemms(w);
         let score = |e: f64, l: f64| obj.score(e, l);
-        let s1 = optimize_gemm(&g1, accel, score).expect("op1 infeasible");
-        let s2 = optimize_gemm(&g2, accel, score).expect("op2 infeasible");
+        let infeasible = || MmeeError::Infeasible {
+            workload: w.name.clone(),
+            accel: accel.name.clone(),
+        };
+        let s1 = optimize_gemm(&g1, accel, score).ok_or_else(&infeasible)?;
+        let s2 = optimize_gemm(&g2, accel, score).ok_or_else(&infeasible)?;
 
         // Sequential execution; softmax between ops costs SFU energy.
         let hw = accel.hw_vector();
@@ -89,7 +99,7 @@ impl Mapper for NoFusion {
         let da = s1.metrics.da + s2.metrics.da;
         let bs = s1.metrics.bs.max(s2.metrics.bs);
 
-        Solution {
+        Ok(Solution {
             workload: w.name.clone(),
             accel: accel.name.clone(),
             objective: obj,
@@ -119,7 +129,7 @@ impl Mapper for NoFusion {
             },
             evaluated: 0.0,
             elapsed: t0.elapsed(),
-        }
+        })
     }
 }
 
@@ -135,8 +145,8 @@ mod tests {
         // round-trip when buffers are tight relative to |C|.
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let nf = NoFusion.optimize(&w, &accel, Objective::Energy);
-        let fused = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        let nf = NoFusion.optimize(&w, &accel, Objective::Energy).unwrap();
+        let fused = MmeeEngine::native().optimize(&w, &accel, Objective::Energy).unwrap();
         assert!(
             fused.metrics.da < nf.metrics.da,
             "fused {} !< no-fusion {}",

@@ -11,6 +11,7 @@ use std::sync::OnceLock;
 use super::Mapper;
 use crate::config::{Accelerator, Workload};
 use crate::encode::QueryMatrix;
+use crate::error::MmeeError;
 use crate::loopnest::dims::STATIONARIES;
 use crate::loopnest::{BufferingLevels, Candidate, Dim, LoopOrder};
 use crate::search::{MmeeEngine, Objective, Solution};
@@ -108,7 +109,12 @@ impl Mapper for Orojenesis {
         }
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         MmeeEngine::native().optimize_with_candidates(w, accel, obj, variant_query(self.0))
     }
 }
@@ -133,14 +139,17 @@ mod tests {
         let accel = presets::accel1();
         let e_base = Orojenesis(Variant::Base)
             .optimize(&w, &accel, Objective::Energy)
+            .unwrap()
             .metrics
             .energy;
         let e_bm = Orojenesis(Variant::BufferManagement)
             .optimize(&w, &accel, Objective::Energy)
+            .unwrap()
             .metrics
             .energy;
         let e_re = Orojenesis(Variant::Recompute)
             .optimize(&w, &accel, Objective::Energy)
+            .unwrap()
             .metrics
             .energy;
         assert!(e_bm <= e_base * (1.0 + 1e-9));

@@ -12,6 +12,7 @@
 use super::Mapper;
 use crate::config::{Accelerator, Workload};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::error::MmeeError;
 use crate::loopnest::dims::STATIONARIES;
 use crate::loopnest::{BufferingLevels, Candidate, LoopOrder};
 use crate::model::{analytic, derive_slots, Multipliers};
@@ -418,12 +419,24 @@ impl Mapper for TileFlow {
         "tileflow"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         let t0 = std::time::Instant::now();
         let cand = self.ga_candidate(w, accel, obj);
         let (tiling, _, evals) = mcts_search(cand, w, accel, obj, &self.mcts);
         let ga_evals = self.ga.population * (self.ga.generations + 1) * 4;
-        Self::package(w, accel, obj, cand, tiling, evals + ga_evals, t0)
+        let s = Self::package(w, accel, obj, cand, tiling, evals + ga_evals, t0);
+        if !s.metrics.feasible {
+            return Err(MmeeError::Infeasible {
+                workload: w.name.clone(),
+                accel: accel.name.clone(),
+            });
+        }
+        Ok(s)
     }
 }
 
@@ -436,7 +449,12 @@ impl Mapper for TfPlus {
         "tf+"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         use super::orojenesis::{variant_query, Variant};
         MmeeEngine::native().optimize_with_candidates(
             w,
@@ -455,7 +473,12 @@ impl Mapper for TfPlusT {
         "tf+t"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         let tf = TileFlow::default();
         let cand = tf.ga_candidate(w, accel, obj);
         let q = QueryMatrix::build(vec![cand]);
@@ -471,7 +494,12 @@ impl Mapper for TfPlusTBm {
         "tf+t+bm"
     }
 
-    fn optimize(&self, w: &Workload, accel: &Accelerator, obj: Objective) -> Solution {
+    fn optimize(
+        &self,
+        w: &Workload,
+        accel: &Accelerator,
+        obj: Objective,
+    ) -> Result<Solution, MmeeError> {
         let tf = TileFlow::default();
         let base = tf.ga_candidate(w, accel, obj);
         let mut cands = Vec::new();
@@ -524,8 +552,8 @@ mod tests {
         let w = presets::bert_base(512);
         let accel = presets::accel1();
         let tf = TileFlow::default();
-        let s1 = tf.optimize(&w, &accel, Objective::Energy);
-        let s2 = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+        let s1 = tf.optimize(&w, &accel, Objective::Energy).unwrap();
+        let s2 = TileFlow::default().optimize(&w, &accel, Objective::Energy).unwrap();
         assert_eq!(s1.tiling, s2.tiling);
         assert!(s1.metrics.feasible);
     }
@@ -534,8 +562,8 @@ mod tests {
     fn heuristic_search_does_not_beat_exhaustive() {
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
-        let mmee = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy).unwrap();
+        let mmee = MmeeEngine::native().optimize(&w, &accel, Objective::Energy).unwrap();
         assert!(mmee.metrics.energy <= tf.metrics.energy * (1.0 + 1e-9));
     }
 
@@ -545,8 +573,8 @@ mod tests {
         // optimization whenever the optimum does not need recomputation.
         let w = presets::bert_base(512);
         let accel = presets::accel2();
-        let tfp = TfPlus.optimize(&w, &accel, Objective::Energy);
-        let mmee = MmeeEngine::native().optimize(&w, &accel, Objective::Energy);
+        let tfp = TfPlus.optimize(&w, &accel, Objective::Energy).unwrap();
+        let mmee = MmeeEngine::native().optimize(&w, &accel, Objective::Energy).unwrap();
         if !mmee.candidate.recompute() {
             let rel = (tfp.metrics.energy - mmee.metrics.energy).abs() / mmee.metrics.energy;
             assert!(rel < 1e-9, "tf+ {} vs mmee {}", tfp.metrics.energy, mmee.metrics.energy);
@@ -557,9 +585,10 @@ mod tests {
     fn variants_order_sanely() {
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy).metrics.energy;
-        let tft = TfPlusT.optimize(&w, &accel, Objective::Energy).metrics.energy;
-        let tftbm = TfPlusTBm.optimize(&w, &accel, Objective::Energy).metrics.energy;
+        let tf =
+            TileFlow::default().optimize(&w, &accel, Objective::Energy).unwrap().metrics.energy;
+        let tft = TfPlusT.optimize(&w, &accel, Objective::Energy).unwrap().metrics.energy;
+        let tftbm = TfPlusTBm.optimize(&w, &accel, Objective::Energy).unwrap().metrics.energy;
         // Adding enumeration never hurts.
         assert!(tft <= tf * (1.0 + 1e-9), "tf+t {tft} vs tf {tf}");
         assert!(tftbm <= tft * (1.0 + 1e-9), "tf+t+bm {tftbm} vs tf+t {tft}");

@@ -120,11 +120,33 @@ impl Accelerator {
         ])
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Accelerator> {
-        let get = |k: &str| -> anyhow::Result<f64> {
-            j.get(k)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("accelerator config missing '{k}'"))
+    /// Every parameter must be strictly positive: zeros (or negative
+    /// JSON numbers, which `as usize` floors to zero) would divide by
+    /// zero in `capacity_words`/`features` deep inside the request path,
+    /// which is contracted never to panic.
+    pub fn from_json(j: &Json) -> crate::error::Result<Accelerator> {
+        let get = |k: &str| -> crate::error::Result<f64> {
+            match j.get(k).and_then(Json::as_f64) {
+                Some(v) if v > 0.0 && v.is_finite() => Ok(v),
+                Some(_) => Err(crate::error::MmeeError::Parse(format!(
+                    "accelerator '{k}' must be a positive finite number"
+                ))),
+                None => Err(crate::error::MmeeError::Parse(format!(
+                    "accelerator config missing '{k}'"
+                ))),
+            }
+        };
+        // Integer fields reject fractional values outright — silently
+        // flooring 8.9 PE rows to 8 would compute a mapping for
+        // different hardware than the client asked for.
+        let get_int = |k: &str| -> crate::error::Result<usize> {
+            let v = get(k)?;
+            if v.fract() != 0.0 || v < 1.0 {
+                return Err(crate::error::MmeeError::Parse(format!(
+                    "accelerator '{k}' must be a positive integer"
+                )));
+            }
+            Ok(v as usize)
         };
         Ok(Accelerator {
             name: j
@@ -132,13 +154,13 @@ impl Accelerator {
                 .and_then(Json::as_str)
                 .unwrap_or("custom")
                 .to_string(),
-            num_arrays: get("num_arrays")? as usize,
-            pe_rows: get("pe_rows")? as usize,
-            pe_cols: get("pe_cols")? as usize,
-            buffer_bytes: get("buffer_bytes")? as usize,
+            num_arrays: get_int("num_arrays")?,
+            pe_rows: get_int("pe_rows")?,
+            pe_cols: get_int("pe_cols")?,
+            buffer_bytes: get_int("buffer_bytes")?,
             dram_bw: get("dram_bw")?,
             freq: get("freq")?,
-            bytes_per_word: get("bytes_per_word")? as usize,
+            bytes_per_word: get_int("bytes_per_word")?,
             energy: EnergyModel::default(),
         })
     }

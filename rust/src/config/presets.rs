@@ -103,8 +103,15 @@ pub fn gpu_proxy() -> Accelerator {
     }
 }
 
+/// Canonical accelerator preset names (for error hints and docs); the
+/// lookup also accepts the aliases listed in [`accel_by_name`].
+pub const ACCEL_NAMES: &[&str] = &["accel1", "accel2", "coral", "design89", "set", "gpu"];
+
+/// Case-insensitive preset lookup. Prefer resolving through
+/// [`crate::search::AccelSpec`], which wraps the miss in a structured
+/// [`crate::error::MmeeError::UnknownAccel`].
 pub fn accel_by_name(name: &str) -> Option<Accelerator> {
-    match name {
+    match name.to_ascii_lowercase().as_str() {
         "accel1" | "accel1-nvdla" | "nvdla" => Some(accel1()),
         "accel2" | "accel2-tpu" | "tpu" => Some(accel2()),
         "coral" => Some(coral()),
@@ -172,8 +179,24 @@ pub fn main_grid() -> Vec<Workload> {
     ]
 }
 
+/// Canonical workload preset names (for error hints and docs).
+pub const WORKLOAD_NAMES: &[&str] = &[
+    "bert-base",
+    "gpt3-13b",
+    "palm-62b",
+    "gpt3-6.7b",
+    "gpt3-6.7b-ffn",
+    "cc1",
+    "cc2",
+    "mlp",
+    "ffn",
+];
+
+/// Case-insensitive preset lookup. Prefer resolving through
+/// [`crate::search::WorkloadSpec`], which wraps the miss in a structured
+/// [`crate::error::MmeeError::UnknownWorkload`].
 pub fn workload_by_name(name: &str, seq: usize) -> Option<Workload> {
-    match name {
+    match name.to_ascii_lowercase().as_str() {
         "bert-base" | "bert" => Some(bert_base(seq)),
         "gpt3-13b" | "gpt" => Some(gpt3_13b(seq)),
         "palm-62b" | "palm" => Some(palm_62b(seq)),
@@ -207,6 +230,24 @@ mod tests {
         assert!(accel_by_name("nope").is_none());
         assert_eq!(workload_by_name("palm", 2048).unwrap().gemm.k, 256);
         assert_eq!(workload_by_name("cc1", 0).unwrap().name, "cc1");
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(accel_by_name("Accel1").is_some());
+        assert!(accel_by_name("CORAL").is_some());
+        assert_eq!(workload_by_name("BERT-Base", 512).unwrap().gemm.k, 64);
+        assert_eq!(workload_by_name("GPT", 2048).unwrap().gemm.k, 128);
+    }
+
+    #[test]
+    fn canonical_names_all_resolve() {
+        for n in ACCEL_NAMES {
+            assert!(accel_by_name(n).is_some(), "{n}");
+        }
+        for n in WORKLOAD_NAMES {
+            assert!(workload_by_name(n, 512).is_some(), "{n}");
+        }
     }
 
     #[test]

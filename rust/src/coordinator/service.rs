@@ -2,85 +2,110 @@
 //! long-lived mapper service (the role MMEE plays inside an AI compiler
 //! or a hardware-DSE loop, paper §I/§VII-L).
 //!
-//! Wire format: one JSON request per line on stdin (or a TCP stream),
-//! one JSON response per line out:
+//! [`Request`] and [`Response`] are thin serde-style adapters over the
+//! typed API ([`MappingRequest`] / [`MappingPlan`] /
+//! [`crate::error::MmeeError`]); all semantics live in
+//! [`MmeeEngine::plan`]. Bad requests produce structured error lines —
+//! never a panic — so clients can pipeline freely, and repeated
+//! requests against the same accelerator hit the engine's boundary /
+//! plan caches.
+//!
+//! ## Wire format
+//!
+//! One JSON request per line on stdin (or a TCP stream), one JSON
+//! response per line out.
+//!
+//! Request — `workload`/`accel` take a preset name **or** an inline
+//! object; `seq` defaults to 512, `accel` to `"accel1"`, `objective`
+//! (case-insensitive) to `"energy"`:
 //!
 //! ```json
 //! {"workload": "bert-base", "seq": 4096, "accel": "accel2", "objective": "energy"}
+//! {"workload": {"i": 128, "k": 32, "l": 128, "j": 32, "softmax": true},
+//!  "accel": {"num_arrays": 4, "pe_rows": 32, "pe_cols": 32, "buffer_bytes": 1048576,
+//!            "dram_bw": 6.0e10, "freq": 1.0e9, "bytes_per_word": 2}}
 //! ```
+//!
+//! Success response — the plan: solution fields at the top level
+//! (`workload`, `accel`, `objective`, `candidate`, `tiling`,
+//! `energy_j`, `latency_s`, `edp`, `dram_words`, `buffer_words`,
+//! `recompute`, `mappings_evaluated`, `elapsed_s`) plus `stats`
+//! (`candidates`/`tilings`/`mappings`/`elapsed_s`) and `provenance`
+//! (`backend`/`cache_hit`/`boundary_cache_hit`) objects.
+//!
+//! Error response — structured, machine-dispatchable:
+//!
+//! ```json
+//! {"error": {"kind": "unknown_workload", "message": "unknown workload 'x' (valid: ...)"}}
+//! ```
+//!
+//! `kind` is one of `unknown_workload`, `unknown_accel`, `infeasible`,
+//! `backend`, `parse`, `io`, `internal`.
 
 use std::io::{BufRead, Write};
 
-use crate::config::presets;
-use crate::search::{MmeeEngine, Objective};
+use crate::error::MmeeError;
+use crate::search::{MappingPlan, MappingRequest, MmeeEngine};
 use crate::util::json::Json;
 
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub workload: String,
-    pub seq: usize,
-    pub accel: String,
-    pub objective: Objective,
-}
+/// Wire-side request: a parsed [`MappingRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request(pub MappingRequest);
 
 impl Request {
-    pub fn parse(line: &str) -> Result<Request, String> {
-        let j = Json::parse(line).map_err(|e| e.to_string())?;
-        let workload = j
-            .get("workload")
-            .and_then(Json::as_str)
-            .ok_or("missing 'workload'")?
-            .to_string();
-        let seq = j.get("seq").and_then(Json::as_usize).unwrap_or(512);
-        let accel = j
-            .get("accel")
-            .and_then(Json::as_str)
-            .unwrap_or("accel1")
-            .to_string();
-        let objective = Objective::parse(
-            j.get("objective").and_then(Json::as_str).unwrap_or("energy"),
-        )
-        .ok_or("bad 'objective'")?;
-        Ok(Request { workload, seq, accel, objective })
+    pub fn parse(line: &str) -> Result<Request, MmeeError> {
+        MappingRequest::parse(line).map(Request)
     }
 }
 
+/// Wire-side response: a plan or a structured error.
 #[derive(Debug)]
 pub enum Response {
-    Ok(Json),
-    Err(String),
+    Plan(Box<MappingPlan>),
+    Error(MmeeError),
 }
 
 impl Response {
     pub fn to_line(&self) -> String {
         match self {
-            Response::Ok(j) => format!("{j}"),
-            Response::Err(e) => format!(
-                "{}",
-                Json::obj(vec![("error", Json::str(e.clone()))])
-            ),
+            Response::Plan(p) => format!("{}", p.to_json()),
+            Response::Error(e) => {
+                format!("{}", Json::obj(vec![("error", e.to_json())]))
+            }
         }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error(_))
     }
 }
 
-/// Handle one request.
+/// Handle one request. Never panics: resolution, feasibility and
+/// backend failures all come back as [`Response::Error`].
 pub fn handle(engine: &MmeeEngine, req: &Request) -> Response {
-    let Some(workload) = presets::workload_by_name(&req.workload, req.seq) else {
-        return Response::Err(format!("unknown workload '{}'", req.workload));
-    };
-    let Some(accel) = presets::accel_by_name(&req.accel) else {
-        return Response::Err(format!("unknown accel '{}'", req.accel));
-    };
-    let solution = engine.optimize(&workload, &accel, req.objective);
-    Response::Ok(solution.to_json())
+    match engine.plan(&req.0) {
+        Ok(plan) => Response::Plan(Box::new(plan)),
+        Err(e) => Response::Error(e),
+    }
 }
 
 /// Serve a TCP endpoint: one JSON request per line per connection,
 /// connections handled sequentially (the mapper is CPU-bound; clients
 /// pipeline requests over one connection for throughput).
-pub fn serve_tcp(engine: &MmeeEngine, addr: &str, max_conns: Option<usize>) -> std::io::Result<usize> {
+///
+/// `addr` may use port 0; `on_ready` receives the actually bound
+/// address before the first `accept`, so callers (and tests) can
+/// connect without sleeping and hoping the port is still free.
+pub fn serve_tcp(
+    engine: &MmeeEngine,
+    addr: &str,
+    max_conns: Option<usize>,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<usize> {
     let listener = std::net::TcpListener::bind(addr)?;
-    eprintln!("mmee serve: listening on {}", listener.local_addr()?);
+    let local = listener.local_addr()?;
+    eprintln!("mmee serve: listening on {local}");
+    on_ready(local);
     let mut total = 0;
     let mut conns = 0;
     for stream in listener.incoming() {
@@ -111,7 +136,7 @@ pub fn serve_lines(
         }
         let resp = match Request::parse(&line) {
             Ok(req) => handle(engine, &req),
-            Err(e) => Response::Err(e),
+            Err(e) => Response::Error(e),
         };
         writeln!(output, "{}", resp.to_line())?;
         output.flush()?;
@@ -123,6 +148,7 @@ pub fn serve_lines(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::search::Objective;
 
     #[test]
     fn parse_request() {
@@ -130,41 +156,158 @@ mod tests {
             r#"{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "latency"}"#,
         )
         .unwrap();
-        assert_eq!(r.workload, "bert-base");
-        assert_eq!(r.objective, Objective::Latency);
+        assert_eq!(r.0.objective, Objective::Latency);
+        let (w, a) = r.0.resolve().unwrap();
+        assert_eq!(w.name, "bert-base-512");
+        assert_eq!(a.name, "accel1-nvdla");
         assert!(Request::parse("{}").is_err());
         assert!(Request::parse("not json").is_err());
     }
 
     #[test]
+    fn handle_unknown_specs_returns_structured_error_json() {
+        let engine = MmeeEngine::native();
+        let req = Request::parse(r#"{"workload": "not-a-model"}"#).unwrap();
+        let resp = handle(&engine, &req);
+        assert!(resp.is_error());
+        let j = Json::parse(&resp.to_line()).unwrap();
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("kind").unwrap().as_str(), Some("unknown_workload"));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("bert-base"));
+
+        let req = Request::parse(r#"{"workload": "bert-base", "accel": "not-hw"}"#).unwrap();
+        let j = Json::parse(&handle(&engine, &req).to_line()).unwrap();
+        assert_eq!(
+            j.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("unknown_accel")
+        );
+    }
+
+    #[test]
+    fn handle_infeasible_returns_error_then_serves_next_request() {
+        let engine = MmeeEngine::native();
+        // 64-byte inline accel: nothing fits -> structured infeasible.
+        let req = Request::parse(
+            r#"{"workload": "bert-base", "seq": 512,
+                "accel": {"num_arrays": 1, "pe_rows": 8, "pe_cols": 8, "buffer_bytes": 64,
+                          "dram_bw": 1.0e9, "freq": 1.0e9, "bytes_per_word": 2}}"#,
+        )
+        .unwrap();
+        let j = Json::parse(&handle(&engine, &req).to_line()).unwrap();
+        assert_eq!(
+            j.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("infeasible")
+        );
+        // The loop survives: the next good request succeeds.
+        let good = Request::parse(r#"{"workload": "bert-base", "seq": 512}"#).unwrap();
+        let resp = handle(&engine, &good);
+        assert!(!resp.is_error());
+    }
+
+    #[test]
+    fn degenerate_inline_specs_get_error_lines_not_a_dead_server() {
+        let engine = MmeeEngine::native();
+        let input = concat!(
+            // Zero dim / zero bytes_per_word would panic deep in the
+            // engine if they got past spec resolution.
+            r#"{"workload": {"i": 0, "k": 32, "l": 128, "j": 32}}"#,
+            "\n",
+            r#"{"workload": "bert-base", "accel": {"num_arrays": 1, "pe_rows": 8, "pe_cols": 8, "buffer_bytes": 1024, "dram_bw": 1.0e9, "freq": 1.0e9, "bytes_per_word": 0}}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 0}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 4);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        for bad in &lines[..3] {
+            let j = Json::parse(bad).unwrap();
+            assert_eq!(
+                j.get("error").unwrap().get("kind").unwrap().as_str(),
+                Some("parse"),
+                "{bad}"
+            );
+        }
+        assert!(Json::parse(lines[3]).unwrap().get("energy_j").is_some());
+    }
+
+    #[test]
+    fn repeat_requests_hit_plan_cache_10x_faster() {
+        let engine = MmeeEngine::native();
+        let input = concat!(
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let first = Json::parse(lines[0]).unwrap();
+        let second = Json::parse(lines[1]).unwrap();
+        let prov = |j: &Json, k: &str| j.get("provenance").unwrap().get(k).unwrap().as_bool();
+        assert_eq!(prov(&first, "cache_hit"), Some(false));
+        assert_eq!(prov(&second, "cache_hit"), Some(true));
+        // Identical plan, >=10x faster via the cache (plan timings).
+        assert_eq!(
+            first.get("tiling").unwrap().as_str(),
+            second.get("tiling").unwrap().as_str()
+        );
+        assert_eq!(
+            first.get("energy_j").unwrap().as_f64(),
+            second.get("energy_j").unwrap().as_f64()
+        );
+        let t1 = first.get("stats").unwrap().get("elapsed_s").unwrap().as_f64().unwrap();
+        let t2 = second.get("stats").unwrap().get("elapsed_s").unwrap().as_f64().unwrap();
+        // >=10x, with a 1 ms floor so a scheduler hiccup on a loaded CI
+        // runner can't flake a microsecond-scale cache probe.
+        assert!(
+            t2 * 10.0 <= t1 || t2 < 1e-3,
+            "second request not >=10x faster: {t1} vs {t2}"
+        );
+        assert_eq!(engine.plan_cache_stats(), (1, 1));
+    }
+
+    #[test]
     fn serve_tcp_roundtrip() {
         use std::io::{BufRead, BufReader, Write};
-        // Bind on an ephemeral port in a thread, connect as a client.
-        // (The engine is constructed inside the server thread: PJRT-based
+        // Port 0 + ready callback: no bind/re-bind race, no sleep. (The
+        // engine is constructed inside the server thread: PJRT-based
         // backends are not Send, so engines never cross threads.)
-        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        drop(listener); // free the port for serve_tcp
-        let addr = format!("{addr}");
-        let server = std::thread::spawn({
-            let addr = addr.clone();
-            move || {
-                let engine = MmeeEngine::native();
-                serve_tcp(&engine, &addr, Some(1)).unwrap()
-            }
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            let engine = MmeeEngine::native();
+            serve_tcp(&engine, "127.0.0.1:0", Some(1), |addr| tx.send(addr).unwrap())
+                .unwrap()
         });
-        std::thread::sleep(std::time::Duration::from_millis(200));
-        let mut conn = std::net::TcpStream::connect(&addr).unwrap();
+        let addr = rx.recv().unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        // A bad request followed by a good one: the loop must survive.
         conn.write_all(
-            b"{\"workload\": \"bert-base\", \"seq\": 512, \"accel\": \"accel1\"}\n",
+            b"{\"workload\": \"nope\"}\n\
+              {\"workload\": \"bert-base\", \"seq\": 512, \"accel\": \"accel1\"}\n",
         )
         .unwrap();
         conn.shutdown(std::net::Shutdown::Write).unwrap();
-        let mut line = String::new();
-        BufReader::new(conn).read_line(&mut line).unwrap();
-        let j = Json::parse(line.trim()).unwrap();
-        assert!(j.get("energy_j").is_some(), "{line}");
-        assert_eq!(server.join().unwrap(), 1);
+        let mut lines = Vec::new();
+        for line in BufReader::new(conn).lines() {
+            lines.push(line.unwrap());
+        }
+        assert_eq!(lines.len(), 2);
+        let err = Json::parse(&lines[0]).unwrap();
+        assert_eq!(
+            err.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("unknown_workload")
+        );
+        let ok = Json::parse(&lines[1]).unwrap();
+        assert!(ok.get("energy_j").is_some(), "{}", lines[1]);
+        assert_eq!(server.join().unwrap(), 2);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Structured errors for the MMEE public API.
+//!
+//! Every fallible entry point — [`crate::search::MmeeEngine::optimize`],
+//! [`crate::search::MappingRequest`] parsing/resolution, the serve loop,
+//! the report harness — returns [`MmeeError`] instead of panicking, so a
+//! long-lived mapper service survives bad requests and a compiler client
+//! can branch on the failure kind.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, MmeeError>;
+
+/// The failure modes of the request pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MmeeError {
+    /// The requested workload preset does not exist. `valid` lists the
+    /// known preset names for the error message.
+    UnknownWorkload { name: String, valid: String },
+    /// The requested accelerator preset does not exist.
+    UnknownAccel { name: String, valid: String },
+    /// No mapping of the workload fits the accelerator (every candidate
+    /// × tiling point blows past the buffer capacity).
+    Infeasible { workload: String, accel: String },
+    /// An evaluation backend failed or is unavailable in this build.
+    Backend(String),
+    /// Malformed request, flag, or config (JSON syntax, bad objective,
+    /// missing field, ...).
+    Parse(String),
+    /// Filesystem / socket error, carried as text so the error stays
+    /// `Clone + PartialEq` for caching and tests.
+    Io(String),
+    /// An internal invariant failed (pruning changed an optimum,
+    /// backends disagree, model/simulator drift) — a correctness
+    /// regression in MMEE itself, never a caller mistake.
+    Internal(String),
+}
+
+impl MmeeError {
+    /// Stable machine-readable discriminant for the wire format.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MmeeError::UnknownWorkload { .. } => "unknown_workload",
+            MmeeError::UnknownAccel { .. } => "unknown_accel",
+            MmeeError::Infeasible { .. } => "infeasible",
+            MmeeError::Backend(_) => "backend",
+            MmeeError::Parse(_) => "parse",
+            MmeeError::Io(_) => "io",
+            MmeeError::Internal(_) => "internal",
+        }
+    }
+
+    /// Structured wire form: `{"kind": ..., "message": ...}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind())),
+            ("message", Json::str(self.to_string())),
+        ])
+    }
+}
+
+impl fmt::Display for MmeeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MmeeError::UnknownWorkload { name, valid } => {
+                write!(f, "unknown workload '{name}' (valid: {valid})")
+            }
+            MmeeError::UnknownAccel { name, valid } => {
+                write!(f, "unknown accel '{name}' (valid: {valid})")
+            }
+            MmeeError::Infeasible { workload, accel } => {
+                write!(f, "no feasible mapping for {workload} on {accel}")
+            }
+            MmeeError::Backend(msg) => write!(f, "backend: {msg}"),
+            MmeeError::Parse(msg) => write!(f, "parse: {msg}"),
+            MmeeError::Io(msg) => write!(f, "io: {msg}"),
+            MmeeError::Internal(msg) => write!(f, "internal invariant violated: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MmeeError {}
+
+impl From<std::io::Error> for MmeeError {
+    fn from(e: std::io::Error) -> MmeeError {
+        MmeeError::Io(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for MmeeError {
+    fn from(e: crate::util::json::JsonError) -> MmeeError {
+        MmeeError::Parse(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_messages() {
+        let e = MmeeError::UnknownWorkload {
+            name: "nope".into(),
+            valid: "bert-base, gpt3-13b".into(),
+        };
+        assert_eq!(e.kind(), "unknown_workload");
+        let msg = e.to_string();
+        assert!(msg.contains("nope") && msg.contains("bert-base"), "{msg}");
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("unknown_workload"));
+        assert!(j.get("message").unwrap().as_str().unwrap().contains("valid"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: MmeeError = io.into();
+        assert_eq!(e.kind(), "io");
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn infeasible_display() {
+        let e = MmeeError::Infeasible { workload: "w".into(), accel: "a".into() };
+        assert_eq!(e.to_string(), "no feasible mapping for w on a");
+    }
+}

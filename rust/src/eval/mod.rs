@@ -20,7 +20,22 @@ pub mod xla;
 
 use crate::config::{HwVector, Workload};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::error::MmeeError;
 use crate::model::Multipliers;
+
+/// Backend lookup by (case-insensitive) name; the error lists the valid
+/// values. The `xla` backend additionally requires compiled artifacts
+/// and the `pjrt` feature, reported as [`MmeeError::Backend`].
+pub fn backend_by_name(name: &str) -> Result<Box<dyn EvalBackend>, MmeeError> {
+    match name.to_ascii_lowercase().as_str() {
+        "native" => Ok(Box::new(native::NativeBackend)),
+        "branchy" => Ok(Box::new(branchy::BranchyBackend)),
+        "xla" => Ok(Box::new(xla::XlaBackend::new()?)),
+        other => Err(MmeeError::Backend(format!(
+            "unknown backend '{other}' (valid: native, branchy, xla)"
+        ))),
+    }
+}
 
 /// One evaluated block of the (candidate × tiling) surface, row-major
 /// `[nc × nt]` with global offsets `(c0, t0)`.
@@ -97,6 +112,19 @@ pub trait EvalBackend {
         mult: &Multipliers,
     ) -> Argmin3 {
         serial_argmin3(self, q, b, hw, mult)
+    }
+
+    /// Fallible argmin — the request path. Backends whose evaluation can
+    /// fail at runtime (PJRT execution) override this so the engine
+    /// surfaces [`MmeeError::Backend`] instead of panicking.
+    fn try_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Result<Argmin3, MmeeError> {
+        Ok(self.argmin3(q, b, hw, mult))
     }
 
     /// Streamed Pareto fronts over the full surface.

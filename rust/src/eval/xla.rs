@@ -8,11 +8,10 @@
 //! buffer-size slot — so the in-graph argmin of the `reduce` artifact can
 //! never elect padding.
 
-use anyhow::Result;
-
 use super::{Block, EvalBackend};
 use crate::config::HwVector;
 use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::error::{MmeeError, Result};
 use crate::model::terms::{feat, NUM_FEATURES, NUM_SLOTS};
 use crate::model::Multipliers;
 use crate::runtime::{ArtifactEntry, ReduceOutput, Runtime};
@@ -81,7 +80,7 @@ impl XlaBackend {
             .rt
             .manifest
             .pick("reduce", q.num_candidates(), nt_total)
-            .expect("no reduce artifact")
+            .ok_or_else(|| MmeeError::Backend("no reduce artifact in manifest".into()))?
             .clone();
         let mut best: [((usize, usize), f64); 3] =
             [((0, 0), f64::INFINITY), ((0, 0), f64::INFINITY), ((0, 0), f64::INFINITY)];
@@ -124,12 +123,24 @@ impl EvalBackend for XlaBackend {
         hw: &HwVector,
         mult: &Multipliers,
     ) -> super::Argmin3 {
-        let best = self.reduce(q, b, hw, mult).expect("xla reduce failed");
-        [
+        self.try_argmin3(q, b, hw, mult).expect("xla reduce failed")
+    }
+
+    /// The request path: PJRT failures become [`MmeeError::Backend`]
+    /// rather than panics.
+    fn try_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Result<super::Argmin3> {
+        let best = self.reduce(q, b, hw, mult)?;
+        Ok([
             (best[0].1, best[0].0 .0, best[0].0 .1),
             (best[1].1, best[1].0 .0, best[1].0 .1),
             (best[2].1, best[2].0 .0, best[2].0 .1),
-        ]
+        ])
     }
 
     fn eval_block(

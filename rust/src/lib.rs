@@ -16,9 +16,31 @@
 //!   in `artifacts/`, loaded and executed here through PJRT
 //!   ([`runtime`], [`eval`]).
 //!
+//! ## The typed request pipeline
+//!
+//! Every caller — CLI, TCP service, examples, report harness — speaks
+//! one API:
+//!
+//! * [`search::MappingRequest`] = [`search::WorkloadSpec`] +
+//!   [`search::AccelSpec`] + [`search::Objective`] (specs carry either
+//!   a preset name or an inline definition);
+//! * [`search::MmeeEngine::builder`] configures the engine (backend,
+//!   candidate table, cache capacity);
+//! * [`search::MmeeEngine::plan`] answers with a
+//!   [`search::MappingPlan`] (the winning mapping, exact metrics,
+//!   search stats, provenance) or a structured [`error::MmeeError`]
+//!   (`UnknownWorkload` / `UnknownAccel` / `Infeasible` / `Backend` /
+//!   `Parse`) — the engine never panics on a bad request, so the
+//!   serving loop is safe to pipeline.
+//!
+//! Repeat queries against the same accelerator hit the engine's
+//! boundary-matrix and plan LRU caches and skip re-enumeration.
+//!
 //! Entry points: [`search::MmeeEngine`] for optimization,
-//! [`sim::Simulator`] for validation, [`report`] for paper artifacts.
+//! [`sim::Simulator`] for validation, [`report`] for paper artifacts,
+//! [`coordinator::service`] for the `mmee serve` loop.
 
+pub mod error;
 pub mod util;
 pub mod config;
 pub mod loopnest;
@@ -33,3 +55,8 @@ pub mod search;
 pub mod baselines;
 pub mod coordinator;
 pub mod report;
+
+pub use error::{MmeeError, Result};
+pub use search::{
+    AccelSpec, MappingPlan, MappingRequest, MmeeEngine, Objective, WorkloadSpec,
+};

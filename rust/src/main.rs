@@ -5,31 +5,27 @@
 //!               --objective energy [--backend native|xla|branchy]
 //! mmee pareto   --workload palm-62b --seq 4096 --accel accel2
 //! mmee validate [--charts]          # model vs simulator
-//! mmee serve                        # JSON-lines mapping service on stdio
+//! mmee serve [--tcp host:port]      # JSON-lines mapping service
 //! mmee bench-fig <13..27|all>       # regenerate paper figures
 //! mmee bench-table <1..4|all>       # regenerate paper tables
 //! mmee bench-all [--out results]    # everything + summary.md
 //! ```
-
-use anyhow::{anyhow, bail, Result};
+//!
+//! All subcommands speak the typed request pipeline: preset names are
+//! resolved through `WorkloadSpec`/`AccelSpec` (case-insensitive, with
+//! the valid values listed on a miss) and failures are structured
+//! `MmeeError`s, not panics.
 
 use mmee::baselines::tileflow::TileFlow;
 use mmee::baselines::Mapper;
-use mmee::config::presets;
 use mmee::coordinator::service;
-use mmee::eval::{branchy::BranchyBackend, native::NativeBackend, xla::XlaBackend, EvalBackend};
+use mmee::error::{MmeeError, Result};
 use mmee::report::{figures, tables, Report};
-use mmee::search::{MmeeEngine, Objective};
+use mmee::search::{AccelSpec, MappingRequest, MmeeEngine, Objective, WorkloadSpec};
 use mmee::util::cli::Args;
 
 fn engine_for(backend: &str) -> Result<MmeeEngine> {
-    let b: Box<dyn EvalBackend> = match backend {
-        "native" => Box::new(NativeBackend),
-        "branchy" => Box::new(BranchyBackend),
-        "xla" => Box::new(XlaBackend::new()?),
-        other => bail!("unknown backend '{other}' (native|branchy|xla)"),
-    };
-    Ok(MmeeEngine::with_backend(b))
+    Ok(MmeeEngine::builder().backend(mmee::eval::backend_by_name(backend)?).build())
 }
 
 fn main() -> Result<()> {
@@ -53,38 +49,39 @@ const HELP: &str = "mmee — Matrix Multiplication Encoded Enumeration dataflow 
 subcommands: optimize | pareto | validate | serve | bench-fig | bench-table | bench-all
 see rust/src/main.rs header for flags";
 
-fn workload_from(args: &Args) -> Result<mmee::config::Workload> {
-    let name = args.flag_or("workload", "bert-base");
-    let seq = args.usize_flag("seq", 512);
-    presets::workload_by_name(name, seq).ok_or_else(|| anyhow!("unknown workload '{name}'"))
-}
-
-fn accel_from(args: &Args) -> Result<mmee::config::Accelerator> {
-    let name = args.flag_or("accel", "accel1");
-    presets::accel_by_name(name).ok_or_else(|| anyhow!("unknown accel '{name}'"))
+fn request_from(args: &Args) -> Result<MappingRequest> {
+    let workload = WorkloadSpec::preset(
+        args.flag_or("workload", "bert-base"),
+        args.usize_flag("seq", 512),
+    );
+    let accel = AccelSpec::preset(args.flag_or("accel", "accel1"));
+    let objective = Objective::parse(args.flag_or("objective", "energy"))?;
+    Ok(MappingRequest::new(workload, accel, objective))
 }
 
 fn cmd_optimize(args: &Args) -> Result<()> {
-    let w = workload_from(args)?;
-    let accel = accel_from(args)?;
-    let obj = Objective::parse(args.flag_or("objective", "energy"))
-        .ok_or_else(|| anyhow!("bad --objective"))?;
+    let req = request_from(args)?;
     let engine = engine_for(args.flag_or("backend", "native"))?;
-    let s = if args.has("tileflow") {
-        TileFlow::default().optimize(&w, &accel, obj)
-    } else {
-        engine.optimize(&w, &accel, obj)
-    };
-    println!("{:#}", s.to_json());
+    let (w, accel) = req.resolve()?;
+    if args.has("tileflow") {
+        let s = TileFlow::default().optimize(&w, &accel, req.objective)?;
+        println!("{:#}", s.to_json());
+        if args.has("loopnest") {
+            println!("\n{}", s.render_loopnest(&w, &accel));
+        }
+        return Ok(());
+    }
+    let plan = engine.plan(&req)?;
+    println!("{:#}", plan.to_json());
     if args.has("loopnest") {
-        println!("\n{}", s.render_loopnest(&w, &accel));
+        println!("\n{}", plan.solution.render_loopnest(&w, &accel));
     }
     Ok(())
 }
 
 fn cmd_pareto(args: &Args) -> Result<()> {
-    let w = workload_from(args)?;
-    let accel = accel_from(args)?;
+    let req = request_from(args)?;
+    let (w, accel) = req.resolve()?;
     let engine = engine_for(args.flag_or("backend", "native"))?;
     let (front, stats) = engine.pareto_energy_latency(&w, &accel);
     println!(
@@ -114,8 +111,8 @@ fn cmd_validate(args: &Args) -> Result<()> {
     if args.has("charts") {
         use mmee::loopnest::{BufferingLevels, Candidate, LoopOrder, Stationary};
         use mmee::sim::charts;
-        let w = presets::bert_base(512);
-        let accel = presets::accel1();
+        let w = WorkloadSpec::preset("bert-base", 512).resolve()?;
+        let accel = AccelSpec::preset("accel1").resolve()?;
         let cand = Candidate {
             order: LoopOrder::flash(),
             levels: BufferingLevels { a: 4, b: 4, d: 4, e: 1 },
@@ -134,7 +131,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = engine_for(args.flag_or("backend", "native"))?;
     let n = if let Some(addr) = args.flag("tcp") {
-        service::serve_tcp(&engine, addr, None)?
+        service::serve_tcp(&engine, addr, None, |_| {})?
     } else {
         eprintln!(
             "mmee serve: JSON requests on stdin, one per line (backend: {})",
@@ -144,18 +141,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let stdout = std::io::stdout();
         service::serve_lines(&engine, stdin.lock(), stdout.lock())?
     };
-    eprintln!("served {n} requests");
+    let (ph, pm) = engine.plan_cache_stats();
+    let (bh, bm) = engine.boundary_cache_stats();
+    eprintln!("served {n} requests (plan cache {ph}/{} hits, boundary cache {bh}/{})",
+        ph + pm, bh + bm);
     Ok(())
 }
 
 fn run_fig(n: &str, r: &mut Report, max_seq: usize) -> Result<()> {
+    let accel = |name: &str| AccelSpec::preset(name).resolve();
     match n {
         "13" => figures::fig13(r),
         "14" => figures::fig14(r),
         "15" => figures::fig15(r),
         "16" => figures::fig16(r),
-        "17" => figures::fig17_18(r, &presets::accel1(), "fig17"),
-        "18" => figures::fig17_18(r, &presets::accel2(), "fig18"),
+        "17" => figures::fig17_18(r, &accel("accel1")?, "fig17"),
+        "18" => figures::fig17_18(r, &accel("accel2")?, "fig18"),
         "19" => figures::fig19(r),
         "20" => figures::fig20(r),
         "21" => figures::fig21(r),
@@ -165,7 +166,7 @@ fn run_fig(n: &str, r: &mut Report, max_seq: usize) -> Result<()> {
         "25" => figures::fig25(r),
         "26" => figures::fig26(r),
         "27" => figures::fig27(r),
-        other => bail!("unknown figure '{other}'"),
+        other => Err(MmeeError::Parse(format!("unknown figure '{other}' (valid: 13..27)"))),
     }
 }
 
@@ -196,7 +197,9 @@ fn run_table(n: &str, r: &mut Report) -> Result<()> {
         "3" => tables::table3(r),
         "4" => tables::table4(r),
         "pruning" => tables::pruning_check(r),
-        other => bail!("unknown table '{other}'"),
+        other => Err(MmeeError::Parse(format!(
+            "unknown table '{other}' (valid: 1, 2, 3, 4, pruning)"
+        ))),
     }
 }
 

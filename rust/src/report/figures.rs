@@ -4,7 +4,7 @@
 //! the *shapes* — who wins, by what factor, where crossovers fall — are
 //! the reproduction target (DESIGN.md §7).
 
-use anyhow::Result;
+use crate::error::Result;
 
 use super::Report;
 use crate::baselines::{
@@ -263,11 +263,11 @@ pub fn fig17_18(r: &mut Report, accel: &Accelerator, stem: &str) -> Result<()> {
     let mut e_ratios = Vec::new();
     let mut l_ratios = Vec::new();
     for w in &grid {
-        let flat = Flat.optimize(w, accel, Objective::Energy);
-        let chim = Chimera.optimize(w, accel, Objective::Energy);
-        let tf = TileFlow::default().optimize(w, accel, Objective::Energy);
-        let me = engine.optimize(w, accel, Objective::Energy);
-        let ml = engine.optimize(w, accel, Objective::Latency);
+        let flat = Flat.optimize(w, accel, Objective::Energy)?;
+        let chim = Chimera.optimize(w, accel, Objective::Energy)?;
+        let tf = TileFlow::default().optimize(w, accel, Objective::Energy)?;
+        let me = engine.optimize(w, accel, Objective::Energy)?;
+        let ml = engine.optimize(w, accel, Objective::Latency)?;
         for s in [&flat, &chim, &tf, &me, &ml] {
             let tag = if std::ptr::eq(s, &me) {
                 "mmee-e"
@@ -331,8 +331,8 @@ pub fn fig19(r: &mut Report) -> Result<()> {
     let mut rows = Vec::new();
     for accel in [presets::accel1(), presets::accel2()] {
         for w in presets::main_grid() {
-            let tf = TileFlow::default().optimize(&w, &accel, Objective::Latency);
-            let me = engine.optimize(&w, &accel, Objective::Latency);
+            let tf = TileFlow::default().optimize(&w, &accel, Objective::Latency)?;
+            let me = engine.optimize(&w, &accel, Objective::Latency)?;
             rows.push(vec![
                 accel.name.clone(),
                 w.name.clone(),
@@ -393,10 +393,10 @@ pub fn fig21(r: &mut Report) -> Result<()> {
     for obj in [Objective::Energy, Objective::Latency] {
         let mut rows = Vec::new();
         for w in &loads {
-            let tf = TileFlow::default().optimize(w, &accel, obj);
-            let tfp = TfPlus.optimize(w, &accel, obj);
-            let fl = Flat.optimize(w, &accel, obj);
-            let me = engine.optimize(w, &accel, obj);
+            let tf = TileFlow::default().optimize(w, &accel, obj)?;
+            let tfp = TfPlus.optimize(w, &accel, obj)?;
+            let fl = Flat.optimize(w, &accel, obj)?;
+            let me = engine.optimize(w, &accel, obj)?;
             let base = obj.score(me.metrics.energy, me.metrics.latency);
             let pick = |s: &Solution| obj.score(s.metrics.energy, s.metrics.latency);
             rows.push(vec![
@@ -427,7 +427,7 @@ pub fn fig22(r: &mut Report, max_seq: usize) -> Result<()> {
     let mut seq = 1024usize;
     while seq <= max_seq {
         let w = presets::gpt3_13b(seq);
-        let st = engine.stats_only(&w, &accel);
+        let st = engine.stats_only(&w, &accel)?;
         rows.push(vec![
             format!("{seq}"),
             format!("{:.3}", st.elapsed.as_secs_f64()),
@@ -460,11 +460,11 @@ pub fn fig23(r: &mut Report, max_seq: usize) -> Result<()> {
     let mut seq = 8192usize;
     while seq <= max_seq {
         let w = presets::gpt3_13b(seq);
-        let me = engine.optimize(&w, &accel, Objective::Energy);
+        let me = engine.optimize(&w, &accel, Objective::Energy)?;
         // Paper note: TileFlow's released code crashes past 32K; we keep
         // the comparison to 32K for fidelity of the figure.
         let tf_cell = if seq <= 32768 {
-            let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
+            let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy)?;
             format!("{:.2}", tf.metrics.energy * 1e3)
         } else {
             "-".into()
@@ -502,10 +502,10 @@ pub fn fig24(r: &mut Report) -> Result<()> {
     let accel = presets::accel1();
     let mut rows = Vec::new();
     for w in [presets::bert_base(512), presets::gpt3_13b(2048), presets::palm_62b(2048)] {
-        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
-        let tft = TfPlusT.optimize(&w, &accel, Objective::Energy);
-        let tftbm = TfPlusTBm.optimize(&w, &accel, Objective::Energy);
-        let me = engine.optimize(&w, &accel, Objective::Energy);
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy)?;
+        let tft = TfPlusT.optimize(&w, &accel, Objective::Energy)?;
+        let tftbm = TfPlusTBm.optimize(&w, &accel, Objective::Energy)?;
+        let me = engine.optimize(&w, &accel, Objective::Energy)?;
         rows.push(vec![
             w.name.clone(),
             rel(tf.metrics.energy, me.metrics.energy),
@@ -539,10 +539,11 @@ pub fn fig25(r: &mut Report) -> Result<()> {
     for accel in [presets::accel1(), presets::accel2()] {
         for seq in [2048usize, 4096] {
             let w = presets::palm_62b(seq);
-            let ch = Chimera.optimize(&w, &accel, Objective::Latency);
-            let tf = TileFlow::default().optimize(&w, &accel, Objective::Latency);
-            let mstar = Orojenesis(Variant::BufferManagement).optimize(&w, &accel, Objective::Latency);
-            let me = engine.optimize(&w, &accel, Objective::Latency);
+            let ch = Chimera.optimize(&w, &accel, Objective::Latency)?;
+            let tf = TileFlow::default().optimize(&w, &accel, Objective::Latency)?;
+            let mstar =
+                Orojenesis(Variant::BufferManagement).optimize(&w, &accel, Objective::Latency)?;
+            let me = engine.optimize(&w, &accel, Objective::Latency)?;
             rows.push(vec![
                 accel.name.clone(),
                 format!("{seq}"),
@@ -570,8 +571,8 @@ pub fn fig26(r: &mut Report) -> Result<()> {
     let engine = MmeeEngine::native();
     let accel = presets::coral();
     let w = presets::bert_base(512);
-    let mstar = Orojenesis(Variant::BufferManagement).optimize(&w, &accel, Objective::Edp);
-    let me = engine.optimize(&w, &accel, Objective::Edp);
+    let mstar = Orojenesis(Variant::BufferManagement).optimize(&w, &accel, Objective::Edp)?;
+    let me = engine.optimize(&w, &accel, Objective::Edp)?;
     let rows = vec![
         vec![
             "mmee* (no recompute)".to_string(),
@@ -620,27 +621,22 @@ pub fn fig27(r: &mut Report) -> Result<()> {
         let base = presets::accel1();
         // Fixed: 32×32 weight-stationary.
         let fixed = engine
-            .optimize_with_candidates(&w, &base, Objective::Edp, &ws_query)
+            .optimize_with_candidates(&w, &base, Objective::Edp, &ws_query)?
             .metrics
             .edp();
         // Ideal Flow: 32×32, stationary modes free.
-        let flow = engine.optimize(&w, &base, Objective::Edp).metrics.edp();
+        let flow = engine.optimize(&w, &base, Objective::Edp)?.metrics.edp();
         // Ideal Shape: WS, best logical shape.
-        let shape = shapes
-            .iter()
-            .map(|&(pr, pc)| {
-                let a = base.with_pe_shape(pr, pc);
-                engine.optimize_with_candidates(&w, &a, Objective::Edp, &ws_query).metrics.edp()
-            })
-            .fold(f64::INFINITY, f64::min);
-        // Ideal Shape & Dataflow.
-        let both = shapes
-            .iter()
-            .map(|&(pr, pc)| {
-                let a = base.with_pe_shape(pr, pc);
-                engine.optimize(&w, &a, Objective::Edp).metrics.edp()
-            })
-            .fold(f64::INFINITY, f64::min);
+        let mut shape = f64::INFINITY;
+        let mut both = f64::INFINITY;
+        for &(pr, pc) in &shapes {
+            let a = base.with_pe_shape(pr, pc);
+            let ws = engine.optimize_with_candidates(&w, &a, Objective::Edp, &ws_query)?;
+            shape = shape.min(ws.metrics.edp());
+            // Ideal Shape & Dataflow.
+            let free = engine.optimize(&w, &a, Objective::Edp)?;
+            both = both.min(free.metrics.edp());
+        }
         rows.push(vec![
             w.name.clone(),
             "1.00".into(),

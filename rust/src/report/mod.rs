@@ -9,7 +9,7 @@ pub mod tables;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
-use anyhow::Result;
+use crate::error::Result;
 
 /// Accumulates CSVs + a markdown summary for one harness run.
 pub struct Report {

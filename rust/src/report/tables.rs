@@ -1,6 +1,6 @@
 //! Table regeneration (paper Tables I–IV).
 
-use anyhow::Result;
+use crate::error::Result;
 
 use super::{fmt_mj_ms, Report};
 use crate::baselines::{nofusion::NoFusion, tileflow::TileFlow, Mapper};
@@ -20,7 +20,7 @@ pub fn table1(r: &mut Report) -> Result<()> {
         let mut row = vec![w.name.clone()];
         for accel in [presets::accel1(), presets::accel2()] {
             for obj in [Objective::Energy, Objective::Latency] {
-                let s = engine.optimize(&w, &accel, obj);
+                let s = engine.optimize(&w, &accel, obj)?;
                 row.push(fmt_mj_ms(s.metrics.energy, s.metrics.latency));
             }
         }
@@ -49,8 +49,8 @@ pub fn table2(r: &mut Report) -> Result<()> {
     let gpu = presets::gpu_proxy();
     let mut rows = Vec::new();
     for w in presets::main_grid() {
-        let tf = TileFlow::default().optimize(&w, &gpu, Objective::Latency);
-        let me = engine.optimize(&w, &gpu, Objective::Latency);
+        let tf = TileFlow::default().optimize(&w, &gpu, Objective::Latency)?;
+        let me = engine.optimize(&w, &gpu, Objective::Latency)?;
         // FA2 fixed mapping: flash order, Br=128 / Bc=64 tiles, O rows
         // on-chip, no retention of K/V.
         let g = w.gemm;
@@ -81,15 +81,11 @@ pub fn table2(r: &mut Report) -> Result<()> {
             "-".to_string()
         };
         // Auto: free the logical array shape as well.
-        let auto = [(8usize, 128usize), (16, 64), (32, 32), (64, 16), (128, 8)]
-            .iter()
-            .map(|&(pr, pc)| {
-                engine
-                    .optimize(&w, &gpu.with_pe_shape(pr, pc), Objective::Latency)
-                    .metrics
-                    .latency
-            })
-            .fold(f64::INFINITY, f64::min);
+        let mut auto = f64::INFINITY;
+        for (pr, pc) in [(8usize, 128usize), (16, 64), (32, 32), (64, 16), (128, 8)] {
+            let s = engine.optimize(&w, &gpu.with_pe_shape(pr, pc), Objective::Latency)?;
+            auto = auto.min(s.metrics.latency);
+        }
         rows.push(vec![
             w.name.clone(),
             format!("{:.2}", tf.metrics.latency * 1e3),
@@ -111,8 +107,8 @@ pub fn table3(r: &mut Report) -> Result<()> {
     let w = presets::bert_base(512);
     let mut rows = Vec::new();
     for accel in [presets::coral(), presets::design89(), presets::set_accel()] {
-        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
-        let me = engine.optimize(&w, &accel, Objective::Energy);
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy)?;
+        let me = engine.optimize(&w, &accel, Objective::Energy)?;
         rows.push(vec![
             accel.name.clone(),
             format!(
@@ -137,9 +133,9 @@ pub fn table4(r: &mut Report) -> Result<()> {
     let accel = presets::accel1();
     let mut rows = Vec::new();
     for w in [presets::cc1(), presets::cc2(), presets::mlp_chimera(), presets::ffn_bert()] {
-        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy);
-        let nf = NoFusion.optimize(&w, &accel, Objective::Energy);
-        let me = engine.optimize(&w, &accel, Objective::Energy);
+        let tf = TileFlow::default().optimize(&w, &accel, Objective::Energy)?;
+        let nf = NoFusion.optimize(&w, &accel, Objective::Energy)?;
+        let me = engine.optimize(&w, &accel, Objective::Energy)?;
         let base_e = tf.metrics.energy.min(nf.metrics.energy);
         let base_l = tf.metrics.latency.min(nf.metrics.latency);
         rows.push(vec![
@@ -183,10 +179,10 @@ pub fn pruning_check(r: &mut Report) -> Result<()> {
     let q_unpruned = QueryMatrix::build(unpruned_cands);
 
     let t0 = std::time::Instant::now();
-    let s_pruned = engine.optimize(&w, &accel, Objective::Energy);
+    let s_pruned = engine.optimize(&w, &accel, Objective::Energy)?;
     let t_pruned = t0.elapsed();
     let t1 = std::time::Instant::now();
-    let s_full = engine.optimize_with_candidates(&w, &accel, Objective::Energy, &q_unpruned);
+    let s_full = engine.optimize_with_candidates(&w, &accel, Objective::Energy, &q_unpruned)?;
     let t_full = t1.elapsed();
 
     let pt = pruned_table();
@@ -216,6 +212,10 @@ pub fn pruning_check(r: &mut Report) -> Result<()> {
         pt.distinct_per_class[0].max(pt.distinct_per_class[1]),
         pt.classes[0].len().max(pt.classes[1].len()),
     ));
-    anyhow::ensure!(same, "pruning changed the optimum!");
+    if !same {
+        return Err(crate::error::MmeeError::Internal(
+            "pruning changed the optimum!".into(),
+        ));
+    }
     Ok(())
 }

@@ -7,10 +7,13 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{MmeeError, Result};
 use crate::model::terms::{seg, NUM_FEATURES, NUM_SLOTS};
 use crate::util::json::Json;
+
+fn parse_err(msg: impl Into<String>) -> MmeeError {
+    MmeeError::Parse(msg.into())
+}
 
 pub const LAYOUT_VERSION: usize = 4;
 
@@ -44,22 +47,24 @@ impl Manifest {
                 return Self::load(&dir);
             }
         }
-        bail!("no artifacts found; run `make artifacts` first")
+        Err(MmeeError::Io("no artifacts found; run `make artifacts` first".into()))
     }
 
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
-        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            MmeeError::Io(format!("reading {}/manifest.json: {e}", dir.display()))
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| parse_err(format!("parsing manifest.json: {e}")))?;
         validate_layout(&j)?;
         let mut entries = Vec::new();
         for a in j
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .ok_or_else(|| parse_err("manifest missing artifacts"))?
         {
             let get = |k: &str| -> Result<&Json> {
-                a.get(k).ok_or_else(|| anyhow!("artifact entry missing '{k}'"))
+                a.get(k).ok_or_else(|| parse_err(format!("artifact entry missing '{k}'")))
             };
             entries.push(ArtifactEntry {
                 kind: get("kind")?.as_str().unwrap_or_default().to_string(),
@@ -91,7 +96,9 @@ fn validate_layout(j: &Json) -> Result<()> {
         if cond {
             Ok(())
         } else {
-            bail!("artifact layout mismatch: {what}; re-run `make artifacts`")
+            Err(parse_err(format!(
+                "artifact layout mismatch: {what}; re-run `make artifacts`"
+            )))
         }
     };
     expect(
@@ -103,12 +110,12 @@ fn validate_layout(j: &Json) -> Result<()> {
         j.get("num_features").and_then(Json::as_usize) == Some(NUM_FEATURES),
         "num_features",
     )?;
-    let segs = j.get("segments").ok_or_else(|| anyhow!("manifest missing segments"))?;
+    let segs = j.get("segments").ok_or_else(|| parse_err("manifest missing segments"))?;
     let check_seg = |name: &str, s: (usize, usize)| -> Result<()> {
         let got = segs
             .get(name)
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("segment {name} missing"))?;
+            .ok_or_else(|| parse_err(format!("segment {name} missing")))?;
         expect(
             got.len() == 2
                 && got[0].as_usize() == Some(s.0)

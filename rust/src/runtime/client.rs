@@ -1,14 +1,12 @@
 //! PJRT client wrapper: compile-once executable cache + typed execution
 //! of the two artifact kinds (full surfaces / objective reduction).
-
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Result};
-
-use super::artifacts::{ArtifactEntry, Manifest};
-use crate::config::HwVector;
-use crate::model::terms::{NUM_FEATURES, NUM_SLOTS};
+//!
+//! The real client needs rust XLA/PJRT bindings (an `xla` crate) that
+//! are not part of the offline build; it is gated behind the `pjrt`
+//! cargo feature. Without the feature, the stub [`Runtime`] reports
+//! [`MmeeError::Backend`] from `new()` so callers (the `xla` eval
+//! backend, the CLI `--backend xla` path) degrade gracefully to the
+//! native evaluator.
 
 /// Outputs of the `full` artifact (padded bucket shapes, row-major C×T).
 #[derive(Debug, Clone)]
@@ -32,146 +30,241 @@ pub struct ReduceOutput {
     pub arg_edp: usize,
 }
 
-pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    execs: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{FullOutput, ReduceOutput};
+    use crate::config::HwVector;
+    use crate::error::{MmeeError, Result};
+    use crate::runtime::artifacts::{ArtifactEntry, Manifest};
 
-impl Runtime {
-    pub fn new() -> Result<Runtime> {
-        let manifest = Manifest::discover()?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { manifest, client, execs: Mutex::new(HashMap::new()) })
+    fn unavailable() -> MmeeError {
+        MmeeError::Backend(
+            "PJRT runtime unavailable: this build has no XLA bindings; \
+             rebuild with `--features pjrt` (vendored `xla` crate) and \
+             run `make artifacts`, or use the native backend"
+                .into(),
+        )
     }
 
-    /// Compile (once) and cache the executable for an artifact.
-    /// Executables are leaked intentionally: they live for the process
-    /// lifetime and sidestep non-`Clone` handle plumbing.
-    fn executable(&self, entry: &ArtifactEntry) -> Result<&'static xla::PjRtLoadedExecutable> {
-        let key = entry.file.display().to_string();
-        let mut execs = self.execs.lock().unwrap();
-        if let Some(e) = execs.get(&key) {
-            return Ok(e);
+    /// Stub runtime for builds without the `pjrt` feature.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Runtime> {
+            Err(unavailable())
         }
-        let proto = xla::HloModuleProto::from_text_file(&entry.file)
-            .map_err(|e| anyhow!("loading {}: {e}", entry.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", entry.file.display()))?;
-        let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
-        execs.insert(key, leaked);
-        Ok(leaked)
-    }
 
-    fn make_inputs(
-        entry: &ArtifactEntry,
-        qexp: &[f32],
-        coef: &[f32],
-        lnb: &[f32],
-        hw: &HwVector,
-    ) -> Result<[xla::Literal; 4]> {
-        let (c, t) = (entry.c, entry.t);
-        anyhow::ensure!(qexp.len() == c * NUM_SLOTS * NUM_FEATURES, "qexp shape");
-        anyhow::ensure!(coef.len() == c * NUM_SLOTS, "coef shape");
-        anyhow::ensure!(lnb.len() == NUM_FEATURES * t, "lnb shape");
-        let q = xla::Literal::vec1(qexp)
-            .reshape(&[c as i64, NUM_SLOTS as i64, NUM_FEATURES as i64])
-            .map_err(|e| anyhow!("qexp reshape: {e}"))?;
-        let cf = xla::Literal::vec1(coef)
-            .reshape(&[c as i64, NUM_SLOTS as i64])
-            .map_err(|e| anyhow!("coef reshape: {e}"))?;
-        let b = xla::Literal::vec1(lnb)
-            .reshape(&[NUM_FEATURES as i64, t as i64])
-            .map_err(|e| anyhow!("lnb reshape: {e}"))?;
-        let hwv = xla::Literal::vec1(&hw.to_f32_array()[..]);
-        Ok([q, cf, b, hwv])
-    }
+        pub fn run_full(
+            &self,
+            _entry: &ArtifactEntry,
+            _qexp: &[f32],
+            _coef: &[f32],
+            _lnb: &[f32],
+            _hw: &HwVector,
+        ) -> Result<FullOutput> {
+            Err(unavailable())
+        }
 
-    /// Execute the `full` artifact for one padded bucket.
-    pub fn run_full(
-        &self,
-        entry: &ArtifactEntry,
-        qexp: &[f32],
-        coef: &[f32],
-        lnb: &[f32],
-        hw: &HwVector,
-    ) -> Result<FullOutput> {
-        let exe = self.executable(entry)?;
-        let inputs = Self::make_inputs(entry, qexp, coef, lnb, hw)?;
-        let result = exe
-            .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("execute full: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple: {e}"))?;
-        anyhow::ensure!(tuple.len() == 4, "full artifact returns 4 outputs");
-        let mut vecs = tuple.into_iter().map(|l| {
-            l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
-        });
-        Ok(FullOutput {
-            c: entry.c,
-            t: entry.t,
-            energy: vecs.next().unwrap()?,
-            latency: vecs.next().unwrap()?,
-            da: vecs.next().unwrap()?,
-            bs: vecs.next().unwrap()?,
-        })
-    }
+        pub fn run_reduce(
+            &self,
+            _entry: &ArtifactEntry,
+            _qexp: &[f32],
+            _coef: &[f32],
+            _lnb: &[f32],
+            _hw: &HwVector,
+        ) -> Result<ReduceOutput> {
+            Err(unavailable())
+        }
 
-    /// Execute the `reduce` artifact for one padded bucket.
-    pub fn run_reduce(
-        &self,
-        entry: &ArtifactEntry,
-        qexp: &[f32],
-        coef: &[f32],
-        lnb: &[f32],
-        hw: &HwVector,
-    ) -> Result<ReduceOutput> {
-        let exe = self.executable(entry)?;
-        let inputs = Self::make_inputs(entry, qexp, coef, lnb, hw)?;
-        let result = exe
-            .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("execute reduce: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple: {e}"))?;
-        anyhow::ensure!(tuple.len() == 6, "reduce artifact returns 6 outputs");
-        let scalar_f = |l: &xla::Literal| -> Result<f32> {
-            Ok(l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0])
-        };
-        let scalar_i = |l: &xla::Literal| -> Result<usize> {
-            Ok(l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?[0] as usize)
-        };
-        Ok(ReduceOutput {
-            min_energy: scalar_f(&tuple[0])?,
-            arg_energy: scalar_i(&tuple[1])?,
-            min_latency: scalar_f(&tuple[2])?,
-            arg_latency: scalar_i(&tuple[3])?,
-            min_edp: scalar_f(&tuple[4])?,
-            arg_edp: scalar_i(&tuple[5])?,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    use super::{FullOutput, ReduceOutput};
+    use crate::config::HwVector;
+    use crate::error::{MmeeError, Result};
+    use crate::model::terms::{NUM_FEATURES, NUM_SLOTS};
+    use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+
+    fn backend_err(msg: impl std::fmt::Display) -> MmeeError {
+        MmeeError::Backend(msg.to_string())
+    }
+
+    fn ensure(cond: bool, what: &str) -> Result<()> {
+        if cond {
+            Ok(())
+        } else {
+            Err(backend_err(what))
+        }
+    }
+
+    pub struct Runtime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        execs: Mutex<HashMap<String, &'static xla::PjRtLoadedExecutable>>,
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Runtime> {
+            let manifest = Manifest::discover()?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| backend_err(format!("PJRT cpu client: {e}")))?;
+            Ok(Runtime { manifest, client, execs: Mutex::new(HashMap::new()) })
+        }
+
+        /// Compile (once) and cache the executable for an artifact.
+        /// Executables are leaked intentionally: they live for the process
+        /// lifetime and sidestep non-`Clone` handle plumbing.
+        fn executable(
+            &self,
+            entry: &ArtifactEntry,
+        ) -> Result<&'static xla::PjRtLoadedExecutable> {
+            let key = entry.file.display().to_string();
+            let mut execs = self.execs.lock().unwrap();
+            if let Some(e) = execs.get(&key) {
+                return Ok(e);
+            }
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| backend_err(format!("loading {}: {e}", entry.file.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| backend_err(format!("compiling {}: {e}", entry.file.display())))?;
+            let leaked: &'static xla::PjRtLoadedExecutable = Box::leak(Box::new(exe));
+            execs.insert(key, leaked);
+            Ok(leaked)
+        }
+
+        fn make_inputs(
+            entry: &ArtifactEntry,
+            qexp: &[f32],
+            coef: &[f32],
+            lnb: &[f32],
+            hw: &HwVector,
+        ) -> Result<[xla::Literal; 4]> {
+            let (c, t) = (entry.c, entry.t);
+            ensure(qexp.len() == c * NUM_SLOTS * NUM_FEATURES, "qexp shape")?;
+            ensure(coef.len() == c * NUM_SLOTS, "coef shape")?;
+            ensure(lnb.len() == NUM_FEATURES * t, "lnb shape")?;
+            let q = xla::Literal::vec1(qexp)
+                .reshape(&[c as i64, NUM_SLOTS as i64, NUM_FEATURES as i64])
+                .map_err(|e| backend_err(format!("qexp reshape: {e}")))?;
+            let cf = xla::Literal::vec1(coef)
+                .reshape(&[c as i64, NUM_SLOTS as i64])
+                .map_err(|e| backend_err(format!("coef reshape: {e}")))?;
+            let b = xla::Literal::vec1(lnb)
+                .reshape(&[NUM_FEATURES as i64, t as i64])
+                .map_err(|e| backend_err(format!("lnb reshape: {e}")))?;
+            let hwv = xla::Literal::vec1(&hw.to_f32_array()[..]);
+            Ok([q, cf, b, hwv])
+        }
+
+        /// Execute the `full` artifact for one padded bucket.
+        pub fn run_full(
+            &self,
+            entry: &ArtifactEntry,
+            qexp: &[f32],
+            coef: &[f32],
+            lnb: &[f32],
+            hw: &HwVector,
+        ) -> Result<FullOutput> {
+            let exe = self.executable(entry)?;
+            let inputs = Self::make_inputs(entry, qexp, coef, lnb, hw)?;
+            let result = exe
+                .execute::<xla::Literal>(&inputs)
+                .map_err(|e| backend_err(format!("execute full: {e}")))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| backend_err(format!("fetch: {e}")))?
+                .to_tuple()
+                .map_err(|e| backend_err(format!("untuple: {e}")))?;
+            ensure(tuple.len() == 4, "full artifact returns 4 outputs")?;
+            let mut vecs = tuple.into_iter().map(|l| {
+                l.to_vec::<f32>().map_err(|e| backend_err(format!("to_vec: {e}")))
+            });
+            Ok(FullOutput {
+                c: entry.c,
+                t: entry.t,
+                energy: vecs.next().unwrap()?,
+                latency: vecs.next().unwrap()?,
+                da: vecs.next().unwrap()?,
+                bs: vecs.next().unwrap()?,
+            })
+        }
+
+        /// Execute the `reduce` artifact for one padded bucket.
+        pub fn run_reduce(
+            &self,
+            entry: &ArtifactEntry,
+            qexp: &[f32],
+            coef: &[f32],
+            lnb: &[f32],
+            hw: &HwVector,
+        ) -> Result<ReduceOutput> {
+            let exe = self.executable(entry)?;
+            let inputs = Self::make_inputs(entry, qexp, coef, lnb, hw)?;
+            let result = exe
+                .execute::<xla::Literal>(&inputs)
+                .map_err(|e| backend_err(format!("execute reduce: {e}")))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| backend_err(format!("fetch: {e}")))?
+                .to_tuple()
+                .map_err(|e| backend_err(format!("untuple: {e}")))?;
+            ensure(tuple.len() == 6, "reduce artifact returns 6 outputs")?;
+            let scalar_f = |l: &xla::Literal| -> Result<f32> {
+                Ok(l.to_vec::<f32>().map_err(backend_err)?[0])
+            };
+            let scalar_i = |l: &xla::Literal| -> Result<usize> {
+                Ok(l.to_vec::<i32>().map_err(backend_err)?[0] as usize)
+            };
+            Ok(ReduceOutput {
+                min_energy: scalar_f(&tuple[0])?,
+                arg_energy: scalar_i(&tuple[1])?,
+                min_latency: scalar_f(&tuple[2])?,
+                arg_latency: scalar_i(&tuple[3])?,
+                min_edp: scalar_f(&tuple[4])?,
+                arg_edp: scalar_i(&tuple[5])?,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+    }
+}
+
+pub use imp::Runtime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_backend_error() {
+        let err = Runtime::new().unwrap_err();
+        assert_eq!(err.kind(), "backend");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
     /// Smoke: load + compile + execute the small bucket with a trivial
     /// single-monomial query; verify against the closed form.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn full_artifact_roundtrip() {
+        use crate::config::HwVector;
+        use crate::model::terms::{NUM_FEATURES, NUM_SLOTS};
         let Ok(rt) = Runtime::new() else {
             eprintln!("artifacts not built; skipping");
             return;

@@ -2,7 +2,10 @@
 //! (`artifacts/*.hlo.txt`) and execute them from the rust hot path.
 //!
 //! Python runs only at build time (`make artifacts`); this module is the
-//! entire request-path interface to the compiled L1/L2 stack.
+//! entire request-path interface to the compiled L1/L2 stack. The real
+//! PJRT client is gated behind the `pjrt` cargo feature (see
+//! [`client`]); default builds get a stub that reports
+//! `MmeeError::Backend` and leave the native evaluator in charge.
 
 pub mod artifacts;
 pub mod client;

@@ -1,16 +1,40 @@
 //! The MMEE optimization engine.
+//!
+//! Construction goes through [`MmeeEngine::builder`]; requests go
+//! through [`MmeeEngine::plan`] (typed [`MappingRequest`] →
+//! [`MappingPlan`]) or the lower-level [`MmeeEngine::optimize`]. Both
+//! are fallible — infeasible workloads and backend failures come back
+//! as [`MmeeError`] instead of panicking, so a serving loop survives
+//! bad requests.
+//!
+//! The engine keeps two LRU caches for the pipelined-serving case
+//! (many queries against the same accelerator):
+//!
+//! * **boundary cache** — keyed on (GEMM dims, capacity, PE shape,
+//!   softmax coefficient): tiling enumeration + feature columns are
+//!   reused across objectives and candidate tables;
+//! * **plan cache** — keyed on the fully resolved (workload, accel)
+//!   pair, holding the packaged winners for all three objectives (one
+//!   surface pass computes them anyway): repeat requests under any
+//!   objective return a cached plan without touching the surface.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::config::{Accelerator, Workload};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::error::MmeeError;
 use crate::eval::{native::NativeBackend, EvalBackend};
 use crate::loopnest::Candidate;
 use crate::model::{analytic, derive_slots, Multipliers};
 use crate::search::pareto::Front;
+use crate::search::plan::{MappingPlan, Provenance};
+use crate::search::request::MappingRequest;
 use crate::search::result::{Objective, Solution};
 use crate::tiling::{enumerate_tilings, Tiling};
+use crate::util::lru::LruCache;
 
 /// Search statistics for runtime reporting (paper §VII-C/H).
 #[derive(Debug, Clone)]
@@ -21,23 +45,129 @@ pub struct SearchStats {
     pub elapsed: std::time::Duration,
 }
 
-pub struct MmeeEngine {
-    backend: Box<dyn EvalBackend>,
-}
-
 fn mmee_query() -> &'static QueryMatrix {
     static Q: OnceLock<QueryMatrix> = OnceLock::new();
     Q.get_or_init(QueryMatrix::mmee)
 }
 
+/// Default LRU capacity for both engine caches. Boundary matrices are
+/// the large entry (a few MB at long sequence lengths), so the default
+/// keeps retention modest; serving deployments that pipeline many
+/// distinct (workload, accel) pairs can raise it via
+/// [`EngineBuilder::cache_capacity`].
+pub const DEFAULT_CACHE_CAPACITY: usize = 16;
+
+/// Builder for [`MmeeEngine`] — replaces the old constructor zoo
+/// (`native()` / `with_backend(..)` remain as thin shims).
+pub struct EngineBuilder {
+    backend: Option<Box<dyn EvalBackend>>,
+    candidates: Option<QueryMatrix>,
+    cache_capacity: usize,
+}
+
+impl EngineBuilder {
+    /// Evaluation backend (defaults to the native evaluator). Obtain one
+    /// by name with [`crate::eval::backend_by_name`].
+    pub fn backend(mut self, backend: Box<dyn EvalBackend>) -> EngineBuilder {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Restrict the engine to a custom candidate table (baseline
+    /// variants, ablations). Defaults to the shared pruned MMEE table.
+    pub fn candidates(mut self, q: QueryMatrix) -> EngineBuilder {
+        self.candidates = Some(q);
+        self
+    }
+
+    /// LRU capacity for the boundary-matrix and plan caches; `0`
+    /// disables caching.
+    pub fn cache_capacity(mut self, capacity: usize) -> EngineBuilder {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    pub fn build(self) -> MmeeEngine {
+        MmeeEngine {
+            backend: self.backend.unwrap_or_else(|| Box::new(NativeBackend)),
+            table: self.candidates,
+            boundary_cache: RefCell::new(LruCache::new(self.cache_capacity)),
+            plan_cache: RefCell::new(LruCache::new(self.cache_capacity)),
+        }
+    }
+}
+
+pub struct MmeeEngine {
+    backend: Box<dyn EvalBackend>,
+    /// Custom candidate table; `None` = the shared pruned MMEE table.
+    table: Option<QueryMatrix>,
+    boundary_cache: RefCell<LruCache<BoundaryKey, Rc<BoundaryMatrix>>>,
+    /// Memoizes plans AND `Infeasible` verdicts. One surface pass
+    /// yields the winner for all three objectives, so entries are keyed
+    /// objective-free and hold all three packaged plans: a pipelined
+    /// client re-querying the same (workload, accel) under any
+    /// objective never re-pays the surface pass.
+    plan_cache: RefCell<LruCache<PlanKey, Result<Box<[MappingPlan; 3]>, MmeeError>>>,
+}
+
+/// Everything the boundary matrix depends on: tiling enumeration reads
+/// (GEMM dims, capacity); the feature columns read the PE shape and the
+/// softmax coefficient (see `model::analytic::features`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct BoundaryKey {
+    dims: [usize; 4],
+    capacity_words: Option<u64>,
+    pe: (usize, usize),
+    smx_bits: u64,
+}
+
+impl BoundaryKey {
+    fn new(w: &Workload, accel: &Accelerator, capacity_words: Option<f64>) -> BoundaryKey {
+        let smx = if w.has_softmax() { w.c_softmax } else { 1e-30 };
+        BoundaryKey {
+            dims: w.gemm.dims(),
+            capacity_words: capacity_words.map(|c| c as u64),
+            pe: (accel.pe_rows, accel.pe_cols),
+            smx_bits: smx.to_bits(),
+        }
+    }
+}
+
+/// Key of a fully resolved request's surface (objective-free — the
+/// cached entry answers all three). Keying on the structs themselves
+/// (derived `PartialEq` over every field, names included) means a
+/// future `Workload`/`Accelerator` field can never silently alias two
+/// requests the way a hand-rolled fingerprint could.
+#[derive(Debug, Clone, PartialEq)]
+struct PlanKey {
+    workload: Workload,
+    accel: Accelerator,
+}
+
+fn obj_index(o: Objective) -> usize {
+    match o {
+        Objective::Energy => 0,
+        Objective::Latency => 1,
+        Objective::Edp => 2,
+    }
+}
+
 impl MmeeEngine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder {
+            backend: None,
+            candidates: None,
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+        }
+    }
+
     /// Default engine: native backend over the full pruned space.
     pub fn native() -> MmeeEngine {
-        MmeeEngine { backend: Box::new(NativeBackend) }
+        MmeeEngine::builder().build()
     }
 
     pub fn with_backend(backend: Box<dyn EvalBackend>) -> MmeeEngine {
-        MmeeEngine { backend }
+        MmeeEngine::builder().backend(backend).build()
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -53,22 +183,131 @@ impl MmeeEngine {
         mmee_query()
     }
 
-    fn boundary(&self, workload: &Workload, accel: &Accelerator) -> BoundaryMatrix {
-        let tilings =
-            enumerate_tilings(&workload.gemm, Some(accel.capacity_words() as f64));
-        BoundaryMatrix::build(tilings, accel, workload)
+    /// This engine's candidate table (custom or the shared one).
+    fn table(&self) -> &QueryMatrix {
+        match &self.table {
+            Some(q) => q,
+            None => mmee_query(),
+        }
+    }
+
+    /// (hits, misses) of the boundary-matrix cache.
+    pub fn boundary_cache_stats(&self) -> (u64, u64) {
+        self.boundary_cache.borrow().stats()
+    }
+
+    /// (hits, misses) of the plan cache.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        self.plan_cache.borrow().stats()
+    }
+
+    /// Boundary matrix for (workload, accel, capacity), LRU-cached.
+    /// Returns the matrix and whether it was a cache hit.
+    fn boundary_cached(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        capacity_words: Option<f64>,
+    ) -> (Rc<BoundaryMatrix>, bool) {
+        let key = BoundaryKey::new(workload, accel, capacity_words);
+        if let Some(b) = self.boundary_cache.borrow_mut().get(&key) {
+            return (Rc::clone(b), true);
+        }
+        let tilings = enumerate_tilings(&workload.gemm, capacity_words);
+        let b = Rc::new(BoundaryMatrix::build(tilings, accel, workload));
+        // Uncapped enumerations (the Fig. 15/16 DA-vs-BS sweeps) are the
+        // largest matrices and essentially never repeat within an
+        // engine's lifetime — don't retain them, matching the
+        // build-use-drop behavior the sweep harness had before caching.
+        if capacity_words.is_some() {
+            self.boundary_cache.borrow_mut().put(key, Rc::clone(&b));
+        }
+        (b, false)
+    }
+
+    /// Answer one typed request: resolve specs, consult the plan cache,
+    /// search, and package the winner with stats + provenance.
+    ///
+    /// A cache miss runs one surface pass and packages the winners for
+    /// *all three* objectives (the pass computes them anyway), so a
+    /// follow-up request for the same (workload, accel) under any
+    /// objective is a cache hit.
+    pub fn plan(&self, req: &MappingRequest) -> Result<MappingPlan, MmeeError> {
+        let t0 = Instant::now();
+        let (workload, accel) = req.resolve()?;
+        let key = PlanKey { workload: workload.clone(), accel: accel.clone() };
+        // Clone only the requested objective's plan out of the entry —
+        // this is the hot serving path.
+        let cached = self.plan_cache.borrow_mut().get(&key).map(|entry| match entry {
+            Ok(plans) => Ok(plans[obj_index(req.objective)].clone()),
+            Err(e) => Err(e.clone()),
+        });
+        match cached {
+            Some(Ok(mut p)) => {
+                p.provenance.cache_hit = true;
+                p.stats.elapsed = t0.elapsed();
+                p.solution.elapsed = t0.elapsed();
+                return Ok(p);
+            }
+            Some(Err(e)) => return Err(e),
+            None => {}
+        }
+        let q = self.table();
+        let (b, boundary_hit) =
+            self.boundary_cached(&workload, &accel, Some(accel.capacity_words() as f64));
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(&workload, &accel);
+        // Backend failures may be transient — propagate without memoizing.
+        let best = self.backend.try_argmin3(q, &b, &hw, &mult)?;
+        // One feasible mapping bounds every objective's minimum, so
+        // feasibility is uniform across the three argmins: check the
+        // requested one and cache the verdict for all.
+        let (score, _, _) = best[obj_index(req.objective)];
+        if !score.is_finite() || score >= 1e29 {
+            let e = MmeeError::Infeasible {
+                workload: workload.name.clone(),
+                accel: accel.name.clone(),
+            };
+            self.plan_cache.borrow_mut().put(key, Err(e.clone()));
+            return Err(e);
+        }
+        let stats = SearchStats {
+            candidates: q.num_candidates(),
+            tilings: b.num_tilings(),
+            mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+            elapsed: t0.elapsed(),
+        };
+        let make = |objective: Objective| -> MappingPlan {
+            let (_, c, t) = best[obj_index(objective)];
+            MappingPlan {
+                solution: self.package(&workload, &accel, objective, q, &b.tilings, c, t, t0),
+                stats: stats.clone(),
+                provenance: Provenance {
+                    backend: self.backend.name().to_string(),
+                    cache_hit: false,
+                    boundary_cache_hit: boundary_hit,
+                },
+            }
+        };
+        let plans =
+            Box::new([make(Objective::Energy), make(Objective::Latency), make(Objective::Edp)]);
+        let plan = plans[obj_index(req.objective)].clone();
+        self.plan_cache.borrow_mut().put(key, Ok(plans));
+        Ok(plan)
     }
 
     /// Optimize one workload for one objective. One surface pass yields
     /// all three objectives (paper: "MMEE evaluates all dataflows and
     /// metrics simultaneously"); the requested one is returned.
+    /// Infeasible (workload, accel) pairs return
+    /// [`MmeeError::Infeasible`] rather than panicking.
     pub fn optimize(
         &self,
         workload: &Workload,
         accel: &Accelerator,
         objective: Objective,
-    ) -> Solution {
-        self.optimize_with_candidates(workload, accel, objective, mmee_query())
+    ) -> Result<Solution, MmeeError> {
+        self.optimize_with_candidates(workload, accel, objective, self.table())
     }
 
     /// Optimize over a restricted candidate table (baseline variants).
@@ -78,24 +317,36 @@ impl MmeeEngine {
         accel: &Accelerator,
         objective: Objective,
         q: &QueryMatrix,
-    ) -> Solution {
+    ) -> Result<Solution, MmeeError> {
+        self.optimize_inner(workload, accel, objective, q).map(|(s, _)| s)
+    }
+
+    fn optimize_inner(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        objective: Objective,
+        q: &QueryMatrix,
+    ) -> Result<(Solution, bool), MmeeError> {
         let t0 = Instant::now();
-        let b = self.boundary(workload, accel);
+        let (b, boundary_hit) =
+            self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
         let hw = accel.hw_vector();
         let mult = Multipliers::for_workload(workload, accel);
-        let best = self.backend.argmin3(q, &b, &hw, &mult);
+        let best = self.backend.try_argmin3(q, &b, &hw, &mult)?;
         let (score, c, t) = best[match objective {
             Objective::Energy => 0,
             Objective::Latency => 1,
             Objective::Edp => 2,
         }];
-        assert!(
-            score.is_finite() && score < 1e29,
-            "no feasible mapping for {} on {}",
-            workload.name,
-            accel.name
-        );
-        self.package(workload, accel, objective, q, &b.tilings, c, t, t0)
+        if !score.is_finite() || score >= 1e29 {
+            return Err(MmeeError::Infeasible {
+                workload: workload.name.clone(),
+                accel: accel.name.clone(),
+            });
+        }
+        let s = self.package(workload, accel, objective, q, &b.tilings, c, t, t0);
+        Ok((s, boundary_hit))
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -134,8 +385,9 @@ impl MmeeEngine {
         accel: &Accelerator,
     ) -> (Front, SearchStats) {
         let t0 = Instant::now();
-        let q = mmee_query();
-        let b = self.boundary(workload, accel);
+        let q = self.table();
+        let (b, _) =
+            self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
         let hw = accel.hw_vector();
         let mult = Multipliers::for_workload(workload, accel);
         let (el, _) = self.backend.fronts(q, &b, &hw, &mult);
@@ -152,7 +404,7 @@ impl MmeeEngine {
     /// each achievable buffer budget, the minimum DRAM traffic. Uses an
     /// *uncapped* tiling enumeration so the sweep covers large buffers.
     pub fn pareto_da_bs(&self, workload: &Workload, accel: &Accelerator) -> Front {
-        self.pareto_da_bs_with_candidates(workload, accel, mmee_query())
+        self.pareto_da_bs_with_candidates(workload, accel, self.table())
     }
 
     pub fn pareto_da_bs_with_candidates(
@@ -161,8 +413,7 @@ impl MmeeEngine {
         accel: &Accelerator,
         q: &QueryMatrix,
     ) -> Front {
-        let tilings = enumerate_tilings(&workload.gemm, None);
-        let b = BoundaryMatrix::build(tilings, accel, workload);
+        let (b, _) = self.boundary_cached(workload, accel, None);
         // Feasibility must not clip the sweep: lift the capacity.
         let mut hw = accel.hw_vector();
         hw.capacity_words = f64::MAX;
@@ -172,16 +423,20 @@ impl MmeeEngine {
     }
 
     /// Full optimize pass returning only search statistics (Fig. 22).
-    pub fn stats_only(&self, workload: &Workload, accel: &Accelerator) -> SearchStats {
+    pub fn stats_only(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+    ) -> Result<SearchStats, MmeeError> {
         let t0 = Instant::now();
-        let s = self.optimize(workload, accel, Objective::Energy);
-        let nc = mmee_query().num_candidates();
-        SearchStats {
+        let s = self.optimize(workload, accel, Objective::Energy)?;
+        let nc = self.table().num_candidates();
+        Ok(SearchStats {
             candidates: nc,
             tilings: (s.evaluated / nc as f64) as usize,
             mappings: s.evaluated,
             elapsed: t0.elapsed(),
-        }
+        })
     }
 }
 
@@ -189,13 +444,14 @@ impl MmeeEngine {
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::search::request::{AccelSpec, WorkloadSpec};
 
     #[test]
     fn optimize_small_attention_is_feasible_and_sane() {
         let engine = MmeeEngine::native();
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let s = engine.optimize(&w, &accel, Objective::Energy);
+        let s = engine.optimize(&w, &accel, Objective::Energy).unwrap();
         assert!(s.metrics.feasible);
         assert!(s.metrics.bs <= accel.capacity_words() as f64);
         assert!(s.metrics.energy > 0.0 && s.metrics.energy < 1.0, "{}", s.metrics.energy);
@@ -208,8 +464,8 @@ mod tests {
         let engine = MmeeEngine::native();
         let w = presets::bert_base(512);
         let accel = presets::accel2();
-        let se = engine.optimize(&w, &accel, Objective::Energy);
-        let sl = engine.optimize(&w, &accel, Objective::Latency);
+        let se = engine.optimize(&w, &accel, Objective::Energy).unwrap();
+        let sl = engine.optimize(&w, &accel, Objective::Latency).unwrap();
         assert!(se.metrics.energy <= sl.metrics.energy + 1e-12);
         assert!(sl.metrics.latency <= se.metrics.latency + 1e-12);
     }
@@ -222,8 +478,8 @@ mod tests {
         let (front, stats) = engine.pareto_energy_latency(&w, &accel);
         assert!(!front.is_empty());
         assert!(stats.mappings > 0.0);
-        let se = engine.optimize(&w, &accel, Objective::Energy);
-        let sl = engine.optimize(&w, &accel, Objective::Latency);
+        let se = engine.optimize(&w, &accel, Objective::Energy).unwrap();
+        let sl = engine.optimize(&w, &accel, Objective::Latency).unwrap();
         let min_e = front.points().first().unwrap();
         let min_l = front.points().last().unwrap();
         assert!((min_e.x - se.metrics.energy).abs() <= 1e-3 * se.metrics.energy);
@@ -242,5 +498,130 @@ mod tests {
             assert!(pair[0].x < pair[1].x);
             assert!(pair[0].y > pair[1].y);
         }
+    }
+
+    #[test]
+    fn infeasible_workload_returns_structured_error() {
+        // 64-byte buffer: no tiling of BERT attention can fit.
+        let engine = MmeeEngine::native();
+        let w = presets::bert_base(512);
+        let accel = presets::accel1().with_buffer_bytes(64);
+        let err = engine.optimize(&w, &accel, Objective::Energy).unwrap_err();
+        match err {
+            MmeeError::Infeasible { ref workload, ref accel } => {
+                assert_eq!(workload, "bert-base-512");
+                assert_eq!(accel, "accel1-nvdla");
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+        // The engine survives and serves the next (good) request.
+        let ok = engine.optimize(&w, &presets::accel1(), Objective::Energy);
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn builder_configures_backend_candidates_and_cache() {
+        use crate::encode::QueryMatrix;
+        let q = QueryMatrix::build(MmeeEngine::candidates()[..32].to_vec());
+        let engine = MmeeEngine::builder()
+            .backend(Box::new(NativeBackend))
+            .candidates(q)
+            .cache_capacity(0)
+            .build();
+        assert_eq!(engine.backend_name(), "native");
+        let w = presets::bert_base(512);
+        let accel = presets::accel1();
+        let s = engine.optimize(&w, &accel, Objective::Energy).unwrap();
+        assert_eq!(s.evaluated % 32.0, 0.0); // 32-candidate table
+        // cache_capacity(0) disables both caches.
+        let _ = engine.optimize(&w, &accel, Objective::Energy).unwrap();
+        assert_eq!(engine.boundary_cache_stats().0, 0);
+    }
+
+    #[test]
+    fn one_surface_pass_serves_all_objectives_and_repeats() {
+        let engine = MmeeEngine::native();
+        let req_e = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let req_l = MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency);
+        let p1 = engine.plan(&req_e).unwrap();
+        assert!(!p1.provenance.cache_hit);
+        assert!(!p1.provenance.boundary_cache_hit);
+        // Different objective, same surface: the miss packaged all
+        // three objectives, so this is a plan-cache hit.
+        let p2 = engine.plan(&req_l).unwrap();
+        assert!(p2.provenance.cache_hit);
+        assert_eq!(p2.solution.objective, Objective::Latency);
+        assert!(p2.solution.metrics.latency <= p1.solution.metrics.latency + 1e-12);
+        // Identical repeat: cached plan with identical mapping.
+        let p3 = engine.plan(&req_e).unwrap();
+        assert!(p3.provenance.cache_hit);
+        assert_eq!(p3.solution.tiling, p1.solution.tiling);
+        assert_eq!(p3.solution.candidate, p1.solution.candidate);
+        assert_eq!(p3.solution.metrics.energy, p1.solution.metrics.energy);
+        // The boundary cache also serves the lower-level optimize path.
+        let w = presets::bert_base(512);
+        let a = presets::accel1();
+        let (hits_before, _) = engine.boundary_cache_stats();
+        let _ = engine.optimize(&w, &a, Objective::Edp).unwrap();
+        assert_eq!(engine.boundary_cache_stats().0, hits_before + 1);
+    }
+
+    #[test]
+    fn plan_cache_serves_repeats_at_least_10x_faster() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let cold = engine.plan(&req).unwrap();
+        let warm = engine.plan(&req).unwrap();
+        assert!(warm.provenance.cache_hit);
+        let (cold_s, warm_s) =
+            (cold.stats.elapsed.as_secs_f64(), warm.stats.elapsed.as_secs_f64());
+        // >=10x, with a 1 ms floor so a scheduler hiccup on a loaded CI
+        // runner can't flake a microsecond-scale cache probe.
+        assert!(
+            warm_s * 10.0 <= cold_s || warm_s < 1e-3,
+            "cache hit not >=10x faster: cold {cold_s}s vs warm {warm_s}s"
+        );
+    }
+
+    #[test]
+    fn repeated_infeasible_requests_are_served_from_cache() {
+        let engine = MmeeEngine::native();
+        let tiny = MappingRequest::new(
+            WorkloadSpec::preset("bert-base", 512),
+            AccelSpec::inline(presets::accel1().with_buffer_bytes(64)),
+            Objective::Energy,
+        );
+        let e1 = engine.plan(&tiny).unwrap_err();
+        assert!(matches!(e1, MmeeError::Infeasible { .. }));
+        let (hits_before, _) = engine.plan_cache_stats();
+        let e2 = engine.plan(&tiny).unwrap_err();
+        assert_eq!(e1, e2);
+        // The verdict came from the plan cache — no second surface pass.
+        assert_eq!(engine.plan_cache_stats().0, hits_before + 1);
+    }
+
+    #[test]
+    fn plan_cache_misses_on_hardware_twins() {
+        // Same workload, different buffer size: the struct key must
+        // miss, and the returned plans must reflect each hardware.
+        let engine = MmeeEngine::native();
+        let w = WorkloadSpec::preset("bert-base", 512);
+        let p1 = engine
+            .plan(&MappingRequest::new(
+                w.clone(),
+                AccelSpec::inline(presets::accel1()),
+                Objective::Energy,
+            ))
+            .unwrap();
+        let p2 = engine
+            .plan(&MappingRequest::new(
+                w,
+                AccelSpec::inline(presets::accel1().with_buffer_bytes(2 << 20)),
+                Objective::Energy,
+            ))
+            .unwrap();
+        assert!(!p2.provenance.cache_hit);
+        // Doubling the buffer can only help energy-driven optimization.
+        assert!(p2.solution.metrics.energy <= p1.solution.metrics.energy * (1.0 + 1e-9));
     }
 }

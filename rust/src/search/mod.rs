@@ -1,15 +1,24 @@
-//! The MMEE search engine (paper §VI, Fig. 12).
+//! The MMEE search engine (paper §VI, Fig. 12) and its typed API.
 //!
 //! Pipeline: offline pruned candidate table (cached) → online tiling
 //! enumeration (integer factorization, capacity-prefiltered) → batched
 //! evaluation over the (candidate × tiling) surface → objective argmin /
 //! Pareto extraction. Exhaustive within the decision space; optimal
 //! within the model (§VI-C, property-tested).
+//!
+//! Public request pipeline: build a [`MappingRequest`]
+//! ([`WorkloadSpec`] + [`AccelSpec`] + [`Objective`]), submit it to an
+//! engine from [`MmeeEngine::builder`], receive a [`MappingPlan`] or a
+//! structured [`crate::error::MmeeError`].
 
 pub mod engine;
 pub mod pareto;
+pub mod plan;
+pub mod request;
 pub mod result;
 
-pub use engine::{MmeeEngine, SearchStats};
+pub use engine::{EngineBuilder, MmeeEngine, SearchStats, DEFAULT_CACHE_CAPACITY};
 pub use pareto::{pareto_front, ParetoPoint};
+pub use plan::{MappingPlan, Provenance};
+pub use request::{AccelSpec, MappingRequest, WorkloadSpec};
 pub use result::{Objective, Solution};

@@ -1,0 +1,96 @@
+//! The typed result side of the public API: [`MappingPlan`] subsumes
+//! [`Solution`] (the winning mapping + exact metrics) and adds the
+//! search statistics and serving provenance a compiler or DSE client
+//! needs to reason about the answer (how much space was searched, which
+//! backend evaluated it, whether caches short-circuited the work).
+
+use crate::search::engine::SearchStats;
+use crate::search::result::Solution;
+use crate::util::json::Json;
+
+/// Where a plan came from: which backend evaluated the surface and
+/// which caches were hit on the way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Evaluation backend name (`native` / `branchy` / `xla`).
+    pub backend: String,
+    /// The whole plan was served from the engine's plan cache.
+    pub cache_hit: bool,
+    /// The boundary matrix (tiling enumeration + feature columns) was
+    /// reused from the engine's boundary cache.
+    pub boundary_cache_hit: bool,
+}
+
+/// A complete answer to one [`crate::search::MappingRequest`].
+#[derive(Debug, Clone)]
+pub struct MappingPlan {
+    pub solution: Solution,
+    pub stats: SearchStats,
+    pub provenance: Provenance,
+}
+
+impl MappingPlan {
+    /// Wire form: the solution fields flattened at the top level (so
+    /// pre-redesign clients keep reading `energy_j` etc.), plus `stats`
+    /// and `provenance` objects.
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.solution.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("Solution::to_json returns an object"),
+        };
+        obj.insert(
+            "stats".into(),
+            Json::obj(vec![
+                ("candidates", Json::num(self.stats.candidates as f64)),
+                ("tilings", Json::num(self.stats.tilings as f64)),
+                ("mappings", Json::num(self.stats.mappings)),
+                ("elapsed_s", Json::num(self.stats.elapsed.as_secs_f64())),
+            ]),
+        );
+        obj.insert(
+            "provenance".into(),
+            Json::obj(vec![
+                ("backend", Json::str(self.provenance.backend.clone())),
+                ("cache_hit", Json::Bool(self.provenance.cache_hit)),
+                ("boundary_cache_hit", Json::Bool(self.provenance.boundary_cache_hit)),
+            ]),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::search::{MappingRequest, MmeeEngine, Objective};
+
+    #[test]
+    fn plan_json_flattens_solution_and_adds_provenance() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let p = engine.plan(&req).unwrap();
+        let j = p.to_json();
+        // Solution fields stay at the top level (wire compatibility).
+        assert!(j.get("energy_j").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("workload").unwrap().as_str(), Some("bert-base-512"));
+        // New structured sections.
+        let stats = j.get("stats").unwrap();
+        assert!(stats.get("mappings").unwrap().as_f64().unwrap() > 1e5);
+        let prov = j.get("provenance").unwrap();
+        assert_eq!(prov.get("backend").unwrap().as_str(), Some("native"));
+        assert_eq!(prov.get("cache_hit").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn plan_metrics_match_direct_optimize() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let p = engine.plan(&req).unwrap();
+        let s = engine
+            .optimize(&presets::bert_base(512), &presets::accel1(), Objective::Energy)
+            .unwrap();
+        assert_eq!(p.solution.metrics.energy, s.metrics.energy);
+        assert_eq!(p.solution.tiling, s.tiling);
+    }
+}

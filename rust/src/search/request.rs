@@ -1,0 +1,353 @@
+//! The typed request side of the public API — **the spec-resolution
+//! module**: every preset-name string lookup in the crate funnels
+//! through [`WorkloadSpec::resolve`] / [`AccelSpec::resolve`] here, so
+//! unknown names surface as structured [`MmeeError`]s with the valid
+//! values listed, and every other layer (CLI, serve loop, examples,
+//! report harness) speaks [`MappingRequest`].
+
+use crate::config::{presets, Accelerator, Workload, WorkloadKind};
+use crate::error::MmeeError;
+use crate::search::result::Objective;
+use crate::util::json::Json;
+
+/// What to map: a preset model name (plus sequence length) or an inline
+/// workload definition (compiler clients hand us their own shapes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    Preset { name: String, seq: usize },
+    Inline(Workload),
+}
+
+/// Default sequence length when a request names a preset without `seq`.
+pub const DEFAULT_SEQ: usize = 512;
+
+impl WorkloadSpec {
+    pub fn preset(name: impl Into<String>, seq: usize) -> WorkloadSpec {
+        WorkloadSpec::Preset { name: name.into(), seq }
+    }
+
+    pub fn inline(w: Workload) -> WorkloadSpec {
+        WorkloadSpec::Inline(w)
+    }
+
+    /// Resolve to a concrete workload (case-insensitive for presets).
+    /// The resolved GEMM must have all-positive dimensions — presets
+    /// like `bert-base` with `seq: 0` would otherwise panic tiling
+    /// factorization deep inside the engine (seq-independent presets
+    /// such as `cc1` legitimately ignore `seq`).
+    pub fn resolve(&self) -> Result<Workload, MmeeError> {
+        let w = match self {
+            WorkloadSpec::Preset { name, seq } => presets::workload_by_name(name, *seq)
+                .ok_or_else(|| MmeeError::UnknownWorkload {
+                    name: name.clone(),
+                    valid: presets::WORKLOAD_NAMES.join(", "),
+                })?,
+            WorkloadSpec::Inline(w) => w.clone(),
+        };
+        if w.gemm.dims().contains(&0) {
+            return Err(MmeeError::Parse(format!(
+                "workload '{}' resolves to a zero GEMM dimension {:?} — is 'seq' positive?",
+                w.name,
+                w.gemm.dims()
+            )));
+        }
+        Ok(w)
+    }
+
+    /// Wire form: a preset name string, or an inline object with
+    /// `i/k/l/j` GEMM dims (`softmax`, `instances`, `name` optional).
+    pub fn from_json(j: &Json, seq: usize) -> Result<WorkloadSpec, MmeeError> {
+        if let Some(name) = j.as_str() {
+            return Ok(WorkloadSpec::preset(name, seq));
+        }
+        if j.as_obj().is_some() {
+            let dim = |k: &str| -> Result<usize, MmeeError> {
+                // A zero (or negative, which `as usize` floors to zero)
+                // dimension would panic tiling factorization deep inside
+                // the engine; the serve path must reject it here instead.
+                match j.get(k).and_then(Json::as_usize) {
+                    Some(v) if v > 0 => Ok(v),
+                    Some(_) => Err(MmeeError::Parse(format!(
+                        "inline workload dim '{k}' must be a positive integer"
+                    ))),
+                    None => Err(MmeeError::Parse(format!(
+                        "inline workload missing dim '{k}'"
+                    ))),
+                }
+            };
+            let gemm = crate::config::FusedGemm {
+                i: dim("i")?,
+                k: dim("k")?,
+                l: dim("l")?,
+                j: dim("j")?,
+            };
+            let softmax = j.get("softmax").and_then(Json::as_bool).unwrap_or(false);
+            let instances = j.get("instances").and_then(Json::as_usize).unwrap_or(1);
+            if instances == 0 {
+                return Err(MmeeError::Parse(
+                    "inline workload 'instances' must be a positive integer".into(),
+                ));
+            }
+            let mut w = Workload {
+                name: j
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("inline")
+                    .to_string(),
+                kind: if softmax { WorkloadKind::Attention } else { WorkloadKind::GemmPair },
+                gemm,
+                instances,
+                c_softmax: if softmax { 10.0 } else { 0.0 },
+            };
+            if let Some(c) = j.get("c_softmax").and_then(Json::as_f64) {
+                w.c_softmax = c;
+            }
+            return Ok(WorkloadSpec::Inline(w));
+        }
+        Err(MmeeError::Parse(
+            "'workload' must be a preset name or an inline {i,k,l,j,..} object".into(),
+        ))
+    }
+}
+
+/// What to map onto: a preset accelerator name or an inline definition
+/// (hardware-DSE sweeps mutate buffer size / PE shape per query).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AccelSpec {
+    Preset(String),
+    Inline(Accelerator),
+}
+
+impl AccelSpec {
+    pub fn preset(name: impl Into<String>) -> AccelSpec {
+        AccelSpec::Preset(name.into())
+    }
+
+    pub fn inline(a: Accelerator) -> AccelSpec {
+        AccelSpec::Inline(a)
+    }
+
+    /// Resolve to a concrete accelerator (case-insensitive for presets).
+    pub fn resolve(&self) -> Result<Accelerator, MmeeError> {
+        match self {
+            AccelSpec::Preset(name) => {
+                presets::accel_by_name(name).ok_or_else(|| MmeeError::UnknownAccel {
+                    name: name.clone(),
+                    valid: presets::ACCEL_NAMES.join(", "),
+                })
+            }
+            AccelSpec::Inline(a) => Ok(a.clone()),
+        }
+    }
+
+    /// Wire form: a preset name string or an inline accelerator object
+    /// (the [`Accelerator::from_json`] schema).
+    pub fn from_json(j: &Json) -> Result<AccelSpec, MmeeError> {
+        if let Some(name) = j.as_str() {
+            return Ok(AccelSpec::preset(name));
+        }
+        if j.as_obj().is_some() {
+            return Ok(AccelSpec::Inline(Accelerator::from_json(j)?));
+        }
+        Err(MmeeError::Parse(
+            "'accel' must be a preset name or an inline accelerator object".into(),
+        ))
+    }
+}
+
+/// One typed mapping query: the unit every caller — CLI, TCP service,
+/// examples, report harness — submits to [`crate::search::MmeeEngine::plan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MappingRequest {
+    pub workload: WorkloadSpec,
+    pub accel: AccelSpec,
+    pub objective: Objective,
+}
+
+impl MappingRequest {
+    pub fn new(workload: WorkloadSpec, accel: AccelSpec, objective: Objective) -> MappingRequest {
+        MappingRequest { workload, accel, objective }
+    }
+
+    /// Convenience: both sides by preset name.
+    pub fn preset(
+        workload: &str,
+        seq: usize,
+        accel: &str,
+        objective: Objective,
+    ) -> MappingRequest {
+        MappingRequest::new(
+            WorkloadSpec::preset(workload, seq),
+            AccelSpec::preset(accel),
+            objective,
+        )
+    }
+
+    /// Parse one JSON-lines request (the `mmee serve` wire format):
+    ///
+    /// ```json
+    /// {"workload": "bert-base", "seq": 4096, "accel": "accel2", "objective": "energy"}
+    /// ```
+    ///
+    /// `workload` and `accel` also accept inline objects; `seq` defaults
+    /// to 512, `accel` to `accel1`, `objective` to `energy`.
+    pub fn parse(line: &str) -> Result<MappingRequest, MmeeError> {
+        let j = Json::parse(line)?;
+        MappingRequest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<MappingRequest, MmeeError> {
+        let seq = j.get("seq").and_then(Json::as_usize).unwrap_or(DEFAULT_SEQ);
+        let workload = WorkloadSpec::from_json(
+            j.get("workload")
+                .ok_or_else(|| MmeeError::Parse("missing 'workload'".into()))?,
+            seq,
+        )?;
+        let accel = match j.get("accel") {
+            Some(a) => AccelSpec::from_json(a)?,
+            None => AccelSpec::preset("accel1"),
+        };
+        let objective = Objective::parse(
+            j.get("objective").and_then(Json::as_str).unwrap_or("energy"),
+        )?;
+        Ok(MappingRequest { workload, accel, objective })
+    }
+
+    /// Resolve both specs, reporting the first failure.
+    pub fn resolve(&self) -> Result<(Workload, Accelerator), MmeeError> {
+        Ok((self.workload.resolve()?, self.accel.resolve()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_specs_resolve_case_insensitively() {
+        let w = WorkloadSpec::preset("BERT-Base", 512).resolve().unwrap();
+        assert_eq!(w.gemm.k, 64);
+        let a = AccelSpec::preset("Accel2").resolve().unwrap();
+        assert_eq!(a.pe_rows, 128);
+    }
+
+    #[test]
+    fn unknown_names_report_valid_values() {
+        let e = WorkloadSpec::preset("nope", 512).resolve().unwrap_err();
+        assert_eq!(e.kind(), "unknown_workload");
+        assert!(e.to_string().contains("bert-base"), "{e}");
+        let e = AccelSpec::preset("nope").resolve().unwrap_err();
+        assert_eq!(e.kind(), "unknown_accel");
+        assert!(e.to_string().contains("accel1"), "{e}");
+    }
+
+    #[test]
+    fn wire_parse_presets_and_defaults() {
+        let r = MappingRequest::parse(
+            r#"{"workload": "bert-base", "seq": 4096, "accel": "accel2", "objective": "LATENCY"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.objective, Objective::Latency);
+        let (w, a) = r.resolve().unwrap();
+        assert_eq!(w.gemm.i, 4096);
+        assert_eq!(a.name, "accel2-tpu");
+
+        // Defaults: seq 512, accel1, energy.
+        let r = MappingRequest::parse(r#"{"workload": "bert-base"}"#).unwrap();
+        let (w, a) = r.resolve().unwrap();
+        assert_eq!(w.gemm.i, 512);
+        assert_eq!(a.name, "accel1-nvdla");
+        assert_eq!(r.objective, Objective::Energy);
+    }
+
+    #[test]
+    fn wire_parse_inline_specs() {
+        let r = MappingRequest::parse(
+            r#"{"workload": {"i": 128, "k": 32, "l": 128, "j": 32, "softmax": true, "instances": 4},
+                "accel": {"num_arrays": 1, "pe_rows": 16, "pe_cols": 16, "buffer_bytes": 65536,
+                          "dram_bw": 1.0e9, "freq": 1.0e9, "bytes_per_word": 2}}"#,
+        )
+        .unwrap();
+        let (w, a) = r.resolve().unwrap();
+        assert!(w.has_softmax());
+        assert_eq!(w.instances, 4);
+        assert_eq!(w.gemm.i, 128);
+        assert_eq!(a.pe_rows, 16);
+        assert_eq!(a.capacity_words(), 32768);
+    }
+
+    #[test]
+    fn wire_parse_errors_are_structured() {
+        assert_eq!(MappingRequest::parse("not json").unwrap_err().kind(), "parse");
+        assert_eq!(MappingRequest::parse("{}").unwrap_err().kind(), "parse");
+        let e = MappingRequest::parse(r#"{"workload": "bert-base", "objective": "speed"}"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("energy, latency, edp"), "{e}");
+        let e = MappingRequest::parse(r#"{"workload": {"i": 8}}"#).unwrap_err();
+        assert!(e.to_string().contains("missing dim"), "{e}");
+    }
+
+    #[test]
+    fn preset_with_zero_seq_is_rejected_not_panicked_on() {
+        // bert-base(0) would resolve to i = l = 0 and panic tiling
+        // factorization; the resolve boundary must reject it...
+        let e = WorkloadSpec::preset("bert-base", 0).resolve().unwrap_err();
+        assert_eq!(e.kind(), "parse");
+        assert!(e.to_string().contains("seq"), "{e}");
+        // Parsing succeeds (seq is syntactically fine); resolution is
+        // where the degenerate preset is caught.
+        let req = MappingRequest::parse(r#"{"workload": "bert-base", "seq": 0}"#).unwrap();
+        assert_eq!(req.resolve().unwrap_err().kind(), "parse");
+        // ...while seq-independent presets legitimately ignore seq = 0.
+        assert_eq!(WorkloadSpec::preset("cc1", 0).resolve().unwrap().name, "cc1");
+    }
+
+    #[test]
+    fn degenerate_inline_specs_are_rejected_not_panicked_on() {
+        // Zero / negative dims would panic tiling factorization.
+        for bad in [
+            r#"{"workload": {"i": 0, "k": 32, "l": 128, "j": 32}}"#,
+            r#"{"workload": {"i": -4, "k": 32, "l": 128, "j": 32}}"#,
+            r#"{"workload": {"i": 8, "k": 8, "l": 8, "j": 8, "instances": 0}}"#,
+        ] {
+            let e = MappingRequest::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "parse", "{bad}");
+            assert!(e.to_string().contains("positive"), "{e}");
+        }
+        // Zero / fractional / negative hardware params would divide by
+        // zero in capacity_words() / features().
+        let accel_with = |field: &str, value: &str| {
+            let fields: Vec<String> = [
+                ("num_arrays", "1"),
+                ("pe_rows", "8"),
+                ("pe_cols", "8"),
+                ("buffer_bytes", "1024"),
+                ("dram_bw", "1.0e9"),
+                ("freq", "1.0e9"),
+                ("bytes_per_word", "2"),
+            ]
+            .iter()
+            .map(|&(k, v)| {
+                format!(r#""{k}": {}"#, if k == field { value } else { v })
+            })
+            .collect();
+            format!(
+                r#"{{"workload": "bert-base", "accel": {{{}}}}}"#,
+                fields.join(", ")
+            )
+        };
+        for field in
+            ["num_arrays", "pe_rows", "pe_cols", "buffer_bytes", "bytes_per_word", "freq"]
+        {
+            for bad_value in ["0", "-1", "0.25"] {
+                // 0.25 is a legitimate fractional value for the f64 freq.
+                if field == "freq" && bad_value == "0.25" {
+                    assert!(MappingRequest::parse(&accel_with(field, bad_value)).is_ok());
+                    continue;
+                }
+                let e = MappingRequest::parse(&accel_with(field, bad_value)).unwrap_err();
+                assert_eq!(e.kind(), "parse", "{field}={bad_value}");
+            }
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Search objectives and solution reporting.
 
 use crate::config::{Accelerator, Workload};
+use crate::error::MmeeError;
 use crate::loopnest::{Candidate, Dim, Operand};
 use crate::model::Metrics;
 use crate::tiling::Tiling;
@@ -22,12 +23,19 @@ impl Objective {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Objective> {
-        match s {
-            "energy" | "e" => Some(Objective::Energy),
-            "latency" | "l" => Some(Objective::Latency),
-            "edp" => Some(Objective::Edp),
-            _ => None,
+    /// All valid objective names (error hints and docs).
+    pub const NAMES: &'static [&'static str] = &["energy", "latency", "edp"];
+
+    /// Case-insensitive parse; the error message lists the valid values.
+    pub fn parse(s: &str) -> Result<Objective, MmeeError> {
+        match s.to_ascii_lowercase().as_str() {
+            "energy" | "e" => Ok(Objective::Energy),
+            "latency" | "l" => Ok(Objective::Latency),
+            "edp" => Ok(Objective::Edp),
+            other => Err(MmeeError::Parse(format!(
+                "unknown objective '{other}' (valid: {})",
+                Objective::NAMES.join(", ")
+            ))),
         }
     }
 
@@ -174,9 +182,11 @@ mod tests {
 
     #[test]
     fn objective_parse_and_score() {
-        assert_eq!(Objective::parse("energy"), Some(Objective::Energy));
-        assert_eq!(Objective::parse("edp"), Some(Objective::Edp));
-        assert!(Objective::parse("x").is_none());
+        assert_eq!(Objective::parse("energy"), Ok(Objective::Energy));
+        assert_eq!(Objective::parse("EDP"), Ok(Objective::Edp));
+        assert_eq!(Objective::parse("Latency"), Ok(Objective::Latency));
+        let err = Objective::parse("x").unwrap_err();
+        assert!(err.to_string().contains("energy, latency, edp"), "{err}");
         assert_eq!(Objective::Edp.score(2.0, 3.0), 6.0);
     }
 

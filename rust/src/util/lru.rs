@@ -1,0 +1,112 @@
+//! A small LRU cache built on a `Vec` with move-to-front semantics.
+//!
+//! The engine's boundary-matrix and plan caches hold tens of entries
+//! keyed by request fingerprints; a contiguous vector beats a linked
+//! hash map at this scale and keeps the crate dependency-free.
+
+/// Least-recently-used cache. `capacity == 0` disables caching entirely
+/// (every `get` misses, every `put` is dropped).
+#[derive(Debug, Clone)]
+pub struct LruCache<K, V> {
+    capacity: usize,
+    /// Most-recently-used first.
+    entries: Vec<(K, V)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: PartialEq, V> LruCache<K, V> {
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        LruCache { capacity, entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lifetime hit/miss counters (serving observability).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Look up `key`, promoting it to most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        match self.entries.iter().position(|(k, _)| k == key) {
+            Some(i) => {
+                self.hits += 1;
+                let entry = self.entries.remove(i);
+                self.entries.insert(0, entry);
+                Some(&self.entries[0].1)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently-used entry
+    /// when over capacity.
+    pub fn put(&mut self, key: K, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(i);
+        }
+        self.entries.insert(0, (key, value));
+        self.entries.truncate(self.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_promotes_and_evicts_lru() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        c.put(1, "a");
+        c.put(2, "b");
+        assert_eq!(c.get(&1), Some(&"a")); // 1 is now MRU
+        c.put(3, "c"); // evicts 2
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&3), Some(&"c"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0);
+        c.put(1, 1);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+    }
+
+    #[test]
+    fn put_refreshes_existing_key() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.put(1, 10);
+        c.put(1, 11);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&1), Some(&11));
+    }
+
+    #[test]
+    fn counters_track_hits_and_misses() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        assert_eq!(c.get(&1), None);
+        c.put(1, 1);
+        assert_eq!(c.get(&1), Some(&1));
+        assert_eq!(c.stats(), (1, 1));
+    }
+}

@@ -3,6 +3,7 @@
 //! and a small CLI parser (no serde / proptest / criterion / clap offline).
 
 pub mod json;
+pub mod lru;
 pub mod rng;
 pub mod prop;
 pub mod bench;

@@ -40,8 +40,8 @@ fn pruning_preserves_all_objectives() {
     let q_unpruned = QueryMatrix::build(unpruned);
     for accel in [presets::accel1(), presets::coral()] {
         for obj in [Objective::Energy, Objective::Latency, Objective::Edp] {
-            let sp = engine.optimize(&w, &accel, obj);
-            let su = engine.optimize_with_candidates(&w, &accel, obj, &q_unpruned);
+            let sp = engine.optimize(&w, &accel, obj).unwrap();
+            let su = engine.optimize_with_candidates(&w, &accel, obj, &q_unpruned).unwrap();
             let (vp, vu) = (
                 obj.score(sp.metrics.energy, sp.metrics.latency),
                 obj.score(su.metrics.energy, su.metrics.latency),
@@ -200,6 +200,45 @@ fn compiled_group_sharing_is_sound() {
             }
         }
     }
+}
+
+/// The typed request pipeline end-to-end: spec resolution, planning,
+/// structured errors, and the cached serving path across entry points.
+#[test]
+fn typed_request_pipeline_end_to_end() {
+    use mmee::error::MmeeError;
+    use mmee::search::{AccelSpec, MappingRequest, WorkloadSpec};
+
+    let engine = MmeeEngine::builder().cache_capacity(16).build();
+    let req = MappingRequest::new(
+        WorkloadSpec::preset("BERT-base", 512),
+        AccelSpec::preset("Accel1"),
+        Objective::Energy,
+    );
+    let p1 = engine.plan(&req).unwrap();
+    assert!(p1.solution.metrics.feasible);
+    assert!(!p1.provenance.cache_hit);
+
+    // Unknown spec: structured error, engine still usable after.
+    let bad = MappingRequest::preset("no-such-model", 512, "accel1", Objective::Energy);
+    match engine.plan(&bad) {
+        Err(MmeeError::UnknownWorkload { name, .. }) => assert_eq!(name, "no-such-model"),
+        other => panic!("expected UnknownWorkload, got {other:?}"),
+    }
+
+    // Identical repeat after the failure: plan-cache hit, same mapping.
+    let p2 = engine.plan(&req).unwrap();
+    assert!(p2.provenance.cache_hit);
+    assert_eq!(p2.solution.tiling, p1.solution.tiling);
+    assert_eq!(p2.solution.metrics.energy, p1.solution.metrics.energy);
+
+    // Inline accel too small for anything: Infeasible, not a panic.
+    let tiny = MappingRequest::new(
+        WorkloadSpec::preset("bert-base", 512),
+        AccelSpec::inline(presets::accel1().with_buffer_bytes(64)),
+        Objective::Energy,
+    );
+    assert!(matches!(engine.plan(&tiny), Err(MmeeError::Infeasible { .. })));
 }
 
 /// End-to-end service loop (the L3 leader path).
