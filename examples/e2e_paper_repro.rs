@@ -67,8 +67,12 @@ fn main() -> mmee::Result<()> {
     );
 
     // --- L3 search through the compiled L1/L2 artifact -----------------
-    if let Some(xla) = xla {
-        let engine = MmeeEngine::builder().backend(Box::new(xla)).build();
+    if xla.is_some() {
+        // PJRT handles are not `Send`: the engine builds one XLA
+        // backend per worker thread through the factory.
+        let engine = MmeeEngine::builder()
+            .backend_factory("xla", || Ok(Box::new(XlaBackend::new()?)))
+            .build();
         let p_xla = engine.plan(&request)?;
         println!(
             "[xla    ] best energy {:.3} mJ / {:.3} ms  ({:?})",

@@ -1,8 +1,13 @@
 //! The mapper-as-a-service loop: drives `coordinator::service` with a
-//! batch of requests, as an AI compiler or hardware-DSE client would.
-//! The batch repeats a query and ends with a bad one, showing the
-//! cached serving path and the structured error line (the loop never
-//! panics on bad input).
+//! trace of requests, as an AI compiler or hardware-DSE client would.
+//!
+//! The trace shows the three serving shapes:
+//! * single JSON-object lines (repeat queries hit the plan cache);
+//! * a JSON-array **batch** line — requests sharing a resolved
+//!   (workload, accel) pair are grouped into ONE surface pass, and a
+//!   bad element yields an error element instead of killing the batch;
+//! * the same trace through `serve_lines_concurrent`, where 4 workers
+//!   share one engine and responses still come back in arrival order.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
@@ -11,25 +16,43 @@
 use mmee::coordinator::service;
 use mmee::search::MmeeEngine;
 
-fn main() {
-    let engine = MmeeEngine::builder().cache_capacity(64).build();
-    let requests = r#"
+const TRACE: &str = r#"
 {"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "energy"}
 {"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "latency"}
 {"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "energy"}
-{"workload": "gpt3-13b", "seq": 2048, "accel": "accel2", "objective": "edp"}
+[{"workload": "gpt3-13b", "seq": 2048, "accel": "accel2", "objective": "edp"}, {"workload": "gpt3-13b", "seq": 2048, "accel": "accel2", "objective": "energy"}, {"workload": "not-a-model"}, {"workload": "gpt3-13b", "seq": 2048, "accel": "accel2", "objective": "edp"}]
 {"workload": "cc1", "accel": "accel1", "objective": "energy"}
 {"workload": "not-a-model", "accel": "accel1"}
 "#;
-    let mut out = Vec::new();
-    let served = service::serve_lines(&engine, requests.trim().as_bytes(), &mut out).unwrap();
-    print!("{}", String::from_utf8(out).unwrap());
+
+fn report(engine: &MmeeEngine, label: &str, served: usize) {
     let (plan_hits, plan_misses) = engine.plan_cache_stats();
     let (b_hits, b_misses) = engine.boundary_cache_stats();
     eprintln!(
-        "served {served} mapping requests; plan cache {plan_hits}/{} hits, \
+        "[{label}] served {served} mapping requests; plan cache {plan_hits}/{} hits, \
          boundary cache {b_hits}/{} hits",
         plan_hits + plan_misses,
         b_hits + b_misses,
     );
+}
+
+fn main() {
+    // Sequential loop: the batch line still pays ONE surface pass for
+    // its three gpt3-13b entries.
+    let engine = MmeeEngine::builder().cache_capacity(64).build();
+    let mut out = Vec::new();
+    let served =
+        service::serve_lines(&engine, TRACE.trim().as_bytes(), &mut out).unwrap();
+    print!("{}", String::from_utf8(out).unwrap());
+    report(&engine, "sequential", served);
+
+    // Concurrent loop: one shared Send+Sync engine, 4 workers, responses
+    // re-sequenced into arrival order.
+    let engine = MmeeEngine::builder().cache_capacity(64).build();
+    let mut out = Vec::new();
+    let served =
+        service::serve_lines_concurrent(&engine, TRACE.trim().as_bytes(), &mut out, 4)
+            .unwrap();
+    assert_eq!(String::from_utf8(out).unwrap().lines().count(), 6);
+    report(&engine, "concurrent", served);
 }

@@ -1,0 +1,94 @@
+//! Serving-path throughput: sequential vs batched vs concurrent
+//! handling of a mixed preset trace (ROADMAP: "measure hit rates under
+//! real DSE traces").
+//!
+//! The trace repeats 3 distinct (workload, accel) surfaces across 24
+//! requests with rotating objectives — the pipelined-compiler shape.
+//! * `sequential`  — one request per line through `serve_lines`;
+//! * `batched`     — the same 24 requests as ONE JSON-array line:
+//!                   shared surfaces collapse to one pass per group;
+//! * `concurrent`  — per-line serving with a worker pool sharing one
+//!                   `Send + Sync` engine.
+//!
+//! Each mode runs on a fresh engine (cold caches) so the printed
+//! boundary/plan hit rates describe the trace, not the harness.
+
+use mmee::coordinator::service;
+use mmee::search::MmeeEngine;
+use mmee::util::bench::Bench;
+
+fn trace_lines() -> Vec<String> {
+    let surfaces = [
+        (r#""workload": "bert-base", "seq": 512, "accel": "accel1""#, "energy"),
+        (r#""workload": "bert-base", "seq": 512, "accel": "accel2""#, "latency"),
+        (r#""workload": "cc1", "accel": "accel1""#, "edp"),
+    ];
+    let objectives = ["energy", "latency", "edp"];
+    let mut lines = Vec::new();
+    for i in 0..24 {
+        let (spec, _) = surfaces[i % surfaces.len()];
+        let obj = objectives[(i / surfaces.len()) % objectives.len()];
+        lines.push(format!(r#"{{{spec}, "objective": "{obj}"}}"#));
+    }
+    lines
+}
+
+fn report_rates(engine: &MmeeEngine, served: usize, secs: f64) {
+    let (ph, pm) = engine.plan_cache_stats();
+    let (bh, bm) = engine.boundary_cache_stats();
+    println!(
+        "    {:.1} req/s; plan cache {ph}/{} hits ({:.0}%), boundary cache {bh}/{} hits",
+        served as f64 / secs,
+        ph + pm,
+        100.0 * ph as f64 / ((ph + pm).max(1)) as f64,
+        bh + bm,
+    );
+}
+
+fn main() {
+    let lines = trace_lines();
+    let per_line = lines.join("\n");
+    let as_batch = format!("[{}]", lines.join(","));
+    println!("trace: {} requests over 3 distinct (workload, accel) surfaces", lines.len());
+
+    let mut bench = Bench::new();
+
+    let engine = MmeeEngine::native();
+    let (seq, n_seq) = bench.once("serve_lines (sequential, cold)", || {
+        let mut out = Vec::new();
+        service::serve_lines(&engine, per_line.as_bytes(), &mut out).unwrap()
+    });
+    report_rates(&engine, n_seq, seq.median.as_secs_f64());
+
+    let engine = MmeeEngine::native();
+    let (bat, n_bat) = bench.once("serve_lines (one batch line, cold)", || {
+        let mut out = Vec::new();
+        service::serve_lines(&engine, as_batch.as_bytes(), &mut out).unwrap()
+    });
+    report_rates(&engine, n_bat, bat.median.as_secs_f64());
+    assert_eq!(n_seq, n_bat, "both modes answer the whole trace");
+
+    let workers = mmee::coordinator::pool::default_workers().min(8);
+    let engine = MmeeEngine::native();
+    let (conc, n_conc) = bench.once(
+        &format!("serve_lines_concurrent ({workers} workers, cold)"),
+        || {
+            let mut out = Vec::new();
+            service::serve_lines_concurrent(&engine, per_line.as_bytes(), &mut out, workers)
+                .unwrap()
+        },
+    );
+    report_rates(&engine, n_conc, conc.median.as_secs_f64());
+
+    // Warm repeat: the pipelined-compiler steady state is pure cache.
+    let (warm, n_warm) = bench.once("serve_lines (sequential, warm cache)", || {
+        let mut out = Vec::new();
+        service::serve_lines(&engine, per_line.as_bytes(), &mut out).unwrap()
+    });
+    report_rates(&engine, n_warm, warm.median.as_secs_f64());
+    println!(
+        "\nbatched vs sequential (cold): {:.2}x  |  concurrent vs sequential (cold): {:.2}x",
+        seq.median.as_secs_f64() / bat.median.as_secs_f64().max(1e-12),
+        seq.median.as_secs_f64() / conc.median.as_secs_f64().max(1e-12),
+    );
+}

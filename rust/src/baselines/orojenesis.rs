@@ -94,8 +94,9 @@ impl Orojenesis {
         accel: &Accelerator,
     ) -> Vec<(f64, f64)> {
         let engine = MmeeEngine::native();
-        let front =
-            engine.pareto_da_bs_with_candidates(w, accel, variant_query(self.0));
+        let front = engine
+            .pareto_da_bs_with_candidates(w, accel, variant_query(self.0))
+            .expect("the shared native backend cannot fail");
         front.points().iter().map(|p| (p.x, p.y)).collect()
     }
 }

@@ -1,11 +1,15 @@
-//! L3 coordination substrate: the thread pool that parallelizes surface
-//! evaluation and the request-service loop (`mmee serve`).
+//! L3 coordination substrate: the thread pools that parallelize surface
+//! evaluation and the request-service loops (`mmee serve`).
 //!
 //! Built from std primitives — no tokio/rayon in the offline build; the
 //! pool is part of the system's substrate inventory (DESIGN.md §5).
+//! [`pool`] provides chunked data-parallelism (`parallel_chunks`) plus
+//! the bounded-queue/sequencer pair behind the concurrent serving
+//! loops; [`service`] speaks the JSON-lines wire format (single
+//! requests and batch arrays) over stdin or TCP.
 
 pub mod pool;
 pub mod service;
 
-pub use pool::parallel_chunks;
-pub use service::{serve_lines, Request, Response};
+pub use pool::{parallel_chunks, BoundedQueue, Sequencer};
+pub use service::{serve_lines, serve_lines_concurrent, serve_tcp, Request, Response};

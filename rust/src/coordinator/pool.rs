@@ -1,13 +1,23 @@
-//! Scoped data-parallel execution over chunked index ranges.
+//! The coordinator's thread-pool substrates.
 //!
-//! `parallel_chunks(n, chunk, f)` splits `0..n` into `chunk`-sized ranges
-//! and processes them on `min(available_parallelism, chunks)` worker
-//! threads with dynamic (atomic counter) load balancing — the shape of
-//! work MMEE's surface evaluation needs: many independent tiling blocks
-//! of slightly varying cost. Results are returned in chunk order.
+//! Two shapes of parallelism live here:
+//!
+//! * `parallel_chunks(n, chunk, f)` — scoped data-parallel execution
+//!   over chunked index ranges: splits `0..n` into `chunk`-sized ranges
+//!   and processes them on `min(available_parallelism, chunks)` worker
+//!   threads with dynamic (atomic counter) load balancing — the shape
+//!   of work MMEE's surface evaluation needs. Results come back in
+//!   chunk order.
+//! * [`BoundedQueue`] + [`Sequencer`] — the request-pipeline
+//!   primitives behind `coordinator::service`: N workers drain a
+//!   bounded queue of parsed requests while a writer re-sequences
+//!   completions back into arrival order, so a slow request delays its
+//!   own response without blocking the queue (and responses never
+//!   reorder on the wire).
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Number of worker threads to use for surface evaluation.
 pub fn default_workers() -> usize {
@@ -61,6 +71,167 @@ pub fn parallel_chunks<T: Send>(
         .collect()
 }
 
+/// A bounded blocking MPMC queue (Mutex + Condvars; no channel crate
+/// offline). `push` blocks while full, `pop` blocks while empty;
+/// `close` wakes everyone — pending items still drain, then `pop`
+/// returns `None` and further `push`es are rejected.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "a zero-capacity queue would deadlock");
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                capacity,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Block until there is room, then enqueue. Returns the item back
+    /// as `Err` if the queue has been closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(item);
+            }
+            if s.items.len() < s.capacity {
+                s.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Block until an item is available; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: producers are rejected, consumers drain what
+    /// remains and then observe end-of-stream.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Re-sequences out-of-order `(seq, item)` completions back into
+/// `0, 1, 2, ...` order for a single consumer — the reorder stage
+/// between parallel workers and the response writer.
+#[derive(Debug)]
+pub struct Sequencer<T> {
+    state: Mutex<SeqState<T>>,
+    ready: Condvar,
+    space: Condvar,
+    capacity: usize,
+}
+
+#[derive(Debug)]
+struct SeqState<T> {
+    pending: BTreeMap<usize, T>,
+    next: usize,
+    /// Total item count, once the producer knows it.
+    total: Option<usize>,
+}
+
+impl<T> Sequencer<T> {
+    /// Unbounded reorder window.
+    pub fn new() -> Sequencer<T> {
+        Sequencer::with_capacity(usize::MAX)
+    }
+
+    /// Bounded reorder window: `push(seq, ..)` blocks while
+    /// `seq > next + capacity`, so completed-but-unconsumed results
+    /// cannot pile up without bound behind a slow consumer or a slow
+    /// head-of-line item. Deadlock-free when producers obtain their
+    /// sequence numbers in FIFO order (as the serving pipeline does):
+    /// the pusher holding `next` is never blocked, so the consumer can
+    /// always advance.
+    pub fn with_capacity(capacity: usize) -> Sequencer<T> {
+        Sequencer {
+            state: Mutex::new(SeqState { pending: BTreeMap::new(), next: 0, total: None }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Deliver completion `seq` (each seq must be delivered once),
+    /// blocking while the reorder window is full.
+    pub fn push(&self, seq: usize, item: T) {
+        let mut s = self.state.lock().unwrap();
+        while seq > s.next.saturating_add(self.capacity) {
+            s = self.space.wait(s).unwrap();
+        }
+        s.pending.insert(seq, item);
+        self.ready.notify_all();
+    }
+
+    /// Announce how many items exist in total; `next_in_order` returns
+    /// `None` once all of them have been consumed.
+    pub fn finish(&self, total: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.total = Some(total);
+        self.ready.notify_all();
+    }
+
+    /// Block until the next item in sequence arrives (or the stream is
+    /// exhausted).
+    pub fn next_in_order(&self) -> Option<(usize, T)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let n = s.next;
+            if let Some(item) = s.pending.remove(&n) {
+                s.next += 1;
+                self.space.notify_all();
+                return Some((n, item));
+            }
+            if let Some(total) = s.total {
+                if n >= total {
+                    return None;
+                }
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+}
+
+impl<T> Default for Sequencer<T> {
+    fn default() -> Sequencer<T> {
+        Sequencer::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +267,97 @@ mod tests {
     fn empty_range() {
         let out = parallel_chunks(0, 8, |a, b| (a, b));
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_fifo_close_semantics() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+        q.close();
+        // Closed: producers rejected, consumers drain then see None.
+        assert_eq!(q.push(4), Err(4));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_blocks_producer_at_capacity() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.push(0).unwrap();
+        std::thread::scope(|scope| {
+            let producer = scope.spawn(|| q.push(1).is_ok());
+            // The producer cannot finish until we drain a slot.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(!producer.is_finished());
+            assert_eq!(q.pop(), Some(0));
+            assert!(producer.join().unwrap());
+        });
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn sequencer_reorders_completions() {
+        let s: Sequencer<&str> = Sequencer::new();
+        s.push(2, "c");
+        s.push(0, "a");
+        assert_eq!(s.next_in_order(), Some((0, "a")));
+        s.push(1, "b");
+        s.finish(3);
+        assert_eq!(s.next_in_order(), Some((1, "b")));
+        assert_eq!(s.next_in_order(), Some((2, "c")));
+        assert_eq!(s.next_in_order(), None);
+    }
+
+    #[test]
+    fn sequencer_capacity_blocks_far_ahead_pushes() {
+        let s: Sequencer<u32> = Sequencer::with_capacity(1);
+        s.push(1, 10); // within the window (next = 0, capacity 1)
+        std::thread::scope(|scope| {
+            let blocked = scope.spawn(|| s.push(2, 20)); // 2 > 0 + 1: waits
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(!blocked.is_finished(), "push beyond the window must block");
+            s.push(0, 0);
+            // Consuming 0 advances next to 1, admitting seq 2.
+            assert_eq!(s.next_in_order(), Some((0, 0)));
+            blocked.join().unwrap();
+        });
+        assert_eq!(s.next_in_order(), Some((1, 10)));
+        assert_eq!(s.next_in_order(), Some((2, 20)));
+        s.finish(3);
+        assert_eq!(s.next_in_order(), None);
+    }
+
+    #[test]
+    fn queue_and_sequencer_pipeline_preserves_order() {
+        // 4 workers square numbers from a shared queue; the consumer
+        // must see results in submission order despite racing workers.
+        let queue: BoundedQueue<usize> = BoundedQueue::new(4);
+        let seq: Sequencer<usize> = Sequencer::new();
+        const N: usize = 200;
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    while let Some(i) = queue.pop() {
+                        seq.push(i, i * i);
+                    }
+                });
+            }
+            scope.spawn(|| {
+                for i in 0..N {
+                    queue.push(i).unwrap();
+                }
+                queue.close();
+                seq.finish(N);
+            });
+            for i in 0..N {
+                assert_eq!(seq.next_in_order(), Some((i, i * i)));
+            }
+            assert_eq!(seq.next_in_order(), None);
+        });
     }
 
     #[test]

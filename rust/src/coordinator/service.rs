@@ -3,12 +3,12 @@
 //! or a hardware-DSE loop, paper §I/§VII-L).
 //!
 //! [`Request`] and [`Response`] are thin serde-style adapters over the
-//! typed API ([`MappingRequest`] / [`MappingPlan`] /
-//! [`crate::error::MmeeError`]); all semantics live in
-//! [`MmeeEngine::plan`]. Bad requests produce structured error lines —
-//! never a panic — so clients can pipeline freely, and repeated
-//! requests against the same accelerator hit the engine's boundary /
-//! plan caches.
+//! typed API ([`MappingRequest`] / [`crate::search::BatchRequest`] /
+//! [`MappingPlan`] / [`crate::error::MmeeError`]); all semantics live
+//! in [`MmeeEngine::plan`] / [`MmeeEngine::plan_batch`]. Bad requests
+//! produce structured error lines — never a panic — so clients can
+//! pipeline freely, and repeated requests against the same accelerator
+//! hit the engine's boundary / plan caches.
 //!
 //! ## Wire format
 //!
@@ -26,6 +26,14 @@
 //!            "dram_bw": 6.0e10, "freq": 1.0e9, "bytes_per_word": 2}}
 //! ```
 //!
+//! A line holding a JSON **array** of request objects is a batch: it is
+//! scheduled through [`MmeeEngine::plan_batch`] (requests sharing a
+//! resolved (workload, accel) pair are served from ONE surface pass)
+//! and answered by a single JSON-array line with one response element
+//! per request, in request order. A malformed or infeasible element
+//! yields an error *element* at its position; the rest of the batch is
+//! still served.
+//!
 //! Success response — the plan: solution fields at the top level
 //! (`workload`, `accel`, `objective`, `candidate`, `tiling`,
 //! `energy_j`, `latency_s`, `edp`, `dram_words`, `buffer_words`,
@@ -41,88 +49,217 @@
 //!
 //! `kind` is one of `unknown_workload`, `unknown_accel`, `infeasible`,
 //! `backend`, `parse`, `io`, `internal`.
+//!
+//! ## Concurrency
+//!
+//! The engine is `Send + Sync`, so the serving loops share ONE engine
+//! (one set of caches) across workers:
+//!
+//! * [`serve_lines`] — sequential; for non-`Send` readers/writers
+//!   (`StdinLock`) and tests.
+//! * [`serve_lines_concurrent`] — N workers drain a bounded queue of
+//!   parsed requests ([`crate::coordinator::pool::BoundedQueue`]) and a
+//!   [`crate::coordinator::pool::Sequencer`] writes responses back in
+//!   arrival order.
+//! * [`serve_tcp`] — a pool of connection workers, so concurrent
+//!   clients are served in parallel: an idle or slow connection no
+//!   longer head-of-line blocks the ones behind it.
 
 use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
+use crate::coordinator::pool::{BoundedQueue, Sequencer};
 use crate::error::MmeeError;
-use crate::search::{MappingPlan, MappingRequest, MmeeEngine};
+use crate::search::{BatchRequest, MappingPlan, MappingRequest, MmeeEngine};
 use crate::util::json::Json;
 
-/// Wire-side request: a parsed [`MappingRequest`].
-#[derive(Debug, Clone, PartialEq)]
-pub struct Request(pub MappingRequest);
+/// Wire-side request: one mapping query, or a batch of them (a JSON
+/// array on the wire).
+#[derive(Debug, Clone)]
+pub enum Request {
+    One(MappingRequest),
+    Batch(BatchRequest),
+}
 
 impl Request {
     pub fn parse(line: &str) -> Result<Request, MmeeError> {
-        MappingRequest::parse(line).map(Request)
+        let j = Json::parse(line)?;
+        if j.as_arr().is_some() {
+            Ok(Request::Batch(BatchRequest::from_json(&j)?))
+        } else {
+            Ok(Request::One(MappingRequest::from_json(&j)?))
+        }
     }
 }
 
-/// Wire-side response: a plan or a structured error.
+/// Wire-side response: a plan, a structured error, or one element per
+/// batch request (positional).
 #[derive(Debug)]
 pub enum Response {
     Plan(Box<MappingPlan>),
     Error(MmeeError),
+    Batch(Vec<Response>),
 }
 
 impl Response {
-    pub fn to_line(&self) -> String {
+    pub fn to_json(&self) -> Json {
         match self {
-            Response::Plan(p) => format!("{}", p.to_json()),
-            Response::Error(e) => {
-                format!("{}", Json::obj(vec![("error", e.to_json())]))
-            }
+            Response::Plan(p) => p.to_json(),
+            Response::Error(e) => Json::obj(vec![("error", e.to_json())]),
+            Response::Batch(items) => Json::arr(items.iter().map(Response::to_json)),
         }
+    }
+
+    pub fn to_line(&self) -> String {
+        format!("{}", self.to_json())
     }
 
     pub fn is_error(&self) -> bool {
         matches!(self, Response::Error(_))
     }
-}
 
-/// Handle one request. Never panics: resolution, feasibility and
-/// backend failures all come back as [`Response::Error`].
-pub fn handle(engine: &MmeeEngine, req: &Request) -> Response {
-    match engine.plan(&req.0) {
-        Ok(plan) => Response::Plan(Box::new(plan)),
-        Err(e) => Response::Error(e),
+    /// Requests answered by this response (batch = element count).
+    fn count(&self) -> usize {
+        match self {
+            Response::Batch(items) => items.len(),
+            _ => 1,
+        }
     }
 }
 
-/// Serve a TCP endpoint: one JSON request per line per connection,
-/// connections handled sequentially (the mapper is CPU-bound; clients
-/// pipeline requests over one connection for throughput).
+/// Handle one request. Never panics: parse, resolution, feasibility and
+/// backend failures all come back as [`Response::Error`] (or error
+/// elements inside a [`Response::Batch`]).
+pub fn handle(engine: &MmeeEngine, req: &Request) -> Response {
+    match req {
+        Request::One(r) => match engine.plan(r) {
+            Ok(plan) => Response::Plan(Box::new(plan)),
+            Err(e) => Response::Error(e),
+        },
+        Request::Batch(batch) => Response::Batch(handle_batch(engine, batch)),
+    }
+}
+
+/// Schedule a batch through [`MmeeEngine::plan_batch`] and splice the
+/// per-element parse errors back into their positions.
+fn handle_batch(engine: &MmeeEngine, batch: &BatchRequest) -> Vec<Response> {
+    let good = batch.requests();
+    let mut planned = engine.plan_batch(&good).into_iter();
+    batch
+        .items
+        .iter()
+        .map(|item| match item {
+            Err(e) => Response::Error(e.clone()),
+            Ok(_) => match planned.next().expect("plan_batch answers every request") {
+                Ok(p) => Response::Plan(Box::new(p)),
+                Err(e) => Response::Error(e),
+            },
+        })
+        .collect()
+}
+
+/// Parse + handle one wire line; `None` for blank lines. Returns the
+/// response and how many requests it answers.
+fn respond_line(engine: &MmeeEngine, line: &str) -> Option<(Response, usize)> {
+    let line = line.trim();
+    if line.is_empty() {
+        return None;
+    }
+    let resp = match Request::parse(line) {
+        Ok(req) => handle(engine, &req),
+        Err(e) => Response::Error(e),
+    };
+    let count = resp.count();
+    Some((resp, count))
+}
+
+/// Serve a TCP endpoint: one JSON request (or batch array) per line per
+/// connection. Connections are drained by a pool of `workers` threads
+/// sharing the engine, so concurrent clients are served in parallel
+/// and a slow client only occupies its own worker. Within one
+/// connection, responses come back in request order.
 ///
 /// `addr` may use port 0; `on_ready` receives the actually bound
 /// address before the first `accept`, so callers (and tests) can
 /// connect without sleeping and hoping the port is still free.
+///
+/// Per-connection I/O errors no longer kill the server: the first one
+/// is reported once the accept loop ends (`max_conns`); healthy
+/// connections are unaffected.
 pub fn serve_tcp(
     engine: &MmeeEngine,
     addr: &str,
     max_conns: Option<usize>,
+    workers: usize,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> std::io::Result<usize> {
     let listener = std::net::TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     eprintln!("mmee serve: listening on {local}");
     on_ready(local);
-    let mut total = 0;
-    let mut conns = 0;
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let reader = std::io::BufReader::new(stream.try_clone()?);
-        total += serve_lines(engine, reader, stream)?;
-        conns += 1;
-        if let Some(m) = max_conns {
-            if conns >= m {
-                break;
+    let workers = workers.max(1);
+    let queue: BoundedQueue<std::net::TcpStream> = BoundedQueue::new(workers.max(2));
+    let total = AtomicUsize::new(0);
+    let conn_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
+    let accept_result: std::io::Result<()> = std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                while let Some(stream) = queue.pop() {
+                    match serve_conn(engine, &stream) {
+                        Ok(n) => {
+                            total.fetch_add(n, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            conn_err.lock().unwrap().get_or_insert(e);
+                        }
+                    }
+                }
+            });
+        }
+        let mut accepted: std::io::Result<()> = Ok(());
+        let mut conns = 0usize;
+        for stream in listener.incoming() {
+            match stream {
+                Err(e) => {
+                    accepted = Err(e);
+                    break;
+                }
+                Ok(s) => {
+                    if queue.push(s).is_err() {
+                        break;
+                    }
+                    conns += 1;
+                    if let Some(m) = max_conns {
+                        if conns >= m {
+                            break;
+                        }
+                    }
+                }
             }
         }
+        // Close before the scope joins the workers, or they would wait
+        // on the queue forever.
+        queue.close();
+        accepted
+    });
+    accept_result?;
+    if let Some(e) = conn_err.into_inner().unwrap() {
+        return Err(e);
     }
-    Ok(total)
+    Ok(total.into_inner())
 }
 
-/// Serve requests line-by-line until EOF. Returns requests served.
+/// One connection, served sequentially (request order == response
+/// order on the wire).
+fn serve_conn(engine: &MmeeEngine, stream: &std::net::TcpStream) -> std::io::Result<usize> {
+    let reader = std::io::BufReader::new(stream.try_clone()?);
+    serve_lines(engine, reader, stream)
+}
+
+/// Serve requests line-by-line until EOF, sequentially on the calling
+/// thread (use this for non-`Send` readers/writers like `StdinLock`).
+/// Returns requests served (a batch line counts each element).
 pub fn serve_lines(
     engine: &MmeeEngine,
     input: impl BufRead,
@@ -131,17 +268,108 @@ pub fn serve_lines(
     let mut served = 0;
     for line in input.lines() {
         let line = line?;
-        if line.trim().is_empty() {
-            continue;
+        if let Some((resp, n)) = respond_line(engine, &line) {
+            writeln!(output, "{}", resp.to_line())?;
+            output.flush()?;
+            served += n;
         }
-        let resp = match Request::parse(&line) {
-            Ok(req) => handle(engine, &req),
-            Err(e) => Response::Error(e),
-        };
-        writeln!(output, "{}", resp.to_line())?;
-        output.flush()?;
-        served += 1;
     }
+    Ok(served)
+}
+
+/// Serve requests line-by-line with a worker pool: the calling thread
+/// reads and parses lines into a bounded queue, `workers` threads plan
+/// them against the shared engine, and a writer thread re-sequences
+/// responses into arrival order. A slow request delays only its own
+/// response slot — later cheap requests are already computed (cache
+/// hits included) by the time the writer reaches them.
+pub fn serve_lines_concurrent<W: Write + Send>(
+    engine: &MmeeEngine,
+    input: impl BufRead,
+    output: W,
+    workers: usize,
+) -> std::io::Result<usize> {
+    let workers = workers.max(1);
+    let queue: BoundedQueue<(usize, Result<Request, MmeeError>)> =
+        BoundedQueue::new(workers * 2);
+    // Bounded reorder window: responses completed behind a slow
+    // head-of-line request (or a slow output sink) stay bounded — the
+    // pipeline backpressures the reader instead of buffering forever.
+    let seq: Sequencer<String> = Sequencer::with_capacity(workers * 4);
+    let stop = AtomicBool::new(false);
+    let mut served = 0usize;
+    let mut jobs = 0usize;
+    let mut read_err: Option<std::io::Error> = None;
+    let write_result: std::io::Result<()> = std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                while let Some((i, parsed)) = queue.pop() {
+                    // After a writer failure the responses go nowhere:
+                    // drain the queue without paying for planning.
+                    let line = if stop.load(Ordering::Relaxed) {
+                        String::new()
+                    } else {
+                        match parsed {
+                            Ok(req) => handle(engine, &req).to_line(),
+                            Err(e) => Response::Error(e).to_line(),
+                        }
+                    };
+                    seq.push(i, line);
+                }
+            });
+        }
+        let writer = scope.spawn({
+            let (seq, stop) = (&seq, &stop);
+            let mut output = output;
+            move || -> std::io::Result<()> {
+                let mut result = Ok(());
+                while let Some((_, line)) = seq.next_in_order() {
+                    if result.is_ok() {
+                        result = writeln!(output, "{line}").and_then(|_| output.flush());
+                        if result.is_err() {
+                            // Tell the reader to stop, but keep
+                            // draining so blocked pushers shut down
+                            // instead of waiting on a dead sink.
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                result
+            }
+        });
+        for line in input.lines() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+            };
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let parsed = Request::parse(trimmed);
+            served += match &parsed {
+                Ok(Request::Batch(b)) => b.len(),
+                _ => 1,
+            };
+            if queue.push((jobs, parsed)).is_err() {
+                break;
+            }
+            jobs += 1;
+        }
+        queue.close();
+        seq.finish(jobs);
+        writer.join().expect("writer thread panicked")
+    });
+    if let Some(e) = read_err {
+        return Err(e);
+    }
+    write_result?;
     Ok(served)
 }
 
@@ -156,12 +384,16 @@ mod tests {
             r#"{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "latency"}"#,
         )
         .unwrap();
-        assert_eq!(r.0.objective, Objective::Latency);
-        let (w, a) = r.0.resolve().unwrap();
+        let Request::One(req) = r else { panic!("expected a single request") };
+        assert_eq!(req.objective, Objective::Latency);
+        let (w, a) = req.resolve().unwrap();
         assert_eq!(w.name, "bert-base-512");
         assert_eq!(a.name, "accel1-nvdla");
         assert!(Request::parse("{}").is_err());
         assert!(Request::parse("not json").is_err());
+        // An array parses as a batch.
+        let b = Request::parse(r#"[{"workload": "bert-base"}]"#).unwrap();
+        assert!(matches!(b, Request::Batch(ref batch) if batch.len() == 1));
     }
 
     #[test]
@@ -275,15 +507,92 @@ mod tests {
     }
 
     #[test]
+    fn batch_line_yields_positional_array_response() {
+        let engine = MmeeEngine::native();
+        // good, malformed element, infeasible element, duplicate of #0:
+        // errors must stay *elements* and never abort the neighbours.
+        let input = concat!(
+            r#"[{"workload": "bert-base", "seq": 512, "accel": "accel1"},"#,
+            r#" {"workload": 42},"#,
+            r#" {"workload": "bert-base", "seq": 512,"#,
+            r#"  "accel": {"num_arrays": 1, "pe_rows": 8, "pe_cols": 8, "buffer_bytes": 64,"#,
+            r#"            "dram_bw": 1.0e9, "freq": 1.0e9, "bytes_per_word": 2}},"#,
+            r#" {"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "latency"}]"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 4, "each batch element counts as one request");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1, "a batch answers on ONE line");
+        let arr = Json::parse(lines[0]).unwrap();
+        let items = arr.as_arr().unwrap();
+        assert_eq!(items.len(), 4);
+        assert!(items[0].get("energy_j").is_some(), "{}", lines[0]);
+        assert_eq!(
+            items[1].get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("parse")
+        );
+        assert_eq!(
+            items[2].get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("infeasible")
+        );
+        assert_eq!(items[3].get("objective").unwrap().as_str(), Some("latency"));
+        // Elements 0 and 3 shared one surface pass (one plan-cache miss).
+        assert_eq!(engine.plan_cache_stats().1, 2, "bert+accel1 and the tiny accel");
+    }
+
+    #[test]
+    fn serve_lines_concurrent_preserves_input_order() {
+        let engine = MmeeEngine::native();
+        // Repeats + an error line + a batch line, all distinguishable.
+        let input = concat!(
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n",
+            r#"{"workload": "mlp", "accel": "accel1"}"#,
+            "\n",
+            r#"{"workload": "nope"}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "edp"}"#,
+            "\n",
+            r#"[{"workload": "mlp"}, {"workload": "bert-base", "seq": 512}]"#,
+            "\n",
+            r#"{"workload": "mlp", "accel": "accel1", "objective": "latency"}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines_concurrent(&engine, input.as_bytes(), &mut out, 4).unwrap();
+        assert_eq!(served, 7, "5 single lines + 2 batch elements");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6, "one response line per request line, in order");
+        let field = |l: &str, k: &str| {
+            Json::parse(l).unwrap().get(k).and_then(|v| v.as_str().map(String::from))
+        };
+        assert_eq!(field(lines[0], "workload").as_deref(), Some("bert-base-512"));
+        assert_eq!(field(lines[1], "workload").as_deref(), Some("mlp"));
+        assert!(Json::parse(lines[2]).unwrap().get("error").is_some());
+        assert_eq!(field(lines[3], "objective").as_deref(), Some("edp"));
+        let batch = Json::parse(lines[4]).unwrap();
+        assert_eq!(batch.as_arr().unwrap().len(), 2);
+        assert_eq!(field(lines[5], "objective").as_deref(), Some("latency"));
+        // One shared engine, one consistent set of counters. (Exact
+        // hit/miss splits are racy — two workers can miss the same key
+        // concurrently — but every lookup counts exactly once.)
+        let (hits, misses) = engine.plan_cache_stats();
+        assert_eq!(hits + misses, 7 - 1, "one lookup per resolvable request");
+        assert!(misses >= 2, "two distinct surfaces need at least two passes");
+    }
+
+    #[test]
     fn serve_tcp_roundtrip() {
         use std::io::{BufRead, BufReader, Write};
-        // Port 0 + ready callback: no bind/re-bind race, no sleep. (The
-        // engine is constructed inside the server thread: PJRT-based
-        // backends are not Send, so engines never cross threads.)
+        // Port 0 + ready callback: no bind/re-bind race, no sleep.
         let (tx, rx) = std::sync::mpsc::channel();
         let server = std::thread::spawn(move || {
             let engine = MmeeEngine::native();
-            serve_tcp(&engine, "127.0.0.1:0", Some(1), |addr| tx.send(addr).unwrap())
+            serve_tcp(&engine, "127.0.0.1:0", Some(1), 2, |addr| tx.send(addr).unwrap())
                 .unwrap()
         });
         let addr = rx.recv().unwrap();
@@ -308,6 +617,53 @@ mod tests {
         let ok = Json::parse(&lines[1]).unwrap();
         assert!(ok.get("energy_j").is_some(), "{}", lines[1]);
         assert_eq!(server.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn serve_tcp_serves_concurrent_clients_without_hol_blocking() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::time::Duration;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            let engine = MmeeEngine::native();
+            serve_tcp(&engine, "127.0.0.1:0", Some(4), 4, |addr| tx.send(addr).unwrap())
+                .unwrap()
+        });
+        let addr = rx.recv().unwrap();
+        // Connect FOUR clients before sending anything. Client 0 stays
+        // silent while 1..=3 expect answers — a sequential accept loop
+        // would head-of-line block on client 0 forever.
+        let conns: Vec<std::net::TcpStream> =
+            (0..4).map(|_| std::net::TcpStream::connect(addr).unwrap()).collect();
+        for c in &conns {
+            c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        }
+        let mut readers: Vec<BufReader<std::net::TcpStream>> = conns
+            .iter()
+            .map(|c| BufReader::new(c.try_clone().unwrap()))
+            .collect();
+        for i in (1..4).rev() {
+            let mut w: &std::net::TcpStream = &conns[i];
+            w.write_all(b"{\"workload\": \"bert-base\", \"seq\": 512}\n").unwrap();
+            let mut line = String::new();
+            readers[i].read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            assert!(j.get("energy_j").is_some(), "client {i}: {line}");
+        }
+        // Client 0 wakes up last and is still served.
+        let mut w: &std::net::TcpStream = &conns[0];
+        w.write_all(b"{\"workload\": \"bert-base\", \"seq\": 512, \"objective\": \"edp\"}\n")
+            .unwrap();
+        let mut line = String::new();
+        readers[0].read_line(&mut line).unwrap();
+        assert_eq!(
+            Json::parse(&line).unwrap().get("objective").unwrap().as_str(),
+            Some("edp")
+        );
+        for c in conns {
+            c.shutdown(std::net::Shutdown::Write).unwrap();
+        }
+        assert_eq!(server.join().unwrap(), 4);
     }
 
     #[test]

@@ -16,7 +16,10 @@
 
 pub mod native;
 pub mod branchy;
+pub mod router;
 pub mod xla;
+
+pub use router::Router;
 
 use crate::config::{HwVector, Workload};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
@@ -26,11 +29,40 @@ use crate::model::Multipliers;
 /// Backend lookup by (case-insensitive) name; the error lists the valid
 /// values. The `xla` backend additionally requires compiled artifacts
 /// and the `pjrt` feature, reported as [`MmeeError::Backend`].
+///
+/// The returned box is intentionally NOT `Send + Sync` — this is the
+/// constructor to call from a
+/// [`crate::search::EngineBuilder::backend_factory`] closure, which
+/// builds one instance per worker thread (PJRT handles must not cross
+/// threads). For a single shared instance use [`shared_backend_by_name`].
 pub fn backend_by_name(name: &str) -> Result<Box<dyn EvalBackend>, MmeeError> {
     match name.to_ascii_lowercase().as_str() {
         "native" => Ok(Box::new(native::NativeBackend)),
         "branchy" => Ok(Box::new(branchy::BranchyBackend)),
         "xla" => Ok(Box::new(xla::XlaBackend::new()?)),
+        other => Err(MmeeError::Backend(format!(
+            "unknown backend '{other}' (valid: native, branchy, xla)"
+        ))),
+    }
+}
+
+/// Thread-safe backend lookup for [`crate::search::EngineBuilder::backend`]:
+/// one instance shared by every worker. `xla` is rejected here — its
+/// PJRT handles are not `Send`; route it through
+/// [`crate::search::EngineBuilder::backend_factory`] +
+/// [`backend_by_name`] instead.
+pub fn shared_backend_by_name(
+    name: &str,
+) -> Result<Box<dyn EvalBackend + Send + Sync>, MmeeError> {
+    match name.to_ascii_lowercase().as_str() {
+        "native" => Ok(Box::new(native::NativeBackend)),
+        "branchy" => Ok(Box::new(branchy::BranchyBackend)),
+        "xla" => Err(MmeeError::Backend(
+            "the xla backend holds PJRT handles that cannot be shared across \
+             threads; configure it with EngineBuilder::backend_factory(\"xla\", \
+             || eval::backend_by_name(\"xla\"))"
+                .into(),
+        )),
         other => Err(MmeeError::Backend(format!(
             "unknown backend '{other}' (valid: native, branchy, xla)"
         ))),
@@ -136,6 +168,68 @@ pub trait EvalBackend {
         mult: &Multipliers,
     ) -> Fronts {
         serial_fronts(self, q, b, hw, mult)
+    }
+}
+
+/// Boxed backends delegate every method (not just the required ones),
+/// so a `Box<dyn EvalBackend>` inside a [`Router`] keeps the inner
+/// backend's parallel/in-graph overrides instead of falling back to the
+/// serial trait defaults.
+impl<B: EvalBackend + ?Sized> EvalBackend for Box<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn eval_block(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> Block {
+        (**self).eval_block(q, b, hw, mult, c_range, t_range)
+    }
+
+    fn eval_all(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Block {
+        (**self).eval_all(q, b, hw, mult)
+    }
+
+    fn argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Argmin3 {
+        (**self).argmin3(q, b, hw, mult)
+    }
+
+    fn try_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Result<Argmin3, MmeeError> {
+        (**self).try_argmin3(q, b, hw, mult)
+    }
+
+    fn fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Fronts {
+        (**self).fronts(q, b, hw, mult)
     }
 }
 

@@ -1,0 +1,164 @@
+//! Size-based backend routing.
+//!
+//! The native evaluator wins at small and medium surfaces (no padding,
+//! no graph-dispatch overhead); the batched backends (XLA artifact,
+//! or any internally-parallel evaluator) win once the
+//! (candidates × tilings) surface is large enough to amortize their
+//! fixed cost. [`Router`] is an [`EvalBackend`] that measures each
+//! incoming surface and dispatches it to the `small` or `large`
+//! backend accordingly, so a serving engine can route big
+//! shared-boundary batches to the batched path while singleton
+//! requests stay on the fast native path
+//! ([`crate::search::EngineBuilder::route_above`] wires it up).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{Argmin3, Block, EvalBackend, Fronts};
+use crate::config::HwVector;
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::error::MmeeError;
+use crate::model::Multipliers;
+
+/// Dispatches each surface to `small` or `large` by mapping count.
+pub struct Router<S, L> {
+    small: S,
+    large: L,
+    /// Surfaces with at least this many mappings (candidates × tilings)
+    /// route to `large`; everything below stays on `small`.
+    threshold: usize,
+    small_calls: AtomicU64,
+    large_calls: AtomicU64,
+}
+
+impl<S: EvalBackend, L: EvalBackend> Router<S, L> {
+    pub fn new(small: S, large: L, threshold: usize) -> Router<S, L> {
+        Router {
+            small,
+            large,
+            threshold,
+            small_calls: AtomicU64::new(0),
+            large_calls: AtomicU64::new(0),
+        }
+    }
+
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Lifetime (small-path, large-path) dispatch counts.
+    pub fn calls(&self) -> (u64, u64) {
+        (
+            self.small_calls.load(Ordering::Relaxed),
+            self.large_calls.load(Ordering::Relaxed),
+        )
+    }
+
+    fn pick(&self, q: &QueryMatrix, b: &BoundaryMatrix) -> &dyn EvalBackend {
+        if q.num_candidates().saturating_mul(b.num_tilings()) >= self.threshold {
+            self.large_calls.fetch_add(1, Ordering::Relaxed);
+            &self.large
+        } else {
+            self.small_calls.fetch_add(1, Ordering::Relaxed);
+            &self.small
+        }
+    }
+}
+
+impl<S: EvalBackend, L: EvalBackend> EvalBackend for Router<S, L> {
+    fn name(&self) -> &'static str {
+        "router"
+    }
+
+    fn eval_block(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> Block {
+        self.pick(q, b).eval_block(q, b, hw, mult, c_range, t_range)
+    }
+
+    fn argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Argmin3 {
+        self.pick(q, b).argmin3(q, b, hw, mult)
+    }
+
+    fn try_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Result<Argmin3, MmeeError> {
+        self.pick(q, b).try_argmin3(q, b, hw, mult)
+    }
+
+    fn fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Fronts {
+        self.pick(q, b).fronts(q, b, hw, mult)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::eval::{branchy::BranchyBackend, native::NativeBackend};
+    use crate::tiling::enumerate_tilings;
+
+    fn surface() -> (QueryMatrix, BoundaryMatrix, HwVector, Multipliers) {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let q = QueryMatrix::build(crate::symbolic::pruned_table().candidates()[..16].to_vec());
+        let tilings: Vec<_> =
+            enumerate_tilings(&w.gemm, None).into_iter().take(30).collect();
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(&w, &accel);
+        (q, b, hw, mult)
+    }
+
+    #[test]
+    fn routes_by_surface_size_and_counts_dispatches() {
+        let (q, b, hw, mult) = surface();
+        let size = q.num_candidates() * b.num_tilings();
+
+        // Threshold above the surface size: everything stays small.
+        let r = Router::new(NativeBackend, BranchyBackend, size + 1);
+        let _ = r.try_argmin3(&q, &b, &hw, &mult).unwrap();
+        assert_eq!(r.calls(), (1, 0));
+
+        // Threshold at the surface size: routes large.
+        let r = Router::new(NativeBackend, BranchyBackend, size);
+        let _ = r.try_argmin3(&q, &b, &hw, &mult).unwrap();
+        let _ = r.eval_block(&q, &b, &hw, &mult, (0, 4), (0, 8));
+        // The sub-block is still measured by its full surface inputs
+        // (q × b), so it routes large too.
+        assert_eq!(r.calls(), (0, 2));
+    }
+
+    #[test]
+    fn routed_results_match_direct_backend() {
+        let (q, b, hw, mult) = surface();
+        let direct = NativeBackend.argmin3(&q, &b, &hw, &mult);
+        let via_small = Router::new(NativeBackend, BranchyBackend, usize::MAX)
+            .argmin3(&q, &b, &hw, &mult);
+        assert_eq!(direct, via_small);
+        let via_large =
+            Router::new(BranchyBackend, NativeBackend, 0).argmin3(&q, &b, &hw, &mult);
+        assert_eq!(direct, via_large);
+    }
+}

@@ -34,11 +34,18 @@
 //!   serving loop is safe to pipeline.
 //!
 //! Repeat queries against the same accelerator hit the engine's
-//! boundary-matrix and plan LRU caches and skip re-enumeration.
+//! boundary-matrix and plan LRU caches and skip re-enumeration. The
+//! engine is `Send + Sync` (sharded-mutex caches, atomic counters), so
+//! serving workers share one instance; [`search::MmeeEngine::plan_batch`]
+//! schedules a whole [`search::BatchRequest`] so requests sharing a
+//! resolved (workload, accel) pair pay one surface pass, and
+//! [`eval::Router`] routes big surfaces to a batched backend while
+//! small ones stay on the native path.
 //!
 //! Entry points: [`search::MmeeEngine`] for optimization,
 //! [`sim::Simulator`] for validation, [`report`] for paper artifacts,
-//! [`coordinator::service`] for the `mmee serve` loop.
+//! [`coordinator::service`] for the `mmee serve` loops (sequential,
+//! concurrent, TCP connection pool).
 
 pub mod error;
 pub mod util;
@@ -58,5 +65,6 @@ pub mod report;
 
 pub use error::{MmeeError, Result};
 pub use search::{
-    AccelSpec, MappingPlan, MappingRequest, MmeeEngine, Objective, WorkloadSpec,
+    AccelSpec, BatchRequest, MappingPlan, MappingRequest, MmeeEngine, Objective,
+    WorkloadSpec,
 };

@@ -5,7 +5,9 @@
 //!               --objective energy [--backend native|xla|branchy]
 //! mmee pareto   --workload palm-62b --seq 4096 --accel accel2
 //! mmee validate [--charts]          # model vs simulator
-//! mmee serve [--tcp host:port]      # JSON-lines mapping service
+//! mmee serve [--tcp host:port] [--workers N] [--route-above M]
+//!                                   # JSON-lines mapping service
+//! mmee serve --batch reqs.json      # one JSON-array file, batched
 //! mmee bench-fig <13..27|all>       # regenerate paper figures
 //! mmee bench-table <1..4|all>       # regenerate paper tables
 //! mmee bench-all [--out results]    # everything + summary.md
@@ -21,11 +23,30 @@ use mmee::baselines::Mapper;
 use mmee::coordinator::service;
 use mmee::error::{MmeeError, Result};
 use mmee::report::{figures, tables, Report};
-use mmee::search::{AccelSpec, MappingRequest, MmeeEngine, Objective, WorkloadSpec};
+use mmee::search::{
+    AccelSpec, BatchRequest, MappingRequest, MmeeEngine, Objective, WorkloadSpec,
+};
 use mmee::util::cli::Args;
 
-fn engine_for(backend: &str) -> Result<MmeeEngine> {
-    Ok(MmeeEngine::builder().backend(mmee::eval::backend_by_name(backend)?).build())
+fn engine_for(args: &Args) -> Result<MmeeEngine> {
+    let backend = args.flag_or("backend", "native");
+    let mut builder = MmeeEngine::builder();
+    builder = if backend.eq_ignore_ascii_case("xla") {
+        // PJRT handles must not cross threads: probe availability once
+        // (fail fast on missing artifacts), then let each serving
+        // worker build its own instance.
+        mmee::eval::backend_by_name("xla")?;
+        builder.backend_factory("xla", || mmee::eval::backend_by_name("xla"))
+    } else {
+        builder.backend(mmee::eval::shared_backend_by_name(backend)?)
+    };
+    if let Some(t) = args.flag("route-above") {
+        let threshold = t.parse().map_err(|_| {
+            MmeeError::Parse(format!("--route-above expects a mapping count, got '{t}'"))
+        })?;
+        builder = builder.route_above(threshold);
+    }
+    Ok(builder.build())
 }
 
 fn main() -> Result<()> {
@@ -61,7 +82,7 @@ fn request_from(args: &Args) -> Result<MappingRequest> {
 
 fn cmd_optimize(args: &Args) -> Result<()> {
     let req = request_from(args)?;
-    let engine = engine_for(args.flag_or("backend", "native"))?;
+    let engine = engine_for(args)?;
     let (w, accel) = req.resolve()?;
     if args.has("tileflow") {
         let s = TileFlow::default().optimize(&w, &accel, req.objective)?;
@@ -82,8 +103,8 @@ fn cmd_optimize(args: &Args) -> Result<()> {
 fn cmd_pareto(args: &Args) -> Result<()> {
     let req = request_from(args)?;
     let (w, accel) = req.resolve()?;
-    let engine = engine_for(args.flag_or("backend", "native"))?;
-    let (front, stats) = engine.pareto_energy_latency(&w, &accel);
+    let engine = engine_for(args)?;
+    let (front, stats) = engine.pareto_energy_latency(&w, &accel)?;
     println!(
         "# {} on {}: {} Pareto points / {} mappings in {:?}",
         w.name,
@@ -129,17 +150,26 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = engine_for(args.flag_or("backend", "native"))?;
-    let n = if let Some(addr) = args.flag("tcp") {
-        service::serve_tcp(&engine, addr, None, |_| {})?
+    let engine = engine_for(args)?;
+    let workers = args.usize_flag("workers", mmee::coordinator::pool::default_workers());
+    let n = if let Some(path) = args.flag("batch") {
+        // Batch mode: one JSON-array file through the batch scheduler;
+        // the response is a JSON array, one element per request.
+        let text = std::fs::read_to_string(path)?;
+        let batch = BatchRequest::parse(text.trim())?;
+        let n = batch.len();
+        let resp = service::handle(&engine, &service::Request::Batch(batch));
+        println!("{:#}", resp.to_json());
+        n
+    } else if let Some(addr) = args.flag("tcp") {
+        service::serve_tcp(&engine, addr, None, workers, |_| {})?
     } else {
         eprintln!(
-            "mmee serve: JSON requests on stdin, one per line (backend: {})",
+            "mmee serve: JSON requests on stdin, one per line (backend: {}, {workers} workers)",
             engine.backend_name()
         );
         let stdin = std::io::stdin();
-        let stdout = std::io::stdout();
-        service::serve_lines(&engine, stdin.lock(), stdout.lock())?
+        service::serve_lines_concurrent(&engine, stdin.lock(), std::io::stdout(), workers)?
     };
     let (ph, pm) = engine.plan_cache_stats();
     let (bh, bm) = engine.boundary_cache_stats();

@@ -201,7 +201,7 @@ fn da_bs_comparison(
 ) -> Result<()> {
     let engine = MmeeEngine::native();
     let mmee: Vec<(f64, f64)> =
-        engine.pareto_da_bs(w, accel).points().iter().map(|p| (p.x, p.y)).collect();
+        engine.pareto_da_bs(w, accel)?.points().iter().map(|p| (p.x, p.y)).collect();
     let oro = Orojenesis(Variant::Base).da_bs_front(w, accel);
     let obm = Orojenesis(Variant::BufferManagement).da_bs_front(w, accel);
     let nof = NoFusion::da_bs_front(w, accel);
@@ -355,7 +355,7 @@ pub fn fig20(r: &mut Report) -> Result<()> {
     let accel = presets::accel2();
     let mut rows = Vec::new();
     for w in [presets::bert_base(4096), presets::palm_62b(4096)] {
-        let (front, stats) = engine.pareto_energy_latency(&w, &accel);
+        let (front, stats) = engine.pareto_energy_latency(&w, &accel)?;
         let n_rec = front
             .points()
             .iter()

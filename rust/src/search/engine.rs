@@ -2,13 +2,22 @@
 //!
 //! Construction goes through [`MmeeEngine::builder`]; requests go
 //! through [`MmeeEngine::plan`] (typed [`MappingRequest`] →
-//! [`MappingPlan`]) or the lower-level [`MmeeEngine::optimize`]. Both
-//! are fallible — infeasible workloads and backend failures come back
-//! as [`MmeeError`] instead of panicking, so a serving loop survives
-//! bad requests.
+//! [`MappingPlan`]), the batch scheduler [`MmeeEngine::plan_batch`], or
+//! the lower-level [`MmeeEngine::optimize`]. All are fallible —
+//! infeasible workloads and backend failures come back as
+//! [`MmeeError`] instead of panicking, so a serving loop survives bad
+//! requests.
 //!
-//! The engine keeps two LRU caches for the pipelined-serving case
-//! (many queries against the same accelerator):
+//! The engine is `Send + Sync`: the boundary/plan caches live behind
+//! sharded mutexes ([`crate::util::shard::ShardedLru`]) with atomic
+//! hit/miss counters, so one engine can be shared by N serving workers
+//! ([`crate::coordinator::service`]). Backends that are not
+//! thread-safe (the PJRT-backed XLA path) are configured through
+//! [`EngineBuilder::backend_factory`], which lazily builds one
+//! instance per worker thread.
+//!
+//! Two LRU caches serve the pipelined case (many queries against the
+//! same accelerator):
 //!
 //! * **boundary cache** — keyed on (GEMM dims, capacity, PE shape,
 //!   softmax coefficient): tiling enumeration + feature columns are
@@ -17,16 +26,20 @@
 //!   pair, holding the packaged winners for all three objectives (one
 //!   surface pass computes them anyway): repeat requests under any
 //!   objective return a cached plan without touching the surface.
+//!
+//! [`MmeeEngine::plan_batch`] leans on the same structure: a batch is
+//! resolved up front, grouped by resolved (workload, accel) pair, and
+//! every group — duplicates included — pays at most ONE surface pass.
 
 use std::cell::RefCell;
-use std::rc::Rc;
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::config::{Accelerator, Workload};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
 use crate::error::MmeeError;
-use crate::eval::{native::NativeBackend, EvalBackend};
+use crate::eval::{native::NativeBackend, EvalBackend, Router};
 use crate::loopnest::Candidate;
 use crate::model::{analytic, derive_slots, Multipliers};
 use crate::search::pareto::Front;
@@ -34,7 +47,7 @@ use crate::search::plan::{MappingPlan, Provenance};
 use crate::search::request::MappingRequest;
 use crate::search::result::{Objective, Solution};
 use crate::tiling::{enumerate_tilings, Tiling};
-use crate::util::lru::LruCache;
+use crate::util::shard::{Fnv, ShardKey, ShardedLru};
 
 /// Search statistics for runtime reporting (paper §VII-C/H).
 #[derive(Debug, Clone)]
@@ -57,19 +70,74 @@ fn mmee_query() -> &'static QueryMatrix {
 /// [`EngineBuilder::cache_capacity`].
 pub const DEFAULT_CACHE_CAPACITY: usize = 16;
 
+/// Where an engine gets its evaluation backend from.
+enum BackendSource {
+    /// One thread-safe backend shared by every worker.
+    Shared(Box<dyn EvalBackend + Send + Sync>),
+    /// Non-thread-safe backends (PJRT handles are not `Send`): each
+    /// worker thread lazily builds and keeps its own instance.
+    PerWorker {
+        name: String,
+        factory: Box<dyn Fn() -> Result<Box<dyn EvalBackend>, MmeeError> + Send + Sync>,
+    },
+}
+
+thread_local! {
+    /// Per-thread instances of `PerWorker` backends, keyed by engine id.
+    /// Entries for dropped engines linger until the thread exits; the
+    /// set of engines per process is tiny, so this stays bounded.
+    static WORKER_BACKENDS: RefCell<Vec<(u64, Box<dyn EvalBackend>)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+static NEXT_ENGINE_ID: AtomicU64 = AtomicU64::new(0);
+
 /// Builder for [`MmeeEngine`] — replaces the old constructor zoo
 /// (`native()` / `with_backend(..)` remain as thin shims).
 pub struct EngineBuilder {
-    backend: Option<Box<dyn EvalBackend>>,
+    backend: Option<BackendSource>,
     candidates: Option<QueryMatrix>,
     cache_capacity: usize,
+    route_above: Option<usize>,
 }
 
 impl EngineBuilder {
-    /// Evaluation backend (defaults to the native evaluator). Obtain one
-    /// by name with [`crate::eval::backend_by_name`].
-    pub fn backend(mut self, backend: Box<dyn EvalBackend>) -> EngineBuilder {
-        self.backend = Some(backend);
+    /// Evaluation backend (defaults to the native evaluator), shared
+    /// across worker threads. Obtain one by name with
+    /// [`crate::eval::shared_backend_by_name`]; for backends that are
+    /// not thread-safe use [`EngineBuilder::backend_factory`].
+    pub fn backend(mut self, backend: Box<dyn EvalBackend + Send + Sync>) -> EngineBuilder {
+        self.backend = Some(BackendSource::Shared(backend));
+        self
+    }
+
+    /// Per-worker backend factory for backends that must not cross
+    /// threads (the XLA backend's PJRT handles are not `Send`): every
+    /// worker thread that evaluates a surface lazily builds its own
+    /// instance via `factory`. `name` is the backend name reported by
+    /// [`MmeeEngine::backend_name`] (plan provenance uses it too).
+    ///
+    /// Each instance carries the backend's internal state — for XLA
+    /// that means per-worker artifact compilation and executable
+    /// caches (executables are bound to their PJRT client and cannot
+    /// be shared) — so the serving worker count multiplies that
+    /// footprint. Keep `--workers` modest for factory-built backends.
+    ///
+    /// ```no_run
+    /// # use mmee::search::MmeeEngine;
+    /// let engine = MmeeEngine::builder()
+    ///     .backend_factory("xla", || mmee::eval::backend_by_name("xla"))
+    ///     .build();
+    /// ```
+    pub fn backend_factory(
+        mut self,
+        name: impl Into<String>,
+        factory: impl Fn() -> Result<Box<dyn EvalBackend>, MmeeError> + Send + Sync + 'static,
+    ) -> EngineBuilder {
+        self.backend = Some(BackendSource::PerWorker {
+            name: name.into(),
+            factory: Box::new(factory),
+        });
         self
     }
 
@@ -87,28 +155,69 @@ impl EngineBuilder {
         self
     }
 
+    /// Size-based backend routing: wrap the configured backend in an
+    /// [`crate::eval::Router`] so surfaces with at least `threshold`
+    /// mappings (candidates × tilings) go to it, while smaller surfaces
+    /// stay on the fast native path. Big shared-boundary batches reach
+    /// the batched backend; singleton requests skip its fixed costs.
+    pub fn route_above(mut self, threshold: usize) -> EngineBuilder {
+        self.route_above = Some(threshold);
+        self
+    }
+
     pub fn build(self) -> MmeeEngine {
+        let backend = self
+            .backend
+            .unwrap_or_else(|| BackendSource::Shared(Box::new(NativeBackend)));
+        let backend = match self.route_above {
+            None => backend,
+            Some(th) => match backend {
+                BackendSource::Shared(b) => {
+                    BackendSource::Shared(Box::new(Router::new(NativeBackend, b, th)))
+                }
+                BackendSource::PerWorker { name, factory } => BackendSource::PerWorker {
+                    name: format!("router(native|{name})"),
+                    factory: Box::new(move || {
+                        Ok(Box::new(Router::new(NativeBackend, factory()?, th)))
+                    }),
+                },
+            },
+        };
         MmeeEngine {
-            backend: self.backend.unwrap_or_else(|| Box::new(NativeBackend)),
+            id: NEXT_ENGINE_ID.fetch_add(1, Ordering::Relaxed),
+            backend,
             table: self.candidates,
-            boundary_cache: RefCell::new(LruCache::new(self.cache_capacity)),
-            plan_cache: RefCell::new(LruCache::new(self.cache_capacity)),
+            boundary_cache: ShardedLru::new(self.cache_capacity),
+            plan_cache: ShardedLru::new(self.cache_capacity),
         }
     }
 }
 
+/// The engine. `Send + Sync` — share one instance (`&MmeeEngine` or
+/// `Arc<MmeeEngine>`) across serving workers; the caches and counters
+/// are internally synchronized.
 pub struct MmeeEngine {
-    backend: Box<dyn EvalBackend>,
+    /// Unique id keying this engine's per-thread backend instances.
+    id: u64,
+    backend: BackendSource,
     /// Custom candidate table; `None` = the shared pruned MMEE table.
     table: Option<QueryMatrix>,
-    boundary_cache: RefCell<LruCache<BoundaryKey, Rc<BoundaryMatrix>>>,
+    boundary_cache: ShardedLru<BoundaryKey, Arc<BoundaryMatrix>>,
     /// Memoizes plans AND `Infeasible` verdicts. One surface pass
     /// yields the winner for all three objectives, so entries are keyed
     /// objective-free and hold all three packaged plans: a pipelined
     /// client re-querying the same (workload, accel) under any
     /// objective never re-pays the surface pass.
-    plan_cache: RefCell<LruCache<PlanKey, Result<Box<[MappingPlan; 3]>, MmeeError>>>,
+    plan_cache: ShardedLru<PlanKey, Result<Arc<[MappingPlan; 3]>, MmeeError>>,
 }
+
+// The engine must stay shareable across serving workers; if a field
+// ever loses `Send + Sync`, fail compilation here rather than at a
+// distant `thread::scope` in the service layer.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<MmeeEngine>();
+};
 
 /// Everything the boundary matrix depends on: tiling enumeration reads
 /// (GEMM dims, capacity); the feature columns read the PE shape and the
@@ -133,15 +242,49 @@ impl BoundaryKey {
     }
 }
 
+impl ShardKey for BoundaryKey {
+    fn shard_hash(&self) -> u64 {
+        let mut h = Fnv::new();
+        for d in self.dims {
+            h = h.usize(d);
+        }
+        h.u64(self.capacity_words.unwrap_or(u64::MAX))
+            .usize(self.pe.0)
+            .usize(self.pe.1)
+            .u64(self.smx_bits)
+            .finish()
+    }
+}
+
 /// Key of a fully resolved request's surface (objective-free — the
 /// cached entry answers all three). Keying on the structs themselves
 /// (derived `PartialEq` over every field, names included) means a
 /// future `Workload`/`Accelerator` field can never silently alias two
-/// requests the way a hand-rolled fingerprint could.
+/// requests the way a hand-rolled fingerprint could. The `ShardKey`
+/// fingerprint is only a shard selector, so it may ignore fields.
 #[derive(Debug, Clone, PartialEq)]
 struct PlanKey {
     workload: Workload,
     accel: Accelerator,
+}
+
+impl ShardKey for PlanKey {
+    fn shard_hash(&self) -> u64 {
+        let mut h = Fnv::new().str(&self.workload.name).str(&self.accel.name);
+        for d in self.workload.gemm.dims() {
+            h = h.usize(d);
+        }
+        h.usize(self.workload.instances)
+            .f64(self.workload.c_softmax)
+            .usize(self.accel.num_arrays)
+            .usize(self.accel.pe_rows)
+            .usize(self.accel.pe_cols)
+            .usize(self.accel.buffer_bytes)
+            .f64(self.accel.dram_bw)
+            .f64(self.accel.freq)
+            .usize(self.accel.bytes_per_word)
+            .finish()
+    }
 }
 
 fn obj_index(o: Objective) -> usize {
@@ -158,6 +301,7 @@ impl MmeeEngine {
             backend: None,
             candidates: None,
             cache_capacity: DEFAULT_CACHE_CAPACITY,
+            route_above: None,
         }
     }
 
@@ -166,12 +310,33 @@ impl MmeeEngine {
         MmeeEngine::builder().build()
     }
 
-    pub fn with_backend(backend: Box<dyn EvalBackend>) -> MmeeEngine {
+    pub fn with_backend(backend: Box<dyn EvalBackend + Send + Sync>) -> MmeeEngine {
         MmeeEngine::builder().backend(backend).build()
     }
 
-    pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+    pub fn backend_name(&self) -> &str {
+        match &self.backend {
+            BackendSource::Shared(b) => b.name(),
+            BackendSource::PerWorker { name, .. } => name,
+        }
+    }
+
+    /// Run `f` against this engine's backend: directly for shared
+    /// backends, against this thread's lazily-built instance for
+    /// per-worker factories (whose construction may fail — hence the
+    /// outer `Result`).
+    fn on_backend<R>(&self, f: impl FnOnce(&dyn EvalBackend) -> R) -> Result<R, MmeeError> {
+        match &self.backend {
+            BackendSource::Shared(b) => Ok(f(b.as_ref())),
+            BackendSource::PerWorker { factory, .. } => WORKER_BACKENDS.with(|cell| {
+                let mut slot = cell.borrow_mut();
+                if !slot.iter().any(|(id, _)| *id == self.id) {
+                    slot.push((self.id, factory()?));
+                }
+                let (_, b) = slot.iter().find(|(id, _)| *id == self.id).unwrap();
+                Ok(f(b.as_ref()))
+            }),
+        }
     }
 
     /// The shared offline candidate table (pruned, all 18 groups).
@@ -193,36 +358,129 @@ impl MmeeEngine {
 
     /// (hits, misses) of the boundary-matrix cache.
     pub fn boundary_cache_stats(&self) -> (u64, u64) {
-        self.boundary_cache.borrow().stats()
+        self.boundary_cache.stats()
     }
 
     /// (hits, misses) of the plan cache.
     pub fn plan_cache_stats(&self) -> (u64, u64) {
-        self.plan_cache.borrow().stats()
+        self.plan_cache.stats()
     }
 
     /// Boundary matrix for (workload, accel, capacity), LRU-cached.
-    /// Returns the matrix and whether it was a cache hit.
+    /// Returns the matrix and whether it was a cache hit. Two threads
+    /// missing the same key concurrently both build it (benign race:
+    /// the build is pure; last `put` wins).
     fn boundary_cached(
         &self,
         workload: &Workload,
         accel: &Accelerator,
         capacity_words: Option<f64>,
-    ) -> (Rc<BoundaryMatrix>, bool) {
-        let key = BoundaryKey::new(workload, accel, capacity_words);
-        if let Some(b) = self.boundary_cache.borrow_mut().get(&key) {
-            return (Rc::clone(b), true);
-        }
-        let tilings = enumerate_tilings(&workload.gemm, capacity_words);
-        let b = Rc::new(BoundaryMatrix::build(tilings, accel, workload));
+    ) -> (Arc<BoundaryMatrix>, bool) {
         // Uncapped enumerations (the Fig. 15/16 DA-vs-BS sweeps) are the
         // largest matrices and essentially never repeat within an
-        // engine's lifetime — don't retain them, matching the
-        // build-use-drop behavior the sweep harness had before caching.
-        if capacity_words.is_some() {
-            self.boundary_cache.borrow_mut().put(key, Rc::clone(&b));
+        // engine's lifetime — never cached (matching the build-use-drop
+        // behavior the sweep harness had before caching), and never
+        // probed either, so the reported hit rate describes cacheable
+        // traffic only.
+        if capacity_words.is_none() {
+            let tilings = enumerate_tilings(&workload.gemm, None);
+            return (Arc::new(BoundaryMatrix::build(tilings, accel, workload)), false);
         }
+        let key = BoundaryKey::new(workload, accel, capacity_words);
+        if let Some(b) = self.boundary_cache.get(&key) {
+            return (b, true);
+        }
+        let tilings = enumerate_tilings(&workload.gemm, capacity_words);
+        let b = Arc::new(BoundaryMatrix::build(tilings, accel, workload));
+        self.boundary_cache.put(key, Arc::clone(&b));
         (b, false)
+    }
+
+    /// One full surface pass: (cached) boundary matrix, hardware
+    /// vector, multipliers, fallible argmin over all three objectives.
+    /// Shared by the plan and optimize paths so the recipe cannot
+    /// diverge between them.
+    fn surface_argmin3(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        q: &QueryMatrix,
+    ) -> Result<(crate::eval::Argmin3, Arc<BoundaryMatrix>, bool), MmeeError> {
+        let (b, boundary_hit) =
+            self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(workload, accel);
+        let best = self.on_backend(|be| be.try_argmin3(q, &b, &hw, &mult))??;
+        Ok((best, b, boundary_hit))
+    }
+
+    /// Infeasibility decision for an argmin score: an all-infeasible
+    /// surface yields the sentinel (~1e30) or +inf. One feasible
+    /// mapping bounds every objective's minimum, so one objective's
+    /// score decides all three.
+    fn check_feasible(
+        score: f64,
+        workload: &Workload,
+        accel: &Accelerator,
+    ) -> Result<(), MmeeError> {
+        if !score.is_finite() || score >= 1e29 {
+            return Err(MmeeError::Infeasible {
+                workload: workload.name.clone(),
+                accel: accel.name.clone(),
+            });
+        }
+        Ok(())
+    }
+
+    /// The plan-cache entry for one resolved surface, computing it on a
+    /// miss: ONE surface pass packages the winners for *all three*
+    /// objectives. Returns the entry and whether it came from cache.
+    /// `Infeasible` verdicts are memoized; backend failures may be
+    /// transient and are not.
+    fn plan_group(&self, key: &PlanKey) -> (Result<Arc<[MappingPlan; 3]>, MmeeError>, bool) {
+        if let Some(entry) = self.plan_cache.get(key) {
+            return (entry, true);
+        }
+        let t0 = Instant::now();
+        let (workload, accel) = (&key.workload, &key.accel);
+        let q = self.table();
+        // Backend failures may be transient — propagate without memoizing.
+        let (best, b, boundary_hit) = match self.surface_argmin3(workload, accel, q) {
+            Ok(v) => v,
+            Err(e) => return (Err(e), false),
+        };
+        // Infeasibility is a property of the (workload, accel) pair:
+        // memoize the verdict for all three objectives.
+        let (score, _, _) = best[0];
+        if let Err(e) = Self::check_feasible(score, workload, accel) {
+            self.plan_cache.put(key.clone(), Err(e.clone()));
+            return (Err(e), false);
+        }
+        let stats = SearchStats {
+            candidates: q.num_candidates(),
+            tilings: b.num_tilings(),
+            mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+            elapsed: t0.elapsed(),
+        };
+        let make = |objective: Objective| -> MappingPlan {
+            let (_, c, t) = best[obj_index(objective)];
+            MappingPlan {
+                solution: self.package(workload, accel, objective, q, &b.tilings, c, t, t0),
+                stats: stats.clone(),
+                provenance: Provenance {
+                    backend: self.backend_name().to_string(),
+                    cache_hit: false,
+                    boundary_cache_hit: boundary_hit,
+                },
+            }
+        };
+        let plans = Arc::new([
+            make(Objective::Energy),
+            make(Objective::Latency),
+            make(Objective::Edp),
+        ]);
+        self.plan_cache.put(key.clone(), Ok(Arc::clone(&plans)));
+        (Ok(plans), false)
     }
 
     /// Answer one typed request: resolve specs, consult the plan cache,
@@ -235,65 +493,67 @@ impl MmeeEngine {
     pub fn plan(&self, req: &MappingRequest) -> Result<MappingPlan, MmeeError> {
         let t0 = Instant::now();
         let (workload, accel) = req.resolve()?;
-        let key = PlanKey { workload: workload.clone(), accel: accel.clone() };
-        // Clone only the requested objective's plan out of the entry —
-        // this is the hot serving path.
-        let cached = self.plan_cache.borrow_mut().get(&key).map(|entry| match entry {
-            Ok(plans) => Ok(plans[obj_index(req.objective)].clone()),
-            Err(e) => Err(e.clone()),
-        });
-        match cached {
-            Some(Ok(mut p)) => {
-                p.provenance.cache_hit = true;
-                p.stats.elapsed = t0.elapsed();
-                p.solution.elapsed = t0.elapsed();
-                return Ok(p);
+        let key = PlanKey { workload, accel };
+        let (entry, cache_hit) = self.plan_group(&key);
+        let plans = entry?;
+        let mut p = plans[obj_index(req.objective)].clone();
+        p.provenance.cache_hit = cache_hit;
+        p.stats.elapsed = t0.elapsed();
+        p.solution.elapsed = t0.elapsed();
+        Ok(p)
+    }
+
+    /// Answer a batch of typed requests in one scheduling pass — the
+    /// paper's batched-evaluation mechanism lifted above the engine.
+    ///
+    /// Every spec is resolved first; requests sharing a resolved
+    /// (workload, accel) pair — duplicates included — are grouped so
+    /// the group pays at most ONE surface evaluation, and each request
+    /// then extracts its own objective from the shared result.
+    /// Per-request failures (unknown preset, infeasible pair, backend
+    /// error) come back as error *elements*: one bad request never
+    /// aborts its neighbours. Results are in input order and identical
+    /// to what sequential [`MmeeEngine::plan`] calls would return.
+    pub fn plan_batch(&self, reqs: &[MappingRequest]) -> Vec<Result<MappingPlan, MmeeError>> {
+        let t0 = Instant::now();
+        let mut out: Vec<Option<Result<MappingPlan, MmeeError>>> =
+            reqs.iter().map(|_| None).collect();
+        // Group by resolved key in first-occurrence order (linear scan:
+        // batches are small and the keys are not hashable-by-equality).
+        let mut groups: Vec<(PlanKey, Vec<usize>)> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            match req.resolve() {
+                Err(e) => out[i] = Some(Err(e)),
+                Ok((workload, accel)) => {
+                    let key = PlanKey { workload, accel };
+                    match groups.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, idxs)) => idxs.push(i),
+                        None => groups.push((key, vec![i])),
+                    }
+                }
             }
-            Some(Err(e)) => return Err(e),
-            None => {}
         }
-        let q = self.table();
-        let (b, boundary_hit) =
-            self.boundary_cached(&workload, &accel, Some(accel.capacity_words() as f64));
-        let hw = accel.hw_vector();
-        let mult = Multipliers::for_workload(&workload, &accel);
-        // Backend failures may be transient — propagate without memoizing.
-        let best = self.backend.try_argmin3(q, &b, &hw, &mult)?;
-        // One feasible mapping bounds every objective's minimum, so
-        // feasibility is uniform across the three argmins: check the
-        // requested one and cache the verdict for all.
-        let (score, _, _) = best[obj_index(req.objective)];
-        if !score.is_finite() || score >= 1e29 {
-            let e = MmeeError::Infeasible {
-                workload: workload.name.clone(),
-                accel: accel.name.clone(),
-            };
-            self.plan_cache.borrow_mut().put(key, Err(e.clone()));
-            return Err(e);
-        }
-        let stats = SearchStats {
-            candidates: q.num_candidates(),
-            tilings: b.num_tilings(),
-            mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
-            elapsed: t0.elapsed(),
-        };
-        let make = |objective: Objective| -> MappingPlan {
-            let (_, c, t) = best[obj_index(objective)];
-            MappingPlan {
-                solution: self.package(&workload, &accel, objective, q, &b.tilings, c, t, t0),
-                stats: stats.clone(),
-                provenance: Provenance {
-                    backend: self.backend.name().to_string(),
-                    cache_hit: false,
-                    boundary_cache_hit: boundary_hit,
-                },
+        for (key, idxs) in groups {
+            let (entry, cache_hit) = self.plan_group(&key);
+            for (n, &i) in idxs.iter().enumerate() {
+                out[i] = Some(match &entry {
+                    Err(e) => Err(e.clone()),
+                    Ok(plans) => {
+                        let mut p = plans[obj_index(reqs[i].objective)].clone();
+                        // Mirror the sequential path: the group's first
+                        // request pays the (potential) miss, its
+                        // duplicates are cache hits.
+                        p.provenance.cache_hit = cache_hit || n > 0;
+                        p.stats.elapsed = t0.elapsed();
+                        p.solution.elapsed = t0.elapsed();
+                        Ok(p)
+                    }
+                });
             }
-        };
-        let plans =
-            Box::new([make(Objective::Energy), make(Objective::Latency), make(Objective::Edp)]);
-        let plan = plans[obj_index(req.objective)].clone();
-        self.plan_cache.borrow_mut().put(key, Ok(plans));
-        Ok(plan)
+        }
+        out.into_iter()
+            .map(|r| r.expect("every batch request is answered"))
+            .collect()
     }
 
     /// Optimize one workload for one objective. One surface pass yields
@@ -318,35 +578,11 @@ impl MmeeEngine {
         objective: Objective,
         q: &QueryMatrix,
     ) -> Result<Solution, MmeeError> {
-        self.optimize_inner(workload, accel, objective, q).map(|(s, _)| s)
-    }
-
-    fn optimize_inner(
-        &self,
-        workload: &Workload,
-        accel: &Accelerator,
-        objective: Objective,
-        q: &QueryMatrix,
-    ) -> Result<(Solution, bool), MmeeError> {
         let t0 = Instant::now();
-        let (b, boundary_hit) =
-            self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
-        let hw = accel.hw_vector();
-        let mult = Multipliers::for_workload(workload, accel);
-        let best = self.backend.try_argmin3(q, &b, &hw, &mult)?;
-        let (score, c, t) = best[match objective {
-            Objective::Energy => 0,
-            Objective::Latency => 1,
-            Objective::Edp => 2,
-        }];
-        if !score.is_finite() || score >= 1e29 {
-            return Err(MmeeError::Infeasible {
-                workload: workload.name.clone(),
-                accel: accel.name.clone(),
-            });
-        }
-        let s = self.package(workload, accel, objective, q, &b.tilings, c, t, t0);
-        Ok((s, boundary_hit))
+        let (best, b, _) = self.surface_argmin3(workload, accel, q)?;
+        let (score, c, t) = best[obj_index(objective)];
+        Self::check_feasible(score, workload, accel)?;
+        Ok(self.package(workload, accel, objective, q, &b.tilings, c, t, t0))
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -379,31 +615,36 @@ impl MmeeEngine {
     }
 
     /// Energy–latency Pareto front over the full surface (paper Fig. 20).
+    /// Fallible since the backend may be a per-worker factory.
     pub fn pareto_energy_latency(
         &self,
         workload: &Workload,
         accel: &Accelerator,
-    ) -> (Front, SearchStats) {
+    ) -> Result<(Front, SearchStats), MmeeError> {
         let t0 = Instant::now();
         let q = self.table();
         let (b, _) =
             self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
         let hw = accel.hw_vector();
         let mult = Multipliers::for_workload(workload, accel);
-        let (el, _) = self.backend.fronts(q, &b, &hw, &mult);
+        let (el, _) = self.on_backend(|be| be.fronts(q, &b, &hw, &mult))?;
         let stats = SearchStats {
             candidates: q.num_candidates(),
             tilings: b.num_tilings(),
             mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
             elapsed: t0.elapsed(),
         };
-        (el, stats)
+        Ok((el, stats))
     }
 
     /// DRAM-access vs buffer-size Pareto front (paper Figs. 15/16): for
     /// each achievable buffer budget, the minimum DRAM traffic. Uses an
     /// *uncapped* tiling enumeration so the sweep covers large buffers.
-    pub fn pareto_da_bs(&self, workload: &Workload, accel: &Accelerator) -> Front {
+    pub fn pareto_da_bs(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+    ) -> Result<Front, MmeeError> {
         self.pareto_da_bs_with_candidates(workload, accel, self.table())
     }
 
@@ -412,14 +653,14 @@ impl MmeeEngine {
         workload: &Workload,
         accel: &Accelerator,
         q: &QueryMatrix,
-    ) -> Front {
+    ) -> Result<Front, MmeeError> {
         let (b, _) = self.boundary_cached(workload, accel, None);
         // Feasibility must not clip the sweep: lift the capacity.
         let mut hw = accel.hw_vector();
         hw.capacity_words = f64::MAX;
         let mult = Multipliers::unit();
-        let (_, bsda) = self.backend.fronts(q, &b, &hw, &mult);
-        bsda
+        let (_, bsda) = self.on_backend(|be| be.fronts(q, &b, &hw, &mult))?;
+        Ok(bsda)
     }
 
     /// Full optimize pass returning only search statistics (Fig. 22).
@@ -475,7 +716,7 @@ mod tests {
         let engine = MmeeEngine::native();
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let (front, stats) = engine.pareto_energy_latency(&w, &accel);
+        let (front, stats) = engine.pareto_energy_latency(&w, &accel).unwrap();
         assert!(!front.is_empty());
         assert!(stats.mappings > 0.0);
         let se = engine.optimize(&w, &accel, Objective::Energy).unwrap();
@@ -491,7 +732,7 @@ mod tests {
         let engine = MmeeEngine::native();
         let w = presets::bert_base(512);
         let accel = presets::accel1();
-        let front = engine.pareto_da_bs(&w, &accel);
+        let front = engine.pareto_da_bs(&w, &accel).unwrap();
         assert!(front.len() > 3);
         // Larger buffer budget -> strictly less DRAM traffic along front.
         for pair in front.points().windows(2) {
@@ -623,5 +864,113 @@ mod tests {
         assert!(!p2.provenance.cache_hit);
         // Doubling the buffer can only help energy-driven optimization.
         assert!(p2.solution.metrics.energy <= p1.solution.metrics.energy * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn plan_batch_answers_in_order_with_error_elements() {
+        let engine = MmeeEngine::native();
+        let reqs = vec![
+            MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy),
+            MappingRequest::preset("no-such-model", 512, "accel1", Objective::Energy),
+            MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency),
+            MappingRequest::new(
+                WorkloadSpec::preset("bert-base", 512),
+                AccelSpec::inline(presets::accel1().with_buffer_bytes(64)),
+                Objective::Energy,
+            ),
+            // Exact duplicate of request 0.
+            MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy),
+        ];
+        let out = engine.plan_batch(&reqs);
+        assert_eq!(out.len(), 5);
+        let p0 = out[0].as_ref().unwrap();
+        assert!(!p0.provenance.cache_hit, "first in group pays the miss");
+        assert!(matches!(
+            out[1].as_ref().unwrap_err(),
+            MmeeError::UnknownWorkload { .. }
+        ));
+        let p2 = out[2].as_ref().unwrap();
+        assert_eq!(p2.solution.objective, Objective::Latency);
+        assert!(p2.provenance.cache_hit, "same surface as request 0");
+        assert!(matches!(out[3].as_ref().unwrap_err(), MmeeError::Infeasible { .. }));
+        let p4 = out[4].as_ref().unwrap();
+        assert!(p4.provenance.cache_hit, "duplicate deduped to the same pass");
+        assert_eq!(p4.solution.tiling, p0.solution.tiling);
+        assert_eq!(p4.solution.metrics.energy, p0.solution.metrics.energy);
+        // Two resolvable surfaces (bert+accel1, the tiny accel) → two
+        // group lookups, both misses; the unresolvable request never
+        // reaches the cache.
+        let (hits, misses) = engine.plan_cache_stats();
+        assert_eq!((hits, misses), (0, 2), "one lookup per GROUP, not per request");
+    }
+
+    #[test]
+    fn plan_batch_matches_sequential_plans() {
+        let batch_engine = MmeeEngine::native();
+        let seq_engine = MmeeEngine::native();
+        let reqs = vec![
+            MappingRequest::preset("mlp", 512, "accel1", Objective::Energy),
+            MappingRequest::preset("bert-base", 512, "accel1", Objective::Edp),
+            MappingRequest::preset("mlp", 512, "accel1", Objective::Latency),
+            MappingRequest::preset("bert-base", 512, "accel1", Objective::Edp),
+        ];
+        let batched = batch_engine.plan_batch(&reqs);
+        for (req, b) in reqs.iter().zip(&batched) {
+            let s = seq_engine.plan(req);
+            let (b, s) = (b.as_ref().unwrap(), s.unwrap());
+            assert_eq!(b.solution.candidate, s.solution.candidate);
+            assert_eq!(b.solution.tiling, s.solution.tiling);
+            assert_eq!(b.solution.metrics.energy, s.solution.metrics.energy);
+            assert_eq!(b.solution.metrics.latency, s.solution.metrics.latency);
+            assert_eq!(b.provenance.cache_hit, s.provenance.cache_hit);
+        }
+        // Same number of surface passes on both engines.
+        assert_eq!(batch_engine.plan_cache_stats().1, seq_engine.plan_cache_stats().1);
+    }
+
+    #[test]
+    fn backend_factory_builds_per_worker_instances() {
+        let engine = MmeeEngine::builder()
+            .backend_factory("native", || Ok(Box::new(NativeBackend)))
+            .build();
+        assert_eq!(engine.backend_name(), "native");
+        let req = MappingRequest::preset("mlp", 512, "accel1", Objective::Energy);
+        let p = engine.plan(&req).unwrap();
+        assert_eq!(p.provenance.backend, "native");
+        // A second call on this thread reuses the instance (and hits
+        // the plan cache).
+        assert!(engine.plan(&req).unwrap().provenance.cache_hit);
+    }
+
+    #[test]
+    fn failing_backend_factory_is_a_structured_error_not_a_panic() {
+        let engine = MmeeEngine::builder()
+            .backend_factory("broken", || {
+                Err(MmeeError::Backend("no artifacts".into()))
+            })
+            .build();
+        let req = MappingRequest::preset("mlp", 512, "accel1", Objective::Energy);
+        let e = engine.plan(&req).unwrap_err();
+        assert_eq!(e.kind(), "backend");
+        // Transient backend failures are not memoized.
+        assert_eq!(engine.plan_cache_stats().0, 0);
+    }
+
+    #[test]
+    fn route_above_wraps_backend_in_router() {
+        // Threshold 0: every surface routes to the configured backend;
+        // the engine reports the router as its backend.
+        let engine = MmeeEngine::builder()
+            .backend(Box::new(NativeBackend))
+            .route_above(0)
+            .build();
+        assert_eq!(engine.backend_name(), "router");
+        let req = MappingRequest::preset("mlp", 512, "accel1", Objective::Energy);
+        let routed = engine.plan(&req).unwrap();
+        assert_eq!(routed.provenance.backend, "router");
+        // Same optimum as the plain native engine.
+        let direct = MmeeEngine::native().plan(&req).unwrap();
+        assert_eq!(routed.solution.tiling, direct.solution.tiling);
+        assert_eq!(routed.solution.metrics.energy, direct.solution.metrics.energy);
     }
 }

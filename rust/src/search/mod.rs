@@ -20,5 +20,5 @@ pub mod result;
 pub use engine::{EngineBuilder, MmeeEngine, SearchStats, DEFAULT_CACHE_CAPACITY};
 pub use pareto::{pareto_front, ParetoPoint};
 pub use plan::{MappingPlan, Provenance};
-pub use request::{AccelSpec, MappingRequest, WorkloadSpec};
+pub use request::{AccelSpec, BatchRequest, MappingRequest, WorkloadSpec};
 pub use result::{Objective, Solution};

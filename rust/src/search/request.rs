@@ -219,6 +219,51 @@ impl MappingRequest {
     }
 }
 
+/// A batch of wire requests parsed from one JSON array — the unit
+/// [`crate::search::MmeeEngine::plan_batch`] schedules.
+///
+/// Parsing is per-element: a malformed element becomes an error *slot*
+/// instead of aborting its neighbours, so the batch response stays
+/// positional (element `i` of the response always answers element `i`
+/// of the request array).
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub items: Vec<Result<MappingRequest, MmeeError>>,
+}
+
+impl BatchRequest {
+    /// Parse one JSON-array line, e.g.
+    ///
+    /// ```json
+    /// [{"workload": "bert-base", "seq": 512},
+    ///  {"workload": "bert-base", "seq": 512, "objective": "latency"}]
+    /// ```
+    pub fn parse(line: &str) -> Result<BatchRequest, MmeeError> {
+        let j = Json::parse(line)?;
+        BatchRequest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BatchRequest, MmeeError> {
+        let items = j.as_arr().ok_or_else(|| {
+            MmeeError::Parse("batch request must be a JSON array of request objects".into())
+        })?;
+        Ok(BatchRequest { items: items.iter().map(MappingRequest::from_json).collect() })
+    }
+
+    /// The well-formed requests, in order (error slots skipped).
+    pub fn requests(&self) -> Vec<MappingRequest> {
+        self.items.iter().filter_map(|r| r.as_ref().ok().cloned()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +345,26 @@ mod tests {
         assert_eq!(req.resolve().unwrap_err().kind(), "parse");
         // ...while seq-independent presets legitimately ignore seq = 0.
         assert_eq!(WorkloadSpec::preset("cc1", 0).resolve().unwrap().name, "cc1");
+    }
+
+    #[test]
+    fn batch_parse_keeps_malformed_elements_positional() {
+        let b = BatchRequest::parse(
+            r#"[{"workload": "bert-base", "seq": 512},
+                {"workload": 42},
+                {"workload": "bert-base", "objective": "latency"}]"#,
+        )
+        .unwrap();
+        assert_eq!(b.len(), 3);
+        assert!(b.items[0].is_ok());
+        assert_eq!(b.items[1].as_ref().unwrap_err().kind(), "parse");
+        assert_eq!(b.items[2].as_ref().unwrap().objective, Objective::Latency);
+        assert_eq!(b.requests().len(), 2);
+
+        // Whole-line failures are still hard errors.
+        assert_eq!(BatchRequest::parse("{}").unwrap_err().kind(), "parse");
+        assert_eq!(BatchRequest::parse("[").unwrap_err().kind(), "parse");
+        assert!(BatchRequest::parse("[]").unwrap().is_empty());
     }
 
     #[test]

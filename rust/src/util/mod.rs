@@ -5,6 +5,7 @@
 pub mod json;
 pub mod lru;
 pub mod rng;
+pub mod shard;
 pub mod prop;
 pub mod bench;
 pub mod cli;

@@ -1,0 +1,228 @@
+//! Sharded, thread-safe LRU — the concurrency layer over [`crate::util::lru`].
+//!
+//! The engine's boundary/plan caches were single-threaded (`RefCell`)
+//! before the batch scheduler landed; a `Sync` engine needs shared
+//! caches that many worker threads can hit without serializing on one
+//! lock. [`ShardedLru`] splits the entry budget across a small fixed
+//! set of `Mutex<LruCache>` shards selected by a key fingerprint, and
+//! keeps lifetime hit/miss counters in atomics so serving observability
+//! (`hits + misses == lookups`) holds under arbitrary interleaving.
+//!
+//! Keys supply their own fingerprint through [`ShardKey`] instead of
+//! `std::hash::Hash`: the cache keys embed `f64` hardware fields
+//! (which have no `Hash`), and the fingerprint only selects a shard —
+//! full equality is still decided by `PartialEq` inside the shard.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::lru::LruCache;
+
+/// A 64-bit fingerprint used to pick a shard (and, by the sharding
+/// roadmap item, a worker partition). Collisions are harmless — they
+/// only co-locate two keys in one shard.
+pub trait ShardKey {
+    fn shard_hash(&self) -> u64;
+}
+
+/// Incremental FNV-1a hasher over byte chunks — stable across runs and
+/// platforms (the fingerprint doubles as a request-partitioning key).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(mut self, bytes: &[u8]) -> Fnv {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self
+    }
+
+    pub fn u64(self, v: u64) -> Fnv {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn usize(self, v: usize) -> Fnv {
+        self.u64(v as u64)
+    }
+
+    /// Hash by bit pattern (`-0.0` and `0.0` land in different shards,
+    /// which is fine: shard choice is not equality).
+    pub fn f64(self, v: f64) -> Fnv {
+        self.u64(v.to_bits())
+    }
+
+    pub fn str(self, s: &str) -> Fnv {
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv::new()
+    }
+}
+
+/// Default shard count: enough to keep 8 serving workers from
+/// convoying on one lock, small enough that a 16-entry default cache
+/// still gets ≥2 entries per shard.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// A thread-safe LRU split into independently locked shards.
+///
+/// `capacity` is the TOTAL entry budget: it is distributed across at
+/// most `shards` shards (never more shards than entries, so aggregate
+/// retention cannot exceed the requested capacity). `capacity == 0`
+/// disables caching, matching [`LruCache`].
+#[derive(Debug)]
+pub struct ShardedLru<K, V> {
+    shards: Vec<Mutex<LruCache<K, V>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: ShardKey + PartialEq, V: Clone> ShardedLru<K, V> {
+    pub fn new(capacity: usize) -> ShardedLru<K, V> {
+        ShardedLru::with_shards(capacity, DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(capacity: usize, shards: usize) -> ShardedLru<K, V> {
+        let n = shards.clamp(1, capacity.max(1));
+        let base = capacity / n;
+        let extra = capacity % n;
+        let shards = (0..n)
+            .map(|i| Mutex::new(LruCache::new(base + usize::from(i < extra))))
+            .collect();
+        ShardedLru { shards, hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<LruCache<K, V>> {
+        &self.shards[(key.shard_hash() % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up `key`, cloning the value out (callers keep nothing
+    /// borrowed while the shard lock is released — cache values are
+    /// `Arc`s in practice, so the clone is a refcount bump).
+    pub fn get(&self, key: &K) -> Option<V> {
+        let v = self.shard(key).lock().unwrap().get(key).cloned();
+        match v {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        v
+    }
+
+    /// Insert (or refresh) `key` in its shard.
+    pub fn put(&self, key: K, value: V) {
+        self.shard(&key).lock().unwrap().put(key, value);
+    }
+
+    /// Lifetime (hits, misses). Under concurrency each lookup counts
+    /// exactly once, so `hits + misses` equals total lookups.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total entry budget across shards.
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().capacity()).sum()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    impl ShardKey for u64 {
+        fn shard_hash(&self) -> u64 {
+            Fnv::new().u64(*self).finish()
+        }
+    }
+
+    #[test]
+    fn capacity_splits_without_exceeding_total() {
+        let c: ShardedLru<u64, u64> = ShardedLru::new(16);
+        assert_eq!(c.capacity(), 16);
+        assert_eq!(c.num_shards(), DEFAULT_SHARDS);
+        // Fewer entries than shards: shard count shrinks to match.
+        let small: ShardedLru<u64, u64> = ShardedLru::new(3);
+        assert_eq!(small.capacity(), 3);
+        assert_eq!(small.num_shards(), 3);
+        for k in 0..100u64 {
+            small.put(k, k);
+        }
+        assert!(small.len() <= 3, "retained {} entries", small.len());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c: ShardedLru<u64, u64> = ShardedLru::new(0);
+        c.put(1, 1);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.stats(), (0, 1));
+    }
+
+    #[test]
+    fn get_put_roundtrip_and_stats() {
+        let c: ShardedLru<u64, String> = ShardedLru::new(8);
+        assert_eq!(c.get(&7), None);
+        c.put(7, "seven".into());
+        assert_eq!(c.get(&7).as_deref(), Some("seven"));
+        c.put(7, "VII".into());
+        assert_eq!(c.get(&7).as_deref(), Some("VII"));
+        assert_eq!(c.stats(), (2, 1));
+    }
+
+    #[test]
+    fn counters_are_consistent_under_threads() {
+        let c: ShardedLru<u64, u64> = ShardedLru::new(4);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let c = &c;
+                scope.spawn(move || {
+                    for i in 0..500u64 {
+                        let k = (t + i) % 16;
+                        if c.get(&k).is_none() {
+                            c.put(k, k * 10);
+                        }
+                    }
+                });
+            }
+        });
+        let (h, m) = c.stats();
+        assert_eq!(h + m, 8 * 500, "every lookup counted exactly once");
+        assert!(h > 0 && m > 0);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        let a = Fnv::new().str("bert-base").usize(512).finish();
+        let b = Fnv::new().str("bert-base").usize(512).finish();
+        let c = Fnv::new().str("bert-base").usize(513).finish();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(Fnv::new().f64(1.0).finish(), Fnv::new().f64(-1.0).finish());
+    }
+}

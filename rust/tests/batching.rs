@@ -1,0 +1,235 @@
+//! Batch-scheduling semantics: `plan_batch` must be observationally
+//! identical to sequential `plan` calls (shuffled order, duplicates,
+//! mixed feasible/infeasible), shared surfaces must collapse to one
+//! backend evaluation, and one `Send + Sync` engine hammered from 8
+//! threads must keep its cache counters consistent.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use mmee::config::presets;
+use mmee::error::MmeeError;
+use mmee::eval::{native::NativeBackend, Argmin3, Block, EvalBackend, Fronts};
+use mmee::search::{
+    AccelSpec, MappingPlan, MappingRequest, MmeeEngine, Objective, WorkloadSpec,
+};
+use mmee::util::json::Json;
+use mmee::util::rng::Rng;
+
+/// Wraps the native backend and counts surface evaluations — the probe
+/// for "a shared-surface batch pays exactly one pass".
+struct CountingBackend {
+    argmin_calls: Arc<AtomicUsize>,
+}
+
+impl EvalBackend for CountingBackend {
+    fn name(&self) -> &'static str {
+        "counting-native"
+    }
+
+    fn eval_block(
+        &self,
+        q: &mmee::encode::QueryMatrix,
+        b: &mmee::encode::BoundaryMatrix,
+        hw: &mmee::config::HwVector,
+        mult: &mmee::model::Multipliers,
+        c_range: (usize, usize),
+        t_range: (usize, usize),
+    ) -> Block {
+        NativeBackend.eval_block(q, b, hw, mult, c_range, t_range)
+    }
+
+    fn try_argmin3(
+        &self,
+        q: &mmee::encode::QueryMatrix,
+        b: &mmee::encode::BoundaryMatrix,
+        hw: &mmee::config::HwVector,
+        mult: &mmee::model::Multipliers,
+    ) -> Result<Argmin3, MmeeError> {
+        self.argmin_calls.fetch_add(1, Ordering::Relaxed);
+        NativeBackend.try_argmin3(q, b, hw, mult)
+    }
+
+    fn fronts(
+        &self,
+        q: &mmee::encode::QueryMatrix,
+        b: &mmee::encode::BoundaryMatrix,
+        hw: &mmee::config::HwVector,
+        mult: &mmee::model::Multipliers,
+    ) -> Fronts {
+        NativeBackend.fronts(q, b, hw, mult)
+    }
+}
+
+/// Plan JSON with the timing fields zeroed — everything else (mapping,
+/// metrics, stats, provenance) must be byte-identical between the
+/// batched and sequential paths.
+fn canonical(p: &MappingPlan) -> String {
+    let mut j = p.to_json();
+    if let Json::Obj(ref mut o) = j {
+        o.insert("elapsed_s".into(), Json::Num(0.0));
+        if let Some(Json::Obj(stats)) = o.get_mut("stats") {
+            stats.insert("elapsed_s".into(), Json::Num(0.0));
+        }
+    }
+    format!("{j}")
+}
+
+/// Like [`canonical`] but also drops provenance — for comparisons
+/// where cache-hit flags legitimately differ (warmup vs steady state).
+fn canonical_solution(p: &MappingPlan) -> String {
+    let mut j = p.to_json();
+    if let Json::Obj(ref mut o) = j {
+        o.insert("elapsed_s".into(), Json::Num(0.0));
+        o.remove("provenance");
+        if let Some(Json::Obj(stats)) = o.get_mut("stats") {
+            stats.insert("elapsed_s".into(), Json::Num(0.0));
+        }
+    }
+    format!("{j}")
+}
+
+fn request_pool() -> Vec<MappingRequest> {
+    let tiny = AccelSpec::inline(presets::accel1().with_buffer_bytes(64));
+    vec![
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy),
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency),
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Edp),
+        MappingRequest::preset("bert-base", 512, "accel2", Objective::Energy),
+        MappingRequest::preset("mlp", 512, "accel1", Objective::Energy),
+        MappingRequest::preset("mlp", 512, "accel1", Objective::Latency),
+        // Unresolvable: unknown preset names.
+        MappingRequest::preset("no-such-model", 512, "accel1", Objective::Energy),
+        MappingRequest::preset("bert-base", 512, "no-such-hw", Objective::Energy),
+        // Resolvable but infeasible: a 64-byte buffer fits nothing.
+        MappingRequest::new(
+            WorkloadSpec::preset("bert-base", 512),
+            tiny,
+            Objective::Energy,
+        ),
+    ]
+}
+
+/// Property: for shuffled, duplicated, mixed feasible/infeasible
+/// request sequences, `plan_batch` returns byte-identical plans (and
+/// identical errors) to N sequential `plan` calls.
+#[test]
+fn plan_batch_is_equivalent_to_sequential_plans() {
+    let pool = request_pool();
+    let mut rng = Rng::new(0xBA7C4);
+    for trial in 0..2 {
+        // Shuffle with duplicates: sample 8 requests from the pool.
+        let reqs: Vec<MappingRequest> =
+            (0..8).map(|_| pool[rng.below(pool.len())].clone()).collect();
+        let batch_engine = MmeeEngine::native();
+        let seq_engine = MmeeEngine::native();
+        let batched = batch_engine.plan_batch(&reqs);
+        assert_eq!(batched.len(), reqs.len());
+        for (i, (req, b)) in reqs.iter().zip(&batched).enumerate() {
+            let s = seq_engine.plan(req);
+            match (b, s) {
+                (Ok(bp), Ok(sp)) => assert_eq!(
+                    canonical(bp),
+                    canonical(sp),
+                    "trial {trial}, request {i}: batched plan differs"
+                ),
+                (Err(be), Err(se)) => {
+                    assert_eq!(be, &se, "trial {trial}, request {i}")
+                }
+                (b, s) => panic!(
+                    "trial {trial}, request {i}: batched {b:?} vs sequential {s:?}"
+                ),
+            }
+        }
+        // Dedup means the batch engine never does MORE surface passes
+        // than the sequential engine (which also dedups via its cache).
+        assert_eq!(
+            batch_engine.plan_cache_stats().1,
+            seq_engine.plan_cache_stats().1,
+            "trial {trial}: surface passes diverge"
+        );
+    }
+}
+
+/// Acceptance: M requests sharing one resolved (workload, accel) pair
+/// perform exactly ONE surface evaluation, verified by backend call
+/// count AND cache stats.
+#[test]
+fn shared_surface_batch_pays_one_backend_evaluation() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let engine = MmeeEngine::builder()
+        .backend(Box::new(CountingBackend { argmin_calls: Arc::clone(&calls) }))
+        .build();
+    let reqs = vec![
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy),
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency),
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Edp),
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy),
+        MappingRequest::preset("BERT-base", 512, "Accel1", Objective::Edp),
+    ];
+    let out = engine.plan_batch(&reqs);
+    assert!(out.iter().all(|r| r.is_ok()));
+    assert_eq!(
+        calls.load(Ordering::Relaxed),
+        1,
+        "5 requests, one resolved surface, ONE evaluation"
+    );
+    let (hits, misses) = engine.plan_cache_stats();
+    assert_eq!((hits, misses), (0, 1), "one group lookup for the whole batch");
+    // The per-objective extractions really differ.
+    let energies: Vec<f64> =
+        out.iter().map(|r| r.as_ref().unwrap().solution.metrics.energy).collect();
+    assert_eq!(energies[0], energies[3]);
+    assert!(
+        out[1].as_ref().unwrap().solution.metrics.latency
+            <= out[0].as_ref().unwrap().solution.metrics.latency + 1e-12
+    );
+}
+
+/// 8 threads hammer one shared engine; the atomic cache counters must
+/// account for every lookup (`hits + misses == lookups`) and every
+/// thread must see identical plans for identical requests.
+#[test]
+fn concurrent_hammering_keeps_cache_stats_consistent() {
+    let engine = MmeeEngine::native();
+    let reqs = [
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy),
+        MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency),
+        MappingRequest::preset("mlp", 512, "accel1", Objective::Energy),
+    ];
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 30;
+    let reference: Vec<String> = reqs
+        .iter()
+        .map(|r| canonical_solution(&engine.plan(r).unwrap()))
+        .collect();
+    let (_, warmup_misses) = engine.plan_cache_stats();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let engine = &engine;
+            let reqs = &reqs;
+            let reference = &reference;
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    let k = (t + i) % reqs.len();
+                    let p = engine.plan(&reqs[k]).unwrap();
+                    assert_eq!(
+                        canonical_solution(&p),
+                        reference[k],
+                        "thread {t} got a different plan"
+                    );
+                }
+            });
+        }
+    });
+    let (hits, misses) = engine.plan_cache_stats();
+    assert_eq!(
+        hits + misses,
+        (THREADS * PER_THREAD + reqs.len()) as u64,
+        "hits + misses must equal total plan-cache lookups"
+    );
+    // Everything after warmup was a hit: the keys were all cached.
+    assert_eq!(misses, warmup_misses, "no surface re-evaluation after warmup");
+    let (bh, bm) = engine.boundary_cache_stats();
+    assert_eq!(bh + bm, misses, "boundary lookups happen only on plan misses");
+}
