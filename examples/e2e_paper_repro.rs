@@ -110,6 +110,6 @@ fn main() -> mmee::Result<()> {
     );
 
     println!("\n{}", s_native.render_loopnest(&w, &accel));
-    println!("=== all layers compose; see EXPERIMENTS.md for the recorded run ===");
+    println!("=== all layers compose; see README.md for the reproduction guide ===");
     Ok(())
 }

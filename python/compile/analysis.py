@@ -1,7 +1,7 @@
 """L1 performance analysis: VMEM footprint + MXU utilisation estimates.
 
 ``interpret=True`` Pallas gives CPU-numpy timings only, which are not a
-TPU proxy — so the L1 optimization loop (EXPERIMENTS.md §Perf) reasons
+TPU proxy — so the L1 optimization loop (README §Performance) reasons
 about *structure*: per-grid-step VMEM working set and MXU occupancy of
 the `(bc·S, F) × (F, bt)` contraction, for candidate block shapes.
 

@@ -1,14 +1,36 @@
 //! Backend runtime comparison (paper §VII-C/D runtime claims):
-//! matrix-encoded evaluation (native / XLA) vs per-mapping "if-else
-//! parsing" (branchy). Prints mappings/second per backend.
+//! matrix-encoded evaluation (native lane kernel / XLA) vs per-mapping
+//! "if-else parsing" (branchy), and — from this PR on — the fused
+//! lane-major kernel vs the Block-materializing scalar path. Prints
+//! mappings/second per configuration and emits a machine-readable
+//! `BENCH_eval.json` (ns/point and points/s for scalar vs lane kernel,
+//! argmin vs full-surface) so the perf trajectory is tracked across
+//! PRs.
 
 use mmee::config::presets;
+use mmee::coordinator::parallel_chunks;
 use mmee::encode::{BoundaryMatrix, QueryMatrix};
-use mmee::eval::{branchy::BranchyBackend, native::NativeBackend, xla::XlaBackend, EvalBackend};
+use mmee::eval::{
+    branchy::BranchyBackend, kernel, native::NativeBackend, parallel_argmin3, parallel_fronts,
+    xla::XlaBackend, EvalBackend, T_CHUNK,
+};
 use mmee::model::Multipliers;
 use mmee::search::MmeeEngine;
 use mmee::tiling::enumerate_tilings;
-use mmee::util::bench::Bench;
+use mmee::util::bench::{Bench, Sample};
+use mmee::util::json::Json;
+
+/// One benchmark row destined for BENCH_eval.json.
+fn row(name: &str, sample: &Sample, points: f64) -> Json {
+    let ns = sample.median.as_secs_f64() * 1e9;
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("median_ns", Json::num(ns)),
+        ("ns_per_point", Json::num(ns / points)),
+        ("points_per_s", Json::num(points / sample.median.as_secs_f64())),
+        ("points", Json::num(points)),
+    ])
+}
 
 fn main() {
     let accel = presets::accel1();
@@ -27,24 +49,75 @@ fn main() {
     );
 
     let mut bench = Bench::new();
-    let native = bench.run("native argmin3 (full surface)", || {
+    let mut rows: Vec<Json> = Vec::new();
+
+    // Pre-PR scalar path: materialize 4 f32 surfaces per 64-tiling
+    // chunk, then rescan them for the argmin.
+    let scalar = bench.run("scalar block argmin3 (materializing)", || {
+        parallel_argmin3(&NativeBackend, q, &b, &hw, &mult)
+    });
+    rows.push(row("scalar_block_argmin3", &scalar, mappings));
+
+    // The serving path: fused lane kernel, bound pruning on.
+    let lane = bench.run("lane kernel argmin3 (fused, pruned)", || {
         NativeBackend.argmin3(q, &b, &hw, &mult)
     });
+    rows.push(row("lane_kernel_argmin3", &lane, mappings));
+
+    let lane_noprune = bench.run("lane kernel argmin3 (fused, pruning off)", || {
+        kernel::fused_argmin3(q, &b, &hw, &mult, false)
+    });
+    rows.push(row("lane_kernel_argmin3_noprune", &lane_noprune, mappings));
+
+    let speedup = scalar.median.as_secs_f64() / lane.median.as_secs_f64();
     println!(
-        "  native: {:.3e} mappings/s",
-        mappings / native.median.as_secs_f64()
+        "  scalar:      {:.3e} mappings/s",
+        mappings / scalar.median.as_secs_f64()
     );
+    println!(
+        "  lane kernel: {:.3e} mappings/s  ({speedup:.1}x vs scalar, target >= 2x)",
+        mappings / lane.median.as_secs_f64()
+    );
+
+    // Full-surface materialization (every metric for every mapping) vs
+    // the fused full-surface Pareto reduction.
+    let full_scalar = bench.run("scalar full-surface eval (chunked blocks)", || {
+        let parts = parallel_chunks(b.num_tilings(), T_CHUNK, |lo, hi| {
+            let blk =
+                NativeBackend.eval_block(q, &b, &hw, &mult, (0, q.num_candidates()), (lo, hi));
+            blk.energy.len()
+        });
+        parts.into_iter().sum::<usize>()
+    });
+    rows.push(row("scalar_block_full_surface", &full_scalar, mappings));
+
+    let fronts_scalar = bench.run("scalar fronts (materializing)", || {
+        parallel_fronts(&NativeBackend, q, &b, &hw, &mult)
+    });
+    rows.push(row("scalar_block_fronts", &fronts_scalar, mappings));
+
+    let fronts_lane = bench.run("lane kernel fronts (fused)", || {
+        kernel::fused_fronts(q, &b, &hw, &mult)
+    });
+    rows.push(row("lane_kernel_fronts", &fronts_lane, mappings));
+
+    // Sanity: the fused path must report the same optima.
+    let a = parallel_argmin3(&NativeBackend, q, &b, &hw, &mult);
+    let k = NativeBackend.argmin3(q, &b, &hw, &mult);
+    assert_eq!(a, k, "fused argmin diverged from the materializing reference");
 
     // Branchy is orders of magnitude slower; use a slice of the surface.
     let nt = 64.min(b.num_tilings());
     let branchy = bench.run("branchy eval (64-tiling slice)", || {
         BranchyBackend.eval_block(q, &b, &hw, &mult, (0, q.num_candidates()), (0, nt))
     });
-    let branchy_rate = (q.num_candidates() * nt) as f64 / branchy.median.as_secs_f64();
+    let branchy_points = (q.num_candidates() * nt) as f64;
+    rows.push(row("branchy_block_slice", &branchy, branchy_points));
+    let branchy_rate = branchy_points / branchy.median.as_secs_f64();
     println!("  branchy: {branchy_rate:.3e} mappings/s");
     println!(
         "  => matrix-encoded speedup vs per-mapping parsing: {:.0}x (paper: 64-343x)",
-        mappings / native.median.as_secs_f64() / branchy_rate
+        mappings / lane.median.as_secs_f64() / branchy_rate
     );
 
     match XlaBackend::new() {
@@ -52,6 +125,7 @@ fn main() {
             let s = bench.run("xla argmin3 (full surface, AOT artifact)", || {
                 xla.argmin3(q, &b, &hw, &mult)
             });
+            rows.push(row("xla_argmin3", &s, mappings));
             println!("  xla: {:.3e} mappings/s", mappings / s.median.as_secs_f64());
             // Cross-backend agreement.
             let n = NativeBackend.argmin3(q, &b, &hw, &mult);
@@ -64,4 +138,24 @@ fn main() {
         }
         Err(e) => println!("  xla backend unavailable ({e}); run `make artifacts`"),
     }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("eval_backends")),
+        (
+            "surface",
+            Json::obj(vec![
+                ("workload", Json::str(w.name.clone())),
+                ("accel", Json::str(accel.name.clone())),
+                ("candidates", Json::num(q.num_candidates() as f64)),
+                ("tilings", Json::num(b.num_tilings() as f64)),
+                ("mappings", Json::num(mappings)),
+            ]),
+        ),
+        ("results", Json::arr(rows)),
+        ("argmin_speedup_lane_vs_scalar", Json::num(speedup)),
+        ("argmin_speedup_target", Json::num(2.0)),
+        ("argmin_speedup_met", Json::Bool(speedup >= 2.0)),
+    ]);
+    std::fs::write("BENCH_eval.json", format!("{report}\n")).expect("write BENCH_eval.json");
+    println!("wrote BENCH_eval.json (lane-vs-scalar argmin speedup: {speedup:.2}x)");
 }

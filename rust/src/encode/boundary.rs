@@ -1,4 +1,15 @@
-//! Boundary matrix: one log-feature column per tiling (paper Eq. 10).
+//! Boundary matrix: one feature column per tiling (paper Eq. 10).
+//!
+//! The raw feature store is **column-major** (`[NUM_FEATURES ×
+//! num_tilings]`): each feature's values across tilings are contiguous,
+//! so the lane-major evaluation kernel ([`crate::eval::kernel`]) streams
+//! a feature over a tiling chunk as one contiguous slice
+//! ([`BoundaryMatrix::feature_col`]) and the inner loops
+//! auto-vectorize. The log-domain view consumed by the XLA artifact is
+//! built lazily on first use — native-only requests never pay the
+//! `num_tilings × NUM_FEATURES` calls to `ln()`.
+
+use std::sync::OnceLock;
 
 use crate::config::{Accelerator, Workload};
 use crate::model::analytic::features;
@@ -8,35 +19,69 @@ use crate::tiling::Tiling;
 #[derive(Debug, Clone)]
 pub struct BoundaryMatrix {
     pub tilings: Vec<Tiling>,
-    /// Raw feature columns, row-major `[num_tilings × NUM_FEATURES]`
-    /// (the native evaluator consumes these directly).
-    pub raw: Vec<f64>,
-    /// Log-domain columns, **column-major for the artifact**:
-    /// `[NUM_FEATURES × num_tilings]` so it uploads as `lnB[f, t]`.
-    pub ln: Vec<f32>,
+    /// Raw feature columns, column-major `[NUM_FEATURES × num_tilings]`
+    /// (feature-contiguous: the lane kernel consumes these directly).
+    raw: Vec<f64>,
+    /// Log-domain columns, `[NUM_FEATURES × num_tilings]`, built lazily
+    /// by [`BoundaryMatrix::ln`] — only the XLA path reads them.
+    ln: OnceLock<Vec<f32>>,
 }
 
 impl BoundaryMatrix {
     pub fn build(tilings: Vec<Tiling>, accel: &Accelerator, workload: &Workload) -> BoundaryMatrix {
         let n = tilings.len();
-        let mut raw = vec![0.0f64; n * NUM_FEATURES];
-        let mut ln = vec![0.0f32; NUM_FEATURES * n];
+        let mut raw = vec![0.0f64; NUM_FEATURES * n];
         for (t, tiling) in tilings.iter().enumerate() {
             let f = features(tiling, accel, workload);
             for (i, &v) in f.iter().enumerate() {
-                raw[t * NUM_FEATURES + i] = v;
-                ln[i * n + t] = v.ln() as f32;
+                raw[i * n + t] = v;
             }
         }
-        BoundaryMatrix { tilings, raw, ln }
+        BoundaryMatrix { tilings, raw, ln: OnceLock::new() }
     }
 
     pub fn num_tilings(&self) -> usize {
         self.tilings.len()
     }
 
-    pub fn features_of(&self, t: usize) -> &[f64] {
-        &self.raw[t * NUM_FEATURES..(t + 1) * NUM_FEATURES]
+    /// The feature vector of one tiling (a gather across the column-major
+    /// store — the scalar reference path; hot paths use
+    /// [`BoundaryMatrix::feature_col`]).
+    pub fn features_of(&self, t: usize) -> [f64; NUM_FEATURES] {
+        let n = self.tilings.len();
+        let mut f = [0.0; NUM_FEATURES];
+        for (i, slot) in f.iter_mut().enumerate() {
+            *slot = self.raw[i * n + t];
+        }
+        f
+    }
+
+    /// Contiguous lane slice of feature `f` over tilings `[t0, t1)` — the
+    /// unit the lane-major kernel streams.
+    #[inline]
+    pub fn feature_col(&self, f: usize, t0: usize, t1: usize) -> &[f64] {
+        let n = self.tilings.len();
+        &self.raw[f * n + t0..f * n + t1]
+    }
+
+    /// Log-domain columns `lnB[f, t]` (column-major, `f32`), built on
+    /// first call and cached. Only the XLA artifact path consumes the
+    /// log view, so native-only serving never computes it.
+    pub fn ln(&self) -> &[f32] {
+        self.ln.get_or_init(|| {
+            let n = self.tilings.len();
+            let mut ln = vec![0.0f32; NUM_FEATURES * n];
+            for (l, &v) in ln.iter_mut().zip(&self.raw) {
+                *l = v.ln() as f32;
+            }
+            ln
+        })
+    }
+
+    /// Whether the lazy log view has been materialized (observability
+    /// for tests and memory accounting).
+    pub fn ln_is_built(&self) -> bool {
+        self.ln.get().is_some()
     }
 }
 
@@ -47,18 +92,38 @@ mod tests {
     use crate::tiling::enumerate_tilings;
 
     #[test]
-    fn columns_are_log_of_raw() {
+    fn columns_are_log_of_raw_and_lazily_built() {
         let accel = presets::accel1();
         let w = presets::bert_base(512);
         let tilings = enumerate_tilings(&w.gemm, None);
         let b = BoundaryMatrix::build(tilings, &accel, &w);
         let n = b.num_tilings();
         assert!(n > 100);
+        assert!(!b.ln_is_built(), "log view must not be built eagerly");
         for t in [0, n / 2, n - 1] {
-            for f in 0..NUM_FEATURES {
-                let raw = b.raw[t * NUM_FEATURES + f];
-                let ln = b.ln[f * n + t] as f64;
-                assert!((raw.ln() - ln).abs() < 1e-5, "t={t} f={f}");
+            let f = b.features_of(t);
+            for (i, &raw) in f.iter().enumerate() {
+                let ln = b.ln()[i * n + t] as f64;
+                assert!((raw.ln() - ln).abs() < 1e-5, "t={t} f={i}");
+            }
+        }
+        assert!(b.ln_is_built());
+    }
+
+    #[test]
+    fn feature_cols_match_per_tiling_gather() {
+        let accel = presets::accel2();
+        let w = presets::bert_base(512);
+        let tilings: Vec<_> =
+            enumerate_tilings(&w.gemm, None).into_iter().take(70).collect();
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        let n = b.num_tilings();
+        let (t0, t1) = (n / 3, 2 * n / 3);
+        for f in 0..NUM_FEATURES {
+            let col = b.feature_col(f, t0, t1);
+            assert_eq!(col.len(), t1 - t0);
+            for (lane, &v) in col.iter().enumerate() {
+                assert_eq!(v, b.features_of(t0 + lane)[f]);
             }
         }
     }

@@ -8,7 +8,9 @@
 //! (order, levels) *pair* and BR/MAC/SMX/CL only on the
 //! (recompute, stationary) *group*, so a surface over C candidates costs
 //! ~C/9 pair evaluations + 18 group evaluations per tiling instead of C
-//! full rows (§Perf, EXPERIMENTS.md).
+//! full rows. The lane-major kernel ([`crate::eval::kernel`]) evaluates
+//! each pair/group term across a whole tiling chunk at once; see README
+//! §Performance for the measured effect.
 
 use std::collections::HashMap;
 

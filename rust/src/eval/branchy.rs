@@ -10,7 +10,6 @@
 use super::{Block, EvalBackend};
 use crate::config::HwVector;
 use crate::encode::{BoundaryMatrix, QueryMatrix};
-use crate::model::terms::NUM_FEATURES;
 use crate::model::{combine, derive_slots, Multipliers};
 
 pub struct BranchyBackend;
@@ -64,14 +63,17 @@ impl EvalBackend for BranchyBackend {
             da: vec![0.0; nc * nt],
             bs: vec![0.0; nc * nt],
         };
-        for (ci, c) in (c0..c1).enumerate() {
-            let cand = &q.candidates[c];
-            for (ti, t) in (t0..t1).enumerate() {
+        // Tilings outer so the (column-major-store) feature gather is
+        // paid once per tiling, keeping the modeled per-mapping cost
+        // purely the "parsing" below — not layout overhead.
+        for (ti, t) in (t0..t1).enumerate() {
+            let f = b.features_of(t);
+            for (ci, c) in (c0..c1).enumerate() {
+                let cand = &q.candidates[c];
                 // The defining inefficiency: derivation ("parsing") inside
                 // the per-mapping loop instead of hoisted offline.
                 let slots = derive_slots(cand);
-                let f: &[f64; NUM_FEATURES] = b.features_of(t).try_into().unwrap();
-                let p = crate::model::analytic::primitives(&slots, f);
+                let p = crate::model::analytic::primitives(&slots, &f);
                 let m = combine(&p, hw, mult);
                 let i = ci * nt + ti;
                 out.energy[i] = m.energy as f32;

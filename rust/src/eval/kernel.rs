@@ -1,0 +1,633 @@
+//! Lane-major streaming evaluation kernel with fused reductions.
+//!
+//! The scalar reference path ([`crate::eval::native`]) walks one tiling
+//! at a time and materializes four full `f32` surfaces per chunk even
+//! when the caller only wants an argmin. This module inverts the loop
+//! nest: per tiling chunk, every distinct [`CompiledPair`] /
+//! [`CompiledGroup`] monomial sum is evaluated across the *whole chunk*
+//! into contiguous, reusable `f64` lane buffers (tilings innermost →
+//! auto-vectorizable), and the argmin / Pareto reductions consume the
+//! lanes directly — no `nc × nt` [`super::Block`] is ever allocated.
+//!
+//! Three mechanisms carry the speedup (see README §Performance):
+//!
+//! * **lane-major evaluation** — the monomial product loops stream
+//!   contiguous feature columns ([`BoundaryMatrix::feature_col`]), so
+//!   the compiler vectorizes across tilings;
+//! * **fused reductions** — [`chunk_argmin3`] / [`chunk_fronts`] fold
+//!   candidate scores straight out of the lane buffers into the running
+//!   best / fronts, skipping the 4-surface materialize-then-rescan;
+//! * **online bound pruning** — per (pair, chunk), a lower bound on the
+//!   chunk's best energy/latency (min pair term over lanes + min group
+//!   term) skips entire pair×chunk combinations that cannot beat the
+//!   incumbent ([`Incumbents`], shared across parallel chunk workers) —
+//!   the online counterpart of the paper's §VI-B offline pruning.
+//!
+//! Results are **bit-identical** to the Block-materializing reference:
+//! lane scores are quantized through `f32` exactly where the reference
+//! stores surfaces, visit order matches, and pruning only ever skips
+//! scores strictly above an already-achieved incumbent (a conservative
+//! relative margin covers the `f32` quantization), so ties and
+//! tie-breaks are preserved. `tests/kernel_equivalence.rs` property-
+//! tests this across randomized workloads, accelerators, chunk
+//! boundaries, and pruning on/off.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{merge_argmin3, Argmin3, Fronts, T_CHUNK};
+use crate::config::HwVector;
+use crate::encode::query::{CMono, CompiledGroup, CompiledPair, CompiledQuery};
+use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::model::{Metrics, Multipliers};
+use crate::search::pareto::{Front, ParetoPoint};
+
+/// The infeasible sentinel as the reference path reports it: stored as
+/// `f32` in the [`super::Block`] surfaces, read back widened to `f64`.
+const SENTINEL32: f64 = Metrics::INFEASIBLE_SENTINEL as f32 as f64;
+
+/// Conservative relative margin for bound pruning: lane bounds are
+/// computed in `f64` while actual scores are quantized through `f32`
+/// (relative error ≤ 2⁻²⁴ ≈ 6e-8), so a bound is only trusted to beat
+/// an incumbent when it clears it by more than the quantization could
+/// account for. Strictly-greater comparison preserves exact ties.
+const PRUNE_MARGIN: f64 = 1.0 - 1e-6;
+
+/// Reusable per-thread scratch for the lane kernel. All buffers are
+/// grow-only: after the first chunk of a given (pairs, groups, lane)
+/// shape — one warmup call — the serving hot path performs **zero heap
+/// allocation** per chunk (`tests/workspace_alloc.rs` asserts this with
+/// a counting allocator).
+#[derive(Debug, Default)]
+pub struct EvalWorkspace {
+    /// Lane stride of the per-pair / per-group buffers.
+    lanes: usize,
+    /// Per pair × lane: energy with the feasibility premultiplied in
+    /// (`+inf` when the mapping overflows the buffer), DRAM-latency,
+    /// DRAM accesses, buffer size.
+    pair_e: Vec<f64>,
+    pair_l: Vec<f64>,
+    pair_da: Vec<f64>,
+    pair_bs: Vec<f64>,
+    /// Per group × lane: shared energy, compute latency.
+    grp_e: Vec<f64>,
+    grp_l: Vec<f64>,
+    /// Per pair: chunk-wide minima over *feasible* lanes (`+inf` when
+    /// the pair has none) and whether any lane was infeasible — the
+    /// ingredients of the pruning bound.
+    pair_min_e: Vec<f64>,
+    pair_min_l: Vec<f64>,
+    pair_has_infeasible: Vec<bool>,
+    /// Per group: chunk-wide minima.
+    grp_min_e: Vec<f64>,
+    grp_min_l: Vec<f64>,
+    /// Monomial-product and second-operand staging lanes.
+    tmp: Vec<f64>,
+    stage: Vec<f64>,
+}
+
+/// Warmed workspaces returned by dead worker threads, recycled by the
+/// next surface pass. The chunk workers are *scoped* threads (they may
+/// borrow the surface), so they cannot outlive one pass — without this
+/// pool every pass would re-warm `workers` fresh workspaces. Bounded by
+/// the maximum concurrent worker count; locked once per worker thread
+/// lifetime (checkout at first use, return at thread exit), never per
+/// chunk.
+static POOL: Mutex<Vec<EvalWorkspace>> = Mutex::new(Vec::new());
+
+/// Thread-local slot holding this worker's checked-out workspace; the
+/// drop glue at thread exit returns it to the global pool.
+struct PooledWorkspace(Option<EvalWorkspace>);
+
+impl Drop for PooledWorkspace {
+    fn drop(&mut self) {
+        if let Some(ws) = self.0.take() {
+            if let Ok(mut pool) = POOL.lock() {
+                pool.push(ws);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<PooledWorkspace> = const { RefCell::new(PooledWorkspace(None)) };
+}
+
+impl EvalWorkspace {
+    pub fn new() -> EvalWorkspace {
+        EvalWorkspace::default()
+    }
+
+    /// Run `f` against this thread's workspace. First use on a thread
+    /// checks a warmed workspace out of the global return pool (or
+    /// builds a fresh one); it stays cached in thread-local storage for
+    /// every subsequent chunk and flows back to the pool when the
+    /// worker thread exits — so steady-state serving re-warms nothing.
+    pub fn with<R>(f: impl FnOnce(&mut EvalWorkspace) -> R) -> R {
+        WORKSPACE.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            let ws = slot.0.get_or_insert_with(|| {
+                POOL.lock()
+                    .map(|mut pool| pool.pop().unwrap_or_default())
+                    .unwrap_or_default()
+            });
+            f(ws)
+        })
+    }
+
+    /// Grow (never shrink) every buffer to fit `pairs × groups × lanes`.
+    fn ensure(&mut self, pairs: usize, groups: usize, lanes: usize) {
+        let lanes = lanes.max(self.lanes).max(T_CHUNK);
+        self.lanes = lanes;
+        for buf in [&mut self.pair_e, &mut self.pair_l, &mut self.pair_da, &mut self.pair_bs] {
+            if buf.len() < pairs * lanes {
+                buf.resize(pairs * lanes, 0.0);
+            }
+        }
+        for buf in [&mut self.grp_e, &mut self.grp_l] {
+            if buf.len() < groups * lanes {
+                buf.resize(groups * lanes, 0.0);
+            }
+        }
+        for buf in [&mut self.pair_min_e, &mut self.pair_min_l] {
+            if buf.len() < pairs {
+                buf.resize(pairs, 0.0);
+            }
+        }
+        if self.pair_has_infeasible.len() < pairs {
+            self.pair_has_infeasible.resize(pairs, false);
+        }
+        for buf in [&mut self.grp_min_e, &mut self.grp_min_l] {
+            if buf.len() < groups {
+                buf.resize(groups, 0.0);
+            }
+        }
+        for buf in [&mut self.tmp, &mut self.stage] {
+            if buf.len() < lanes {
+                buf.resize(lanes, 0.0);
+            }
+        }
+    }
+
+    /// Evaluate every pair and group term of `cq` across the tiling
+    /// chunk `[t0, t1)` into the lane buffers. With `bounds`, also fold
+    /// the per-pair / per-group chunk minima that feed bound pruning
+    /// (skipped for non-pruning consumers — the fronts path and
+    /// pruning-off argmin never read them). `hw` must already have the
+    /// workload multipliers folded in.
+    fn load_chunk(
+        &mut self,
+        cq: &CompiledQuery,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        t0: usize,
+        t1: usize,
+        bounds: bool,
+    ) {
+        let nt = t1 - t0;
+        self.ensure(cq.pairs.len(), cq.groups.len(), nt);
+        let lanes = self.lanes;
+        for (p, cp) in cq.pairs.iter().enumerate() {
+            let o = p * lanes;
+            self.load_pair(cp, b, hw, t0, t1, o);
+            if !bounds {
+                continue;
+            }
+            let (mut min_e, mut min_l, mut any_inf) = (f64::INFINITY, f64::INFINITY, false);
+            for i in o..o + nt {
+                let (e, l) = (self.pair_e[i], self.pair_l[i]);
+                if e.is_finite() {
+                    min_e = min_e.min(e);
+                    min_l = min_l.min(l);
+                } else {
+                    any_inf = true;
+                }
+            }
+            self.pair_min_e[p] = min_e;
+            self.pair_min_l[p] = min_l;
+            self.pair_has_infeasible[p] = any_inf;
+        }
+        for (g, cg) in cq.groups.iter().enumerate() {
+            let o = g * lanes;
+            self.load_group(cg, b, hw, t0, t1, o);
+            if !bounds {
+                continue;
+            }
+            let (mut min_e, mut min_l) = (f64::INFINITY, f64::INFINITY);
+            for i in o..o + nt {
+                min_e = min_e.min(self.grp_e[i]);
+                min_l = min_l.min(self.grp_l[i]);
+            }
+            self.grp_min_e[g] = min_e;
+            self.grp_min_l[g] = min_l;
+        }
+    }
+
+    /// One pair's BS¹/BS²/DA monomial sums over the chunk, then the
+    /// premultiplied energy / DRAM-latency lanes with the feasibility
+    /// test folded in (the same expressions, in the same floating-point
+    /// order, as the scalar reference).
+    fn load_pair(
+        &mut self,
+        cp: &CompiledPair,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        t0: usize,
+        t1: usize,
+        o: usize,
+    ) {
+        let nt = t1 - t0;
+        accumulate_lanes(&cp.bs1, b, t0, t1, &mut self.tmp, &mut self.pair_bs[o..o + nt]);
+        accumulate_lanes(&cp.bs2, b, t0, t1, &mut self.tmp, &mut self.stage[..nt]);
+        accumulate_lanes(&cp.da, b, t0, t1, &mut self.tmp, &mut self.pair_da[o..o + nt]);
+        let bs = &mut self.pair_bs[o..o + nt];
+        for (v, &bs2) in bs.iter_mut().zip(self.stage[..nt].iter()) {
+            *v = v.max(bs2);
+        }
+        let (e, l) = (&mut self.pair_e[o..o + nt], &mut self.pair_l[o..o + nt]);
+        let da = &self.pair_da[o..o + nt];
+        let bs = &self.pair_bs[o..o + nt];
+        for i in 0..nt {
+            if bs[i] <= hw.capacity_words {
+                e[i] = hw.e_dram * da[i] + hw.e_bs * bs[i];
+                l[i] = da[i] * hw.sec_per_word;
+            } else {
+                e[i] = f64::INFINITY;
+                l[i] = f64::INFINITY;
+            }
+        }
+    }
+
+    /// One group's BR/MAC/SMX/CL monomial sums over the chunk, combined
+    /// into shared-energy and compute-latency lanes (same fp order as
+    /// the scalar reference: `e_buf·br + e_mac·mac + e_sfu·smx`,
+    /// `(cl1 + cl2)·sec_per_cycle`).
+    fn load_group(
+        &mut self,
+        cg: &CompiledGroup,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        t0: usize,
+        t1: usize,
+        o: usize,
+    ) {
+        let nt = t1 - t0;
+        accumulate_lanes(&cg.br, b, t0, t1, &mut self.tmp, &mut self.stage[..nt]);
+        for (e, &br) in self.grp_e[o..o + nt].iter_mut().zip(self.stage[..nt].iter()) {
+            *e = hw.e_buf * br;
+        }
+        accumulate_lanes(&cg.mac, b, t0, t1, &mut self.tmp, &mut self.stage[..nt]);
+        for (e, &mac) in self.grp_e[o..o + nt].iter_mut().zip(self.stage[..nt].iter()) {
+            *e += hw.e_mac * mac;
+        }
+        accumulate_lanes(&cg.smx, b, t0, t1, &mut self.tmp, &mut self.stage[..nt]);
+        for (e, &smx) in self.grp_e[o..o + nt].iter_mut().zip(self.stage[..nt].iter()) {
+            *e += hw.e_sfu * smx;
+        }
+        accumulate_lanes(&cg.cl1, b, t0, t1, &mut self.tmp, &mut self.grp_l[o..o + nt]);
+        accumulate_lanes(&cg.cl2, b, t0, t1, &mut self.tmp, &mut self.stage[..nt]);
+        for (l, &cl2) in self.grp_l[o..o + nt].iter_mut().zip(self.stage[..nt].iter()) {
+            *l = (*l + cl2) * hw.sec_per_cycle;
+        }
+    }
+}
+
+/// `out[lane] = Σ_m coef_m · Π_k f[idx_k][lane]` over tilings
+/// `[t0, t1)`. Each monomial's factor product runs over a contiguous
+/// feature column, lanes innermost — the auto-vectorizable core of the
+/// kernel. The per-lane operation order matches the scalar
+/// `CMono::eval` / `eval_sum` exactly, so results are bit-identical.
+#[inline]
+fn accumulate_lanes(
+    ms: &[CMono],
+    b: &BoundaryMatrix,
+    t0: usize,
+    t1: usize,
+    tmp: &mut [f64],
+    out: &mut [f64],
+) {
+    let nt = t1 - t0;
+    let out = &mut out[..nt];
+    out.fill(0.0);
+    for m in ms {
+        let tmp = &mut tmp[..nt];
+        tmp.fill(m.coef);
+        for k in 0..m.n as usize {
+            let col = b.feature_col(m.idx[k] as usize, t0, t1);
+            for (v, &f) in tmp.iter_mut().zip(col) {
+                *v *= f;
+            }
+        }
+        for (o, &v) in out.iter_mut().zip(tmp.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Best-known scores per objective, shared across parallel chunk
+/// workers so every chunk prunes against the tightest incumbent seen so
+/// far. Monotonically decreasing; every stored value is an *achieved*
+/// score, hence a valid upper bound on the final minimum — pruning
+/// against it (strictly greater, behind the quantization margin) can
+/// never drop a winner or a tie, so results stay deterministic under
+/// any thread interleaving.
+#[derive(Debug)]
+pub struct Incumbents {
+    bits: [AtomicU64; 3],
+}
+
+impl Default for Incumbents {
+    fn default() -> Self {
+        Incumbents::new()
+    }
+}
+
+impl Incumbents {
+    pub fn new() -> Incumbents {
+        Incumbents {
+            bits: [
+                AtomicU64::new(f64::INFINITY.to_bits()),
+                AtomicU64::new(f64::INFINITY.to_bits()),
+                AtomicU64::new(f64::INFINITY.to_bits()),
+            ],
+        }
+    }
+
+    pub fn snapshot(&self) -> [f64; 3] {
+        [
+            f64::from_bits(self.bits[0].load(Ordering::Relaxed)),
+            f64::from_bits(self.bits[1].load(Ordering::Relaxed)),
+            f64::from_bits(self.bits[2].load(Ordering::Relaxed)),
+        ]
+    }
+
+    /// Fold a chunk's achieved best scores in (atomic running min).
+    pub fn observe(&self, best: &Argmin3) {
+        for (slot, &(score, _, _)) in self.bits.iter().zip(best.iter()) {
+            let mut cur = slot.load(Ordering::Relaxed);
+            while score < f64::from_bits(cur) {
+                match slot.compare_exchange_weak(
+                    cur,
+                    score.to_bits(),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+}
+
+/// Fused argmin over one (candidate-range × tiling-chunk) region:
+/// evaluates the chunk's lanes once, then folds every candidate's
+/// scores straight into the running best for all three objectives —
+/// same visit order and tie-break rule as the reference
+/// [`super::block_argmin3`] over a materialized block, without the
+/// block. With `incumbents`, pair×chunk combinations whose lower bound
+/// cannot beat the best score seen so far (globally or chunk-locally)
+/// are skipped entirely; `None` disables pruning.
+///
+/// Note: when a *global* incumbent prunes, this chunk's reported best
+/// may be worse than its true local optimum — every pruned entry is
+/// strictly above a score some other chunk already achieved, so the
+/// cross-chunk merge result is still exact. With `None` or
+/// a fresh [`Incumbents`], the returned triple equals
+/// [`super::block_argmin3`] over the same region bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_argmin3(
+    ws: &mut EvalWorkspace,
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    c_range: (usize, usize),
+    t_range: (usize, usize),
+    incumbents: Option<&Incumbents>,
+) -> Argmin3 {
+    let hw = hw.with_multipliers(mult);
+    let cq = &q.compiled;
+    let (c0, c1) = c_range;
+    let (t0, t1) = t_range;
+    let nt = t1 - t0;
+    ws.load_chunk(cq, b, &hw, t0, t1, incumbents.is_some());
+    let lanes = ws.lanes;
+    let global = incumbents.map(|i| i.snapshot()).unwrap_or([f64::INFINITY; 3]);
+    let mut best: Argmin3 = [(f64::INFINITY, 0, 0); 3];
+    let mut tie: [f64; 3] = [f64::INFINITY; 3];
+    for c in c0..c1 {
+        let p = cq.cand_pair[c] as usize;
+        let g = cq.cand_group[c] as usize;
+        if incumbents.is_some() {
+            // Pair-level lower bounds (refined by this candidate's
+            // group): no lane of this pair×chunk can score below them.
+            // Infeasible lanes score exactly the f32 sentinel, so the
+            // bound is capped there when the pair has any.
+            let fe = ws.pair_min_e[p] + ws.grp_min_e[g];
+            let fl = ws.pair_min_l[p].max(ws.grp_min_l[g]);
+            let (lb_e, lb_l, lb_edp) = if ws.pair_has_infeasible[p] {
+                (fe.min(SENTINEL32), fl.min(SENTINEL32), (fe * fl).min(SENTINEL32 * SENTINEL32))
+            } else {
+                (fe, fl, fe * fl)
+            };
+            let beaten = |lb: f64, k: usize| lb * PRUNE_MARGIN > best[k].0.min(global[k]);
+            if beaten(lb_e, 0) && beaten(lb_l, 1) && beaten(lb_edp, 2) {
+                continue;
+            }
+        }
+        let pe = &ws.pair_e[p * lanes..p * lanes + nt];
+        let pl = &ws.pair_l[p * lanes..p * lanes + nt];
+        let ge = &ws.grp_e[g * lanes..g * lanes + nt];
+        let gl = &ws.grp_l[g * lanes..g * lanes + nt];
+        for i in 0..nt {
+            // Quantize through f32 exactly where the reference stores
+            // its surfaces, so scores (and ties) are bit-identical.
+            let (e, l) = if pe[i].is_finite() {
+                (((pe[i] + ge[i]) as f32) as f64, (pl[i].max(gl[i]) as f32) as f64)
+            } else {
+                (SENTINEL32, SENTINEL32)
+            };
+            let t = t0 + i;
+            let scores = [(e, l), (l, e), (e * l, e)];
+            for k in 0..3 {
+                let (s, sec) = scores[k];
+                if s < best[k].0 || (s == best[k].0 && sec < tie[k]) {
+                    best[k] = (s, c, t);
+                    tie[k] = sec;
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Fused Pareto-front extraction over one chunk — the streaming
+/// counterpart of [`super::block_fronts`]: identical insertion order
+/// (candidates outer, tilings inner) and identical `f32`-quantized
+/// coordinates, no materialized block.
+pub fn chunk_fronts(
+    ws: &mut EvalWorkspace,
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    c_range: (usize, usize),
+    t_range: (usize, usize),
+) -> Fronts {
+    let hw = hw.with_multipliers(mult);
+    let cq = &q.compiled;
+    let (c0, c1) = c_range;
+    let (t0, t1) = t_range;
+    let nt = t1 - t0;
+    ws.load_chunk(cq, b, &hw, t0, t1, false);
+    let lanes = ws.lanes;
+    let mut el = Front::new();
+    let mut bsda = Front::new();
+    for c in c0..c1 {
+        let p = cq.cand_pair[c] as usize;
+        let g = cq.cand_group[c] as usize;
+        let pe = &ws.pair_e[p * lanes..p * lanes + nt];
+        let pl = &ws.pair_l[p * lanes..p * lanes + nt];
+        let pda = &ws.pair_da[p * lanes..p * lanes + nt];
+        let pbs = &ws.pair_bs[p * lanes..p * lanes + nt];
+        let ge = &ws.grp_e[g * lanes..g * lanes + nt];
+        let gl = &ws.grp_l[g * lanes..g * lanes + nt];
+        for i in 0..nt {
+            let (e, l) = if pe[i].is_finite() {
+                (((pe[i] + ge[i]) as f32) as f64, (pl[i].max(gl[i]) as f32) as f64)
+            } else {
+                (SENTINEL32, SENTINEL32)
+            };
+            let t = t0 + i;
+            if e < 1e29 {
+                el.insert(ParetoPoint { x: e, y: l, candidate: c, tiling: t });
+            }
+            bsda.insert(ParetoPoint {
+                x: (pbs[i] as f32) as f64,
+                y: (pda[i] as f32) as f64,
+                candidate: c,
+                tiling: t,
+            });
+        }
+    }
+    (el, bsda)
+}
+
+/// Full-surface fused argmin: tiling-axis parallel chunks, each served
+/// from its worker's cached [`EvalWorkspace`], pruning against shared
+/// [`Incumbents`] when `prune` is set. Identical results to the
+/// Block-materializing reference path with or without pruning.
+pub fn fused_argmin3(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+) -> Argmin3 {
+    let nt = b.num_tilings();
+    let nc = q.num_candidates();
+    let incumbents = Incumbents::new();
+    let parts = crate::coordinator::parallel_chunks(nt, T_CHUNK, |lo, hi| {
+        EvalWorkspace::with(|ws| {
+            let inc = if prune { Some(&incumbents) } else { None };
+            let best = chunk_argmin3(ws, q, b, hw, mult, (0, nc), (lo, hi), inc);
+            incumbents.observe(&best);
+            best
+        })
+    });
+    merge_argmin3(parts)
+}
+
+/// Full-surface fused Pareto fronts (tiling-axis parallel, chunk fronts
+/// merged in chunk order — the same merge order as the reference).
+pub fn fused_fronts(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+) -> Fronts {
+    let nt = b.num_tilings();
+    let nc = q.num_candidates();
+    let parts = crate::coordinator::parallel_chunks(nt, T_CHUNK, |lo, hi| {
+        EvalWorkspace::with(|ws| chunk_fronts(ws, q, b, hw, mult, (0, nc), (lo, hi)))
+    });
+    let mut el = Front::new();
+    let mut bsda = Front::new();
+    for (e, bd) in parts {
+        el.merge(&e);
+        bsda.merge(&bd);
+    }
+    (el, bsda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::eval::native::NativeBackend;
+    use crate::tiling::enumerate_tilings;
+
+    fn surface(
+        take_c: usize,
+        take_t: usize,
+    ) -> (QueryMatrix, BoundaryMatrix, HwVector, Multipliers) {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let q =
+            QueryMatrix::build(crate::symbolic::pruned_table().candidates()[..take_c].to_vec());
+        let tilings: Vec<_> =
+            enumerate_tilings(&w.gemm, None).into_iter().take(take_t).collect();
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        (q, b, accel.hw_vector(), Multipliers::for_workload(&w, &accel))
+    }
+
+    #[test]
+    fn fused_matches_materializing_reference() {
+        let (q, b, hw, mult) = surface(45, 150);
+        let reference = crate::eval::serial_argmin3(&NativeBackend, &q, &b, &hw, &mult);
+        for prune in [false, true] {
+            let fused = fused_argmin3(&q, &b, &hw, &mult, prune);
+            assert_eq!(fused, reference, "prune={prune}");
+        }
+    }
+
+    #[test]
+    fn fused_fronts_match_reference() {
+        let (q, b, hw, mult) = surface(30, 120);
+        let (el_ref, bsda_ref) = crate::eval::serial_fronts(&NativeBackend, &q, &b, &hw, &mult);
+        let (el, bsda) = fused_fronts(&q, &b, &hw, &mult);
+        assert_eq!(el.points(), el_ref.points());
+        assert_eq!(bsda.points(), bsda_ref.points());
+    }
+
+    #[test]
+    fn all_infeasible_surface_keeps_sentinel_winner() {
+        // A 64-byte buffer admits no tiling: every score is the f32
+        // sentinel, and pruning must not disturb which (c, t) reports it.
+        let accel = presets::accel1().with_buffer_bytes(64);
+        let w = presets::bert_base(512);
+        let q =
+            QueryMatrix::build(crate::symbolic::pruned_table().candidates()[..20].to_vec());
+        let tilings: Vec<_> =
+            enumerate_tilings(&w.gemm, None).into_iter().take(90).collect();
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(&w, &accel);
+        let reference = crate::eval::serial_argmin3(&NativeBackend, &q, &b, &hw, &mult);
+        assert!(reference[0].0 >= 1e29, "surface must be infeasible");
+        for prune in [false, true] {
+            assert_eq!(fused_argmin3(&q, &b, &hw, &mult, prune), reference, "prune={prune}");
+        }
+    }
+
+    #[test]
+    fn incumbents_running_min_is_monotone() {
+        let inc = Incumbents::new();
+        assert_eq!(inc.snapshot(), [f64::INFINITY; 3]);
+        inc.observe(&[(3.0, 0, 0), (5.0, 0, 0), (15.0, 0, 0)]);
+        inc.observe(&[(4.0, 1, 1), (2.0, 1, 1), (20.0, 1, 1)]);
+        assert_eq!(inc.snapshot(), [3.0, 2.0, 15.0]);
+    }
+}

@@ -3,8 +3,10 @@
 //! All three backends compute the identical metric surfaces over a
 //! (candidate × tiling) block; they differ in *how*:
 //!
-//! * [`native`] — vectorized rust evaluation of the monomial slots
-//!   (the default request path; fastest at small/medium batch sizes).
+//! * [`native`] — the default request path: the lane-major streaming
+//!   [`kernel`] with fused reductions and online bound pruning (the
+//!   scalar Block-materializing path is retained as the reference
+//!   oracle).
 //! * [`xla`] — the paper's headline mechanism: one batched
 //!   `coef ⊙ exp(Q·lnB)` matmul through the AOT JAX/Pallas artifact via
 //!   PJRT.
@@ -12,10 +14,16 @@
 //!   re-derives each candidate's formulas per evaluation. Exists to
 //!   reproduce the paper's runtime-comparison claims.
 //!
-//! Integration tests assert all three agree within fp tolerance.
+//! Reductions come in two flavors: the materializing reference
+//! ([`serial_argmin3`] / [`serial_fronts`], which evaluate [`Block`]s
+//! and rescan them) and the fused streaming paths
+//! ([`EvalBackend::reduce_argmin3`] / [`EvalBackend::reduce_fronts`],
+//! which never allocate a block). Property tests assert both flavors —
+//! and all backends — agree exactly.
 
 pub mod native;
 pub mod branchy;
+pub mod kernel;
 pub mod router;
 pub mod xla;
 
@@ -106,10 +114,12 @@ pub type Fronts = (crate::search::pareto::Front, crate::search::pareto::Front);
 /// A backend evaluates a candidate-range × tiling-range block.
 ///
 /// PJRT handles are not `Send`, so the trait itself is single-threaded;
-/// the rust backends override the reduction methods with internally
-/// parallel implementations ([`parallel_argmin3`], [`parallel_fronts`]),
-/// while the XLA backend parallelizes inside the compiled graph (and uses
-/// its in-graph `reduce` artifact for [`EvalBackend::argmin3`]).
+/// the native backend routes the reductions through the fused lane
+/// [`kernel`] (tiling-axis parallel, workspace-reused, bound-pruned),
+/// branchy through the parallel materializing path
+/// ([`parallel_argmin3`], [`parallel_fronts`]), while the XLA backend
+/// parallelizes inside the compiled graph (and uses its in-graph
+/// `reduce` artifact for [`EvalBackend::argmin3`]).
 pub trait EvalBackend {
     fn name(&self) -> &'static str;
 
@@ -161,6 +171,33 @@ pub trait EvalBackend {
 
     /// Streamed Pareto fronts over the full surface.
     fn fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Fronts {
+        serial_fronts(self, q, b, hw, mult)
+    }
+
+    /// Fused streaming argmin: consume evaluation lanes directly and
+    /// never materialize the `nc × nt` [`Block`]. The default falls
+    /// back to the materializing reference; the native backend
+    /// overrides it with the lane-major [`kernel`] (workspace-reused,
+    /// bound-pruned), and XLA with its in-graph reduce.
+    fn reduce_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Argmin3 {
+        serial_argmin3(self, q, b, hw, mult)
+    }
+
+    /// Fused streaming Pareto fronts (no materialized [`Block`]); same
+    /// contract as [`EvalBackend::reduce_argmin3`].
+    fn reduce_fronts(
         &self,
         q: &QueryMatrix,
         b: &BoundaryMatrix,
@@ -231,6 +268,26 @@ impl<B: EvalBackend + ?Sized> EvalBackend for Box<B> {
     ) -> Fronts {
         (**self).fronts(q, b, hw, mult)
     }
+
+    fn reduce_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Argmin3 {
+        (**self).reduce_argmin3(q, b, hw, mult)
+    }
+
+    fn reduce_fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Fronts {
+        (**self).reduce_fronts(q, b, hw, mult)
+    }
 }
 
 // Tiling-axis chunk: 4 surfaces × ~7k candidates × 64 cols × 4 B ≈ 7 MB
@@ -241,7 +298,10 @@ pub const T_CHUNK: usize = 64;
 /// latency, latency-driven ties on energy, EDP ties on energy — so the
 /// reported mode solutions are the paper's "grouped" optima rather than
 /// arbitrary members of large latency-tie classes.
-fn block_argmin3(block: &Block) -> Argmin3 {
+///
+/// Public as the *reference reduction* over a materialized block — the
+/// oracle the fused [`kernel`] paths are property-tested against.
+pub fn block_argmin3(block: &Block) -> Argmin3 {
     let mut best: Argmin3 = [(f64::INFINITY, 0, 0); 3];
     let mut tie: [f64; 3] = [f64::INFINITY; 3];
     for c in block.c0..block.c0 + block.nc {
@@ -260,7 +320,9 @@ fn block_argmin3(block: &Block) -> Argmin3 {
     best
 }
 
-fn block_fronts(block: &Block) -> Fronts {
+/// Reference Pareto-front extraction over a materialized block (the
+/// oracle for the fused [`kernel::chunk_fronts`] path).
+pub fn block_fronts(block: &Block) -> Fronts {
     use crate::search::pareto::{Front, ParetoPoint};
     let mut el = Front::new();
     let mut bsda = Front::new();
@@ -276,7 +338,7 @@ fn block_fronts(block: &Block) -> Fronts {
     (el, bsda)
 }
 
-fn merge_argmin3(parts: impl IntoIterator<Item = Argmin3>) -> Argmin3 {
+pub(crate) fn merge_argmin3(parts: impl IntoIterator<Item = Argmin3>) -> Argmin3 {
     // Chunk-local winners already carry their tie-break; across chunks a
     // strict `<` keeps the first (lowest tiling index) among exact ties,
     // which is deterministic under the fixed enumeration order.
@@ -291,7 +353,10 @@ fn merge_argmin3(parts: impl IntoIterator<Item = Argmin3>) -> Argmin3 {
     best
 }
 
-fn serial_argmin3<B: EvalBackend + ?Sized>(
+/// The Block-materializing reference argmin: chunked `eval_block` +
+/// [`block_argmin3`] + merge. Retained as the oracle the fused kernel
+/// paths must match exactly (scores, indices, tie-breaks).
+pub fn serial_argmin3<B: EvalBackend + ?Sized>(
     backend: &B,
     q: &QueryMatrix,
     b: &BoundaryMatrix,
@@ -309,7 +374,9 @@ fn serial_argmin3<B: EvalBackend + ?Sized>(
     merge_argmin3(parts)
 }
 
-fn serial_fronts<B: EvalBackend + ?Sized>(
+/// The Block-materializing reference fronts (oracle counterpart of
+/// [`serial_argmin3`]).
+pub fn serial_fronts<B: EvalBackend + ?Sized>(
     backend: &B,
     q: &QueryMatrix,
     b: &BoundaryMatrix,

@@ -1,17 +1,20 @@
 //! Native rust evaluation backend.
 //!
-//! Uses the factored [`CompiledQuery`] (see `encode::query`): per tiling
-//! column it evaluates each distinct (order, levels) *pair* once
-//! (BS¹/BS²/DA) and each (recompute, stationary) *group* once
-//! (BR/MAC/SMX/CL), then combines per candidate with a handful of flops.
-//! No `exp`/`ln`, no branching per scenario — the matrix-encoded
-//! semantics at scalar granularity, restructured for redundancy
-//! elimination (§Perf iteration L3-1 in EXPERIMENTS.md).
+//! The hot reductions ([`EvalBackend::argmin3`] / [`EvalBackend::fronts`])
+//! go through the lane-major streaming [`super::kernel`]: per tiling
+//! chunk, each distinct (order, levels) *pair* (BS¹/BS²/DA) and each
+//! (recompute, stationary) *group* (BR/MAC/SMX/CL) is evaluated once
+//! across the whole chunk into reusable lane buffers, and the
+//! reductions fuse with the producers — no `exp`/`ln`, no per-scenario
+//! branching, no materialized surface (see README §Performance).
+//!
+//! [`EvalBackend::eval_block`] keeps the original per-tiling scalar
+//! walk and *does* materialize a [`Block`]; it is the reference oracle
+//! the fused paths are property-tested against.
 
 use super::{Block, EvalBackend};
 use crate::config::HwVector;
 use crate::encode::{BoundaryMatrix, QueryMatrix};
-use crate::model::terms::NUM_FEATURES;
 use crate::model::{Metrics, Multipliers};
 
 pub struct NativeBackend;
@@ -41,7 +44,7 @@ impl EvalBackend for NativeBackend {
         hw: &HwVector,
         mult: &Multipliers,
     ) -> super::Argmin3 {
-        super::parallel_argmin3(self, q, b, hw, mult)
+        self.reduce_argmin3(q, b, hw, mult)
     }
 
     fn fronts(
@@ -51,7 +54,30 @@ impl EvalBackend for NativeBackend {
         hw: &HwVector,
         mult: &Multipliers,
     ) -> super::Fronts {
-        super::parallel_fronts(self, q, b, hw, mult)
+        self.reduce_fronts(q, b, hw, mult)
+    }
+
+    /// Fused lane-kernel argmin with online bound pruning (identical
+    /// results to the materializing reference, property-tested).
+    fn reduce_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Argmin3 {
+        super::kernel::fused_argmin3(q, b, hw, mult, true)
+    }
+
+    /// Fused lane-kernel Pareto fronts (no materialized block).
+    fn reduce_fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Fronts {
+        super::kernel::fused_fronts(q, b, hw, mult)
     }
 
     fn eval_block(
@@ -88,10 +114,10 @@ impl EvalBackend for NativeBackend {
         };
         let sentinel = Metrics::INFEASIBLE_SENTINEL;
         for (ti, t) in (t0..t1).enumerate() {
-            let f: &[f64; NUM_FEATURES] = b.features_of(t).try_into().unwrap();
+            let f = b.features_of(t);
             // Pair-level terms once per distinct (order, levels).
             for (p, cp) in cq.pairs.iter().enumerate() {
-                let (bs1, bs2, da) = cp.eval(f);
+                let (bs1, bs2, da) = cp.eval(&f);
                 let bs = bs1.max(bs2);
                 scratch.pair_bs[p] = bs;
                 scratch.pair_da[p] = da;
@@ -105,7 +131,7 @@ impl EvalBackend for NativeBackend {
             }
             // Group-level terms once per (recompute, stationary) combo.
             for (g, cg) in cq.groups.iter().enumerate() {
-                let (br, mac, smx, cl1, cl2) = cg.eval(f);
+                let (br, mac, smx, cl1, cl2) = cg.eval(&f);
                 scratch.grp_e[g] = hw.e_buf * br + hw.e_mac * mac + hw.e_sfu * smx;
                 scratch.grp_l[g] = (cl1 + cl2) * hw.sec_per_cycle;
             }
@@ -185,5 +211,22 @@ mod tests {
                 assert_eq!(sub.at(c, t), full.at(c, t));
             }
         }
+    }
+
+    /// The public argmin path (fused kernel) must agree with the
+    /// materializing reference on the full surface.
+    #[test]
+    fn fused_argmin_matches_reference_reduction() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let q = QueryMatrix::build(crate::symbolic::pruned_table().candidates()[..54].to_vec());
+        let tilings: Vec<_> =
+            enumerate_tilings(&w.gemm, None).into_iter().take(200).collect();
+        let b = BoundaryMatrix::build(tilings, &accel, &w);
+        let hw = accel.hw_vector();
+        let mult = Multipliers::for_workload(&w, &accel);
+        let fused = NativeBackend.argmin3(&q, &b, &hw, &mult);
+        let reference = crate::eval::serial_argmin3(&NativeBackend, &q, &b, &hw, &mult);
+        assert_eq!(fused, reference);
     }
 }

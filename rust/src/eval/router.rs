@@ -110,6 +110,26 @@ impl<S: EvalBackend, L: EvalBackend> EvalBackend for Router<S, L> {
     ) -> Fronts {
         self.pick(q, b).fronts(q, b, hw, mult)
     }
+
+    fn reduce_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Argmin3 {
+        self.pick(q, b).reduce_argmin3(q, b, hw, mult)
+    }
+
+    fn reduce_fronts(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> Fronts {
+        self.pick(q, b).reduce_fronts(q, b, hw, mult)
+    }
 }
 
 #[cfg(test)]

@@ -51,9 +51,12 @@ impl XlaBackend {
         }
 
         let total_t = b.num_tilings();
+        // First use materializes the boundary matrix's lazy log view
+        // (native-only serving never pays for it).
+        let ln = b.ln();
         let mut lnb = vec![0.0f32; NUM_FEATURES * tb];
         for f in 0..NUM_FEATURES {
-            let src = &b.ln[f * total_t + t0..f * total_t + t1];
+            let src = &ln[f * total_t + t0..f * total_t + t1];
             lnb[f * tb..f * tb + nt].copy_from_slice(src);
         }
         // Mask padded tiling columns: astronomically large granule.
@@ -124,6 +127,19 @@ impl EvalBackend for XlaBackend {
         mult: &Multipliers,
     ) -> super::Argmin3 {
         self.try_argmin3(q, b, hw, mult).expect("xla reduce failed")
+    }
+
+    /// The streaming reduction is already in-graph for this backend:
+    /// the `reduce` artifact returns only scalars, so delegating to
+    /// [`EvalBackend::argmin3`] never materializes a [`Block`] either.
+    fn reduce_argmin3(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+    ) -> super::Argmin3 {
+        self.argmin3(q, b, hw, mult)
     }
 
     /// The request path: PJRT failures become [`MmeeError::Backend`]

@@ -1,7 +1,7 @@
 //! The paper-reproduction harness: one function per evaluation table and
 //! figure (DESIGN.md §6 experiment index). Each emits a CSV under the
 //! results directory plus a human-readable markdown section, and returns
-//! its headline numbers for EXPERIMENTS.md.
+//! its headline numbers for the generated `summary.md`.
 
 pub mod figures;
 pub mod tables;

@@ -30,6 +30,13 @@
 //! [`MmeeEngine::plan_batch`] leans on the same structure: a batch is
 //! resolved up front, grouped by resolved (workload, accel) pair, and
 //! every group — duplicates included — pays at most ONE surface pass.
+//!
+//! The surface pass itself goes through the backend's *fused streaming
+//! reductions* ([`crate::eval::EvalBackend::try_argmin3`] →
+//! [`crate::eval::kernel`] for the native backend): per-thread
+//! [`crate::eval::kernel::EvalWorkspace`]s are warmed once, after which
+//! serving does no per-chunk heap allocation and pair×chunk regions
+//! that cannot beat the running incumbent are skipped outright.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -397,9 +404,10 @@ impl MmeeEngine {
     }
 
     /// One full surface pass: (cached) boundary matrix, hardware
-    /// vector, multipliers, fallible argmin over all three objectives.
-    /// Shared by the plan and optimize paths so the recipe cannot
-    /// diverge between them.
+    /// vector, multipliers, fallible argmin over all three objectives
+    /// (the backend's fused streaming reduction — no materialized
+    /// surface on the native path). Shared by the plan and optimize
+    /// paths so the recipe cannot diverge between them.
     fn surface_argmin3(
         &self,
         workload: &Workload,

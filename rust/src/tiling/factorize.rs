@@ -2,19 +2,27 @@
 //!
 //! Tiling enumeration is the dominant *online* cost of MMEE (paper
 //! §VII-H: runtime is dominated by integer factorization and scales
-//! ∝ n^0.4); divisor lists are cached per dimension value.
+//! ∝ n^0.4); divisor lists are cached per dimension value. The cache
+//! hands out `Arc<[usize]>` so hits are a refcount bump, not a clone,
+//! and each call takes the table lock exactly once.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::sync::Mutex;
 use std::sync::OnceLock;
 
-/// Sorted divisors of `n` (ascending).
-pub fn divisors(n: usize) -> Vec<usize> {
+/// Sorted divisors of `n` (ascending), shared out of a global memo
+/// table. Hits clone only the `Arc`; the lock is acquired once per
+/// call (misses compute the list while holding it — trial division up
+/// to √n is far cheaper than a second lock round-trip per call on the
+/// enumeration hot path).
+pub fn divisors(n: usize) -> Arc<[usize]> {
     assert!(n > 0);
-    static CACHE: OnceLock<Mutex<HashMap<usize, Vec<usize>>>> = OnceLock::new();
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<[usize]>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(d) = cache.lock().unwrap().get(&n) {
-        return d.clone();
+    let mut table = cache.lock().unwrap();
+    if let Some(d) = table.get(&n) {
+        return Arc::clone(d);
     }
     let mut small = Vec::new();
     let mut large = Vec::new();
@@ -30,13 +38,14 @@ pub fn divisors(n: usize) -> Vec<usize> {
     }
     large.reverse();
     small.extend(large);
-    cache.lock().unwrap().insert(n, small.clone());
-    small
+    let list: Arc<[usize]> = small.into();
+    table.insert(n, Arc::clone(&list));
+    list
 }
 
 /// All ordered pairs `(x_D, x_G)` with `x_D · x_G = n`.
 pub fn factor_pairs(n: usize) -> Vec<(usize, usize)> {
-    divisors(n).into_iter().map(|d| (d, n / d)).collect()
+    divisors(n).iter().map(|&d| (d, n / d)).collect()
 }
 
 #[cfg(test)]
@@ -46,10 +55,17 @@ mod tests {
 
     #[test]
     fn divisors_of_12() {
-        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
-        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(&*divisors(12), &[1, 2, 3, 4, 6, 12]);
+        assert_eq!(&*divisors(1), &[1]);
         assert_eq!(divisors(64).len(), 7);
         assert_eq!(divisors(4096).len(), 13);
+    }
+
+    #[test]
+    fn repeat_lookups_share_one_allocation() {
+        let a = divisors(360);
+        let b = divisors(360);
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must share, not clone");
     }
 
     #[test]

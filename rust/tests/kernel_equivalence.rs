@@ -1,0 +1,216 @@
+//! Property tests: the fused lane-major kernel reductions
+//! (`reduce_argmin3` / `reduce_fronts`) are *identical* — same scores,
+//! same candidate and tiling indices, same tie-breaks — to the
+//! Block-materializing reference path, across randomized workloads,
+//! accelerators, chunk boundaries, and with bound pruning both on and
+//! off.
+
+use mmee::config::{presets, Accelerator, Workload};
+use mmee::encode::{BoundaryMatrix, QueryMatrix};
+use mmee::eval::kernel::{chunk_argmin3, chunk_fronts, EvalWorkspace, Incumbents};
+use mmee::eval::{
+    block_argmin3, block_fronts, kernel, native::NativeBackend, serial_argmin3, serial_fronts,
+    EvalBackend,
+};
+use mmee::model::Multipliers;
+use mmee::tiling::enumerate_tilings;
+use mmee::util::prop;
+use mmee::util::rng::Rng;
+
+/// One randomized equivalence case: a workload × accelerator surface
+/// slice plus a sub-rectangle to reduce over.
+#[derive(Debug)]
+struct Case {
+    workload: Workload,
+    accel: Accelerator,
+    num_candidates: usize,
+    num_tilings: usize,
+    c_range: (usize, usize),
+    t_range: (usize, usize),
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> Case {
+    // Dimensions with rich divisor structure so tilings are plentiful.
+    let seqs = [48, 64, 96, 128, 144, 192, 256];
+    let heads = [1, 4, 12];
+    let workload = if rng.bool() {
+        Workload::attention(
+            "prop-attn",
+            seqs[rng.below(seqs.len())],
+            if rng.bool() { 32 } else { 64 },
+            heads[rng.below(heads.len())],
+        )
+    } else {
+        Workload::gemm_pair(
+            "prop-gemm",
+            seqs[rng.below(seqs.len())],
+            if rng.bool() { 32 } else { 48 },
+            seqs[rng.below(seqs.len())],
+            if rng.bool() { 64 } else { 96 },
+        )
+    };
+    let base = match rng.below(3) {
+        0 => presets::accel1(),
+        1 => presets::accel2(),
+        _ => presets::coral(),
+    };
+    // Buffer scale sweeps from "nothing fits" (all-sentinel surfaces —
+    // the tie-break stress case) to "everything fits".
+    let accel = match rng.below(4) {
+        0 => base.with_buffer_bytes(64),
+        1 => base.with_buffer_bytes(base.buffer_bytes / 64),
+        2 => base.clone(),
+        _ => base.with_buffer_bytes(base.buffer_bytes * 4),
+    };
+    let num_candidates = 9 + rng.below(27.min(3 + size / 2)).max(1);
+    let num_tilings = 20 + rng.below(140);
+    // A random sub-rectangle, deliberately unaligned to the 64-wide
+    // serving chunks, including single-lane and single-candidate edges.
+    let c0 = rng.below(num_candidates);
+    let c1 = c0 + 1 + rng.below(num_candidates - c0);
+    let t0 = rng.below(num_tilings);
+    let t1 = t0 + 1 + rng.below(num_tilings - t0);
+    Case { workload, accel, num_candidates, num_tilings, c_range: (c0, c1), t_range: (t0, t1) }
+}
+
+fn build_surface(case: &Case) -> (QueryMatrix, BoundaryMatrix, mmee::config::HwVector, Multipliers) {
+    let all = mmee::symbolic::pruned_table().candidates();
+    let q = QueryMatrix::build(all[..case.num_candidates.min(all.len())].to_vec());
+    let tilings: Vec<_> = enumerate_tilings(&case.workload.gemm, None)
+        .into_iter()
+        .take(case.num_tilings)
+        .collect();
+    assert!(!tilings.is_empty());
+    let b = BoundaryMatrix::build(tilings, &case.accel, &case.workload);
+    let hw = case.accel.hw_vector();
+    let mult = Multipliers::for_workload(&case.workload, &case.accel);
+    (q, b, hw, mult)
+}
+
+fn fmt_argmin(a: &mmee::eval::Argmin3) -> String {
+    format!("{a:?}")
+}
+
+#[test]
+fn prop_chunk_reductions_match_block_oracle() {
+    prop::quick(24, 0x51AB, gen_case, |case| {
+        let (q, b, hw, mult) = build_surface(case);
+        let nt = b.num_tilings();
+        let t_range = (case.t_range.0.min(nt - 1), case.t_range.1.min(nt));
+        let c_range = case.c_range;
+        let block = NativeBackend.eval_block(&q, &b, &hw, &mult, c_range, t_range);
+        let want = block_argmin3(&block);
+        let (want_el, want_bsda) = block_fronts(&block);
+        EvalWorkspace::with(|ws| {
+            let unpruned = chunk_argmin3(ws, &q, &b, &hw, &mult, c_range, t_range, None);
+            if unpruned != want {
+                return Err(format!(
+                    "unpruned chunk argmin diverged: fused {} vs oracle {}",
+                    fmt_argmin(&unpruned),
+                    fmt_argmin(&want)
+                ));
+            }
+            // Fresh incumbents: pruning may only use bounds achieved
+            // inside this chunk, so the result must still be exact.
+            let inc = Incumbents::new();
+            let pruned = chunk_argmin3(ws, &q, &b, &hw, &mult, c_range, t_range, Some(&inc));
+            if pruned != want {
+                return Err(format!(
+                    "pruned chunk argmin diverged: fused {} vs oracle {}",
+                    fmt_argmin(&pruned),
+                    fmt_argmin(&want)
+                ));
+            }
+            let (el, bsda) = chunk_fronts(ws, &q, &b, &hw, &mult, c_range, t_range);
+            if el.points() != want_el.points() {
+                return Err(format!(
+                    "energy-latency front diverged: {} vs {} points",
+                    el.len(),
+                    want_el.len()
+                ));
+            }
+            if bsda.points() != want_bsda.points() {
+                return Err(format!(
+                    "bs-da front diverged: {} vs {} points",
+                    bsda.len(),
+                    want_bsda.len()
+                ));
+            }
+            Ok(())
+        })
+    });
+}
+
+#[test]
+fn prop_full_surface_fused_matches_reference() {
+    prop::quick(12, 0xFA57, gen_case, |case| {
+        let (q, b, hw, mult) = build_surface(case);
+        let reference = serial_argmin3(&NativeBackend, &q, &b, &hw, &mult);
+        for prune in [false, true] {
+            let fused = kernel::fused_argmin3(&q, &b, &hw, &mult, prune);
+            if fused != reference {
+                return Err(format!(
+                    "full-surface fused (prune={prune}) diverged: {} vs {}",
+                    fmt_argmin(&fused),
+                    fmt_argmin(&reference)
+                ));
+            }
+        }
+        // The public backend entry point (fused + pruned + parallel)
+        // must agree too — this is what the engine serves from.
+        let public = NativeBackend.argmin3(&q, &b, &hw, &mult);
+        if public != reference {
+            return Err("NativeBackend::argmin3 diverged from reference".into());
+        }
+        let (el_ref, bsda_ref) = serial_fronts(&NativeBackend, &q, &b, &hw, &mult);
+        let (el, bsda) = NativeBackend.reduce_fronts(&q, &b, &hw, &mult);
+        if el.points() != el_ref.points() || bsda.points() != bsda_ref.points() {
+            return Err("fused fronts diverged from reference fronts".into());
+        }
+        Ok(())
+    });
+}
+
+/// Cross-chunk pruning with a shared incumbent must stay exact even
+/// when chunks are processed in an adversarial order (a later chunk's
+/// incumbent pruning an earlier chunk's pairs) — the merge semantics
+/// guarantee pruned entries could never have won.
+#[test]
+fn shared_incumbents_across_chunks_stay_exact() {
+    let w = presets::bert_base(256);
+    let accel = presets::accel1();
+    let q = QueryMatrix::build(mmee::symbolic::pruned_table().candidates()[..36].to_vec());
+    let tilings: Vec<_> = enumerate_tilings(&w.gemm, None).into_iter().take(192).collect();
+    let b = BoundaryMatrix::build(tilings, &accel, &w);
+    let hw = accel.hw_vector();
+    let mult = Multipliers::for_workload(&w, &accel);
+    let reference = serial_argmin3(&NativeBackend, &q, &b, &hw, &mult);
+    let nt = b.num_tilings();
+    let nc = q.num_candidates();
+    // Visit chunks back-to-front, observing incumbents as we go: every
+    // chunk after the first prunes against already-achieved scores.
+    let inc = Incumbents::new();
+    let mut parts = Vec::new();
+    let chunk = 64;
+    let mut starts: Vec<usize> = (0..nt).step_by(chunk).collect();
+    starts.reverse();
+    EvalWorkspace::with(|ws| {
+        for lo in starts {
+            let hi = (lo + chunk).min(nt);
+            let best = chunk_argmin3(ws, &q, &b, &hw, &mult, (0, nc), (lo, hi), Some(&inc));
+            inc.observe(&best);
+            parts.push((lo, best));
+        }
+    });
+    // Merge in ascending chunk order (what fused_argmin3 does).
+    parts.sort_by_key(|(lo, _)| *lo);
+    let mut merged: mmee::eval::Argmin3 = [(f64::INFINITY, 0, 0); 3];
+    for (_, part) in parts {
+        for (slot, p) in merged.iter_mut().zip(part) {
+            if p.0 < slot.0 {
+                *slot = p;
+            }
+        }
+    }
+    assert_eq!(merged, reference);
+}

@@ -1,0 +1,79 @@
+//! The serving hot path must do **zero per-chunk heap allocation**
+//! after workspace warmup: this binary installs a counting global
+//! allocator and drives the fused chunk reduction over a real surface.
+//! (Kept in its own test binary so no concurrent test thread can
+//! perturb the counter.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+use mmee::config::presets;
+use mmee::encode::{BoundaryMatrix, QueryMatrix};
+use mmee::eval::kernel::{chunk_argmin3, EvalWorkspace, Incumbents};
+use mmee::model::Multipliers;
+use mmee::tiling::enumerate_tilings;
+
+#[test]
+fn fused_chunk_argmin_is_allocation_free_after_warmup() {
+    let accel = presets::accel1();
+    let w = presets::bert_base(512);
+    let q = QueryMatrix::build(mmee::symbolic::pruned_table().candidates());
+    let tilings = enumerate_tilings(&w.gemm, Some(accel.capacity_words() as f64));
+    let b = BoundaryMatrix::build(tilings, &accel, &w);
+    let hw = accel.hw_vector();
+    let mult = Multipliers::for_workload(&w, &accel);
+    let nt = b.num_tilings();
+    let nc = q.num_candidates();
+    let chunk = 64;
+    let inc = Incumbents::new();
+    EvalWorkspace::with(|ws| {
+        // Warmup: the first chunk sizes every lane buffer.
+        let first = chunk_argmin3(ws, &q, &b, &hw, &mult, (0, nc), (0, chunk.min(nt)), Some(&inc));
+        inc.observe(&first);
+
+        let before = ALLOCATIONS.load(Ordering::Relaxed);
+        let mut merged = first;
+        for lo in (chunk..nt).step_by(chunk) {
+            let hi = (lo + chunk).min(nt);
+            let best = chunk_argmin3(ws, &q, &b, &hw, &mult, (0, nc), (lo, hi), Some(&inc));
+            inc.observe(&best);
+            for (slot, p) in merged.iter_mut().zip(best) {
+                if p.0 < slot.0 {
+                    *slot = p;
+                }
+            }
+        }
+        let after = ALLOCATIONS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "fused chunk reductions allocated {} times after warmup",
+            after - before
+        );
+        // And the streamed result is the real optimum, not a stub.
+        assert!(merged[0].0.is_finite() && merged[0].0 < 1e29);
+    });
+}
