@@ -3,13 +3,14 @@
 //!
 //! Built from std primitives — no tokio/rayon in the offline build; the
 //! pool is part of the system's substrate inventory (DESIGN.md §5).
-//! [`pool`] provides chunked data-parallelism (`parallel_chunks`) plus
-//! the bounded-queue/sequencer pair behind the concurrent serving
-//! loops; [`service`] speaks the JSON-lines wire format (single
+//! [`pool`] provides the persistent work-stealing [`EvalPool`] behind
+//! every surface pass (with the `parallel_chunks` / [`pool::run_indexed`]
+//! shims) plus the bounded-queue/sequencer pair behind the concurrent
+//! serving loops; [`service`] speaks the JSON-lines wire format (single
 //! requests and batch arrays) over stdin or TCP.
 
 pub mod pool;
 pub mod service;
 
-pub use pool::{parallel_chunks, BoundedQueue, Sequencer};
+pub use pool::{parallel_chunks, run_indexed, BoundedQueue, EvalPool, Sequencer};
 pub use service::{serve_lines, serve_lines_concurrent, serve_tcp, Request, Response};

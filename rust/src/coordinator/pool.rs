@@ -2,12 +2,18 @@
 //!
 //! Two shapes of parallelism live here:
 //!
-//! * `parallel_chunks(n, chunk, f)` — scoped data-parallel execution
-//!   over chunked index ranges: splits `0..n` into `chunk`-sized ranges
-//!   and processes them on `min(available_parallelism, chunks)` worker
-//!   threads with dynamic (atomic counter) load balancing — the shape
-//!   of work MMEE's surface evaluation needs. Results come back in
-//!   chunk order.
+//! * [`EvalPool`] — the persistent, lazily-initialized, work-stealing
+//!   evaluation pool behind every surface pass. Long-lived workers pull
+//!   chunk tasks from per-worker injector deques (stealing from their
+//!   neighbours when their own deque runs dry), each pass bumps the
+//!   pool's generation stamp and carries a completion barrier its
+//!   submitter blocks on, chunk panics are captured and re-thrown at
+//!   the submitter (workers survive), and idle workers park on a
+//!   condvar. `parallel_chunks` /
+//!   [`run_indexed`] are thin shims over [`EvalPool::run`], so steady-
+//!   state serving spawns **zero** threads per pass — the workers (and
+//!   their warmed `EvalWorkspace`s, which live in worker TLS) persist
+//!   across passes.
 //! * [`BoundedQueue`] + [`Sequencer`] — the request-pipeline
 //!   primitives behind `coordinator::service`: N workers drain a
 //!   bounded queue of parsed requests while a writer re-sequences
@@ -15,22 +21,353 @@
 //!   own response without blocking the queue (and responses never
 //!   reorder on the wire).
 
+use std::any::Any;
+use std::cell::UnsafeCell;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use for surface evaluation.
+/// Number of worker threads to use for surface evaluation. `MMEE_THREADS`
+/// overrides `available_parallelism`; the value is parsed once and cached
+/// (a surface pass must not re-read the environment on its hot path).
 pub fn default_workers() -> usize {
-    std::env::var("MMEE_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        })
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        std::env::var("MMEE_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n: &usize| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+    })
+}
+
+/// One queued unit of work: a pass and the chunk index to run within it.
+type Task = (Arc<Pass>, usize);
+
+/// One submitted surface pass: the type-erased chunk runner plus the
+/// barrier state its submitter blocks on.
+struct Pass {
+    /// Type-erased `&(dyn Fn(usize) + Sync)` chunk runner borrowed from
+    /// the submitting stack frame.
+    ///
+    /// SAFETY invariant: [`EvalPool::run`] does not return until
+    /// `remaining` reaches zero, and every dereference happens before
+    /// the matching `remaining` decrement — so the pointee strictly
+    /// outlives every use, even though the lifetime is erased here.
+    runner: RawRunner,
+    /// Chunks not yet completed; the pass barrier. Reaching zero wakes
+    /// the submitter.
+    remaining: AtomicUsize,
+    /// First panic payload out of any chunk (later ones are dropped);
+    /// re-thrown by the submitter once the barrier clears.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    done_lock: Mutex<()>,
+    done: Condvar,
+}
+
+struct RawRunner(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared-call safe) and the Pass barrier
+// guarantees it outlives all uses (see `Pass::runner`).
+unsafe impl Send for RawRunner {}
+unsafe impl Sync for RawRunner {}
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    /// Per-worker injector deques. A pass's chunks are injected as
+    /// contiguous runs (one run per deque, round-robin rotated across
+    /// passes); a worker pops its own deque front-first and steals from
+    /// its neighbours' backs when empty, so contiguous tiling chunks
+    /// mostly stay on one worker (cache locality) while the tail
+    /// rebalances automatically.
+    queues: Vec<Mutex<VecDeque<Task>>>,
+    /// Queued-but-unclaimed task count — the workers' parking predicate.
+    /// Incremented immediately *before* each per-deque run is pushed
+    /// (so it over-approximates only for that one deque-lock window and
+    /// a parked worker can never miss work), decremented as tasks are
+    /// claimed.
+    pending: AtomicUsize,
+    /// Pass generation counter.
+    generation: AtomicU64,
+    /// Parking lot. The guarded flag is the shutdown signal (private
+    /// pools in tests shut their workers down on drop; the global pool
+    /// never does).
+    idle_lock: Mutex<bool>,
+    idle: Condvar,
+    /// Round-robin injection cursor, so successive small passes don't
+    /// all land on worker 0's deque.
+    cursor: AtomicUsize,
+}
+
+impl Shared {
+    /// Claim a task for worker `me`: own deque first (front), then
+    /// steal from the neighbours (back).
+    fn claim(&self, me: usize) -> Option<Task> {
+        let n = self.queues.len();
+        if let Some(t) = self.queues[me].lock().unwrap().pop_front() {
+            self.pending.fetch_sub(1, Ordering::AcqRel);
+            return Some(t);
+        }
+        for d in 1..n {
+            let q = (me + d) % n;
+            if let Some(t) = self.queues[q].lock().unwrap().pop_back() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Claim a task belonging to `pass` only — the submitter's help
+    /// loop. A submitter must not pick up unrelated passes' chunks
+    /// (that would couple its request's latency to another request's),
+    /// and once its own tasks are all claimed it can safely block on
+    /// the pass barrier: whoever executes the last one notifies `done`.
+    /// Scans only the deques this pass was injected into; the common
+    /// case (our run still at the back, nothing pushed after it) is an
+    /// O(1) `pop_back`, the scan is the fallback under concurrent load.
+    fn claim_for(&self, pass: &Arc<Pass>, injected: &[usize]) -> Option<Task> {
+        for &qi in injected {
+            let mut q = self.queues[qi].lock().unwrap();
+            let back_is_ours = matches!(q.back(), Some((p, _)) if Arc::ptr_eq(p, pass));
+            let found = if back_is_ours {
+                q.pop_back()
+            } else {
+                q.iter().rposition(|(p, _)| Arc::ptr_eq(p, pass)).and_then(|idx| q.remove(idx))
+            };
+            if let Some(t) = found {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Run one claimed chunk: panics are captured into the pass (the
+    /// worker survives), and the barrier is decremented strictly after
+    /// the runner returns — the submitter's guarantee that the erased
+    /// closure is never dereferenced after `run` unblocks.
+    fn execute(&self, pass: &Pass, chunk: usize) {
+        // SAFETY: see `Pass::runner` — the submitter keeps the pointee
+        // alive until `remaining` reaches zero, and we only decrement
+        // below, after the call returns.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (&*pass.runner.0)(chunk) }));
+        if let Err(payload) = result {
+            pass.panic.lock().unwrap().get_or_insert(payload);
+        }
+        if pass.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = pass.done_lock.lock().unwrap();
+            pass.done.notify_all();
+        }
+    }
+
+    fn worker_loop(&self, me: usize) {
+        loop {
+            if let Some((pass, chunk)) = self.claim(me) {
+                self.execute(&pass, chunk);
+                continue;
+            }
+            // Park until new work is injected (or shutdown). The
+            // injector bumps `pending` before taking this lock to
+            // notify, so the check-then-wait below cannot miss a wakeup.
+            let mut guard = self.idle_lock.lock().unwrap();
+            loop {
+                if *guard {
+                    return; // shutdown
+                }
+                if self.pending.load(Ordering::Acquire) > 0 {
+                    break;
+                }
+                guard = self.idle.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+/// A persistent, work-stealing evaluation pool (see the module docs).
+/// [`EvalPool::global`] is the lazily-created process-wide instance
+/// every surface pass runs on; `EvalPool::new` builds private pools for
+/// tests. Dropping a (private) pool shuts its workers down and joins
+/// them; the global pool lives for the process lifetime.
+pub struct EvalPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EvalPool {
+    /// Build a pool with `workers` persistent threads (at least 1).
+    pub fn new(workers: usize) -> EvalPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            generation: AtomicU64::new(0),
+            idle_lock: Mutex::new(false),
+            idle: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|me| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mmee-eval-{me}"))
+                    .spawn(move || shared.worker_loop(me))
+                    .expect("spawn eval worker")
+            })
+            .collect();
+        EvalPool { shared, handles }
+    }
+
+    /// The process-wide pool, created on first use with
+    /// [`default_workers`] threads. Every surface pass after the first
+    /// reuses these workers — steady-state serving spawns no threads.
+    pub fn global() -> &'static EvalPool {
+        static POOL: OnceLock<EvalPool> = OnceLock::new();
+        POOL.get_or_init(|| EvalPool::new(default_workers()))
+    }
+
+    /// Number of persistent worker threads (the submitting thread also
+    /// participates in its own passes, so peak parallelism is one more).
+    pub fn workers(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Passes submitted so far (the generation stamp of the next pass).
+    pub fn generation(&self) -> u64 {
+        self.shared.generation.load(Ordering::Relaxed)
+    }
+
+    /// Execute `f(chunk_index)` for every index in `0..num_chunks`,
+    /// returning once all chunks completed (the pass barrier). The
+    /// calling thread participates — it claims *its own pass's* chunks
+    /// instead of going idle — so a pool of N workers reaches N+1-way
+    /// parallelism and a submitter can never deadlock on a saturated
+    /// pool (it can always drain its own queued chunks itself), while
+    /// its latency stays decoupled from other requests' passes.
+    /// Multiple passes may be in flight concurrently (the serving
+    /// workers all submit here).
+    ///
+    /// If any chunk panics, the payload is re-thrown here after the
+    /// barrier clears; the pool's workers survive.
+    pub fn run(&self, num_chunks: usize, f: impl Fn(usize) + Sync) {
+        if num_chunks == 0 {
+            return;
+        }
+        self.shared.generation.fetch_add(1, Ordering::Relaxed);
+        let runner: &(dyn Fn(usize) + Sync) = &f;
+        let pass = Arc::new(Pass {
+            runner: RawRunner(runner as *const (dyn Fn(usize) + Sync)),
+            remaining: AtomicUsize::new(num_chunks),
+            panic: Mutex::new(None),
+            done_lock: Mutex::new(()),
+            done: Condvar::new(),
+        });
+        // Inject contiguous chunk runs round-robin across the deques.
+        // Each run is counted into `pending` right before its items
+        // become claimable: a worker that wakes on `pending > 0` finds
+        // real work after at most one deque-lock window, instead of
+        // busy-spinning against a half-finished injection.
+        let nq = self.shared.queues.len();
+        let start = self.shared.cursor.fetch_add(1, Ordering::Relaxed);
+        let per = num_chunks.div_ceil(nq);
+        // Which deques this pass landed in — the submitter's help loop
+        // only ever needs to look there.
+        let mut injected = Vec::with_capacity(nq.min(num_chunks));
+        for w in 0..nq {
+            let lo = w * per;
+            if lo >= num_chunks {
+                break;
+            }
+            let hi = ((w + 1) * per).min(num_chunks);
+            self.shared.pending.fetch_add(hi - lo, Ordering::AcqRel);
+            let qi = (start + w) % nq;
+            let mut q = self.shared.queues[qi].lock().unwrap();
+            q.extend((lo..hi).map(|i| (Arc::clone(&pass), i)));
+            injected.push(qi);
+        }
+        {
+            // Wake parked workers while holding the idle lock: a worker
+            // between its `pending` check and `wait` holds this lock, so
+            // the notify cannot fall into that gap. Wake only as many
+            // workers as there are chunks — a 2-tile singleton request
+            // must not stampede a 32-worker pool.
+            let _g = self.shared.idle_lock.lock().unwrap();
+            for _ in 0..num_chunks.min(nq) {
+                self.shared.idle.notify_one();
+            }
+        }
+        // Help with our own chunks until none are queued, then block on
+        // the barrier: every still-running chunk is held by a worker
+        // whose final decrement notifies `done` (checked under
+        // `done_lock`, so the notify cannot be missed).
+        loop {
+            if pass.remaining.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            if let Some((p, chunk)) = self.shared.claim_for(&pass, &injected) {
+                self.shared.execute(&p, chunk);
+                continue;
+            }
+            let mut guard = pass.done_lock.lock().unwrap();
+            while pass.remaining.load(Ordering::Acquire) != 0 {
+                guard = pass.done.wait(guard).unwrap();
+            }
+            break;
+        }
+        if let Some(payload) = pass.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for EvalPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.idle_lock.lock().unwrap();
+            *g = true;
+        }
+        self.shared.idle.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A per-chunk result slot written by exactly one task and read only
+/// after the pass barrier — the disjoint-write replacement for the old
+/// `Mutex<Vec<Option<T>>>` that serialized every worker on one lock.
+struct Slot<T>(UnsafeCell<Option<T>>);
+
+// SAFETY: task i is executed exactly once and is the only writer of
+// slot i; the submitter reads only after `EvalPool::run` returns.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+/// Run `f(i)` for `i` in `0..n` on the global [`EvalPool`] and collect
+/// the results in index order. Serial (no pool) when only one worker is
+/// configured or there is at most one task.
+pub fn run_indexed<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 || default_workers() == 1 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<Slot<T>> = (0..n).map(|_| Slot(UnsafeCell::new(None))).collect();
+    EvalPool::global().run(n, |i| {
+        let out = f(i);
+        // SAFETY: see `Slot` — i is this task's private slot.
+        unsafe { *slots[i].0.get() = Some(out) };
+    });
+    slots.into_iter().map(|s| s.0.into_inner().expect("chunk not executed")).collect()
 }
 
 /// Process `0..n` in `chunk`-sized ranges in parallel; `f(start, end)`
-/// returns a per-chunk result. Results come back ordered by chunk index.
+/// returns a per-chunk result. Results come back ordered by chunk
+/// index. Compatibility shim over the persistent [`EvalPool`] (the
+/// pre-pool scoped-thread implementation spawned and joined `workers`
+/// threads per call).
 pub fn parallel_chunks<T: Send>(
     n: usize,
     chunk: usize,
@@ -38,37 +375,7 @@ pub fn parallel_chunks<T: Send>(
 ) -> Vec<T> {
     assert!(chunk > 0);
     let num_chunks = n.div_ceil(chunk);
-    if num_chunks == 0 {
-        return Vec::new();
-    }
-    let workers = default_workers().min(num_chunks).max(1);
-    if workers == 1 {
-        return (0..num_chunks)
-            .map(|i| f(i * chunk, ((i + 1) * chunk).min(n)))
-            .collect();
-    }
-
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> =
-        Mutex::new((0..num_chunks).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= num_chunks {
-                    break;
-                }
-                let out = f(i * chunk, ((i + 1) * chunk).min(n));
-                results.lock().unwrap()[i] = Some(out);
-            });
-        }
-    });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|o| o.expect("chunk not processed"))
-        .collect()
+    run_indexed(num_chunks, |i| f(i * chunk, ((i + 1) * chunk).min(n)))
 }
 
 /// A bounded blocking MPMC queue (Mutex + Condvars; no channel crate
@@ -358,6 +665,59 @@ mod tests {
             }
             assert_eq!(seq.next_in_order(), None);
         });
+    }
+
+    #[test]
+    fn private_pool_runs_all_chunks_and_survives_reuse() {
+        let pool = EvalPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for pass in 0..4u64 {
+            let sum = AtomicU64::new(0);
+            pool.run(97, |i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.into_inner(), (1..=97u64).sum(), "pass {pass}");
+        }
+        assert_eq!(pool.generation(), 4);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pool() {
+        let pool = EvalPool::new(2);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..8 {
+                        pool.run(31, |i| {
+                            total.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.into_inner(), 4 * 8 * (0..31u64).sum::<u64>());
+    }
+
+    #[test]
+    fn pool_propagates_chunk_panics_and_keeps_serving() {
+        let pool = EvalPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                if i == 7 {
+                    panic!("chunk 7 exploded");
+                }
+            });
+        }));
+        let payload = caught.expect_err("the chunk panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("chunk 7 exploded"), "unexpected payload: {msg:?}");
+        // The workers survived the panic; the pool still serves passes.
+        let sum = AtomicU64::new(0);
+        pool.run(16, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.into_inner(), (0..16u64).sum());
     }
 
     #[test]

@@ -3,45 +3,59 @@
 //! The scalar reference path ([`crate::eval::native`]) walks one tiling
 //! at a time and materializes four full `f32` surfaces per chunk even
 //! when the caller only wants an argmin. This module inverts the loop
-//! nest: per tiling chunk, every distinct [`CompiledPair`] /
-//! [`CompiledGroup`] monomial sum is evaluated across the *whole chunk*
-//! into contiguous, reusable `f64` lane buffers (tilings innermost →
-//! auto-vectorizable), and the argmin / Pareto reductions consume the
-//! lanes directly — no `nc × nt` [`super::Block`] is ever allocated.
+//! nest: per (candidate-block × tiling-chunk) tile, every distinct
+//! [`CompiledPair`] / [`CompiledGroup`] monomial sum *used by the block*
+//! is evaluated across the whole chunk into contiguous, reusable `f64`
+//! lane buffers (tilings innermost → vectorizable), and the argmin /
+//! Pareto reductions consume the lanes directly — no `nc × nt`
+//! [`super::Block`] is ever allocated.
 //!
-//! Three mechanisms carry the speedup (see README §Performance):
+//! Four mechanisms carry the speedup (see README §Performance):
 //!
 //! * **lane-major evaluation** — the monomial product loops stream
-//!   contiguous feature columns ([`BoundaryMatrix::feature_col`]), so
-//!   the compiler vectorizes across tilings;
+//!   contiguous feature columns ([`BoundaryMatrix::feature_col`]) with a
+//!   manually 4-lane-unrolled inner loop (`mul_lanes`), so the hot
+//!   path does not depend on the autovectorizer;
+//! * **2-D tiling** — [`TileConfig`] splits the surface along *both*
+//!   axes: tiling chunks bound the lane length, and candidate blocks
+//!   (sized so one tile's lane slices fit L2, `MMEE_CBLOCK` overrides)
+//!   bound how many distinct pair/group terms one tile touches, so very
+//!   large custom candidate tables no longer blow the working set;
 //! * **fused reductions** — [`chunk_argmin3`] / [`chunk_fronts`] fold
 //!   candidate scores straight out of the lane buffers into the running
 //!   best / fronts, skipping the 4-surface materialize-then-rescan;
 //! * **online bound pruning** — per (pair, chunk), a lower bound on the
-//!   chunk's best energy/latency (min pair term over lanes + min group
-//!   term) skips entire pair×chunk combinations that cannot beat the
-//!   incumbent ([`Incumbents`], shared across parallel chunk workers) —
-//!   the online counterpart of the paper's §VI-B offline pruning.
+//!   chunk's best energy/latency skips pair×chunk combinations — and,
+//!   at block level, whole candidate blocks — that cannot beat the
+//!   incumbent ([`Incumbents`], shared across pool workers). The fronts
+//!   path prunes too: a candidate×chunk whose (energy, delay) — and
+//!   (buffer-size, DRAM-access) — lower-bound corners are strictly
+//!   dominated by the shared achieved-point snapshot
+//!   ([`SharedFrontBound`]) is skipped, the dominance counterpart of
+//!   the paper's §VI-B pruning.
 //!
 //! Results are **bit-identical** to the Block-materializing reference:
 //! lane scores are quantized through `f32` exactly where the reference
-//! stores surfaces, visit order matches, and pruning only ever skips
-//! scores strictly above an already-achieved incumbent (a conservative
-//! relative margin covers the `f32` quantization), so ties and
+//! stores surfaces, tiles merge in the reference visit order (candidate
+//! blocks fold with the full secondary tie-break inside one tiling
+//! chunk; chunks merge strictly), and pruning only ever skips scores
+//! strictly above an already-achieved incumbent — for fronts, regions
+//! strictly dominated by an already-achieved point — behind a
+//! conservative margin covering the `f32` quantization, so ties and
 //! tie-breaks are preserved. `tests/kernel_equivalence.rs` property-
-//! tests this across randomized workloads, accelerators, chunk
-//! boundaries, and pruning on/off.
+//! tests this across randomized workloads, accelerators, 2-D tile
+//! shapes, and pruning on/off.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-use super::{merge_argmin3, Argmin3, Fronts, T_CHUNK};
+use super::{Argmin3, Fronts, T_CHUNK};
 use crate::config::HwVector;
 use crate::encode::query::{CMono, CompiledGroup, CompiledPair, CompiledQuery};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
 use crate::model::{Metrics, Multipliers};
-use crate::search::pareto::{Front, ParetoPoint};
+use crate::search::pareto::{Front, ParetoPoint, SharedFrontBound};
 
 /// The infeasible sentinel as the reference path reports it: stored as
 /// `f32` in the [`super::Block`] surfaces, read back widened to `f64`.
@@ -50,14 +64,26 @@ const SENTINEL32: f64 = Metrics::INFEASIBLE_SENTINEL as f32 as f64;
 /// Conservative relative margin for bound pruning: lane bounds are
 /// computed in `f64` while actual scores are quantized through `f32`
 /// (relative error ≤ 2⁻²⁴ ≈ 6e-8), so a bound is only trusted to beat
-/// an incumbent when it clears it by more than the quantization could
-/// account for. Strictly-greater comparison preserves exact ties.
+/// an incumbent (or to be dominated, on the fronts path) when it clears
+/// the comparison by more than the quantization could account for.
+/// Strictly-greater comparison preserves exact ties.
 const PRUNE_MARGIN: f64 = 1.0 - 1e-6;
 
+/// Which per-term minima [`EvalWorkspace::load_chunk`] folds alongside
+/// the lane evaluation. `Argmin` feeds the incumbent bounds; `Fronts`
+/// additionally folds the BS/DA minima the dominance corners need.
+/// `None` skips all of it (pruning off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BoundKind {
+    None,
+    Argmin,
+    Fronts,
+}
+
 /// Reusable per-thread scratch for the lane kernel. All buffers are
-/// grow-only: after the first chunk of a given (pairs, groups, lane)
+/// grow-only: after the first tile of a given (pairs, groups, lane)
 /// shape — one warmup call — the serving hot path performs **zero heap
-/// allocation** per chunk (`tests/workspace_alloc.rs` asserts this with
+/// allocation** per tile (`tests/workspace_alloc.rs` asserts this with
 /// a counting allocator).
 #[derive(Debug, Default)]
 pub struct EvalWorkspace {
@@ -79,21 +105,41 @@ pub struct EvalWorkspace {
     pair_min_e: Vec<f64>,
     pair_min_l: Vec<f64>,
     pair_has_infeasible: Vec<bool>,
+    /// Per pair: chunk-wide BS/DA minima over *all* lanes — the fronts
+    /// path's dominance corner (BS/DA are pure pair terms).
+    pair_min_bs: Vec<f64>,
+    pair_min_da: Vec<f64>,
     /// Per group: chunk-wide minima.
     grp_min_e: Vec<f64>,
     grp_min_l: Vec<f64>,
+    /// Whole-block aggregates of the minima above, folded over exactly
+    /// the pairs/groups the current candidate block uses — the
+    /// block-level skip bound.
+    blk_pair_min_e: f64,
+    blk_pair_min_l: f64,
+    blk_pair_any_inf: bool,
+    blk_grp_min_e: f64,
+    blk_grp_min_l: f64,
+    /// Epoch-stamped membership marks + gathered id lists for restricted
+    /// candidate blocks (which pair/group terms the block actually
+    /// uses). Epoch bumping replaces an O(pairs) clear per tile.
+    pair_mark: Vec<u32>,
+    grp_mark: Vec<u32>,
+    mark_epoch: u32,
+    pair_list: Vec<u32>,
+    grp_list: Vec<u32>,
     /// Monomial-product and second-operand staging lanes.
     tmp: Vec<f64>,
     stage: Vec<f64>,
 }
 
-/// Warmed workspaces returned by dead worker threads, recycled by the
-/// next surface pass. The chunk workers are *scoped* threads (they may
-/// borrow the surface), so they cannot outlive one pass — without this
-/// pool every pass would re-warm `workers` fresh workspaces. Bounded by
-/// the maximum concurrent worker count; locked once per worker thread
-/// lifetime (checkout at first use, return at thread exit), never per
-/// chunk.
+/// Warmed workspaces returned by dead threads, recycled by later
+/// passes. The persistent [`crate::coordinator::EvalPool`] workers keep
+/// their workspaces alive in TLS indefinitely, so this mostly serves
+/// *submitter* threads that help their own passes and then exit (e.g.
+/// serving connection workers): their warmed workspaces flow back here
+/// instead of being dropped. Locked once per thread lifetime (checkout
+/// at first use, return at thread exit), never per tile.
 static POOL: Mutex<Vec<EvalWorkspace>> = Mutex::new(Vec::new());
 
 /// Thread-local slot holding this worker's checked-out workspace; the
@@ -122,8 +168,8 @@ impl EvalWorkspace {
     /// Run `f` against this thread's workspace. First use on a thread
     /// checks a warmed workspace out of the global return pool (or
     /// builds a fresh one); it stays cached in thread-local storage for
-    /// every subsequent chunk and flows back to the pool when the
-    /// worker thread exits — so steady-state serving re-warms nothing.
+    /// every subsequent tile and flows back to the pool if the thread
+    /// ever exits — so steady-state serving re-warms nothing.
     pub fn with<R>(f: impl FnOnce(&mut EvalWorkspace) -> R) -> R {
         WORKSPACE.with(|cell| {
             let mut slot = cell.borrow_mut();
@@ -150,7 +196,12 @@ impl EvalWorkspace {
                 buf.resize(groups * lanes, 0.0);
             }
         }
-        for buf in [&mut self.pair_min_e, &mut self.pair_min_l] {
+        for buf in [
+            &mut self.pair_min_e,
+            &mut self.pair_min_l,
+            &mut self.pair_min_bs,
+            &mut self.pair_min_da,
+        ] {
             if buf.len() < pairs {
                 buf.resize(pairs, 0.0);
             }
@@ -158,10 +209,16 @@ impl EvalWorkspace {
         if self.pair_has_infeasible.len() < pairs {
             self.pair_has_infeasible.resize(pairs, false);
         }
+        if self.pair_mark.len() < pairs {
+            self.pair_mark.resize(pairs, 0);
+        }
         for buf in [&mut self.grp_min_e, &mut self.grp_min_l] {
             if buf.len() < groups {
                 buf.resize(groups, 0.0);
             }
+        }
+        if self.grp_mark.len() < groups {
+            self.grp_mark.resize(groups, 0);
         }
         for buf in [&mut self.tmp, &mut self.stage] {
             if buf.len() < lanes {
@@ -170,12 +227,49 @@ impl EvalWorkspace {
         }
     }
 
-    /// Evaluate every pair and group term of `cq` across the tiling
-    /// chunk `[t0, t1)` into the lane buffers. With `bounds`, also fold
-    /// the per-pair / per-group chunk minima that feed bound pruning
-    /// (skipped for non-pruning consumers — the fronts path and
-    /// pruning-off argmin never read them). `hw` must already have the
+    /// Gather the distinct pair/group ids candidates `[c0, c1)` use,
+    /// into the workspace's reusable (taken) id lists. A full-width
+    /// block shortcuts to "all of them" without scanning candidates.
+    fn gather(&mut self, cq: &CompiledQuery, c0: usize, c1: usize) -> (Vec<u32>, Vec<u32>) {
+        let mut pair_ids = std::mem::take(&mut self.pair_list);
+        let mut grp_ids = std::mem::take(&mut self.grp_list);
+        pair_ids.clear();
+        grp_ids.clear();
+        if c0 == 0 && c1 >= cq.cand_pair.len() {
+            pair_ids.extend(0..cq.pairs.len() as u32);
+            grp_ids.extend(0..cq.groups.len() as u32);
+            return (pair_ids, grp_ids);
+        }
+        self.mark_epoch = self.mark_epoch.wrapping_add(1);
+        if self.mark_epoch == 0 {
+            // Epoch wrapped: stale marks could alias; clear and restart.
+            self.pair_mark.fill(0);
+            self.grp_mark.fill(0);
+            self.mark_epoch = 1;
+        }
+        let e = self.mark_epoch;
+        for c in c0..c1 {
+            let p = cq.cand_pair[c] as usize;
+            if self.pair_mark[p] != e {
+                self.pair_mark[p] = e;
+                pair_ids.push(p as u32);
+            }
+            let g = cq.cand_group[c] as usize;
+            if self.grp_mark[g] != e {
+                self.grp_mark[g] = e;
+                grp_ids.push(g as u32);
+            }
+        }
+        (pair_ids, grp_ids)
+    }
+
+    /// Evaluate every pair and group term candidates `[c0, c1)` of `cq`
+    /// use across the tiling chunk `[t0, t1)` into the lane buffers.
+    /// With `bounds`, also fold the per-pair / per-group / whole-block
+    /// chunk minima that feed bound pruning (skipped for non-pruning
+    /// consumers, which never read them). `hw` must already have the
     /// workload multipliers folded in.
+    #[allow(clippy::too_many_arguments)]
     fn load_chunk(
         &mut self,
         cq: &CompiledQuery,
@@ -183,15 +277,23 @@ impl EvalWorkspace {
         hw: &HwVector,
         t0: usize,
         t1: usize,
-        bounds: bool,
+        bounds: BoundKind,
+        c_range: (usize, usize),
     ) {
+        let (c0, c1) = c_range;
         let nt = t1 - t0;
         self.ensure(cq.pairs.len(), cq.groups.len(), nt);
-        let lanes = self.lanes;
-        for (p, cp) in cq.pairs.iter().enumerate() {
-            let o = p * lanes;
-            self.load_pair(cp, b, hw, t0, t1, o);
-            if !bounds {
+        let (pair_ids, grp_ids) = self.gather(cq, c0, c1);
+        self.blk_pair_min_e = f64::INFINITY;
+        self.blk_pair_min_l = f64::INFINITY;
+        self.blk_pair_any_inf = false;
+        self.blk_grp_min_e = f64::INFINITY;
+        self.blk_grp_min_l = f64::INFINITY;
+        for &p in &pair_ids {
+            let p = p as usize;
+            let o = p * self.lanes;
+            self.load_pair(&cq.pairs[p], b, hw, t0, t1, o);
+            if bounds == BoundKind::None {
                 continue;
             }
             let (mut min_e, mut min_l, mut any_inf) = (f64::INFINITY, f64::INFINITY, false);
@@ -207,11 +309,24 @@ impl EvalWorkspace {
             self.pair_min_e[p] = min_e;
             self.pair_min_l[p] = min_l;
             self.pair_has_infeasible[p] = any_inf;
+            self.blk_pair_min_e = self.blk_pair_min_e.min(min_e);
+            self.blk_pair_min_l = self.blk_pair_min_l.min(min_l);
+            self.blk_pair_any_inf |= any_inf;
+            if bounds == BoundKind::Fronts {
+                let (mut min_bs, mut min_da) = (f64::INFINITY, f64::INFINITY);
+                for i in o..o + nt {
+                    min_bs = min_bs.min(self.pair_bs[i]);
+                    min_da = min_da.min(self.pair_da[i]);
+                }
+                self.pair_min_bs[p] = min_bs;
+                self.pair_min_da[p] = min_da;
+            }
         }
-        for (g, cg) in cq.groups.iter().enumerate() {
-            let o = g * lanes;
-            self.load_group(cg, b, hw, t0, t1, o);
-            if !bounds {
+        for &g in &grp_ids {
+            let g = g as usize;
+            let o = g * self.lanes;
+            self.load_group(&cq.groups[g], b, hw, t0, t1, o);
+            if bounds == BoundKind::None {
                 continue;
             }
             let (mut min_e, mut min_l) = (f64::INFINITY, f64::INFINITY);
@@ -221,7 +336,11 @@ impl EvalWorkspace {
             }
             self.grp_min_e[g] = min_e;
             self.grp_min_l[g] = min_l;
+            self.blk_grp_min_e = self.blk_grp_min_e.min(min_e);
+            self.blk_grp_min_l = self.blk_grp_min_l.min(min_l);
         }
+        self.pair_list = pair_ids;
+        self.grp_list = grp_ids;
     }
 
     /// One pair's BS¹/BS²/DA monomial sums over the chunk, then the
@@ -295,9 +414,10 @@ impl EvalWorkspace {
 
 /// `out[lane] = Σ_m coef_m · Π_k f[idx_k][lane]` over tilings
 /// `[t0, t1)`. Each monomial's factor product runs over a contiguous
-/// feature column, lanes innermost — the auto-vectorizable core of the
-/// kernel. The per-lane operation order matches the scalar
-/// `CMono::eval` / `eval_sum` exactly, so results are bit-identical.
+/// feature column, lanes innermost ([`mul_lanes`] / [`add_lanes`] — the
+/// manually unrolled core of the kernel). The per-lane operation order
+/// matches the scalar `CMono::eval` / `eval_sum` exactly, so results
+/// are bit-identical.
 #[inline]
 fn accumulate_lanes(
     ms: &[CMono],
@@ -314,19 +434,68 @@ fn accumulate_lanes(
         let tmp = &mut tmp[..nt];
         tmp.fill(m.coef);
         for k in 0..m.n as usize {
-            let col = b.feature_col(m.idx[k] as usize, t0, t1);
-            for (v, &f) in tmp.iter_mut().zip(col) {
-                *v *= f;
-            }
+            mul_lanes(tmp, b.feature_col(m.idx[k] as usize, t0, t1));
         }
-        for (o, &v) in out.iter_mut().zip(tmp.iter()) {
-            *o += v;
-        }
+        add_lanes(out, tmp);
     }
 }
 
-/// Best-known scores per objective, shared across parallel chunk
-/// workers so every chunk prunes against the tightest incumbent seen so
+/// `tmp[j] *= col[j]` — the kernel's innermost loop. Manually 4-lane
+/// unrolled so the hot path does not depend on the autovectorizer
+/// across toolchains; the `scalar-lanes` cargo feature restores the
+/// plain loop. Both are elementwise in the same per-lane order, so
+/// results are bit-identical (unit-tested against each other).
+#[inline]
+fn mul_lanes(tmp: &mut [f64], col: &[f64]) {
+    debug_assert_eq!(tmp.len(), col.len());
+    #[cfg(not(feature = "scalar-lanes"))]
+    {
+        let n4 = tmp.len() - tmp.len() % 4;
+        let (t_head, t_tail) = tmp.split_at_mut(n4);
+        let (c_head, c_tail) = col.split_at(n4);
+        for (t4, c4) in t_head.chunks_exact_mut(4).zip(c_head.chunks_exact(4)) {
+            t4[0] *= c4[0];
+            t4[1] *= c4[1];
+            t4[2] *= c4[2];
+            t4[3] *= c4[3];
+        }
+        for (t, &c) in t_tail.iter_mut().zip(c_tail) {
+            *t *= c;
+        }
+    }
+    #[cfg(feature = "scalar-lanes")]
+    for (t, &c) in tmp.iter_mut().zip(col) {
+        *t *= c;
+    }
+}
+
+/// `out[j] += tmp[j]` — same unrolling contract as [`mul_lanes`].
+#[inline]
+fn add_lanes(out: &mut [f64], tmp: &[f64]) {
+    debug_assert_eq!(out.len(), tmp.len());
+    #[cfg(not(feature = "scalar-lanes"))]
+    {
+        let n4 = out.len() - out.len() % 4;
+        let (o_head, o_tail) = out.split_at_mut(n4);
+        let (t_head, t_tail) = tmp.split_at(n4);
+        for (o4, t4) in o_head.chunks_exact_mut(4).zip(t_head.chunks_exact(4)) {
+            o4[0] += t4[0];
+            o4[1] += t4[1];
+            o4[2] += t4[2];
+            o4[3] += t4[3];
+        }
+        for (o, &t) in o_tail.iter_mut().zip(t_tail) {
+            *o += t;
+        }
+    }
+    #[cfg(feature = "scalar-lanes")]
+    for (o, &t) in out.iter_mut().zip(tmp) {
+        *o += t;
+    }
+}
+
+/// Best-known scores per objective, shared across parallel tile
+/// workers so every tile prunes against the tightest incumbent seen so
 /// far. Monotonically decreasing; every stored value is an *achieved*
 /// score, hence a valid upper bound on the final minimum — pruning
 /// against it (strictly greater, behind the quantization margin) can
@@ -362,7 +531,7 @@ impl Incumbents {
         ]
     }
 
-    /// Fold a chunk's achieved best scores in (atomic running min).
+    /// Fold a tile's achieved best scores in (atomic running min).
     pub fn observe(&self, best: &Argmin3) {
         for (slot, &(score, _, _)) in self.bits.iter().zip(best.iter()) {
             let mut cur = slot.load(Ordering::Relaxed);
@@ -381,23 +550,148 @@ impl Incumbents {
     }
 }
 
-/// Fused argmin over one (candidate-range × tiling-chunk) region:
-/// evaluates the chunk's lanes once, then folds every candidate's
+/// Can a region (candidate block or pair×chunk) be skipped against the
+/// per-objective `targets`? `min_e`/`min_l` are the region's decoupled
+/// energy/latency lower bounds; when the region has infeasible lanes
+/// (which score exactly the f32 sentinel) the bounds are capped there.
+/// `true` only when every objective's bound clears its target beyond
+/// the quantization margin — no entry of the region can win or tie.
+fn region_beaten(min_e: f64, min_l: f64, any_inf: bool, targets: &[f64; 3]) -> bool {
+    let (lb_e, lb_l, lb_edp) = if any_inf {
+        (
+            min_e.min(SENTINEL32),
+            min_l.min(SENTINEL32),
+            (min_e * min_l).min(SENTINEL32 * SENTINEL32),
+        )
+    } else {
+        (min_e, min_l, min_e * min_l)
+    };
+    lb_e * PRUNE_MARGIN > targets[0]
+        && lb_l * PRUNE_MARGIN > targets[1]
+        && lb_edp * PRUNE_MARGIN > targets[2]
+}
+
+/// A 2-D decomposition of the (candidate × tiling) surface into
+/// `c_block × t_chunk` tiles. [`TileConfig::serving`] picks the serving
+/// defaults: the canonical [`T_CHUNK`]-lane tiling chunk, and a
+/// candidate block sized so one tile's lane slices fit in L2 (a single
+/// block — today's behavior — whenever the whole table already fits).
+#[derive(Debug, Clone, Copy)]
+pub struct TileConfig {
+    pub c_block: usize,
+    pub t_chunk: usize,
+}
+
+/// L2 budget for one tile's lane working set (four pair + two group
+/// `f64` lane buffers per distinct term). Conservative for 512 KiB+
+/// parts; `MMEE_CBLOCK` overrides the derived block size outright.
+const LANE_BYTE_BUDGET: usize = 256 * 1024;
+
+fn cblock_override() -> Option<usize> {
+    static CBLOCK: OnceLock<Option<usize>> = OnceLock::new();
+    *CBLOCK.get_or_init(|| {
+        std::env::var("MMEE_CBLOCK").ok().and_then(|s| s.parse().ok()).filter(|&n: &usize| n > 0)
+    })
+}
+
+impl TileConfig {
+    /// The serving-path tile shape for this candidate table.
+    pub fn serving(q: &QueryMatrix) -> TileConfig {
+        TileConfig { c_block: candidate_block(q), t_chunk: T_CHUNK }
+    }
+}
+
+/// Candidate-block size for `q`: the whole table when its distinct
+/// pair/group lane slices fit [`LANE_BYTE_BUDGET`], otherwise a
+/// proportional share (pessimistic — terms shared across blocks only
+/// shrink the real per-tile footprint). `MMEE_CBLOCK` overrides.
+fn candidate_block(q: &QueryMatrix) -> usize {
+    let nc = q.num_candidates().max(1);
+    if let Some(n) = cblock_override() {
+        return n;
+    }
+    let cq = &q.compiled;
+    let bytes = 8 * T_CHUNK * (4 * cq.pairs.len() + 2 * cq.groups.len());
+    if bytes <= LANE_BYTE_BUDGET {
+        return nc;
+    }
+    (nc * LANE_BYTE_BUDGET / bytes).max(16).min(nc)
+}
+
+/// The 2-D tile grid of one surface: the single source of the tile
+/// layout — index `i` is **tiling-chunk major, candidate-block minor**
+/// (`i = ti * n_c + ci`), which is exactly the order `merge_tiles` and
+/// the fronts merge rely on. Both fused drivers decompose through this
+/// so the layout contract cannot silently diverge between them.
+struct TileGrid {
+    nc: usize,
+    nt: usize,
+    n_c: usize,
+    n_t: usize,
+    tiles: TileConfig,
+}
+
+impl TileGrid {
+    fn new(q: &QueryMatrix, b: &BoundaryMatrix, tiles: TileConfig) -> TileGrid {
+        assert!(tiles.c_block > 0 && tiles.t_chunk > 0);
+        let nc = q.num_candidates();
+        let nt = b.num_tilings();
+        TileGrid {
+            nc,
+            nt,
+            n_c: nc.div_ceil(tiles.c_block),
+            n_t: nt.div_ceil(tiles.t_chunk),
+            tiles,
+        }
+    }
+
+    /// Total tile count (zero for an empty surface).
+    fn len(&self) -> usize {
+        self.n_t * self.n_c
+    }
+
+    /// Tile `i`'s (candidate, tiling) ranges.
+    fn ranges(&self, i: usize) -> ((usize, usize), (usize, usize)) {
+        let (ti, ci) = (i / self.n_c, i % self.n_c);
+        let c_range = (ci * self.tiles.c_block, ((ci + 1) * self.tiles.c_block).min(self.nc));
+        let t_range = (ti * self.tiles.t_chunk, ((ti + 1) * self.tiles.t_chunk).min(self.nt));
+        (c_range, t_range)
+    }
+}
+
+/// One tile's argmin plus the secondary (tie-break) score of each
+/// winner — what exact cross-candidate-block merging inside one tiling
+/// chunk needs (see `merge_tiles`).
+#[derive(Debug, Clone, Copy)]
+pub struct TileArgmin {
+    pub best: Argmin3,
+    pub tie: [f64; 3],
+}
+
+impl TileArgmin {
+    fn empty() -> TileArgmin {
+        TileArgmin { best: [(f64::INFINITY, 0, 0); 3], tie: [f64::INFINITY; 3] }
+    }
+}
+
+/// Fused argmin over one (candidate-block × tiling-chunk) tile:
+/// evaluates the block's lanes once, then folds every candidate's
 /// scores straight into the running best for all three objectives —
 /// same visit order and tie-break rule as the reference
 /// [`super::block_argmin3`] over a materialized block, without the
-/// block. With `incumbents`, pair×chunk combinations whose lower bound
-/// cannot beat the best score seen so far (globally or chunk-locally)
-/// are skipped entirely; `None` disables pruning.
+/// block. With `incumbents`, whole blocks — and, inside a surviving
+/// block, pair×chunk combinations — whose lower bound cannot beat the
+/// best score seen so far (globally or tile-locally) are skipped
+/// entirely; `None` disables pruning.
 ///
-/// Note: when a *global* incumbent prunes, this chunk's reported best
+/// Note: when a *global* incumbent prunes, this tile's reported best
 /// may be worse than its true local optimum — every pruned entry is
-/// strictly above a score some other chunk already achieved, so the
-/// cross-chunk merge result is still exact. With `None` or
-/// a fresh [`Incumbents`], the returned triple equals
-/// [`super::block_argmin3`] over the same region bit-for-bit.
+/// strictly above a score some other tile already achieved, so the
+/// cross-tile merge result is still exact. With `None` or a fresh
+/// [`Incumbents`], the returned triple equals [`super::block_argmin3`]
+/// over the same region bit-for-bit.
 #[allow(clippy::too_many_arguments)]
-pub fn chunk_argmin3(
+pub fn chunk_argmin3_tied(
     ws: &mut EvalWorkspace,
     q: &QueryMatrix,
     b: &BoundaryMatrix,
@@ -406,34 +700,41 @@ pub fn chunk_argmin3(
     c_range: (usize, usize),
     t_range: (usize, usize),
     incumbents: Option<&Incumbents>,
-) -> Argmin3 {
+) -> TileArgmin {
     let hw = hw.with_multipliers(mult);
     let cq = &q.compiled;
     let (c0, c1) = c_range;
     let (t0, t1) = t_range;
     let nt = t1 - t0;
-    ws.load_chunk(cq, b, &hw, t0, t1, incumbents.is_some());
+    let kind = if incumbents.is_some() { BoundKind::Argmin } else { BoundKind::None };
+    ws.load_chunk(cq, b, &hw, t0, t1, kind, c_range);
     let lanes = ws.lanes;
     let global = incumbents.map(|i| i.snapshot()).unwrap_or([f64::INFINITY; 3]);
-    let mut best: Argmin3 = [(f64::INFINITY, 0, 0); 3];
-    let mut tie: [f64; 3] = [f64::INFINITY; 3];
+    let mut out = TileArgmin::empty();
+    if incumbents.is_some() {
+        // Whole-block skip: decoupled pair/group minima bound every
+        // candidate of the block from below.
+        let fe = ws.blk_pair_min_e + ws.blk_grp_min_e;
+        let fl = ws.blk_pair_min_l.max(ws.blk_grp_min_l);
+        if region_beaten(fe, fl, ws.blk_pair_any_inf, &global) {
+            return out;
+        }
+    }
+    let (best, tie) = (&mut out.best, &mut out.tie);
     for c in c0..c1 {
         let p = cq.cand_pair[c] as usize;
         let g = cq.cand_group[c] as usize;
         if incumbents.is_some() {
             // Pair-level lower bounds (refined by this candidate's
             // group): no lane of this pair×chunk can score below them.
-            // Infeasible lanes score exactly the f32 sentinel, so the
-            // bound is capped there when the pair has any.
             let fe = ws.pair_min_e[p] + ws.grp_min_e[g];
             let fl = ws.pair_min_l[p].max(ws.grp_min_l[g]);
-            let (lb_e, lb_l, lb_edp) = if ws.pair_has_infeasible[p] {
-                (fe.min(SENTINEL32), fl.min(SENTINEL32), (fe * fl).min(SENTINEL32 * SENTINEL32))
-            } else {
-                (fe, fl, fe * fl)
-            };
-            let beaten = |lb: f64, k: usize| lb * PRUNE_MARGIN > best[k].0.min(global[k]);
-            if beaten(lb_e, 0) && beaten(lb_l, 1) && beaten(lb_edp, 2) {
+            let targets = [
+                best[0].0.min(global[0]),
+                best[1].0.min(global[1]),
+                best[2].0.min(global[2]),
+            ];
+            if region_beaten(fe, fl, ws.pair_has_infeasible[p], &targets) {
                 continue;
             }
         }
@@ -460,14 +761,13 @@ pub fn chunk_argmin3(
             }
         }
     }
-    best
+    out
 }
 
-/// Fused Pareto-front extraction over one chunk — the streaming
-/// counterpart of [`super::block_fronts`]: identical insertion order
-/// (candidates outer, tilings inner) and identical `f32`-quantized
-/// coordinates, no materialized block.
-pub fn chunk_fronts(
+/// Back-compat shape of [`chunk_argmin3_tied`] for callers that merge a
+/// single candidate block (the tie scores only matter across blocks).
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_argmin3(
     ws: &mut EvalWorkspace,
     q: &QueryMatrix,
     b: &BoundaryMatrix,
@@ -475,19 +775,61 @@ pub fn chunk_fronts(
     mult: &Multipliers,
     c_range: (usize, usize),
     t_range: (usize, usize),
+    incumbents: Option<&Incumbents>,
+) -> Argmin3 {
+    chunk_argmin3_tied(ws, q, b, hw, mult, c_range, t_range, incumbents).best
+}
+
+/// Fused Pareto-front extraction over one tile — the streaming
+/// counterpart of [`super::block_fronts`]: identical insertion order
+/// (candidates outer, tilings inner) and identical `f32`-quantized
+/// coordinates, no materialized block. With `bounds` (the shared
+/// achieved-point snapshots for the energy×latency and BS×DA fronts), a
+/// candidate×chunk whose lower-bound corners are strictly dominated on
+/// *both* fronts — beyond the quantization margin — is skipped: a
+/// strictly dominated region can contain no front member and cannot
+/// even perturb a coordinate tie, so the resulting fronts are
+/// bit-identical with pruning on or off.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_fronts_pruned(
+    ws: &mut EvalWorkspace,
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    c_range: (usize, usize),
+    t_range: (usize, usize),
+    bounds: Option<(&SharedFrontBound, &SharedFrontBound)>,
 ) -> Fronts {
     let hw = hw.with_multipliers(mult);
     let cq = &q.compiled;
     let (c0, c1) = c_range;
     let (t0, t1) = t_range;
     let nt = t1 - t0;
-    ws.load_chunk(cq, b, &hw, t0, t1, false);
+    let kind = if bounds.is_some() { BoundKind::Fronts } else { BoundKind::None };
+    ws.load_chunk(cq, b, &hw, t0, t1, kind, c_range);
     let lanes = ws.lanes;
     let mut el = Front::new();
     let mut bsda = Front::new();
     for c in c0..c1 {
         let p = cq.cand_pair[c] as usize;
         let g = cq.cand_group[c] as usize;
+        if let Some((el_b, bsda_b)) = bounds {
+            // Energy×latency corner over the pair's *feasible* lanes
+            // (infeasible lanes never reach the EL front); a pair with
+            // no feasible lane contributes nothing to it.
+            let fe = ws.pair_min_e[p] + ws.grp_min_e[g];
+            let fl = ws.pair_min_l[p].max(ws.grp_min_l[g]);
+            let el_skip = !ws.pair_min_e[p].is_finite()
+                || el_b.strictly_dominates(fe, fl, PRUNE_MARGIN);
+            // BS×DA corner over *all* lanes (pure pair terms; even
+            // infeasible mappings are charted on this front).
+            let bs_skip =
+                bsda_b.strictly_dominates(ws.pair_min_bs[p], ws.pair_min_da[p], PRUNE_MARGIN);
+            if el_skip && bs_skip {
+                continue;
+            }
+        }
         let pe = &ws.pair_e[p * lanes..p * lanes + nt];
         let pl = &ws.pair_l[p * lanes..p * lanes + nt];
         let pda = &ws.pair_da[p * lanes..p * lanes + nt];
@@ -515,10 +857,81 @@ pub fn chunk_fronts(
     (el, bsda)
 }
 
-/// Full-surface fused argmin: tiling-axis parallel chunks, each served
-/// from its worker's cached [`EvalWorkspace`], pruning against shared
-/// [`Incumbents`] when `prune` is set. Identical results to the
-/// Block-materializing reference path with or without pruning.
+/// [`chunk_fronts_pruned`] without dominance pruning (the reference
+/// shape the equivalence suite drives directly).
+pub fn chunk_fronts(
+    ws: &mut EvalWorkspace,
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    c_range: (usize, usize),
+    t_range: (usize, usize),
+) -> Fronts {
+    chunk_fronts_pruned(ws, q, b, hw, mult, c_range, t_range, None)
+}
+
+/// Merge per-tile winners exactly as the reference visits the surface:
+/// within one tiling chunk, candidate blocks fold left-to-right with
+/// the full (primary, secondary) tie-break — associatively equivalent
+/// to one scan over all candidates — and across tiling chunks,
+/// strictly-better primary wins (the reference [`super::merge_argmin3`]
+/// semantics). `parts` is tile-index ordered: tiling chunk major,
+/// candidate block minor (`n_c` blocks per chunk).
+fn merge_tiles(parts: &[TileArgmin], n_c: usize) -> Argmin3 {
+    let mut best: Argmin3 = [(f64::INFINITY, 0, 0); 3];
+    for chunk in parts.chunks(n_c) {
+        let mut cb = TileArgmin::empty();
+        for part in chunk {
+            for k in 0..3 {
+                let s = part.best[k].0;
+                if s < cb.best[k].0 || (s == cb.best[k].0 && part.tie[k] < cb.tie[k]) {
+                    cb.best[k] = part.best[k];
+                    cb.tie[k] = part.tie[k];
+                }
+            }
+        }
+        for (slot, p) in best.iter_mut().zip(cb.best) {
+            if p.0 < slot.0 {
+                *slot = p;
+            }
+        }
+    }
+    best
+}
+
+/// Full-surface fused argmin over an explicit 2-D tile shape: tiles run
+/// on the persistent evaluation pool, each served from its worker's
+/// cached [`EvalWorkspace`], pruning against shared [`Incumbents`] when
+/// `prune` is set. For any tile shape the result is bit-identical to a
+/// serial sweep of `t_chunk`-wide full-candidate chunks (and for the
+/// serving shape, to the Block-materializing reference path).
+pub fn fused_argmin3_tiled(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+    tiles: TileConfig,
+) -> Argmin3 {
+    let grid = TileGrid::new(q, b, tiles);
+    if grid.len() == 0 {
+        return [(f64::INFINITY, 0, 0); 3];
+    }
+    let incumbents = Incumbents::new();
+    let parts = crate::coordinator::run_indexed(grid.len(), |i| {
+        let (c_range, t_range) = grid.ranges(i);
+        EvalWorkspace::with(|ws| {
+            let inc = if prune { Some(&incumbents) } else { None };
+            let tile = chunk_argmin3_tied(ws, q, b, hw, mult, c_range, t_range, inc);
+            incumbents.observe(&tile.best);
+            tile
+        })
+    });
+    merge_tiles(&parts, grid.n_c)
+}
+
+/// Full-surface fused argmin with the serving tile shape.
 pub fn fused_argmin3(
     q: &QueryMatrix,
     b: &BoundaryMatrix,
@@ -526,32 +939,42 @@ pub fn fused_argmin3(
     mult: &Multipliers,
     prune: bool,
 ) -> Argmin3 {
-    let nt = b.num_tilings();
-    let nc = q.num_candidates();
-    let incumbents = Incumbents::new();
-    let parts = crate::coordinator::parallel_chunks(nt, T_CHUNK, |lo, hi| {
-        EvalWorkspace::with(|ws| {
-            let inc = if prune { Some(&incumbents) } else { None };
-            let best = chunk_argmin3(ws, q, b, hw, mult, (0, nc), (lo, hi), inc);
-            incumbents.observe(&best);
-            best
-        })
-    });
-    merge_argmin3(parts)
+    fused_argmin3_tiled(q, b, hw, mult, prune, TileConfig::serving(q))
 }
 
-/// Full-surface fused Pareto fronts (tiling-axis parallel, chunk fronts
-/// merged in chunk order — the same merge order as the reference).
-pub fn fused_fronts(
+/// Full-surface fused Pareto fronts over an explicit 2-D tile shape
+/// (tile fronts merged in tile-index order — the reference visit
+/// order). With `prune`, tiles publish their achieved front points into
+/// shared [`SharedFrontBound`] snapshots and skip strictly dominated
+/// candidate×chunk regions; results are bit-identical either way.
+pub fn fused_fronts_tiled(
     q: &QueryMatrix,
     b: &BoundaryMatrix,
     hw: &HwVector,
     mult: &Multipliers,
+    prune: bool,
+    tiles: TileConfig,
 ) -> Fronts {
-    let nt = b.num_tilings();
-    let nc = q.num_candidates();
-    let parts = crate::coordinator::parallel_chunks(nt, T_CHUNK, |lo, hi| {
-        EvalWorkspace::with(|ws| chunk_fronts(ws, q, b, hw, mult, (0, nc), (lo, hi)))
+    let grid = TileGrid::new(q, b, tiles);
+    if grid.len() == 0 {
+        return (Front::new(), Front::new());
+    }
+    let bounds = if prune {
+        Some((SharedFrontBound::new(), SharedFrontBound::new()))
+    } else {
+        None
+    };
+    let parts = crate::coordinator::run_indexed(grid.len(), |i| {
+        let (c_range, t_range) = grid.ranges(i);
+        EvalWorkspace::with(|ws| {
+            let bref = bounds.as_ref().map(|(el, bsda)| (el, bsda));
+            let fr = chunk_fronts_pruned(ws, q, b, hw, mult, c_range, t_range, bref);
+            if let Some((el_b, bsda_b)) = &bounds {
+                el_b.observe_front(&fr.0);
+                bsda_b.observe_front(&fr.1);
+            }
+            fr
+        })
     });
     let mut el = Front::new();
     let mut bsda = Front::new();
@@ -560,6 +983,17 @@ pub fn fused_fronts(
         bsda.merge(&bd);
     }
     (el, bsda)
+}
+
+/// Full-surface fused Pareto fronts with the serving tile shape.
+pub fn fused_fronts(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+) -> Fronts {
+    fused_fronts_tiled(q, b, hw, mult, prune, TileConfig::serving(q))
 }
 
 #[cfg(test)]
@@ -594,12 +1028,41 @@ mod tests {
     }
 
     #[test]
+    fn fused_matches_reference_under_narrow_candidate_blocks() {
+        let (q, b, hw, mult) = surface(45, 150);
+        let reference = crate::eval::serial_argmin3(&NativeBackend, &q, &b, &hw, &mult);
+        for c_block in [1, 7, 16, 45, 100] {
+            for prune in [false, true] {
+                let tiles = TileConfig { c_block, t_chunk: T_CHUNK };
+                let fused = fused_argmin3_tiled(&q, &b, &hw, &mult, prune, tiles);
+                assert_eq!(fused, reference, "c_block={c_block} prune={prune}");
+            }
+        }
+    }
+
+    #[test]
     fn fused_fronts_match_reference() {
         let (q, b, hw, mult) = surface(30, 120);
         let (el_ref, bsda_ref) = crate::eval::serial_fronts(&NativeBackend, &q, &b, &hw, &mult);
-        let (el, bsda) = fused_fronts(&q, &b, &hw, &mult);
-        assert_eq!(el.points(), el_ref.points());
-        assert_eq!(bsda.points(), bsda_ref.points());
+        for prune in [false, true] {
+            let (el, bsda) = fused_fronts(&q, &b, &hw, &mult, prune);
+            assert_eq!(el.points(), el_ref.points(), "prune={prune}");
+            assert_eq!(bsda.points(), bsda_ref.points(), "prune={prune}");
+        }
+    }
+
+    #[test]
+    fn fused_fronts_match_reference_under_narrow_candidate_blocks() {
+        let (q, b, hw, mult) = surface(30, 120);
+        let (el_ref, bsda_ref) = crate::eval::serial_fronts(&NativeBackend, &q, &b, &hw, &mult);
+        for c_block in [1, 9, 30] {
+            for prune in [false, true] {
+                let tiles = TileConfig { c_block, t_chunk: T_CHUNK };
+                let (el, bsda) = fused_fronts_tiled(&q, &b, &hw, &mult, prune, tiles);
+                assert_eq!(el.points(), el_ref.points(), "c_block={c_block} prune={prune}");
+                assert_eq!(bsda.points(), bsda_ref.points(), "c_block={c_block} prune={prune}");
+            }
+        }
     }
 
     #[test]
@@ -629,5 +1092,32 @@ mod tests {
         inc.observe(&[(3.0, 0, 0), (5.0, 0, 0), (15.0, 0, 0)]);
         inc.observe(&[(4.0, 1, 1), (2.0, 1, 1), (20.0, 1, 1)]);
         assert_eq!(inc.snapshot(), [3.0, 2.0, 15.0]);
+    }
+
+    #[test]
+    fn serving_tile_config_keeps_small_tables_in_one_block() {
+        let (q, ..) = surface(45, 40);
+        let tiles = TileConfig::serving(&q);
+        assert_eq!(tiles.t_chunk, T_CHUNK);
+        // 45 candidates compile to far fewer distinct terms than the L2
+        // budget holds: the serving shape must be a single block.
+        assert_eq!(tiles.c_block, q.num_candidates());
+    }
+
+    #[test]
+    fn unrolled_lane_helpers_match_plain_loops() {
+        let mut rng = crate::util::rng::Rng::new(0xAB5E);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 63, 64, 65] {
+            let a: Vec<f64> = (0..n).map(|_| rng.f64() * 1e3 - 500.0).collect();
+            let c: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let mut m1 = a.clone();
+            mul_lanes(&mut m1, &c);
+            let m2: Vec<f64> = a.iter().zip(&c).map(|(x, y)| x * y).collect();
+            assert_eq!(m1, m2, "mul_lanes diverged at n={n}");
+            let mut s1 = a.clone();
+            add_lanes(&mut s1, &c);
+            let s2: Vec<f64> = a.iter().zip(&c).map(|(x, y)| x + y).collect();
+            assert_eq!(s1, s2, "add_lanes diverged at n={n}");
+        }
     }
 }

@@ -115,11 +115,14 @@ pub type Fronts = (crate::search::pareto::Front, crate::search::pareto::Front);
 ///
 /// PJRT handles are not `Send`, so the trait itself is single-threaded;
 /// the native backend routes the reductions through the fused lane
-/// [`kernel`] (tiling-axis parallel, workspace-reused, bound-pruned),
+/// [`kernel`] (2-D candidate×tiling tiles on the persistent
+/// [`crate::coordinator::EvalPool`], workspace-reused, bound-pruned),
 /// branchy through the parallel materializing path
 /// ([`parallel_argmin3`], [`parallel_fronts`]), while the XLA backend
 /// parallelizes inside the compiled graph (and uses its in-graph
-/// `reduce` artifact for [`EvalBackend::argmin3`]).
+/// `reduce` artifact for [`EvalBackend::argmin3`]). Every path that
+/// uses `parallel_chunks` / [`crate::coordinator::run_indexed`]
+/// inherits the pool transparently — no call-site changes.
 pub trait EvalBackend {
     fn name(&self) -> &'static str;
 
@@ -183,8 +186,9 @@ pub trait EvalBackend {
     /// Fused streaming argmin: consume evaluation lanes directly and
     /// never materialize the `nc × nt` [`Block`]. The default falls
     /// back to the materializing reference; the native backend
-    /// overrides it with the lane-major [`kernel`] (workspace-reused,
-    /// bound-pruned), and XLA with its in-graph reduce.
+    /// overrides it with the lane-major [`kernel`] (2-D tiled,
+    /// workspace-reused, bound-pruned), and XLA with its in-graph
+    /// reduce.
     fn reduce_argmin3(
         &self,
         q: &QueryMatrix,

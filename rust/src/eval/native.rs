@@ -1,12 +1,14 @@
 //! Native rust evaluation backend.
 //!
 //! The hot reductions ([`EvalBackend::argmin3`] / [`EvalBackend::fronts`])
-//! go through the lane-major streaming [`super::kernel`]: per tiling
-//! chunk, each distinct (order, levels) *pair* (BS¹/BS²/DA) and each
-//! (recompute, stationary) *group* (BR/MAC/SMX/CL) is evaluated once
-//! across the whole chunk into reusable lane buffers, and the
-//! reductions fuse with the producers — no `exp`/`ln`, no per-scenario
-//! branching, no materialized surface (see README §Performance).
+//! go through the lane-major streaming [`super::kernel`]: per
+//! (candidate-block × tiling-chunk) tile — run on the persistent
+//! [`crate::coordinator::EvalPool`] — each distinct (order, levels)
+//! *pair* (BS¹/BS²/DA) and each (recompute, stationary) *group*
+//! (BR/MAC/SMX/CL) the block uses is evaluated once across the whole
+//! chunk into reusable lane buffers, and the reductions fuse with the
+//! producers — no `exp`/`ln`, no per-scenario branching, no
+//! materialized surface (see README §Performance).
 //!
 //! [`EvalBackend::eval_block`] keeps the original per-tiling scalar
 //! walk and *does* materialize a [`Block`]; it is the reference oracle
@@ -69,7 +71,9 @@ impl EvalBackend for NativeBackend {
         super::kernel::fused_argmin3(q, b, hw, mult, true)
     }
 
-    /// Fused lane-kernel Pareto fronts (no materialized block).
+    /// Fused lane-kernel Pareto fronts (no materialized block), with
+    /// dominance pruning against the shared achieved-point snapshot
+    /// (identical results to the unpruned path, property-tested).
     fn reduce_fronts(
         &self,
         q: &QueryMatrix,
@@ -77,7 +81,7 @@ impl EvalBackend for NativeBackend {
         hw: &HwVector,
         mult: &Multipliers,
     ) -> super::Fronts {
-        super::kernel::fused_fronts(q, b, hw, mult)
+        super::kernel::fused_fronts(q, b, hw, mult, true)
     }
 
     fn eval_block(

@@ -10,6 +10,11 @@
 //! shared-boundary batches to the batched path while singleton
 //! requests stay on the fast native path
 //! ([`crate::search::EngineBuilder::route_above`] wires it up).
+//!
+//! Both arms inherit the persistent [`crate::coordinator::EvalPool`]
+//! through the fused-reduction delegations below: routing decides *who*
+//! evaluates, the pool supplies the warm threads either way, so a
+//! routed engine pays no per-pass spawn cost on either path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

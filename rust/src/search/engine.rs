@@ -33,10 +33,14 @@
 //!
 //! The surface pass itself goes through the backend's *fused streaming
 //! reductions* ([`crate::eval::EvalBackend::try_argmin3`] →
-//! [`crate::eval::kernel`] for the native backend): per-thread
-//! [`crate::eval::kernel::EvalWorkspace`]s are warmed once, after which
-//! serving does no per-chunk heap allocation and pair×chunk regions
-//! that cannot beat the running incumbent are skipped outright.
+//! [`crate::eval::kernel`] for the native backend), running as 2-D
+//! (candidate-block × tiling-chunk) tiles on the persistent
+//! work-stealing [`crate::coordinator::EvalPool`]: after the first pass
+//! warms the pool and its per-worker
+//! [`crate::eval::kernel::EvalWorkspace`]s, steady-state serving spawns
+//! zero threads and does no per-tile heap allocation, and regions that
+//! cannot beat the running incumbent (argmin) or are strictly dominated
+//! by achieved points (fronts) are skipped outright.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,4 +1,8 @@
-//! Incremental 2-D Pareto front maintenance (minimization on both axes).
+//! Incremental 2-D Pareto front maintenance (minimization on both axes),
+//! plus the lock-free [`SharedFrontBound`] dominance snapshot the fused
+//! fronts kernel prunes against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A non-dominated point with its mapping provenance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -61,6 +65,114 @@ impl Front {
     }
 }
 
+/// Number of point slots in a [`SharedFrontBound`]. Small enough that a
+/// full scan per dominance probe stays cheap next to a 64-lane fold.
+const BOUND_SLOTS: usize = 16;
+
+/// Slot sentinel: packs to a NaN x-coordinate, so even an unguarded
+/// comparison against it can never report dominance.
+const EMPTY: u64 = u64::MAX;
+
+/// A lock-free, shared snapshot of *achieved* Pareto points, used by
+/// parallel front workers to skip regions that can no longer contribute
+/// ([`crate::eval::kernel`]'s fronts-path dominance pruning).
+///
+/// Each slot is one `AtomicU64` packing an `(x: f32, y: f32)` point, so
+/// a load is a consistent point — no torn (x, y) pairs, which is what
+/// makes pruning against it sound. Every stored point was actually
+/// inserted into some worker's front (coordinates already `f32`-
+/// quantized, exactly as fronts store them); slots are bucketed by the
+/// x-exponent and only ever replaced by a point that dominates the
+/// occupant, so the snapshot improves monotonically. The structure is a
+/// pruning *bound*, not the front itself: losing a CAS race or an
+/// unlucky bucket collision only costs pruning opportunity, never
+/// correctness.
+#[derive(Debug)]
+pub struct SharedFrontBound {
+    slots: [AtomicU64; BOUND_SLOTS],
+}
+
+impl Default for SharedFrontBound {
+    fn default() -> Self {
+        SharedFrontBound::new()
+    }
+}
+
+fn pack(x: f32, y: f32) -> u64 {
+    ((x.to_bits() as u64) << 32) | y.to_bits() as u64
+}
+
+fn unpack(v: u64) -> (f32, f32) {
+    (f32::from_bits((v >> 32) as u32), f32::from_bits(v as u32))
+}
+
+impl SharedFrontBound {
+    pub fn new() -> SharedFrontBound {
+        SharedFrontBound { slots: std::array::from_fn(|_| AtomicU64::new(EMPTY)) }
+    }
+
+    /// Record an achieved front point (coordinates must be the
+    /// `f32`-quantized values the fronts store). Non-finite points are
+    /// ignored.
+    pub fn observe(&self, x: f64, y: f64) {
+        let (x32, y32) = (x as f32, y as f32);
+        if !x32.is_finite() || !y32.is_finite() {
+            return;
+        }
+        // Bucket by the f32 exponent byte: points of similar magnitude
+        // compete for a slot, spreading the staircase across scales.
+        let slot = &self.slots[((x32.to_bits() >> 23) & 0xFF) as usize % BOUND_SLOTS];
+        let packed = pack(x32, y32);
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            let replace = if cur == EMPTY {
+                true
+            } else {
+                let (cx, cy) = unpack(cur);
+                // Monotone per-slot improvement: only a dominating point
+                // may evict, so a stored point always stays achieved.
+                x32 <= cx && y32 <= cy && (x32 < cx || y32 < cy)
+            };
+            if !replace {
+                return;
+            }
+            match slot.compare_exchange_weak(cur, packed, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record every point of a (freshly computed) front.
+    pub fn observe_front(&self, front: &Front) {
+        for p in front.points() {
+            self.observe(p.x, p.y);
+        }
+    }
+
+    /// Is the axis-aligned lower-bound corner `(x, y)` *strictly*
+    /// dominated by some achieved point, with room to spare for
+    /// `margin` (callers pass a `1 - ε` factor covering the `f32`
+    /// quantization of actual scores)? When this returns `true`, every
+    /// achievable point in the bounded region is strictly dominated in
+    /// both coordinates, so skipping the region can change neither the
+    /// final front membership nor the provenance of coordinate ties.
+    pub fn strictly_dominates(&self, x: f64, y: f64, margin: f64) -> bool {
+        if !(x.is_finite() && y.is_finite()) {
+            return false;
+        }
+        let (bx, by) = (x * margin, y * margin);
+        self.slots.iter().any(|s| {
+            let v = s.load(Ordering::Relaxed);
+            if v == EMPTY {
+                return false;
+            }
+            let (fx, fy) = unpack(v);
+            (fx as f64) < bx && (fy as f64) < by
+        })
+    }
+}
+
 /// One-shot front extraction from a point cloud.
 pub fn pareto_front(points: impl IntoIterator<Item = ParetoPoint>) -> Front {
     let mut f = Front::new();
@@ -97,6 +209,38 @@ mod tests {
     fn infinite_points_ignored() {
         let f = pareto_front([pp(f64::INFINITY, 1.0), pp(1.0, f64::NAN), pp(2.0, 2.0)]);
         assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn shared_bound_reports_only_strict_dominance() {
+        let b = SharedFrontBound::new();
+        assert!(!b.strictly_dominates(5.0, 5.0, 1.0), "empty bound prunes nothing");
+        b.observe(2.0, 3.0);
+        assert!(b.strictly_dominates(4.0, 6.0, 1.0));
+        // Equality on either axis is NOT strict dominance: ties must
+        // survive so provenance stays exact.
+        assert!(!b.strictly_dominates(2.0, 6.0, 1.0));
+        assert!(!b.strictly_dominates(4.0, 3.0, 1.0));
+        // Non-finite corners never prune.
+        assert!(!b.strictly_dominates(f64::INFINITY, 1.0, 1.0));
+        assert!(!b.strictly_dominates(4.0, f64::NAN, 1.0));
+        // The margin shrinks the corner: a bound point just below the
+        // corner stops dominating once the margin eats the gap.
+        b.observe(0.999_999_94, 0.999_999_94);
+        assert!(b.strictly_dominates(1.0, 1.0, 1.0));
+        assert!(!b.strictly_dominates(1.0, 1.0, 1.0 - 1e-6));
+    }
+
+    #[test]
+    fn shared_bound_slots_improve_monotonically() {
+        let b = SharedFrontBound::new();
+        b.observe(2.0, 3.0);
+        // A dominated point in the same magnitude bucket cannot evict.
+        b.observe(2.5, 3.5);
+        assert!(b.strictly_dominates(2.1, 3.1, 1.0), "original point must survive");
+        // A dominating point does evict.
+        b.observe(2.0, 2.0);
+        assert!(b.strictly_dominates(2.1, 2.1, 1.0));
     }
 
     #[test]

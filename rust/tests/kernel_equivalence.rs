@@ -2,15 +2,15 @@
 //! (`reduce_argmin3` / `reduce_fronts`) are *identical* — same scores,
 //! same candidate and tiling indices, same tie-breaks — to the
 //! Block-materializing reference path, across randomized workloads,
-//! accelerators, chunk boundaries, and with bound pruning both on and
-//! off.
+//! accelerators, chunk boundaries, randomized 2-D (candidate × tiling)
+//! tile shapes, and with bound/dominance pruning both on and off.
 
-use mmee::config::{presets, Accelerator, Workload};
+use mmee::config::{presets, Accelerator, HwVector, Workload};
 use mmee::encode::{BoundaryMatrix, QueryMatrix};
-use mmee::eval::kernel::{chunk_argmin3, chunk_fronts, EvalWorkspace, Incumbents};
+use mmee::eval::kernel::{chunk_argmin3, chunk_fronts, EvalWorkspace, Incumbents, TileConfig};
 use mmee::eval::{
     block_argmin3, block_fronts, kernel, native::NativeBackend, serial_argmin3, serial_fronts,
-    EvalBackend,
+    Argmin3, EvalBackend, Fronts,
 };
 use mmee::model::Multipliers;
 use mmee::tiling::enumerate_tilings;
@@ -91,6 +91,54 @@ fn fmt_argmin(a: &mmee::eval::Argmin3) -> String {
     format!("{a:?}")
 }
 
+/// The serial oracle for an arbitrary tiling-chunk width: full-candidate
+/// `eval_block`s merged with strictly-better primary in chunk order —
+/// `serial_argmin3` generalized from the fixed serving chunk. Any 2-D
+/// candidate-block split of the same chunks must reproduce it exactly
+/// (block merging carries the secondary tie-break).
+fn oracle_argmin_chunked(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    t_chunk: usize,
+) -> Argmin3 {
+    let (nt, nc) = (b.num_tilings(), q.num_candidates());
+    let mut best: Argmin3 = [(f64::INFINITY, 0, 0); 3];
+    for lo in (0..nt).step_by(t_chunk) {
+        let hi = (lo + t_chunk).min(nt);
+        let block = NativeBackend.eval_block(q, b, hw, mult, (0, nc), (lo, hi));
+        for (slot, p) in best.iter_mut().zip(block_argmin3(&block)) {
+            if p.0 < slot.0 {
+                *slot = p;
+            }
+        }
+    }
+    best
+}
+
+/// Fronts counterpart of [`oracle_argmin_chunked`]: chunk fronts merged
+/// in visit order, so coordinate ties keep first-visited provenance.
+fn oracle_fronts_chunked(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    t_chunk: usize,
+) -> Fronts {
+    let (nt, nc) = (b.num_tilings(), q.num_candidates());
+    let mut el = mmee::search::pareto::Front::new();
+    let mut bsda = mmee::search::pareto::Front::new();
+    for lo in (0..nt).step_by(t_chunk) {
+        let hi = (lo + t_chunk).min(nt);
+        let block = NativeBackend.eval_block(q, b, hw, mult, (0, nc), (lo, hi));
+        let (e, bd) = block_fronts(&block);
+        el.merge(&e);
+        bsda.merge(&bd);
+    }
+    (el, bsda)
+}
+
 #[test]
 fn prop_chunk_reductions_match_block_oracle() {
     prop::quick(24, 0x51AB, gen_case, |case| {
@@ -163,9 +211,68 @@ fn prop_full_surface_fused_matches_reference() {
             return Err("NativeBackend::argmin3 diverged from reference".into());
         }
         let (el_ref, bsda_ref) = serial_fronts(&NativeBackend, &q, &b, &hw, &mult);
+        for prune in [false, true] {
+            let (el, bsda) = kernel::fused_fronts(&q, &b, &hw, &mult, prune);
+            if el.points() != el_ref.points() || bsda.points() != bsda_ref.points() {
+                return Err(format!("fused fronts (prune={prune}) diverged from reference"));
+            }
+        }
+        // The public backend entry point (fused + dominance-pruned).
         let (el, bsda) = NativeBackend.reduce_fronts(&q, &b, &hw, &mult);
         if el.points() != el_ref.points() || bsda.points() != bsda_ref.points() {
-            return Err("fused fronts diverged from reference fronts".into());
+            return Err("NativeBackend::reduce_fronts diverged from reference fronts".into());
+        }
+        Ok(())
+    });
+}
+
+/// Randomized 2-D tile shapes: for ANY (candidate-block, tiling-chunk)
+/// decomposition — run pool-parallel with work stealing — the fused
+/// reductions must reproduce the serial full-candidate oracle over the
+/// same tiling chunks bit-for-bit (scores, indices, tie-breaks, front
+/// provenance), with pruning on or off.
+#[test]
+fn prop_randomized_2d_tiles_match_serial_oracle() {
+    prop::quick(12, 0x2D71, gen_case, |case| {
+        let (q, b, hw, mult) = build_surface(case);
+        let (nc, nt) = (q.num_candidates(), b.num_tilings());
+        // Derive tile shapes from the case's (already random) ranges so
+        // shrinking stays meaningful: single-candidate blocks, unaligned
+        // widths, and full-width blocks all occur.
+        let c_block = 1 + case.c_range.0 % nc.max(1);
+        let t_chunk = 1 + case.t_range.0 % nt.max(1);
+        let tiles = TileConfig { c_block, t_chunk };
+        let want = oracle_argmin_chunked(&q, &b, &hw, &mult, t_chunk);
+        for prune in [false, true] {
+            let got = kernel::fused_argmin3_tiled(&q, &b, &hw, &mult, prune, tiles);
+            if got != want {
+                return Err(format!(
+                    "tiled argmin (c_block={c_block}, t_chunk={t_chunk}, prune={prune}) \
+                     diverged: {} vs {}",
+                    fmt_argmin(&got),
+                    fmt_argmin(&want)
+                ));
+            }
+        }
+        let (el_ref, bsda_ref) = oracle_fronts_chunked(&q, &b, &hw, &mult, t_chunk);
+        for prune in [false, true] {
+            let (el, bsda) = kernel::fused_fronts_tiled(&q, &b, &hw, &mult, prune, tiles);
+            if el.points() != el_ref.points() {
+                return Err(format!(
+                    "tiled EL front (c_block={c_block}, t_chunk={t_chunk}, prune={prune}) \
+                     diverged: {} vs {} points",
+                    el.len(),
+                    el_ref.len()
+                ));
+            }
+            if bsda.points() != bsda_ref.points() {
+                return Err(format!(
+                    "tiled BS-DA front (c_block={c_block}, t_chunk={t_chunk}, prune={prune}) \
+                     diverged: {} vs {} points",
+                    bsda.len(),
+                    bsda_ref.len()
+                ));
+            }
         }
         Ok(())
     });
