@@ -36,12 +36,20 @@ fn trace_lines() -> Vec<String> {
 fn report_rates(engine: &MmeeEngine, served: usize, secs: f64) {
     let (ph, pm) = engine.plan_cache_stats();
     let (bh, bm) = engine.boundary_cache_stats();
+    // Weighted view: hits and (miss-driven) inserts in feature slots,
+    // so the rate reads as "fraction of boundary words served from
+    // cache instead of rebuilt" — big surfaces count for more.
+    let (hw, pw) = engine.boundary_cache_weight_stats();
     println!(
-        "    {:.1} req/s; plan cache {ph}/{} hits ({:.0}%), boundary cache {bh}/{} hits",
+        "    {:.1} req/s; plan cache {ph}/{} hits ({:.0}%), boundary cache {bh}/{} hits \
+         (weighted: {hw}/{} slots from cache = {:.0}%; {} cold builds)",
         served as f64 / secs,
         ph + pm,
         100.0 * ph as f64 / ((ph + pm).max(1)) as f64,
         bh + bm,
+        hw + pw,
+        100.0 * hw as f64 / ((hw + pw).max(1)) as f64,
+        engine.boundary_build_count(),
     );
 }
 
@@ -86,6 +94,36 @@ fn main() {
         service::serve_lines(&engine, per_line.as_bytes(), &mut out).unwrap()
     });
     report_rates(&engine, n_warm, warm.median.as_secs_f64());
+
+    // Weight-bounded boundary cache (ROADMAP "cache policy" item):
+    // repeat optimize() rounds over the trace's surfaces — optimize
+    // bypasses the plan cache, so boundary retention differences show
+    // directly in the weighted hit rate ("fraction of boundary words
+    // served from cache"). The 1k-slot budget admits nothing: every
+    // round pays cold builds, the weighted floor of this trace.
+    use mmee::config::presets;
+    use mmee::search::Objective;
+    let surfaces = [
+        (presets::bert_base(512), presets::accel1()),
+        (presets::bert_base(512), presets::accel2()),
+        (presets::cc1(), presets::accel1()),
+    ];
+    for (label, engine) in [
+        ("unbounded weight budget", MmeeEngine::native()),
+        ("1k-slot weight budget", MmeeEngine::builder().boundary_weight_budget(1_000).build()),
+    ] {
+        let (s, n) = bench.once(&format!("optimize x2 rounds ({label})"), || {
+            let mut served = 0usize;
+            for _ in 0..2 {
+                for (w, a) in &surfaces {
+                    engine.optimize(w, a, Objective::Energy).unwrap();
+                    served += 1;
+                }
+            }
+            served
+        });
+        report_rates(&engine, n, s.median.as_secs_f64());
+    }
     println!(
         "\nbatched vs sequential (cold): {:.2}x  |  concurrent vs sequential (cold): {:.2}x",
         seq.median.as_secs_f64() / bat.median.as_secs_f64().max(1e-12),

@@ -1,0 +1,155 @@
+//! Cold surface-construction benchmark (paper §VII-H: end-to-end
+//! runtime is dominated by the enumeration side): the serial reference
+//! (`enumerate_tilings` + `BoundaryMatrix::build`) vs the fused
+//! builder (`encode::build_surface`) — serial and pooled, capacity
+//! prefilter pruned and unpruned — per preset surface. Emits
+//! `BENCH_build.json` with a per-preset fused-parallel vs
+//! serial-reference speedup and a ≥2× cold-build target flag, so the
+//! construction-path trajectory is machine-trackable across PRs.
+//!
+//! `--smoke` (or `--test`) runs every series once on small surfaces
+//! with a tiny time budget and still writes the full JSON schema — CI
+//! runs it so the schema cannot rot unnoticed.
+
+use mmee::config::presets;
+use mmee::config::{Accelerator, Workload};
+use mmee::encode::{build_surface, BoundaryMatrix, BuildConfig};
+use mmee::tiling::enumerate_tilings;
+use mmee::util::bench::{Bench, Sample};
+use mmee::util::json::Json;
+
+/// One benchmark row destined for BENCH_build.json.
+fn row(preset: &str, series: &str, sample: &Sample, tilings: usize) -> Json {
+    let ns = sample.median.as_secs_f64() * 1e9;
+    Json::obj(vec![
+        ("preset", Json::str(preset)),
+        ("series", Json::str(series)),
+        ("median_ns", Json::num(ns)),
+        ("ns_per_tiling", Json::num(ns / (tilings.max(1) as f64))),
+        ("tilings", Json::num(tilings as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let cases: Vec<(&str, Workload, Accelerator)> = if smoke {
+        vec![("bert-base-128/accel1", presets::bert_base(128), presets::accel1())]
+    } else {
+        vec![
+            ("bert-base-512/accel1", presets::bert_base(512), presets::accel1()),
+            ("bert-base-4k/accel2", presets::bert_base(4096), presets::accel2()),
+            ("gpt3-13b-2k/accel2", presets::gpt3_13b(2048), presets::accel2()),
+            ("cc1/accel1", presets::cc1(), presets::accel1()),
+        ]
+    };
+
+    let mut bench = if smoke {
+        Bench { budget: std::time::Duration::from_millis(40), ..Bench::new() }
+    } else {
+        Bench::new()
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
+    let mut all_met = true;
+
+    for (name, w, accel) in &cases {
+        let cap = Some(accel.capacity_words() as f64);
+        let nt = enumerate_tilings(&w.gemm, cap).len();
+        println!("{name}: {nt} tilings after the capacity prefilter");
+
+        let serial_ref = bench.run(&format!("{name} serial reference"), || {
+            BoundaryMatrix::build(enumerate_tilings(&w.gemm, cap), accel, w)
+        });
+        rows.push(row(name, "serial_reference", &serial_ref, nt));
+
+        let fused_serial = bench.run(&format!("{name} fused serial (pruned)"), || {
+            build_surface(w, accel, cap, &BuildConfig::serial())
+        });
+        rows.push(row(name, "fused_serial_pruned", &fused_serial, nt));
+
+        let fused_serial_noprune = bench.run(&format!("{name} fused serial (unpruned)"), || {
+            build_surface(w, accel, cap, &BuildConfig { prune: false, pool: None })
+        });
+        rows.push(row(name, "fused_serial_unpruned", &fused_serial_noprune, nt));
+
+        let serving = BuildConfig::serving();
+        let fused_par = bench.run(&format!("{name} fused parallel (pruned)"), || {
+            build_surface(w, accel, cap, &serving)
+        });
+        rows.push(row(name, "fused_parallel_pruned", &fused_par, nt));
+
+        let fused_par_noprune = bench.run(&format!("{name} fused parallel (unpruned)"), || {
+            build_surface(w, accel, cap, &BuildConfig { prune: false, pool: serving.pool })
+        });
+        rows.push(row(name, "fused_parallel_unpruned", &fused_par_noprune, nt));
+
+        // Sanity: the measured paths agree bit-for-bit.
+        let want = BoundaryMatrix::build(enumerate_tilings(&w.gemm, cap), accel, w);
+        let got = build_surface(w, accel, cap, &serving);
+        assert_eq!(got.tilings, want.tilings, "{name}: fused tiling order diverged");
+        assert_eq!(got.raw(), want.raw(), "{name}: fused raw store diverged");
+
+        let speedup = serial_ref.median.as_secs_f64() / fused_par.median.as_secs_f64().max(1e-12);
+        let prune_gain = fused_serial_noprune.median.as_secs_f64()
+            / fused_serial.median.as_secs_f64().max(1e-12);
+        let met = speedup >= 2.0;
+        all_met &= met;
+        println!(
+            "  fused parallel vs serial reference: {speedup:.2}x (target >= 2x, met: {met}); \
+             subtree pruning (serial fill): {prune_gain:.2}x"
+        );
+        speedups.push(Json::obj(vec![
+            ("preset", Json::str(*name)),
+            ("cold_build_speedup", Json::num(speedup)),
+            ("prune_speedup_serial", Json::num(prune_gain)),
+            ("met", Json::Bool(met)),
+        ]));
+    }
+
+    // The uncapped sweep path (Fig. 15/16) on the first case: no
+    // prefilter, so this isolates the partials + parallel-fill gains.
+    let (name, w, accel) = &cases[0];
+    let nt_uncapped = enumerate_tilings(&w.gemm, None).len();
+    let ref_uncapped = bench.run(&format!("{name} serial reference (uncapped)"), || {
+        BoundaryMatrix::build(enumerate_tilings(&w.gemm, None), accel, w)
+    });
+    rows.push(row(name, "serial_reference_uncapped", &ref_uncapped, nt_uncapped));
+    let fused_uncapped = bench.run(&format!("{name} fused parallel (uncapped)"), || {
+        build_surface(w, accel, None, &BuildConfig::serving())
+    });
+    rows.push(row(name, "fused_parallel_uncapped", &fused_uncapped, nt_uncapped));
+    println!(
+        "  uncapped sweep build: {:.2}x vs serial reference",
+        ref_uncapped.median.as_secs_f64() / fused_uncapped.median.as_secs_f64().max(1e-12)
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("surface_build")),
+        ("smoke", Json::Bool(smoke)),
+        ("results", Json::arr(rows)),
+        ("speedups", Json::arr(speedups)),
+        ("build_speedup_target", Json::num(2.0)),
+        ("build_speedup_met", Json::Bool(all_met)),
+    ]);
+    let text = format!("{report}\n");
+    // Schema keys are asserted on EVERY run (CI's --smoke step makes
+    // the check cheap and regular; full runs get the same guarantee).
+    for key in [
+        "serial_reference",
+        "fused_serial_pruned",
+        "fused_serial_unpruned",
+        "fused_parallel_pruned",
+        "fused_parallel_unpruned",
+        "fused_parallel_uncapped",
+        "cold_build_speedup",
+        "build_speedup_target",
+        "build_speedup_met",
+    ] {
+        assert!(text.contains(key), "BENCH_build.json schema lost key {key}");
+    }
+    std::fs::write("BENCH_build.json", &text).expect("write BENCH_build.json");
+    println!(
+        "wrote BENCH_build.json (cold-build >=2x target met: {all_met}){}",
+        if smoke { "  [smoke ok]" } else { "" }
+    );
+}

@@ -344,6 +344,63 @@ struct Slot<T>(UnsafeCell<Option<T>>);
 // slot i; the submitter reads only after `EvalPool::run` returns.
 unsafe impl<T: Send> Sync for Slot<T> {}
 
+/// A shared buffer for disjoint-range parallel fills — the write side
+/// of a **count-then-fill** pass (the fused surface builder's phase 2):
+/// per-task ranges are computed up front by prefix sums over phase-1
+/// counts, tasks write their own range through [`FillBuf::slice_mut`],
+/// and the owner takes the vector back only after the pass barrier
+/// ([`EvalPool::run`] returning). The aliasing contract mirrors the
+/// private `Slot` cell, generalized from one cell to one range per
+/// task.
+///
+/// The backing vector never reallocates (no growth API is exposed), so
+/// the base pointer captured at construction stays valid for the
+/// buffer's lifetime.
+pub struct FillBuf<T> {
+    buf: UnsafeCell<Vec<T>>,
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: tasks only touch disjoint ranges (caller contract on
+// `slice_mut`), and the owner reads only after the pass barrier.
+unsafe impl<T: Send> Sync for FillBuf<T> {}
+unsafe impl<T: Send> Send for FillBuf<T> {}
+
+impl<T> FillBuf<T> {
+    pub fn new(mut v: Vec<T>) -> FillBuf<T> {
+        let ptr = v.as_mut_ptr();
+        let len = v.len();
+        FillBuf { buf: UnsafeCell::new(v), ptr, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mutable sub-range `[lo, hi)`.
+    ///
+    /// # Safety
+    ///
+    /// Ranges handed to concurrently running tasks must be pairwise
+    /// disjoint, and no range may be alive when [`FillBuf::into_inner`]
+    /// is called (the pass barrier provides both in practice).
+    #[allow(clippy::mut_from_ref)] // disjointness is the caller contract above
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        assert!(lo <= hi && hi <= self.len, "range [{lo}, {hi}) out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+
+    /// Take the filled vector back (after the pass barrier).
+    pub fn into_inner(self) -> Vec<T> {
+        self.buf.into_inner()
+    }
+}
+
 /// Run `f(i)` for `i` in `0..n` on the global [`EvalPool`] and collect
 /// the results in index order. Serial (no pool) when only one worker is
 /// configured or there is at most one task.
@@ -718,6 +775,34 @@ mod tests {
             sum.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.into_inner(), (0..16u64).sum());
+    }
+
+    #[test]
+    fn fillbuf_disjoint_parallel_fill_matches_serial() {
+        // Count-then-fill shape: uneven per-task ranges from a prefix
+        // sum, filled concurrently on a private pool.
+        let counts: Vec<usize> = (0..57).map(|i| (i * 7) % 11).collect();
+        let mut offsets = vec![0usize; counts.len() + 1];
+        for (i, &c) in counts.iter().enumerate() {
+            offsets[i + 1] = offsets[i] + c;
+        }
+        let total = offsets[counts.len()];
+        let buf = FillBuf::new(vec![0usize; total]);
+        assert_eq!(buf.len(), total);
+        let pool = EvalPool::new(4);
+        pool.run(counts.len(), |b| {
+            // SAFETY: prefix-sum ranges are pairwise disjoint.
+            let s = unsafe { buf.slice_mut(offsets[b], offsets[b + 1]) };
+            for (k, slot) in s.iter_mut().enumerate() {
+                *slot = b * 1000 + k;
+            }
+        });
+        let got = buf.into_inner();
+        let mut want = Vec::with_capacity(total);
+        for (b, &c) in counts.iter().enumerate() {
+            want.extend((0..c).map(|k| b * 1000 + k));
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

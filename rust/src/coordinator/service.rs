@@ -38,8 +38,9 @@
 //! (`workload`, `accel`, `objective`, `candidate`, `tiling`,
 //! `energy_j`, `latency_s`, `edp`, `dram_words`, `buffer_words`,
 //! `recompute`, `mappings_evaluated`, `elapsed_s`) plus `stats`
-//! (`candidates`/`tilings`/`mappings`/`elapsed_s`) and `provenance`
-//! (`backend`/`cache_hit`/`boundary_cache_hit`) objects.
+//! (`candidates`/`tilings`/`mappings`/`elapsed_s`/`boundary_build_s`)
+//! and `provenance` (`backend`/`cache_hit`/`boundary_cache_hit`)
+//! objects.
 //!
 //! Error response — structured, machine-dispatchable:
 //!

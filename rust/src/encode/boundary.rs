@@ -8,6 +8,20 @@
 //! auto-vectorize. The log-domain view consumed by the XLA artifact is
 //! built lazily on first use — native-only requests never pay the
 //! `num_tilings × NUM_FEATURES` calls to `ln()`.
+//!
+//! Two constructors exist:
+//!
+//! * [`BoundaryMatrix::build`] — the **serial reference**: takes an
+//!   already-enumerated tiling list and derives each column with one
+//!   [`features`] call per tiling. Kept as the oracle the fused path
+//!   is property-tested against (`tests/surface_build.rs`).
+//! * [`BoundaryMatrix::from_parts`] — assembly from a raw store filled
+//!   elsewhere. The serving path ([`crate::encode::build`]) fuses
+//!   tiling enumeration, the capacity prefilter, and column
+//!   construction into one parallel count-then-fill pass (per-
+//!   dimension feature partials, no intermediate `Vec<Tiling>` before
+//!   the store is sized) and lands here — byte-identical to the
+//!   reference, columns in the same lexicographic order.
 
 use std::sync::OnceLock;
 
@@ -28,6 +42,10 @@ pub struct BoundaryMatrix {
 }
 
 impl BoundaryMatrix {
+    /// Serial reference build: one [`features`] call per tiling,
+    /// scattered into the column-major store. The serving path uses
+    /// the fused builder ([`crate::encode::build::build_surface`])
+    /// instead; this constructor is the equivalence oracle.
     pub fn build(tilings: Vec<Tiling>, accel: &Accelerator, workload: &Workload) -> BoundaryMatrix {
         let n = tilings.len();
         let mut raw = vec![0.0f64; NUM_FEATURES * n];
@@ -38,6 +56,20 @@ impl BoundaryMatrix {
             }
         }
         BoundaryMatrix { tilings, raw, ln: OnceLock::new() }
+    }
+
+    /// Assemble from an externally filled column-major raw store (the
+    /// fused builder's count-then-fill output). `raw` must be
+    /// `[NUM_FEATURES × tilings.len()]`, feature-major.
+    pub fn from_parts(tilings: Vec<Tiling>, raw: Vec<f64>) -> BoundaryMatrix {
+        assert_eq!(raw.len(), NUM_FEATURES * tilings.len(), "raw store shape mismatch");
+        BoundaryMatrix { tilings, raw, ln: OnceLock::new() }
+    }
+
+    /// The whole column-major raw store (equivalence tests compare
+    /// builders byte-for-byte through this).
+    pub fn raw(&self) -> &[f64] {
+        &self.raw
     }
 
     pub fn num_tilings(&self) -> usize {

@@ -1,0 +1,282 @@
+//! Fused surface construction: tiling enumeration, the capacity
+//! prefilter, and boundary-column derivation in **one parallel pass**.
+//!
+//! The paper (§VII-H) finds MMEE's end-to-end runtime dominated by the
+//! enumeration side — integer factorization and tiling generation —
+//! and after the evaluation kernel went lane-major and pooled, the
+//! serial `enumerate_tilings` → `BoundaryMatrix::build` pair was the
+//! last cold stage standing: a quadruple nested loop materializing a
+//! `Vec<Tiling>`, then a second sweep re-deriving a full feature
+//! vector per tiling. [`build_surface`] replaces both with a single
+//! fused pass built from three mechanisms:
+//!
+//! * **Per-dimension feature partials.** Every non-constant entry of
+//!   the feature vector depends on exactly one dimension's
+//!   `(x_D, x_G)` pair ([`DIM_FEATURES`]), so the partial column of
+//!   each divisor pair is computed **once per dimension**
+//!   (O(Σ|divisors|) `div_ceil` work instead of O(Π|divisors|)) and
+//!   the cross product only copies values into the column-major raw
+//!   store. Features of the three outer dimensions are run-filled
+//!   (`slice::fill` over each inner-dimension survivor run).
+//! * **Monotone subtree pruning.** [`min_footprint`] is monotone
+//!   increasing in every granule and pair lists iterate granule-
+//!   descending, so capacity-infeasible tilings form a *prefix* of
+//!   every level of the sweep: the innermost dimension's survivors are
+//!   found by binary search ([`feasible_from`]) and whole `l × j`
+//!   subtrees are skipped when even all-1 inner granules overflow —
+//!   an asymptotic reduction for capacity-constrained enumerations,
+//!   with the per-tiling linear test retained as the unpruned mode.
+//! * **Parallel count-then-fill.** The outer `(i-pair, k-pair)` blocks
+//!   are counted in parallel on the [`EvalPool`], prefix sums assign
+//!   each block a disjoint column range, and a second parallel pass
+//!   writes tilings and feature columns straight into preallocated
+//!   stores ([`FillBuf`]) — no lock on the write path, and the output
+//!   ordering is **bit-identical to the serial lexicographic sweep for
+//!   any worker count**, so kernels, caches, and tie-break semantics
+//!   downstream are untouched.
+//!
+//! Equivalence (values, ordering, and the survivor set, for pruning
+//! on/off × serial/pooled × capped/uncapped) is property-tested in
+//! `tests/surface_build.rs` against the retained serial reference;
+//! `benches/surface_build.rs` tracks the cold-build speedup in
+//! `BENCH_build.json`.
+
+use crate::config::{Accelerator, Workload};
+use crate::coordinator::pool::{default_workers, EvalPool, FillBuf};
+use crate::encode::BoundaryMatrix;
+use crate::model::analytic::{constant_features, dim_partial, DIM_FEATURES};
+use crate::model::terms::NUM_FEATURES;
+use crate::tiling::factorize::factor_pairs_cached;
+use crate::tiling::{feasible_from, min_footprint, Tiling};
+
+/// How one [`build_surface`] call runs. Both toggles exist so the
+/// equivalence suite can exercise every combination; serving uses
+/// [`BuildConfig::serving`].
+pub struct BuildConfig<'p> {
+    /// Monotone subtree pruning for the capacity prefilter: binary-
+    /// search the survivor suffix per level and skip all-infeasible
+    /// subtrees. Off = the per-tiling linear test (the reference
+    /// predicate, evaluated tiling by tiling). Ignored for uncapped
+    /// builds.
+    pub prune: bool,
+    /// Pool for the parallel count-then-fill phases; `None` runs the
+    /// same fused pass on the calling thread.
+    pub pool: Option<&'p EvalPool>,
+}
+
+impl BuildConfig<'static> {
+    /// The serving path: pruning on, global pool (serial when only one
+    /// worker is configured — same policy as `run_indexed`).
+    pub fn serving() -> BuildConfig<'static> {
+        let pool = (default_workers() > 1).then(EvalPool::global);
+        BuildConfig { prune: true, pool }
+    }
+
+    /// Fused but single-threaded (pruning on) — the bench's
+    /// parallelism ablation.
+    pub fn serial() -> BuildConfig<'static> {
+        BuildConfig { prune: true, pool: None }
+    }
+}
+
+/// Iterate the survivor runs of one outer block `(i_G, k_G)`: invokes
+/// `emit(l_index, j_start)` for every `l` pair with at least one
+/// surviving `j` pair — the survivors being the suffix `fj[j_start..]`
+/// (granule-descending lists make the capacity-feasible set a suffix;
+/// see the module docs). Shared by the count and fill phases so their
+/// survivor sets cannot diverge.
+fn for_each_run(
+    (ig, kg): (usize, usize),
+    fl: &[(usize, usize)],
+    fj: &[(usize, usize)],
+    capacity_words: Option<f64>,
+    prune: bool,
+    mut emit: impl FnMut(usize, usize),
+) {
+    let Some(cap) = capacity_words else {
+        // Uncapped: every tiling survives.
+        for li in 0..fl.len() {
+            emit(li, 0);
+        }
+        return;
+    };
+    // x_D entries are irrelevant to the footprint; granule 1 stands in
+    // for the not-yet-chosen dimensions (the subtree lower bound).
+    let mut probe = Tiling { xd: [1; 4], xg: [ig, kg, 1, 1] };
+    // Subtree skip: `l` entries whose best case (minimal l and j
+    // granules) still overflows have no survivors and form a prefix.
+    let l0 = if prune { feasible_from(fl, 2, &probe, cap) } else { 0 };
+    for (li, &(_, lg)) in fl.iter().enumerate().skip(l0) {
+        probe.xg[2] = lg;
+        let j0 = if prune {
+            feasible_from(fj, 3, &probe, cap)
+        } else {
+            // Per-tiling linear test — the reference predicate.
+            let mut j0 = fj.len();
+            for (ji, &(_, jg)) in fj.iter().enumerate() {
+                probe.xg[3] = jg;
+                if min_footprint(&probe) <= cap {
+                    j0 = ji;
+                    break;
+                }
+            }
+            probe.xg[3] = 1;
+            j0
+        };
+        if j0 < fj.len() {
+            emit(li, j0);
+        }
+    }
+}
+
+/// Run `f(block)` for every block, on `pool` or serially.
+fn run_blocks(pool: Option<&EvalPool>, blocks: usize, f: impl Fn(usize) + Sync) {
+    match pool {
+        Some(p) if blocks > 1 => p.run(blocks, f),
+        _ => (0..blocks).for_each(f),
+    }
+}
+
+/// Build the boundary matrix for one (workload, accel, capacity) in a
+/// single fused pass — the cold-path replacement for
+/// `enumerate_tilings` + `BoundaryMatrix::build`. Output is
+/// byte-identical to that serial reference (same survivor set, same
+/// lexicographic column order, same feature values) for any
+/// [`BuildConfig`].
+pub fn build_surface(
+    workload: &Workload,
+    accel: &Accelerator,
+    capacity_words: Option<f64>,
+    cfg: &BuildConfig,
+) -> BoundaryMatrix {
+    let g = &workload.gemm;
+    let fi = factor_pairs_cached(g.i);
+    let fk = factor_pairs_cached(g.k);
+    let fl = factor_pairs_cached(g.l);
+    let fj = factor_pairs_cached(g.j);
+
+    // Per-dimension partial feature columns: O(Σ|divisors|) feature
+    // derivation, done once, before the cross product.
+    let parts: [Vec<[f64; 4]>; 4] = [
+        fi.iter().map(|&(xd, xg)| dim_partial(0, xd, xg, accel)).collect(),
+        fk.iter().map(|&(xd, xg)| dim_partial(1, xd, xg, accel)).collect(),
+        fl.iter().map(|&(xd, xg)| dim_partial(2, xd, xg, accel)).collect(),
+        fj.iter().map(|&(xd, xg)| dim_partial(3, xd, xg, accel)).collect(),
+    ];
+
+    // Phase 1 — count survivors per (i-pair, k-pair) outer block.
+    let blocks = fi.len() * fk.len();
+    let counts = FillBuf::new(vec![0usize; blocks]);
+    run_blocks(cfg.pool, blocks, |b| {
+        let (ig, kg) = (fi[b / fk.len()].1, fk[b % fk.len()].1);
+        let mut n = 0usize;
+        for_each_run((ig, kg), &fl, &fj, capacity_words, cfg.prune, |_, j0| {
+            n += fj.len() - j0;
+        });
+        // SAFETY: block `b` is the only writer of slot `b`.
+        unsafe { counts.slice_mut(b, b + 1)[0] = n };
+    });
+    let counts = counts.into_inner();
+
+    // Prefix sums: each block's disjoint column range in the output.
+    let mut offsets = vec![0usize; blocks + 1];
+    for (b, &c) in counts.iter().enumerate() {
+        offsets[b + 1] = offsets[b] + c;
+    }
+    let total = offsets[blocks];
+
+    // Phase 2 — fill tilings and feature columns, each block into its
+    // own column range. The store starts at 1.0, the feature vector's
+    // fill value, so only the 13 dimension-dependent rows need writes
+    // here (spares stay 1.0; constants are row-filled below).
+    let tilings = FillBuf::new(vec![Tiling::default(); total]);
+    let raw = FillBuf::new(vec![1.0f64; NUM_FEATURES * total]);
+    run_blocks(cfg.pool, blocks, |b| {
+        let (c0, c1) = (offsets[b], offsets[b + 1]);
+        if c0 == c1 {
+            return;
+        }
+        let (pi, pk) = (b / fk.len(), b % fk.len());
+        let ((id, ig), (kd, kg)) = (fi[pi], fk[pk]);
+        // SAFETY: column ranges are disjoint across blocks (prefix
+        // sums over phase-1 counts), feature rows are disjoint within
+        // a block, and the owner reads only after the pass barrier.
+        let tl = unsafe { tilings.slice_mut(c0, c1) };
+        let mut rows: Vec<&mut [f64]> = (0..NUM_FEATURES)
+            .map(|f| unsafe { raw.slice_mut(f * total + c0, f * total + c1) })
+            .collect();
+        let mut c = 0usize;
+        for_each_run((ig, kg), &fl, &fj, capacity_words, cfg.prune, |li, j0| {
+            let run = fj.len() - j0;
+            let (ld, lg) = fl[li];
+            // Outer dimensions are constant over the whole j run.
+            for (d, pidx) in [(0usize, pi), (1, pk), (2, li)] {
+                let vals = &parts[d][pidx];
+                for (s, &f) in DIM_FEATURES[d].iter().enumerate() {
+                    rows[f][c..c + run].fill(vals[s]);
+                }
+            }
+            for (off, &(jd, jg)) in fj[j0..].iter().enumerate() {
+                let col = c + off;
+                tl[col] = Tiling { xd: [id, kd, ld, jd], xg: [ig, kg, lg, jg] };
+                let vals = &parts[3][j0 + off];
+                for (s, &f) in DIM_FEATURES[3].iter().enumerate() {
+                    rows[f][col] = vals[s];
+                }
+            }
+            c += run;
+        });
+        debug_assert_eq!(c, c1 - c0, "fill count diverged from phase-1 count");
+    });
+
+    // Constant rows (c_softmax; spares already hold the 1.0 fill).
+    let mut raw = raw.into_inner();
+    for (f, v) in constant_features(workload) {
+        raw[f * total..(f + 1) * total].fill(v);
+    }
+    BoundaryMatrix::from_parts(tilings.into_inner(), raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::tiling::enumerate_tilings;
+
+    /// The in-module smoke check; the randomized equivalence suite
+    /// lives in `tests/surface_build.rs`.
+    #[test]
+    fn fused_matches_reference_on_a_preset() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        let cap = Some(accel.capacity_words() as f64);
+        let reference = BoundaryMatrix::build(enumerate_tilings(&w.gemm, cap), &accel, &w);
+        for prune in [false, true] {
+            let fused = build_surface(&w, &accel, cap, &BuildConfig { prune, pool: None });
+            assert_eq!(fused.tilings, reference.tilings, "prune={prune}");
+            assert_eq!(fused.raw(), reference.raw(), "prune={prune}");
+        }
+    }
+
+    #[test]
+    fn zero_survivors_yield_an_empty_matrix() {
+        let accel = presets::accel1();
+        let w = presets::bert_base(512);
+        // min_footprint of the all-1-granule tiling is 5.0: a cap of 4
+        // admits nothing.
+        let b = build_surface(&w, &accel, Some(4.0), &BuildConfig::serial());
+        assert_eq!(b.num_tilings(), 0);
+        assert!(b.raw().is_empty());
+        assert!(enumerate_tilings(&w.gemm, Some(4.0)).is_empty());
+    }
+
+    #[test]
+    fn uncapped_build_covers_the_full_cross_product() {
+        let accel = presets::accel2();
+        let w = presets::ffn_bert();
+        let fused = build_surface(&w, &accel, None, &BuildConfig::serving());
+        let reference = BoundaryMatrix::build(enumerate_tilings(&w.gemm, None), &accel, &w);
+        assert_eq!(fused.tilings, reference.tilings);
+        assert_eq!(fused.raw(), reference.raw());
+    }
+}

@@ -1,8 +1,13 @@
 //! Matrix encoding (paper §V-E, Eq. 8–11): candidates → query matrix,
-//! tilings → boundary matrix.
+//! tilings → boundary matrix. [`build`] fuses tiling enumeration, the
+//! capacity prefilter, and boundary-column construction into one
+//! parallel pass — the serving path's cold-build replacement for
+//! `enumerate_tilings` + [`BoundaryMatrix::build`].
 
 pub mod query;
 pub mod boundary;
+pub mod build;
 
 pub use boundary::BoundaryMatrix;
+pub use build::{build_surface, BuildConfig};
 pub use query::QueryMatrix;

@@ -14,18 +14,54 @@ pub type FeatureVec = [f64; NUM_FEATURES];
 pub fn features(t: &Tiling, accel: &Accelerator, workload: &Workload) -> FeatureVec {
     let mut f = [1.0f64; NUM_FEATURES];
     for d in 0..4 {
-        f[feat::XD[d]] = t.xd[d] as f64;
-        f[feat::XG[d]] = t.xg[d] as f64;
+        let vals = dim_partial(d, t.xd[d], t.xg[d], accel);
+        for (s, &idx) in DIM_FEATURES[d].iter().enumerate() {
+            f[idx] = vals[s];
+        }
     }
-    let ceil = |x: usize, p: usize| -> f64 { x.div_ceil(p) as f64 };
-    f[feat::NI_R] = ceil(t.xg[0], accel.pe_rows);
-    f[feat::NK_R] = ceil(t.xg[1], accel.pe_rows);
-    f[feat::NL_C] = ceil(t.xg[2], accel.pe_cols);
-    f[feat::NL_R] = ceil(t.xg[2], accel.pe_rows);
-    f[feat::NJ_C] = ceil(t.xg[3], accel.pe_cols);
-    // ln must stay finite for GEMM pairs: ~0 instead of 0.
-    f[feat::C_SMX] = if workload.has_softmax() { workload.c_softmax } else { 1e-30 };
+    for (idx, v) in constant_features(workload) {
+        f[idx] = v;
+    }
     f
+}
+
+/// Which feature indices each dimension's `(x_D, x_G)` pair writes.
+/// Every entry of [`features`] not listed here is either a
+/// [`constant_features`] entry or the 1.0 spare fill — nothing in the
+/// vector couples two dimensions, which is what lets the fused surface
+/// builder ([`crate::encode::build`]) precompute one partial column per
+/// divisor pair per dimension (O(Σ|divisors|) feature work) and have
+/// the cross product only *copy* values into the raw store.
+pub const DIM_FEATURES: [&[usize]; 4] = [
+    &[feat::I_D, feat::I_G, feat::NI_R],
+    &[feat::K_D, feat::K_G, feat::NK_R],
+    &[feat::L_D, feat::L_G, feat::NL_C, feat::NL_R],
+    &[feat::J_D, feat::J_G, feat::NJ_C],
+];
+
+/// The partial feature column of one dimension: values aligned with
+/// `DIM_FEATURES[d]` (slots past its length are unused). [`features`]
+/// is defined in terms of this, so the fused builder's precomputed
+/// partials cannot diverge from the per-tiling reference.
+pub fn dim_partial(d: usize, xd: usize, xg: usize, accel: &Accelerator) -> [f64; 4] {
+    let ceil = |x: usize, p: usize| -> f64 { x.div_ceil(p) as f64 };
+    let (xd, xg_f) = (xd as f64, xg as f64);
+    match d {
+        0 => [xd, xg_f, ceil(xg, accel.pe_rows), 1.0],
+        1 => [xd, xg_f, ceil(xg, accel.pe_rows), 1.0],
+        2 => [xd, xg_f, ceil(xg, accel.pe_cols), ceil(xg, accel.pe_rows)],
+        3 => [xd, xg_f, ceil(xg, accel.pe_cols), 1.0],
+        _ => unreachable!("dimension index out of range"),
+    }
+}
+
+/// The dimension-independent entries of the feature vector. Everything
+/// not written here or by a [`dim_partial`] stays at the 1.0 fill
+/// (`SPARE1`/`SPARE2`).
+pub fn constant_features(workload: &Workload) -> [(usize, f64); 1] {
+    // ln must stay finite for GEMM pairs: ~0 instead of 0.
+    let smx = if workload.has_softmax() { workload.c_softmax } else { 1e-30 };
+    [(feat::C_SMX, smx)]
 }
 
 /// The eight metric primitives (one per slot segment).
@@ -222,6 +258,47 @@ mod tests {
         assert_eq!(f[feat::NL_C], 2.0);
         assert_eq!(f[feat::C_SMX], 10.0);
         assert_eq!(f[feat::SPARE1], 1.0);
+    }
+
+    #[test]
+    fn dim_partials_assemble_to_the_feature_vector() {
+        // The fused builder's contract: per-dimension partials + the
+        // constants reproduce features() exactly, for every dimension
+        // independently (randomized granules, both PE shapes).
+        use crate::util::prop;
+        let accels = [presets::accel1(), presets::accel2()];
+        let workloads = [presets::bert_base(512), presets::ffn_bert()];
+        prop::quick(
+            64,
+            0xFEA7,
+            |rng, size| {
+                let s = size.max(2);
+                let mut xd = [0usize; 4];
+                let mut xg = [0usize; 4];
+                for d in 0..4 {
+                    xd[d] = rng.range(1, s);
+                    xg[d] = rng.range(1, 4 * s);
+                }
+                (Tiling { xd, xg }, rng.below(2), rng.below(2))
+            },
+            |&(t, ai, wi)| {
+                let (accel, w) = (&accels[ai], &workloads[wi]);
+                let mut f = [1.0f64; NUM_FEATURES];
+                for d in 0..4 {
+                    let vals = dim_partial(d, t.xd[d], t.xg[d], accel);
+                    for (s, &idx) in DIM_FEATURES[d].iter().enumerate() {
+                        f[idx] = vals[s];
+                    }
+                }
+                for (idx, v) in constant_features(w) {
+                    f[idx] = v;
+                }
+                if f != features(&t, accel, w) {
+                    return Err(format!("partials diverged for {t:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -21,7 +21,15 @@
 //!
 //! * **boundary cache** — keyed on (GEMM dims, capacity, PE shape,
 //!   softmax coefficient): tiling enumeration + feature columns are
-//!   reused across objectives and candidate tables;
+//!   reused across objectives and candidate tables. Cold misses run
+//!   the **fused surface builder** ([`crate::encode::build`]):
+//!   enumeration, the capacity prefilter (with monotone subtree
+//!   pruning) and column construction in one parallel count-then-fill
+//!   pass on the [`crate::coordinator::EvalPool`]. Concurrent misses
+//!   of one key are **single-flight deduplicated** — exactly one
+//!   thread builds, the rest wait for its result — and eviction can be
+//!   bounded by total retained weight
+//!   ([`EngineBuilder::boundary_weight_budget`]);
 //! * **plan cache** — keyed on the fully resolved (workload, accel)
 //!   pair, holding the packaged winners for all three objectives (one
 //!   surface pass computes them anyway): repeat requests under any
@@ -45,20 +53,21 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{Accelerator, Workload};
-use crate::encode::{BoundaryMatrix, QueryMatrix};
+use crate::encode::{build_surface, BoundaryMatrix, BuildConfig, QueryMatrix};
 use crate::error::MmeeError;
 use crate::eval::{native::NativeBackend, EvalBackend, Router};
 use crate::loopnest::Candidate;
+use crate::model::terms::NUM_FEATURES;
 use crate::model::{analytic, derive_slots, Multipliers};
 use crate::search::pareto::Front;
 use crate::search::plan::{MappingPlan, Provenance};
 use crate::search::request::MappingRequest;
 use crate::search::result::{Objective, Solution};
-use crate::tiling::{enumerate_tilings, Tiling};
-use crate::util::shard::{Fnv, ShardKey, ShardedLru};
+use crate::tiling::Tiling;
+use crate::util::shard::{Fnv, ShardKey, ShardedLru, SingleFlight};
 
 /// Search statistics for runtime reporting (paper §VII-C/H).
 #[derive(Debug, Clone)]
@@ -67,6 +76,15 @@ pub struct SearchStats {
     pub tilings: usize,
     pub mappings: f64,
     pub elapsed: std::time::Duration,
+    /// Time this answer's surface pass spent on boundary construction
+    /// (fused enumeration + feature columns): the measured build when
+    /// this request built it, the wait when a concurrent request built
+    /// it (single-flight), zero when it came from the boundary cache —
+    /// so serving traces can attribute cold-start latency to
+    /// construction vs evaluation. Plans served from the plan cache
+    /// retain the value recorded when the group was computed
+    /// (`provenance.cache_hit` distinguishes them).
+    pub boundary_build: std::time::Duration,
 }
 
 fn mmee_query() -> &'static QueryMatrix {
@@ -109,6 +127,7 @@ pub struct EngineBuilder {
     backend: Option<BackendSource>,
     candidates: Option<QueryMatrix>,
     cache_capacity: usize,
+    boundary_weight_budget: Option<u64>,
     route_above: Option<usize>,
 }
 
@@ -166,6 +185,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Total-weight eviction budget for the boundary cache, in feature
+    /// slots (`num_tilings × NUM_FEATURES` per entry, 8 bytes each):
+    /// eviction by retained *size* rather than entry count, so one
+    /// long-sequence matrix can't pin as much memory as sixteen small
+    /// ones. The budget is exact (weighted caches are single-shard);
+    /// an entry heavier than the whole budget is not cached at all, so
+    /// size it for the largest surface worth retaining. Unset =
+    /// entry-count eviction only (sharded, as before).
+    pub fn boundary_weight_budget(mut self, slots: u64) -> EngineBuilder {
+        self.boundary_weight_budget = Some(slots);
+        self
+    }
+
     /// Size-based backend routing: wrap the configured backend in an
     /// [`crate::eval::Router`] so surfaces with at least `threshold`
     /// mappings (candidates × tilings) go to it, while smaller surfaces
@@ -198,7 +230,15 @@ impl EngineBuilder {
             id: NEXT_ENGINE_ID.fetch_add(1, Ordering::Relaxed),
             backend,
             table: self.candidates,
-            boundary_cache: ShardedLru::new(self.cache_capacity),
+            // Unbudgeted: the sharded entry-count cache (concurrency
+            // as before). Budgeted: single-shard so the weight budget
+            // is exact (see `ShardedLru::weighted`).
+            boundary_cache: match self.boundary_weight_budget {
+                None => ShardedLru::new(self.cache_capacity),
+                Some(w) => ShardedLru::weighted(self.cache_capacity, w),
+            },
+            boundary_flight: SingleFlight::new(),
+            boundary_builds: AtomicU64::new(0),
             plan_cache: ShardedLru::new(self.cache_capacity),
         }
     }
@@ -214,6 +254,13 @@ pub struct MmeeEngine {
     /// Custom candidate table; `None` = the shared pruned MMEE table.
     table: Option<QueryMatrix>,
     boundary_cache: ShardedLru<BoundaryKey, Arc<BoundaryMatrix>>,
+    /// Per-key deduplication of concurrent boundary-cache misses:
+    /// exactly one thread runs the cold fused build, the rest wait for
+    /// its result instead of redundantly rebuilding the same surface.
+    boundary_flight: SingleFlight<BoundaryKey, (Arc<BoundaryMatrix>, Duration, bool)>,
+    /// Cold boundary builds actually executed (cache hits and
+    /// single-flight followers excluded) — the dedup observable.
+    boundary_builds: AtomicU64,
     /// Memoizes plans AND `Infeasible` verdicts. One surface pass
     /// yields the winner for all three objectives, so entries are keyed
     /// objective-free and hold all three packaged plans: a pipelined
@@ -312,6 +359,7 @@ impl MmeeEngine {
             backend: None,
             candidates: None,
             cache_capacity: DEFAULT_CACHE_CAPACITY,
+            boundary_weight_budget: None,
             route_above: None,
         }
     }
@@ -372,21 +420,50 @@ impl MmeeEngine {
         self.boundary_cache.stats()
     }
 
+    /// Weighted boundary-cache counters: (weight of entries served
+    /// from cache, weight of entries built and inserted), in feature
+    /// slots — the hit rate in *work saved* rather than lookups.
+    pub fn boundary_cache_weight_stats(&self) -> (u64, u64) {
+        self.boundary_cache.weight_stats()
+    }
+
+    /// Cold boundary builds actually executed. Under concurrent
+    /// misses of one key this advances by exactly one (single-flight).
+    pub fn boundary_build_count(&self) -> u64 {
+        self.boundary_builds.load(Ordering::Relaxed)
+    }
+
     /// (hits, misses) of the plan cache.
     pub fn plan_cache_stats(&self) -> (u64, u64) {
         self.plan_cache.stats()
     }
 
-    /// Boundary matrix for (workload, accel, capacity), LRU-cached.
-    /// Returns the matrix and whether it was a cache hit. Two threads
-    /// missing the same key concurrently both build it (benign race:
-    /// the build is pure; last `put` wins).
+    /// Run one cold fused surface build, counting it and recording its
+    /// duration.
+    fn build_boundary(
+        &self,
+        workload: &Workload,
+        accel: &Accelerator,
+        capacity_words: Option<f64>,
+    ) -> (Arc<BoundaryMatrix>, Duration) {
+        let t0 = Instant::now();
+        let b = Arc::new(build_surface(workload, accel, capacity_words, &BuildConfig::serving()));
+        self.boundary_builds.fetch_add(1, Ordering::Relaxed);
+        (b, t0.elapsed())
+    }
+
+    /// Boundary matrix for (workload, accel, capacity): LRU-cached,
+    /// with per-key single-flight deduplication of concurrent misses
+    /// (one thread runs the cold fused build, the rest wait for its
+    /// result). Returns the matrix, whether it was served without
+    /// building here (cache hit or single-flight follower), and the
+    /// build time attributed to this answer (zero on a cache hit).
     fn boundary_cached(
         &self,
         workload: &Workload,
         accel: &Accelerator,
         capacity_words: Option<f64>,
-    ) -> (Arc<BoundaryMatrix>, bool) {
+    ) -> (Arc<BoundaryMatrix>, bool, Duration) {
         // Uncapped enumerations (the Fig. 15/16 DA-vs-BS sweeps) are the
         // largest matrices and essentially never repeat within an
         // engine's lifetime — never cached (matching the build-use-drop
@@ -394,36 +471,54 @@ impl MmeeEngine {
         // probed either, so the reported hit rate describes cacheable
         // traffic only.
         if capacity_words.is_none() {
-            let tilings = enumerate_tilings(&workload.gemm, None);
-            return (Arc::new(BoundaryMatrix::build(tilings, accel, workload)), false);
+            let (b, build) = self.build_boundary(workload, accel, None);
+            return (b, false, build);
         }
         let key = BoundaryKey::new(workload, accel, capacity_words);
         if let Some(b) = self.boundary_cache.get(&key) {
-            return (b, true);
+            return (b, true, Duration::ZERO);
         }
-        let tilings = enumerate_tilings(&workload.gemm, capacity_words);
-        let b = Arc::new(BoundaryMatrix::build(tilings, accel, workload));
-        self.boundary_cache.put(key, Arc::clone(&b));
-        (b, false)
+        let t_wait = Instant::now();
+        let ((b, build, was_cached), leader) = self.boundary_flight.run(&key, || {
+            // A previous flight may have completed between this
+            // thread's probe and winning leadership: re-check before
+            // paying the build (untracked — this thread's one logical
+            // lookup was already counted as a miss above).
+            if let Some(b) = self.boundary_cache.get_untracked(&key) {
+                return (b, Duration::ZERO, true);
+            }
+            let (b, build) = self.build_boundary(workload, accel, capacity_words);
+            let weight = (b.num_tilings() * NUM_FEATURES) as u64;
+            self.boundary_cache.put_weighted(key.clone(), Arc::clone(&b), weight);
+            (b, build, false)
+        });
+        // The leader reports its measured build; a follower reports
+        // the time it actually spent waiting on that build (it may
+        // have joined mid-flight), so construction time never exceeds
+        // the request's own elapsed time. Provenance reports followers
+        // as served-without-building.
+        let build = if leader { build } else { t_wait.elapsed().min(build) };
+        (b, !leader || was_cached, build)
     }
 
     /// One full surface pass: (cached) boundary matrix, hardware
     /// vector, multipliers, fallible argmin over all three objectives
     /// (the backend's fused streaming reduction — no materialized
     /// surface on the native path). Shared by the plan and optimize
-    /// paths so the recipe cannot diverge between them.
+    /// paths so the recipe cannot diverge between them. Also reports
+    /// the boundary construction time attributed to this pass.
     fn surface_argmin3(
         &self,
         workload: &Workload,
         accel: &Accelerator,
         q: &QueryMatrix,
-    ) -> Result<(crate::eval::Argmin3, Arc<BoundaryMatrix>, bool), MmeeError> {
-        let (b, boundary_hit) =
+    ) -> Result<(crate::eval::Argmin3, Arc<BoundaryMatrix>, bool, Duration), MmeeError> {
+        let (b, boundary_hit, build) =
             self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
         let hw = accel.hw_vector();
         let mult = Multipliers::for_workload(workload, accel);
         let best = self.on_backend(|be| be.try_argmin3(q, &b, &hw, &mult))??;
-        Ok((best, b, boundary_hit))
+        Ok((best, b, boundary_hit, build))
     }
 
     /// Infeasibility decision for an argmin score: an all-infeasible
@@ -457,10 +552,11 @@ impl MmeeEngine {
         let (workload, accel) = (&key.workload, &key.accel);
         let q = self.table();
         // Backend failures may be transient — propagate without memoizing.
-        let (best, b, boundary_hit) = match self.surface_argmin3(workload, accel, q) {
-            Ok(v) => v,
-            Err(e) => return (Err(e), false),
-        };
+        let (best, b, boundary_hit, boundary_build) =
+            match self.surface_argmin3(workload, accel, q) {
+                Ok(v) => v,
+                Err(e) => return (Err(e), false),
+            };
         // Infeasibility is a property of the (workload, accel) pair:
         // memoize the verdict for all three objectives.
         let (score, _, _) = best[0];
@@ -473,6 +569,7 @@ impl MmeeEngine {
             tilings: b.num_tilings(),
             mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
             elapsed: t0.elapsed(),
+            boundary_build,
         };
         let make = |objective: Objective| -> MappingPlan {
             let (_, c, t) = best[obj_index(objective)];
@@ -591,7 +688,7 @@ impl MmeeEngine {
         q: &QueryMatrix,
     ) -> Result<Solution, MmeeError> {
         let t0 = Instant::now();
-        let (best, b, _) = self.surface_argmin3(workload, accel, q)?;
+        let (best, b, _, _) = self.surface_argmin3(workload, accel, q)?;
         let (score, c, t) = best[obj_index(objective)];
         Self::check_feasible(score, workload, accel)?;
         Ok(self.package(workload, accel, objective, q, &b.tilings, c, t, t0))
@@ -635,7 +732,7 @@ impl MmeeEngine {
     ) -> Result<(Front, SearchStats), MmeeError> {
         let t0 = Instant::now();
         let q = self.table();
-        let (b, _) =
+        let (b, _, boundary_build) =
             self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
         let hw = accel.hw_vector();
         let mult = Multipliers::for_workload(workload, accel);
@@ -645,6 +742,7 @@ impl MmeeEngine {
             tilings: b.num_tilings(),
             mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
             elapsed: t0.elapsed(),
+            boundary_build,
         };
         Ok((el, stats))
     }
@@ -666,7 +764,7 @@ impl MmeeEngine {
         accel: &Accelerator,
         q: &QueryMatrix,
     ) -> Result<Front, MmeeError> {
-        let (b, _) = self.boundary_cached(workload, accel, None);
+        let (b, _, _) = self.boundary_cached(workload, accel, None);
         // Feasibility must not clip the sweep: lift the capacity.
         let mut hw = accel.hw_vector();
         hw.capacity_words = f64::MAX;
@@ -689,6 +787,9 @@ impl MmeeEngine {
             tilings: (s.evaluated / nc as f64) as usize,
             mappings: s.evaluated,
             elapsed: t0.elapsed(),
+            // The build time is not threaded through `optimize`'s
+            // Solution; serving traces read it from `plan` stats.
+            boundary_build: Duration::ZERO,
         })
     }
 }
@@ -938,6 +1039,81 @@ mod tests {
         }
         // Same number of surface passes on both engines.
         assert_eq!(batch_engine.plan_cache_stats().1, seq_engine.plan_cache_stats().1);
+    }
+
+    #[test]
+    fn concurrent_misses_of_one_key_build_the_boundary_once() {
+        // Eight threads race the same cold (workload, accel): the
+        // single-flight layer must run exactly ONE fused build (the
+        // engine's build counter is the counting-builder observable),
+        // and every thread must get the same answer.
+        let engine = MmeeEngine::native();
+        let barrier = std::sync::Barrier::new(8);
+        let energies = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let s = engine
+                        .optimize(&presets::mlp_chimera(), &presets::accel1(), Objective::Energy)
+                        .unwrap();
+                    energies.lock().unwrap().push(s.metrics.energy);
+                });
+            }
+        });
+        assert_eq!(engine.boundary_build_count(), 1, "one cold build for 8 racers");
+        let energies = energies.into_inner().unwrap();
+        assert!(energies.windows(2).all(|w| w[0] == w[1]), "divergent answers");
+    }
+
+    #[test]
+    fn boundary_weight_budget_evicts_by_size() {
+        // Budget far below any real boundary matrix: nothing is
+        // admissible, so every probe pays a cold build — weight-based
+        // retention, where entry-count eviction would have kept both
+        // surfaces resident.
+        let tight = MmeeEngine::builder().boundary_weight_budget(160).build();
+        let w = presets::bert_base(512);
+        let (a1, a2) = (presets::accel1(), presets::accel2());
+        for _ in 0..2 {
+            tight.optimize(&w, &a1, Objective::Energy).unwrap();
+            tight.optimize(&w, &a2, Objective::Energy).unwrap();
+        }
+        assert_eq!(tight.boundary_build_count(), 4, "every probe rebuilt");
+        let (hit_w, put_w) = tight.boundary_cache_weight_stats();
+        assert_eq!(hit_w, 0);
+        assert!(put_w > 160, "inserted weight exceeds the budget");
+        // Same trace with the default (unbounded) budget: repeats hit.
+        let roomy = MmeeEngine::native();
+        for _ in 0..2 {
+            roomy.optimize(&w, &a1, Objective::Energy).unwrap();
+            roomy.optimize(&w, &a2, Objective::Energy).unwrap();
+        }
+        assert_eq!(roomy.boundary_build_count(), 2);
+        let (hit_w, _) = roomy.boundary_cache_weight_stats();
+        assert!(hit_w > 0, "weighted hits recorded on the repeat pass");
+    }
+
+    #[test]
+    fn plan_stats_attribute_boundary_build_time() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let cold = engine.plan(&req).unwrap();
+        assert!(
+            cold.stats.boundary_build > std::time::Duration::ZERO,
+            "cold plan records construction time"
+        );
+        assert!(cold.stats.boundary_build <= cold.stats.elapsed);
+        // Same surface, other objective: plan-cache hit carries the
+        // group's recorded build time; a fresh accel pays a new build.
+        let warm = engine
+            .plan(&MappingRequest::preset("bert-base", 512, "accel1", Objective::Edp))
+            .unwrap();
+        assert_eq!(warm.stats.boundary_build, cold.stats.boundary_build);
+        let other = engine
+            .plan(&MappingRequest::preset("bert-base", 512, "accel2", Objective::Energy))
+            .unwrap();
+        assert!(other.stats.boundary_build > std::time::Duration::ZERO);
     }
 
     #[test]

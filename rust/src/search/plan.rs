@@ -45,6 +45,9 @@ impl MappingPlan {
                 ("tilings", Json::num(self.stats.tilings as f64)),
                 ("mappings", Json::num(self.stats.mappings)),
                 ("elapsed_s", Json::num(self.stats.elapsed.as_secs_f64())),
+                // Cold-start attribution: construction vs evaluation
+                // (zero when the boundary matrix came from cache).
+                ("boundary_build_s", Json::num(self.stats.boundary_build.as_secs_f64())),
             ]),
         );
         obj.insert(
@@ -77,6 +80,11 @@ mod tests {
         // New structured sections.
         let stats = j.get("stats").unwrap();
         assert!(stats.get("mappings").unwrap().as_f64().unwrap() > 1e5);
+        // Cold request: construction time is attributed and bounded by
+        // the total elapsed time.
+        let build_s = stats.get("boundary_build_s").unwrap().as_f64().unwrap();
+        let elapsed_s = stats.get("elapsed_s").unwrap().as_f64().unwrap();
+        assert!(build_s > 0.0 && build_s <= elapsed_s, "{build_s} vs {elapsed_s}");
         let prov = j.get("provenance").unwrap();
         assert_eq!(prov.get("backend").unwrap().as_str(), Some("native"));
         assert_eq!(prov.get("cache_hit").unwrap().as_bool(), Some(false));

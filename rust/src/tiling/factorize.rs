@@ -43,9 +43,30 @@ pub fn divisors(n: usize) -> Arc<[usize]> {
     list
 }
 
-/// All ordered pairs `(x_D, x_G)` with `x_D · x_G = n`.
+/// All ordered pairs `(x_D, x_G)` with `x_D · x_G = n`, ascending in
+/// `x_D` (hence descending in `x_G`) — the enumeration's lexicographic
+/// visit order per dimension, and the monotonicity the fused builder's
+/// capacity pruning relies on ([`crate::tiling::feasible_from`]).
 pub fn factor_pairs(n: usize) -> Vec<(usize, usize)> {
-    divisors(n).iter().map(|&d| (d, n / d)).collect()
+    factor_pairs_cached(n).to_vec()
+}
+
+/// [`factor_pairs`] out of a global memo table (same policy as
+/// [`divisors`]): the cold surface-construction path asks for the same
+/// per-dimension pair lists on every build, so hits are a refcount
+/// bump instead of a fresh `Vec`.
+pub fn factor_pairs_cached(n: usize) -> Arc<[(usize, usize)]> {
+    assert!(n > 0);
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<[(usize, usize)]>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut table = cache.lock().unwrap();
+    if let Some(p) = table.get(&n) {
+        return Arc::clone(p);
+    }
+    let list: Arc<[(usize, usize)]> =
+        divisors(n).iter().map(|&d| (d, n / d)).collect::<Vec<_>>().into();
+    table.insert(n, Arc::clone(&list));
+    list
 }
 
 #[cfg(test)]
@@ -74,6 +95,18 @@ mod tests {
             for (a, b) in factor_pairs(n) {
                 assert_eq!(a * b, n);
             }
+        }
+    }
+
+    #[test]
+    fn cached_pairs_share_one_allocation_and_order() {
+        let a = factor_pairs_cached(720);
+        let b = factor_pairs_cached(720);
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must share, not clone");
+        assert_eq!(&*a, factor_pairs(720).as_slice());
+        // Ascending x_D, descending x_G (the pruning precondition).
+        for w in a.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 > w[1].1);
         }
     }
 

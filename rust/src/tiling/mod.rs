@@ -4,6 +4,30 @@
 //! `X = x_D · x_G`. All divisor pairs of each dimension are enumerated
 //! and crossed; a cheap footprint prefilter drops tilings whose minimal
 //! working set can never fit the buffer.
+//!
+//! Two facts about [`min_footprint`] carry the fused surface builder
+//! ([`crate::encode::build`]):
+//!
+//! * it is **monotone increasing in every granule** `x_G[d]`, and the
+//!   per-dimension pair lists ([`factor_pairs`]) are granule-
+//!   *descending* — so within any level of the lexicographic sweep the
+//!   capacity-infeasible entries form a **prefix** of the iteration,
+//!   binary-searchable with [`feasible_from`], and a whole inner
+//!   subtree can be skipped the moment the partial bound (chosen outer
+//!   granules + minimal remaining granules, i.e. 1) exceeds capacity;
+//! * its arithmetic is **exact**: all terms are integers, and for
+//!   dimensions below 2²⁵ every product stays below 2⁵⁰ and the
+//!   5-term sum below 2⁵³, so `f64` introduces no rounding and the
+//!   monotone/prefix structure holds bit-for-bit against the
+//!   per-tiling reference test. (Survivor *membership* is robust even
+//!   beyond that bound — both paths evaluate the identical
+//!   [`min_footprint`] — but the binary-searchability of the prefix
+//!   relies on this exactness, so don't reorder the sum.)
+//!
+//! [`enumerate_tilings`] is the retained serial reference: the serving
+//! path builds tilings and feature columns in one fused pass instead
+//! (see `encode::build`), property-tested byte-identical to this
+//! enumeration followed by `BoundaryMatrix::build`.
 
 pub mod factorize;
 
@@ -13,7 +37,7 @@ use crate::config::workload::FusedGemm;
 
 /// One concrete tiling: inter-tile counts `xd` and granule sizes `xg`
 /// per dimension `[i, k, l, j]`, with `xd[d] * xg[d] = dim[d]`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub struct Tiling {
     pub xd: [usize; 4],
     pub xg: [usize; 4],
@@ -65,9 +89,29 @@ pub fn enumerate_tilings(g: &FusedGemm, capacity_words: Option<f64>) -> Vec<Tili
 
 /// Lower bound on any mapping's working set for this tiling: one granule
 /// of each operand (C's granule is the i×l tile it must fully hold).
+/// Monotone increasing in every granule, and exact in `f64` for all
+/// dimensions below 2²⁵ (see the module docs — the pruning path's
+/// binary search relies on this, so keep the sum in this form).
 pub fn min_footprint(t: &Tiling) -> f64 {
     let [ig, kg, lg, jg] = [t.xg[0] as f64, t.xg[1] as f64, t.xg[2] as f64, t.xg[3] as f64];
     ig * kg + kg * lg + ig * lg + lg * jg + ig * jg
+}
+
+/// First index in `pairs` (divisor-ascending, hence granule-descending)
+/// at which substituting the pair's granule into dimension `d` of
+/// `base` passes the capacity prefilter (`min_footprint ≤ cap`). The
+/// footprint is monotone in `x_G[d]`, so the infeasible entries form a
+/// prefix and the boundary is found by binary search — the subtree-
+/// pruning primitive of the fused builder. Set the not-yet-chosen
+/// dimensions of `base` to granule 1 (always achievable: `x_D = n`) to
+/// lower-bound a whole subtree; returns `pairs.len()` when no entry is
+/// feasible (the subtree can be skipped outright).
+pub fn feasible_from(pairs: &[(usize, usize)], d: usize, base: &Tiling, cap: f64) -> usize {
+    pairs.partition_point(|&(_, xg)| {
+        let mut t = *base;
+        t.xg[d] = xg;
+        min_footprint(&t) > cap
+    })
 }
 
 #[cfg(test)]
@@ -115,6 +159,43 @@ mod tests {
             let keep = min_footprint(t) <= cap;
             assert_eq!(kept.contains(t), keep, "tiling {t:?}");
         }
+    }
+
+    #[test]
+    fn prop_feasible_from_matches_linear_scan() {
+        prop::quick(
+            128,
+            0xB5EA,
+            |rng, size| {
+                let s = size.max(2);
+                let n = rng.range(1, 16 * s);
+                let d = rng.below(4);
+                let base = Tiling {
+                    xd: [1; 4],
+                    xg: [rng.range(1, s), rng.range(1, s), rng.range(1, s), rng.range(1, s)],
+                };
+                let cap = rng.range(1, 8 * s * s) as f64;
+                (n, d, base, cap)
+            },
+            |&(n, d, base, cap)| {
+                let pairs = factor_pairs(n);
+                let got = feasible_from(&pairs, d, &base, cap);
+                // Linear reference: first pair whose substituted tiling
+                // passes the per-tiling prefilter test.
+                let want = pairs
+                    .iter()
+                    .position(|&(_, xg)| {
+                        let mut t = base;
+                        t.xg[d] = xg;
+                        min_footprint(&t) <= cap
+                    })
+                    .unwrap_or(pairs.len());
+                if got != want {
+                    return Err(format!("suffix start {got} != linear {want}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

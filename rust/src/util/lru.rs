@@ -3,21 +3,48 @@
 //! The engine's boundary-matrix and plan caches hold tens of entries
 //! keyed by request fingerprints; a contiguous vector beats a linked
 //! hash map at this scale and keeps the crate dependency-free.
+//!
+//! Entries may carry a **weight** (boundary matrices weigh
+//! `num_tilings × NUM_FEATURES` words; plans weigh 1): alongside the
+//! entry-count capacity, [`LruCache::with_max_weight`] bounds the
+//! *total retained weight*, evicting least-recently-used entries until
+//! the budget holds — so one 4k-sequence boundary matrix can't silently
+//! pin as much memory as sixteen small ones. An entry heavier than the
+//! whole budget is not admitted at all (the standard weighted-cache
+//! rule): retention never exceeds the configured budget, and the
+//! refusal is observable through the weighted hit/put counters.
 
 /// Least-recently-used cache. `capacity == 0` disables caching entirely
 /// (every `get` misses, every `put` is dropped).
 #[derive(Debug, Clone)]
 pub struct LruCache<K, V> {
     capacity: usize,
+    /// Maximum total weight retained (`u64::MAX` = unbounded, the
+    /// entry-count-only policy).
+    max_weight: u64,
+    total_weight: u64,
     /// Most-recently-used first.
-    entries: Vec<(K, V)>,
+    entries: Vec<(K, V, u64)>,
     hits: u64,
     misses: u64,
 }
 
 impl<K: PartialEq, V> LruCache<K, V> {
     pub fn new(capacity: usize) -> LruCache<K, V> {
-        LruCache { capacity, entries: Vec::new(), hits: 0, misses: 0 }
+        LruCache::with_max_weight(capacity, u64::MAX)
+    }
+
+    /// Entry-count capacity plus a total-weight budget (see the module
+    /// docs for the eviction policy).
+    pub fn with_max_weight(capacity: usize, max_weight: u64) -> LruCache<K, V> {
+        LruCache {
+            capacity,
+            max_weight,
+            total_weight: 0,
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -32,6 +59,11 @@ impl<K: PartialEq, V> LruCache<K, V> {
         self.capacity
     }
 
+    /// Sum of the weights of all retained entries.
+    pub fn total_weight(&self) -> u64 {
+        self.total_weight
+    }
+
     /// Lifetime hit/miss counters (serving observability).
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
@@ -39,12 +71,19 @@ impl<K: PartialEq, V> LruCache<K, V> {
 
     /// Look up `key`, promoting it to most-recently-used on a hit.
     pub fn get(&mut self, key: &K) -> Option<&V> {
-        match self.entries.iter().position(|(k, _)| k == key) {
+        self.get_weighted(key).map(|(v, _)| v)
+    }
+
+    /// [`LruCache::get`], also reporting the hit entry's weight (the
+    /// sharded wrapper's weighted hit counters need it).
+    pub fn get_weighted(&mut self, key: &K) -> Option<(&V, u64)> {
+        match self.entries.iter().position(|(k, _, _)| k == key) {
             Some(i) => {
                 self.hits += 1;
                 let entry = self.entries.remove(i);
                 self.entries.insert(0, entry);
-                Some(&self.entries[0].1)
+                let (_, v, w) = &self.entries[0];
+                Some((v, *w))
             }
             None => {
                 self.misses += 1;
@@ -53,17 +92,34 @@ impl<K: PartialEq, V> LruCache<K, V> {
         }
     }
 
-    /// Insert (or refresh) `key`, evicting the least-recently-used entry
-    /// when over capacity.
+    /// Insert (or refresh) `key` with weight 1, evicting the
+    /// least-recently-used entry when over capacity.
     pub fn put(&mut self, key: K, value: V) {
+        self.put_weighted(key, value, 1);
+    }
+
+    /// Insert (or refresh) `key` carrying `weight`, then evict
+    /// least-recently-used entries until both the entry-count capacity
+    /// and the weight budget hold. An entry heavier than the whole
+    /// budget is dropped (any stale version of the key is still
+    /// removed): retention never exceeds the budget.
+    pub fn put_weighted(&mut self, key: K, value: V, weight: u64) {
         if self.capacity == 0 {
             return;
         }
-        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
-            self.entries.remove(i);
+        if let Some(i) = self.entries.iter().position(|(k, _, _)| *k == key) {
+            let (_, _, w) = self.entries.remove(i);
+            self.total_weight -= w;
         }
-        self.entries.insert(0, (key, value));
-        self.entries.truncate(self.capacity);
+        if weight > self.max_weight {
+            return;
+        }
+        self.entries.insert(0, (key, value, weight));
+        self.total_weight += weight;
+        while self.entries.len() > self.capacity || self.total_weight > self.max_weight {
+            let (_, _, w) = self.entries.pop().expect("the newest entry fits the budget");
+            self.total_weight -= w;
+        }
     }
 }
 
@@ -108,5 +164,47 @@ mod tests {
         c.put(1, 1);
         assert_eq!(c.get(&1), Some(&1));
         assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn weight_budget_evicts_lru_not_count() {
+        // Plenty of entry slots, tight weight budget.
+        let mut c: LruCache<u32, &str> = LruCache::with_max_weight(16, 100);
+        c.put_weighted(1, "small", 30);
+        c.put_weighted(2, "small", 30);
+        c.put_weighted(3, "small", 30);
+        assert_eq!((c.len(), c.total_weight()), (3, 90));
+        // A 60-weight insert pushes the total to 150: the two LRU
+        // entries (1, then 2) go.
+        c.put_weighted(4, "big", 60);
+        assert_eq!(c.total_weight(), 90);
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&3), Some(&"small"));
+        assert_eq!(c.get(&4), Some(&"big"));
+    }
+
+    #[test]
+    fn oversized_entries_are_not_admitted() {
+        let mut c: LruCache<u32, &str> = LruCache::with_max_weight(4, 10);
+        c.put_weighted(1, "a", 5);
+        c.put_weighted(2, "huge", 50); // heavier than the whole budget
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&"a"), "existing entries survive the refusal");
+        assert_eq!(c.total_weight(), 5);
+        // Refreshing an admitted key with an oversized value removes it.
+        c.put_weighted(1, "grown", 50);
+        assert!(c.is_empty());
+        assert_eq!(c.total_weight(), 0);
+    }
+
+    #[test]
+    fn refresh_replaces_weight_instead_of_accumulating() {
+        let mut c: LruCache<u32, u32> = LruCache::with_max_weight(4, 100);
+        c.put_weighted(1, 10, 40);
+        c.put_weighted(1, 11, 70);
+        assert_eq!(c.total_weight(), 70);
+        assert_eq!(c.get_weighted(&1), Some((&11, 70)));
     }
 }

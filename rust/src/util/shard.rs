@@ -1,4 +1,6 @@
-//! Sharded, thread-safe LRU — the concurrency layer over [`crate::util::lru`].
+//! Sharded, thread-safe LRU — the concurrency layer over
+//! [`crate::util::lru`] — plus [`SingleFlight`], the per-key in-flight
+//! deduplicator serving cold cache misses.
 //!
 //! The engine's boundary/plan caches were single-threaded (`RefCell`)
 //! before the batch scheduler landed; a `Sync` engine needs shared
@@ -7,14 +9,18 @@
 //! set of `Mutex<LruCache>` shards selected by a key fingerprint, and
 //! keeps lifetime hit/miss counters in atomics so serving observability
 //! (`hits + misses == lookups`) holds under arbitrary interleaving.
+//! [`ShardedLru::weighted`] adds a total-weight eviction budget on top
+//! of the entry count (see `util::lru`), with weighted hit/insert
+//! counters so hit *rates* can be read in work saved, not lookups.
 //!
 //! Keys supply their own fingerprint through [`ShardKey`] instead of
 //! `std::hash::Hash`: the cache keys embed `f64` hardware fields
 //! (which have no `Hash`), and the fingerprint only selects a shard —
 //! full equality is still decided by `PartialEq` inside the shard.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::util::lru::LruCache;
 
@@ -88,21 +94,53 @@ pub struct ShardedLru<K, V> {
     shards: Vec<Mutex<LruCache<K, V>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Total weight of hit entries / of inserted entries — the
+    /// weighted observability pair: on the boundary-cache path every
+    /// insert follows a cold build, so `hit_weight / (hit_weight +
+    /// put_weight)` reads as "fraction of boundary words served from
+    /// cache instead of rebuilt".
+    hit_weight: AtomicU64,
+    put_weight: AtomicU64,
 }
 
 impl<K: ShardKey + PartialEq, V: Clone> ShardedLru<K, V> {
     pub fn new(capacity: usize) -> ShardedLru<K, V> {
-        ShardedLru::with_shards(capacity, DEFAULT_SHARDS)
+        ShardedLru::with_shards(capacity, DEFAULT_SHARDS, u64::MAX)
     }
 
-    pub fn with_shards(capacity: usize, shards: usize) -> ShardedLru<K, V> {
+    /// Entry-count capacity plus a total-weight eviction budget.
+    /// Weighted caches use a **single shard** so the budget is exact:
+    /// splitting it across [`DEFAULT_SHARDS`] would both shrink the
+    /// largest admissible entry by that factor and make retention
+    /// depend on key→shard placement. The one lock is fine for the
+    /// boundary-cache use case — lookups happen once per plan-group
+    /// miss, and the builds they guard dwarf a short Vec-scan critical
+    /// section. Inserts go through [`ShardedLru::put_weighted`] to
+    /// carry real weights.
+    pub fn weighted(capacity: usize, max_weight: u64) -> ShardedLru<K, V> {
+        ShardedLru::with_shards(capacity, 1, max_weight)
+    }
+
+    pub fn with_shards(capacity: usize, shards: usize, max_weight: u64) -> ShardedLru<K, V> {
         let n = shards.clamp(1, capacity.max(1));
         let base = capacity / n;
         let extra = capacity % n;
+        // An unbounded budget stays unbounded per shard; a finite one
+        // is split evenly (the fingerprint spreads keys uniformly).
+        let per_weight =
+            if max_weight == u64::MAX { u64::MAX } else { (max_weight / n as u64).max(1) };
         let shards = (0..n)
-            .map(|i| Mutex::new(LruCache::new(base + usize::from(i < extra))))
+            .map(|i| {
+                Mutex::new(LruCache::with_max_weight(base + usize::from(i < extra), per_weight))
+            })
             .collect();
-        ShardedLru { shards, hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+        ShardedLru {
+            shards,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            hit_weight: AtomicU64::new(0),
+            put_weight: AtomicU64::new(0),
+        }
     }
 
     fn shard(&self, key: &K) -> &Mutex<LruCache<K, V>> {
@@ -113,23 +151,55 @@ impl<K: ShardKey + PartialEq, V: Clone> ShardedLru<K, V> {
     /// borrowed while the shard lock is released — cache values are
     /// `Arc`s in practice, so the clone is a refcount bump).
     pub fn get(&self, key: &K) -> Option<V> {
-        let v = self.shard(key).lock().unwrap().get(key).cloned();
-        match v {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
-        v
+        let hit = self.shard(key).lock().unwrap().get_weighted(key).map(|(v, w)| (v.clone(), w));
+        match hit {
+            Some((v, w)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hit_weight.fetch_add(w, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
     }
 
-    /// Insert (or refresh) `key` in its shard.
+    /// [`ShardedLru::get`] without touching any counter — for internal
+    /// double-checks (the single-flight leader's re-probe after winning
+    /// leadership) that would otherwise count one logical lookup twice
+    /// and skew the serving hit rate.
+    pub fn get_untracked(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert (or refresh) `key` in its shard with weight 1.
     pub fn put(&self, key: K, value: V) {
-        self.shard(&key).lock().unwrap().put(key, value);
+        self.put_weighted(key, value, 1);
+    }
+
+    /// Insert (or refresh) `key` carrying `weight`; the shard evicts
+    /// least-recently-used entries past its weight budget.
+    pub fn put_weighted(&self, key: K, value: V, weight: u64) {
+        self.put_weight.fetch_add(weight, Ordering::Relaxed);
+        self.shard(&key).lock().unwrap().put_weighted(key, value, weight);
     }
 
     /// Lifetime (hits, misses). Under concurrency each lookup counts
     /// exactly once, so `hits + misses` equals total lookups.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Lifetime (weight of hit entries, weight of inserted entries) —
+    /// see the field docs for how to read the ratio.
+    pub fn weight_stats(&self) -> (u64, u64) {
+        (self.hit_weight.load(Ordering::Relaxed), self.put_weight.load(Ordering::Relaxed))
+    }
+
+    /// Total retained weight across shards.
+    pub fn total_weight(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().total_weight()).sum()
     }
 
     pub fn len(&self) -> usize {
@@ -147,6 +217,101 @@ impl<K: ShardKey + PartialEq, V: Clone> ShardedLru<K, V> {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+}
+
+/// Per-key in-flight deduplication for expensive pure builds: when N
+/// threads miss the same cache key concurrently, exactly one (the
+/// *leader*) runs the build while the rest block on the flight and
+/// receive a clone of the result — N−1 redundant cold builds become
+/// waits. The flight table is a small linear-scan vector (concurrent
+/// distinct keys in flight are few); completed flights deregister, so
+/// the table holds only work actually in progress.
+///
+/// Panic-safe: a leader that unwinds poisons its flight and followers
+/// *retry* (one of them becomes the next leader) instead of hanging.
+#[derive(Debug)]
+pub struct SingleFlight<K, V> {
+    inflight: Mutex<Vec<(K, Arc<Flight<V>>)>>,
+}
+
+#[derive(Debug)]
+struct Flight<V> {
+    state: Mutex<FlightState<V>>,
+    done: Condvar,
+}
+
+#[derive(Debug)]
+enum FlightState<V> {
+    Pending,
+    Ready(V),
+    /// The leader panicked; waiters must retry.
+    Poisoned,
+}
+
+impl<K: Clone + PartialEq, V: Clone> SingleFlight<K, V> {
+    pub fn new() -> SingleFlight<K, V> {
+        SingleFlight { inflight: Mutex::new(Vec::new()) }
+    }
+
+    /// Number of flights currently in progress (observability).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+
+    /// Run `build` for `key`, deduplicating concurrent callers:
+    /// returns the value and whether this caller was the leader (the
+    /// one that actually built). `build` runs *outside* the table
+    /// lock, so flights for distinct keys proceed in parallel.
+    pub fn run(&self, key: &K, build: impl FnOnce() -> V) -> (V, bool) {
+        let mut build = Some(build);
+        loop {
+            let (flight, leader) = {
+                let mut table = self.inflight.lock().unwrap();
+                match table.iter().find(|(k, _)| k == key) {
+                    Some((_, f)) => (Arc::clone(f), false),
+                    None => {
+                        let f = Arc::new(Flight {
+                            state: Mutex::new(FlightState::Pending),
+                            done: Condvar::new(),
+                        });
+                        table.push((key.clone(), Arc::clone(&f)));
+                        (f, true)
+                    }
+                }
+            };
+            if leader {
+                let build = build.take().expect("leadership is won at most once");
+                let result = catch_unwind(AssertUnwindSafe(build));
+                let (publish, outcome) = match result {
+                    Ok(v) => (FlightState::Ready(v.clone()), Ok(v)),
+                    Err(p) => (FlightState::Poisoned, Err(p)),
+                };
+                *flight.state.lock().unwrap() = publish;
+                flight.done.notify_all();
+                self.inflight.lock().unwrap().retain(|(k, _)| k != key);
+                match outcome {
+                    Ok(v) => return (v, true),
+                    Err(p) => resume_unwind(p),
+                }
+            }
+            let mut state = flight.state.lock().unwrap();
+            loop {
+                match &*state {
+                    FlightState::Ready(v) => return (v.clone(), false),
+                    // Leader panicked: drop the lock and retry from the
+                    // top (this caller may become the next leader).
+                    FlightState::Poisoned => break,
+                    FlightState::Pending => state = flight.done.wait(state).unwrap(),
+                }
+            }
+        }
+    }
+}
+
+impl<K: Clone + PartialEq, V: Clone> Default for SingleFlight<K, V> {
+    fn default() -> SingleFlight<K, V> {
+        SingleFlight::new()
     }
 }
 
@@ -214,6 +379,108 @@ mod tests {
         let (h, m) = c.stats();
         assert_eq!(h + m, 8 * 500, "every lookup counted exactly once");
         assert!(h > 0 && m > 0);
+    }
+
+    #[test]
+    fn weighted_eviction_and_weight_stats() {
+        // Weighted caches are single-shard: the budget is exact and
+        // the largest admissible entry is the whole budget.
+        let c: ShardedLru<u64, &str> = ShardedLru::weighted(8, 100);
+        assert_eq!(c.num_shards(), 1);
+        c.put_weighted(1, "a", 60);
+        c.put_weighted(2, "b", 60); // over budget: evicts 1
+        assert_eq!(c.total_weight(), 60);
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2).as_deref(), Some("b"));
+        assert_eq!(c.get(&2).as_deref(), Some("b"));
+        let (hit_w, put_w) = c.weight_stats();
+        assert_eq!(hit_w, 120, "two hits on the 60-weight entry");
+        assert_eq!(put_w, 120, "two inserts of weight 60");
+    }
+
+    #[test]
+    fn single_flight_dedups_eight_concurrent_builders() {
+        use std::sync::atomic::AtomicUsize;
+        let flight: SingleFlight<u64, u64> = SingleFlight::new();
+        let builds = AtomicUsize::new(0);
+        let leaders = AtomicUsize::new(0);
+        let arrived = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    arrived.fetch_add(1, Ordering::Relaxed);
+                    let (v, leader) = flight.run(&7, || {
+                        // The counting builder: hold the flight open
+                        // until all 8 callers have at least reached
+                        // `run`, so none can start a second flight.
+                        while arrived.load(Ordering::Relaxed) < 8 {
+                            std::thread::yield_now();
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        builds.fetch_add(1, Ordering::Relaxed);
+                        42u64
+                    });
+                    assert_eq!(v, 42);
+                    if leader {
+                        leaders.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(builds.into_inner(), 1, "exactly one cold build");
+        assert_eq!(leaders.into_inner(), 1, "exactly one leader");
+        assert_eq!(flight.in_flight(), 0, "completed flights deregister");
+    }
+
+    #[test]
+    fn single_flight_distinct_keys_do_not_serialize() {
+        let flight: SingleFlight<u64, u64> = SingleFlight::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|k| {
+                    let flight = &flight;
+                    scope.spawn(move || flight.run(&k, || k * 10))
+                })
+                .collect();
+            for (k, h) in handles.into_iter().enumerate() {
+                let (v, _) = h.join().unwrap();
+                assert_eq!(v, k as u64 * 10);
+            }
+        });
+    }
+
+    #[test]
+    fn single_flight_poisoned_leader_lets_followers_retry() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+        let flight: SingleFlight<u64, u64> = SingleFlight::new();
+        let attempts = AtomicUsize::new(0);
+        let barrier = Barrier::new(4);
+        let successes = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let out = catch_unwind(AssertUnwindSafe(|| {
+                        flight.run(&1, || {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            // First builder panics; retries succeed.
+                            if attempts.fetch_add(1, Ordering::Relaxed) == 0 {
+                                panic!("cold build exploded");
+                            }
+                            5u64
+                        })
+                    }));
+                    if let Ok((v, _)) = out {
+                        assert_eq!(v, 5);
+                        successes.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(successes.into_inner(), 3, "non-leader callers all recover");
+        assert_eq!(flight.in_flight(), 0);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Equivalence suite for the fused parallel surface builder
+//! (`encode::build`): against the retained serial reference
+//! (`enumerate_tilings` + `BoundaryMatrix::build`), the fused path
+//! must produce a **byte-identical raw store and identical tiling
+//! order** — randomized over dimensions, capacities (including
+//! uncapped), worker counts (serial and private pools of 2 and 8),
+//! and subtree pruning on/off, each toggle independently.
+
+use mmee::config::presets;
+use mmee::config::{Accelerator, Workload};
+use mmee::coordinator::EvalPool;
+use mmee::encode::{build_surface, BoundaryMatrix, BuildConfig};
+use mmee::tiling::{enumerate_tilings, min_footprint, Tiling};
+use mmee::util::prop;
+use mmee::util::rng::Rng;
+
+fn reference(w: &Workload, accel: &Accelerator, cap: Option<f64>) -> BoundaryMatrix {
+    BoundaryMatrix::build(enumerate_tilings(&w.gemm, cap), accel, w)
+}
+
+fn assert_identical(fused: &BoundaryMatrix, reference: &BoundaryMatrix, ctx: &str) {
+    assert_eq!(fused.tilings, reference.tilings, "tiling order diverged: {ctx}");
+    assert_eq!(fused.raw(), reference.raw(), "raw store diverged: {ctx}");
+}
+
+/// A workload with composite dimensions (interesting divisor lists)
+/// drawn from the size hint, attention or GEMM-pair kind. Dims are
+/// capped at 128 so the *reference* (uncapped, fully materialized)
+/// build stays small across the whole run; richer divisor structure
+/// is covered by the preset test below.
+fn random_workload(rng: &mut Rng, size: usize) -> Workload {
+    let s = size.max(2);
+    let mut dim = |hi: usize| {
+        // Bias toward smooth numbers: products of a few small factors.
+        let mut n = rng.range(1, 4);
+        for _ in 0..3 {
+            if rng.bool() {
+                n *= rng.range(1, hi.max(2));
+            }
+        }
+        n.clamp(1, 128)
+    };
+    let g = [dim(s), dim(s / 2 + 1), dim(s), dim(s / 2 + 1)];
+    if rng.bool() {
+        Workload::attention("prop-attn", g[0].max(g[2]), g[1].max(1), 4)
+    } else {
+        Workload::gemm_pair("prop-gemm", g[0], g[1], g[2], g[3])
+    }
+}
+
+/// A capacity mix covering uncapped, generous, mid, tight, and
+/// nothing-survives regimes.
+fn random_capacity(rng: &mut Rng, w: &Workload) -> Option<f64> {
+    let full = min_footprint(&Tiling::unit(&w.gemm));
+    match rng.below(5) {
+        0 => None,
+        // Everything survives / mid / only-all-1-granules / nothing.
+        1 => Some(full + 1.0),
+        2 => Some((full / rng.range(2, 64) as f64).max(5.0)),
+        3 => Some(5.0),
+        _ => Some(4.0),
+    }
+}
+
+#[test]
+fn prop_fused_builder_matches_serial_reference() {
+    // MMEE_THREADS is parsed once per process, so worker-count
+    // coverage comes from explicit private pools (1, 2, 8 workers)
+    // plus the in-pass serial mode.
+    let pool2 = EvalPool::new(2);
+    let pool8 = EvalPool::new(8);
+    let accels = [presets::accel1(), presets::accel2(), presets::coral()];
+    prop::quick(
+        96,
+        0x5EED_B11D,
+        |rng, size| {
+            let w = random_workload(rng, size);
+            let cap = random_capacity(rng, &w);
+            (w, rng.below(3), cap)
+        },
+        |(w, ai, cap)| {
+            let accel = &accels[*ai];
+            let want = reference(w, accel, *cap);
+            for prune in [false, true] {
+                for (pname, pool) in
+                    [("serial", None), ("pool2", Some(&pool2)), ("pool8", Some(&pool8))]
+                {
+                    let got = build_surface(w, accel, *cap, &BuildConfig { prune, pool });
+                    let ctx = format!(
+                        "workload {:?} cap {cap:?} prune {prune} {pname}",
+                        w.gemm.dims()
+                    );
+                    if got.tilings != want.tilings {
+                        return Err(format!("tiling order diverged: {ctx}"));
+                    }
+                    if got.raw() != want.raw() {
+                        return Err(format!("raw store diverged: {ctx}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn presets_match_reference_on_their_real_capacities() {
+    // The exact configurations the serving path builds: preset
+    // workloads against their accelerators' true capacity prefilters,
+    // fused serving config (pruned, global pool).
+    let cases = [
+        (presets::bert_base(512), presets::accel1()),
+        (presets::bert_base(512), presets::accel2()),
+        (presets::gpt3_13b(2048), presets::accel2()),
+        (presets::cc1(), presets::accel1()),
+        (presets::ffn_bert(), presets::coral()),
+    ];
+    for (w, accel) in cases {
+        let cap = Some(accel.capacity_words() as f64);
+        let want = reference(&w, &accel, cap);
+        assert!(want.num_tilings() > 0, "{} on {}", w.name, accel.name);
+        let got = build_surface(&w, &accel, cap, &BuildConfig::serving());
+        assert_identical(&got, &want, &format!("{} on {}", w.name, accel.name));
+    }
+}
+
+#[test]
+fn uncapped_sweep_path_matches_reference() {
+    // The Fig. 15/16 path: no capacity prefilter, full cross product.
+    let w = presets::bert_base(512);
+    let accel = presets::accel1();
+    let want = reference(&w, &accel, None);
+    for cfg in [BuildConfig::serving(), BuildConfig::serial()] {
+        let got = build_surface(&w, &accel, None, &cfg);
+        assert_identical(&got, &want, "uncapped");
+        assert_eq!(got.num_tilings(), want.num_tilings());
+    }
+}
+
+#[test]
+fn prune_toggle_is_independent_of_parallel_toggle() {
+    // All four (prune × parallel) corners on one mid-capacity surface.
+    let w = presets::bert_base(512);
+    let accel = presets::accel1();
+    let cap = Some(20_000.0);
+    let want = reference(&w, &accel, cap);
+    let pool = EvalPool::new(3);
+    for prune in [false, true] {
+        for pool in [None, Some(&pool)] {
+            let got = build_surface(&w, &accel, cap, &BuildConfig { prune, pool });
+            assert_identical(&got, &want, &format!("prune={prune} pooled={}", pool.is_some()));
+        }
+    }
+}
