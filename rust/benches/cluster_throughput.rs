@@ -1,0 +1,159 @@
+//! Cluster-serving benchmark: throughput and aggregate cache-hit rate
+//! vs worker count on the same mixed 3-surface preset trace as
+//! `serve_throughput`, plus warm per-request latency percentiles
+//! through the full front-end path (connect + hash-route + worker +
+//! fan-in). Emits `BENCH_cluster.json` so the serving trajectory is
+//! machine-trackable across PRs.
+//!
+//! `--smoke` (or `--test`) runs one 2-worker cluster on a short trace
+//! of small surfaces and still writes the full JSON schema — CI runs
+//! it so the schema cannot rot unnoticed.
+
+use std::time::{Duration, Instant};
+
+use mmee::cluster::{proto, Cluster, ClusterConfig};
+use mmee::util::json::Json;
+
+fn trace_lines(small: bool) -> Vec<String> {
+    let surfaces: &[&str] = if small {
+        &[
+            r#""workload": "mlp", "accel": "accel1""#,
+            r#""workload": "bert-base", "seq": 256, "accel": "accel1""#,
+            r#""workload": "cc1", "accel": "accel1""#,
+        ]
+    } else {
+        &[
+            r#""workload": "bert-base", "seq": 512, "accel": "accel1""#,
+            r#""workload": "bert-base", "seq": 512, "accel": "accel2""#,
+            r#""workload": "cc1", "accel": "accel1""#,
+        ]
+    };
+    let objectives = ["energy", "latency", "edp"];
+    let n = if small { 12 } else { 24 };
+    (0..n)
+        .map(|i| {
+            let spec = surfaces[i % surfaces.len()];
+            let obj = objectives[(i / surfaces.len()) % objectives.len()];
+            format!(r#"{{{spec}, "objective": "{obj}"}}"#)
+        })
+        .collect()
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample set.
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// Aggregate (plan hits, plan misses, boundary builds) across every
+/// worker, via the cluster's own `{"op": "stats"}` fan-out.
+fn cache_stats(cluster: &Cluster) -> (f64, f64, f64) {
+    let mut out = Vec::new();
+    cluster.route(format!("{}\n", proto::STATS_LINE).as_bytes(), &mut out).expect("stats route");
+    let text = String::from_utf8(out).expect("utf8");
+    let j = Json::parse(text.trim()).expect("stats json");
+    let workers = j
+        .get("stats")
+        .and_then(|s| s.get("workers"))
+        .and_then(Json::as_arr)
+        .expect("stats.workers");
+    let (mut hits, mut misses, mut builds) = (0.0, 0.0, 0.0);
+    for w in workers {
+        let s = w.get("stats").expect("per-worker stats");
+        let pc = s.get("plan_cache").expect("plan_cache");
+        hits += pc.get("hits").and_then(Json::as_f64).unwrap_or(0.0);
+        misses += pc.get("misses").and_then(Json::as_f64).unwrap_or(0.0);
+        builds += s.get("boundary_builds").and_then(Json::as_f64).unwrap_or(0.0);
+    }
+    (hits, misses, builds)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let lines = trace_lines(smoke);
+    let mut trace = lines.join("\n");
+    trace.push('\n');
+    let counts: &[usize] = if smoke { &[2] } else { &[1, 2, 4] };
+    let program = std::path::PathBuf::from(env!("CARGO_BIN_EXE_mmee"));
+    println!(
+        "cluster trace: {} requests over 3 distinct surfaces; worker counts {counts:?}",
+        lines.len()
+    );
+
+    let mut rows = Vec::new();
+    for &workers in counts {
+        let mut cfg = ClusterConfig::new(program.clone());
+        cfg.workers = workers;
+        cfg.worker_threads = 2;
+        let t0 = Instant::now();
+        let cluster = Cluster::start(cfg).expect("cluster start");
+        let startup = t0.elapsed();
+
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        let served = cluster.route(trace.as_bytes(), &mut out).expect("cold route");
+        let cold = t0.elapsed().as_secs_f64();
+        assert_eq!(served, lines.len(), "cold pass must answer the whole trace");
+
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        cluster.route(trace.as_bytes(), &mut out).expect("warm route");
+        let warm = t0.elapsed().as_secs_f64();
+
+        // Warm per-request latency: one route per line, so each sample
+        // pays the full client path (dispatch, connect, fan-in).
+        let mut lat: Vec<Duration> = Vec::with_capacity(lines.len());
+        for line in &lines {
+            let mut out = Vec::new();
+            let t = Instant::now();
+            cluster.route(format!("{line}\n").as_bytes(), &mut out).expect("latency route");
+            lat.push(t.elapsed());
+        }
+        lat.sort();
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+
+        let (hits, misses, builds) = cache_stats(&cluster);
+        let plan_hit_rate = hits / (hits + misses).max(1.0);
+        let restarts = cluster.total_restarts();
+        cluster.shutdown();
+
+        let req_cold = lines.len() as f64 / cold.max(1e-12);
+        let req_warm = lines.len() as f64 / warm.max(1e-12);
+        println!(
+            "{workers} workers: startup {startup:.2?}; {req_cold:.1} req/s cold, \
+             {req_warm:.1} req/s warm; plan hit rate {:.0}%; {builds:.0} boundary builds; \
+             warm p50 {p50:.3?} p99 {p99:.3?}; {restarts} restarts",
+            100.0 * plan_hit_rate
+        );
+        rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("req_per_s_cold", Json::num(req_cold)),
+            ("req_per_s_warm", Json::num(req_warm)),
+            ("plan_hit_rate", Json::num(plan_hit_rate)),
+            ("boundary_builds", Json::num(builds)),
+            ("p50_ms", Json::num(p50.as_secs_f64() * 1e3)),
+            ("p99_ms", Json::num(p99.as_secs_f64() * 1e3)),
+            ("restarts", Json::num(restarts as f64)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("cluster_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("trace_requests", Json::num(lines.len() as f64)),
+        ("results", Json::arr(rows)),
+    ]);
+    let text = format!("{report}\n");
+    for key in [
+        "req_per_s_cold",
+        "req_per_s_warm",
+        "plan_hit_rate",
+        "boundary_builds",
+        "p50_ms",
+        "p99_ms",
+        "restarts",
+    ] {
+        assert!(text.contains(key), "BENCH_cluster.json schema lost key {key}");
+    }
+    std::fs::write("BENCH_cluster.json", &text).expect("write BENCH_cluster.json");
+    println!("wrote BENCH_cluster.json{}", if smoke { "  [smoke ok]" } else { "" });
+}

@@ -33,6 +33,11 @@ fn trace_lines() -> Vec<String> {
     lines
 }
 
+/// Nearest-rank percentile over an ascending-sorted sample set.
+fn percentile(sorted: &[std::time::Duration], p: f64) -> std::time::Duration {
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
 fn report_rates(engine: &MmeeEngine, served: usize, secs: f64) {
     let (ph, pm) = engine.plan_cache_stats();
     let (bh, bm) = engine.boundary_cache_stats();
@@ -94,6 +99,31 @@ fn main() {
         service::serve_lines(&engine, per_line.as_bytes(), &mut out).unwrap()
     });
     report_rates(&engine, n_warm, warm.median.as_secs_f64());
+
+    // Per-request latency distribution: every line served on its own,
+    // so the spread is visible, not just the aggregate rate. Cold pass
+    // first (surface builds dominate the tail), then the warm steady
+    // state the cluster front-end cares about.
+    let engine = MmeeEngine::native();
+    for pass in ["cold", "warm"] {
+        let mut lat = Vec::with_capacity(lines.len());
+        let t0 = std::time::Instant::now();
+        for line in &lines {
+            let t = std::time::Instant::now();
+            let mut out = Vec::new();
+            service::serve_lines(&engine, line.as_bytes(), &mut out).unwrap();
+            lat.push(t.elapsed());
+        }
+        let total = t0.elapsed().as_secs_f64();
+        lat.sort();
+        println!(
+            "per-request latency ({pass}): p50 {:.3?}  p99 {:.3?}  max {:.3?}  ({:.1} req/s)",
+            percentile(&lat, 0.50),
+            percentile(&lat, 0.99),
+            lat.last().unwrap(),
+            lines.len() as f64 / total.max(1e-12),
+        );
+    }
 
     // Weight-bounded boundary cache (ROADMAP "cache policy" item):
     // repeat optimize() rounds over the trace's surfaces — optimize

@@ -1,0 +1,121 @@
+//! Periodic worker health checks: a monitor thread sweeps the pool,
+//! reaping crashed processes and pinging live ones, so a worker that
+//! dies between requests is restarted *before* the next request lands
+//! on it (the router's connect-retry path would also recover, but only
+//! after paying a failed connection on the request path).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::proto;
+use crate::cluster::worker::{exchange_line, WorkerPool};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Sweep period.
+    pub interval: Duration,
+    /// Per-ping read timeout.
+    pub timeout: Duration,
+    /// Consecutive failed pings before the worker is declared dead and
+    /// restarted (a single timeout under load is not a crash).
+    pub failures_before_restart: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            interval: Duration::from_millis(500),
+            timeout: Duration::from_secs(2),
+            failures_before_restart: 2,
+        }
+    }
+}
+
+/// Handle to the monitor thread; [`HealthMonitor::stop`] shuts it down
+/// promptly (the thread waits on a condvar, not a bare sleep).
+#[derive(Debug)]
+pub struct HealthMonitor {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: JoinHandle<()>,
+}
+
+impl HealthMonitor {
+    pub fn start(pool: Arc<WorkerPool>, cfg: HealthConfig) -> HealthMonitor {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || monitor(&pool, &cfg, &stop2));
+        HealthMonitor { stop, handle }
+    }
+
+    /// Signal the monitor to exit and join it.
+    pub fn stop(self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        let _ = self.handle.join();
+    }
+}
+
+fn monitor(pool: &WorkerPool, cfg: &HealthConfig, stop: &(Mutex<bool>, Condvar)) {
+    let mut strikes = vec![0u32; pool.num_workers()];
+    loop {
+        {
+            let (lock, cv) = stop;
+            let mut stopped = lock.lock().unwrap();
+            let mut remaining = cfg.interval;
+            while !*stopped {
+                let t0 = std::time::Instant::now();
+                let (guard, timeout) = cv.wait_timeout(stopped, remaining).unwrap();
+                stopped = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+                // Spurious wakeup: keep waiting out the interval.
+                remaining = remaining.saturating_sub(t0.elapsed());
+                if remaining.is_zero() {
+                    break;
+                }
+            }
+            if *stopped {
+                return;
+            }
+        }
+        for (i, strike) in strikes.iter_mut().enumerate() {
+            // Crash sweep first: an exited child is restarted without
+            // burning `failures_before_restart` ping periods.
+            if let Some(generation) = pool.poll_exited(i) {
+                pool.report_failure(i, generation);
+                *strike = 0;
+                continue;
+            }
+            if ping(pool, i, cfg.timeout) {
+                *strike = 0;
+            } else {
+                *strike += 1;
+                if *strike >= cfg.failures_before_restart {
+                    if let Ok((_, generation)) = pool.addr(i) {
+                        pool.report_failure(i, generation);
+                    }
+                    *strike = 0;
+                }
+            }
+        }
+    }
+}
+
+/// One liveness probe. An `overloaded` rejection counts as ALIVE — a
+/// saturated worker is shedding by design, not crashed.
+fn ping(pool: &WorkerPool, i: usize, timeout: Duration) -> bool {
+    let Ok(line) = exchange_line(pool, i, proto::PING_LINE, timeout) else {
+        return false;
+    };
+    if proto::is_overload_reject(&line) {
+        return true;
+    }
+    let Ok(j) = Json::parse(line.trim()) else {
+        return false;
+    };
+    j.get("ok").and_then(Json::as_bool) == Some(true)
+}

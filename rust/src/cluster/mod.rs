@@ -1,0 +1,272 @@
+//! `mmee cluster`: multi-process sharded serving.
+//!
+//! A front-end process owns N `mmee serve --tcp` child workers and
+//! routes the ordinary line-JSON protocol across them by the stable
+//! FNV fingerprint of each request's resolved (workload, accel) key
+//! ([`crate::search::plan_shard_hash`]). Each worker therefore owns a
+//! disjoint slice of the boundary/plan-cache keyspace: a trace that
+//! repeats K distinct surfaces still pays exactly K cold surface
+//! passes *cluster-wide*, the same as a single process — warm-cache
+//! hit rates survive the fan-out instead of being diluted N×.
+//!
+//! Module map:
+//!
+//! * [`worker`] — process lifecycle: spawn + readiness handshake,
+//!   generation-checked restart with bounded backoff, graceful drain;
+//! * [`health`] — the periodic crash sweep / ping monitor;
+//! * [`router`] — request fan-out, per-worker pipelined bursts with
+//!   retry-on-crash, arrival-order response fan-in;
+//! * [`proto`] — readiness/control lines and response normalization.
+//!
+//! [`Cluster`] ties them together; [`smoke`] is the self-contained
+//! CI check (`mmee cluster --smoke`).
+
+pub mod health;
+pub mod proto;
+pub mod router;
+pub mod worker;
+
+use std::io::{self, BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::service;
+use crate::error::MmeeError;
+use crate::search::MmeeEngine;
+use crate::util::json::Json;
+
+pub use health::{HealthConfig, HealthMonitor};
+pub use router::{route_lines, RouterConfig};
+pub use worker::{WorkerPool, WorkerSpec};
+
+/// Everything needed to start a [`Cluster`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Worker process count (the shard count).
+    pub workers: usize,
+    /// Serve-loop threads per worker process.
+    pub worker_threads: usize,
+    /// The `mmee` binary to spawn workers from.
+    pub program: PathBuf,
+    /// Backend name passed to each worker.
+    pub backend: String,
+    pub router: RouterConfig,
+    /// Health monitoring; `None` leaves crash recovery to the
+    /// router's connect-retry path alone.
+    pub health: Option<HealthConfig>,
+}
+
+impl ClusterConfig {
+    pub fn new(program: PathBuf) -> ClusterConfig {
+        ClusterConfig {
+            workers: 2,
+            worker_threads: 2,
+            program,
+            backend: "native".to_string(),
+            router: RouterConfig::default(),
+            health: Some(HealthConfig::default()),
+        }
+    }
+}
+
+/// A running cluster: the worker pool plus (optionally) its health
+/// monitor. Routing entry points share the pool, so concurrent
+/// traces/connections reuse the same workers and their warm caches.
+pub struct Cluster {
+    pool: Arc<WorkerPool>,
+    health: Option<HealthMonitor>,
+    router: RouterConfig,
+}
+
+impl Cluster {
+    /// Spawn the workers (each completes its readiness handshake) and
+    /// start the health monitor.
+    pub fn start(cfg: ClusterConfig) -> io::Result<Cluster> {
+        let mut spec = WorkerSpec::new(cfg.program);
+        spec.serve_threads = cfg.worker_threads.max(1);
+        spec.backend = cfg.backend;
+        let pool = WorkerPool::start(spec, cfg.workers)?;
+        let health = cfg.health.map(|h| HealthMonitor::start(Arc::clone(&pool), h));
+        Ok(Cluster { pool, health, router: cfg.router })
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Route one request stream (stdin, a file, one TCP connection)
+    /// across the workers; responses come back in arrival order.
+    pub fn route(&self, input: impl BufRead, output: impl Write + Send) -> io::Result<usize> {
+        router::route_lines(&self.pool, input, output, &self.router)
+    }
+
+    /// Serve the front-end on a TCP endpoint: each accepted connection
+    /// gets its own routing pipeline over the SHARED worker pool.
+    pub fn serve_tcp(
+        &self,
+        addr: &str,
+        max_conns: Option<usize>,
+        on_ready: impl FnOnce(std::net::SocketAddr),
+    ) -> io::Result<usize> {
+        let listener = std::net::TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        eprintln!("mmee cluster: front-end on {local}, {} workers", self.pool.num_workers());
+        on_ready(local);
+        let total = AtomicUsize::new(0);
+        let accept: io::Result<()> = std::thread::scope(|scope| {
+            let mut conns = 0usize;
+            for stream in listener.incoming() {
+                let stream = stream?;
+                let (pool, cfg, total) = (&self.pool, &self.router, &total);
+                scope.spawn(move || {
+                    let reader = match stream.try_clone() {
+                        Ok(s) => io::BufReader::new(s),
+                        Err(_) => return,
+                    };
+                    if let Ok(n) = router::route_lines(pool, reader, &stream, cfg) {
+                        total.fetch_add(n, Ordering::Relaxed);
+                    }
+                });
+                conns += 1;
+                if let Some(m) = max_conns {
+                    if conns >= m {
+                        break;
+                    }
+                }
+            }
+            Ok(())
+        });
+        accept?;
+        Ok(total.into_inner())
+    }
+
+    /// Fault-injection hook: kill worker `i`'s process without telling
+    /// the pool, so the recovery path has to discover it.
+    pub fn kill_worker(&self, i: usize) {
+        self.pool.kill(i);
+    }
+
+    pub fn total_restarts(&self) -> u64 {
+        self.pool.total_restarts()
+    }
+
+    /// Graceful shutdown: stop health monitoring first (so it cannot
+    /// respawn workers mid-drain), then drain the pool.
+    pub fn shutdown(mut self) {
+        if let Some(h) = self.health.take() {
+            h.stop();
+        }
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        if let Some(h) = self.health.take() {
+            h.stop();
+        }
+        self.pool.shutdown();
+    }
+}
+
+/// The mixed preset trace used by [`smoke`]: small surfaces spanning
+/// both shards of a 2-worker cluster, an unresolvable line, a control
+/// ping, and a batch mixing good/duplicate/bad elements.
+fn smoke_trace() -> String {
+    let lines = [
+        r#"{"workload": "mlp", "accel": "accel1"}"#,
+        r#"{"workload": "bert-base", "seq": 256, "accel": "accel1", "objective": "latency"}"#,
+        r#"{"workload": "nope"}"#,
+        r#"{"op": "ping"}"#,
+        concat!(
+            r#"[{"workload": "mlp", "accel": "accel1", "objective": "edp"},"#,
+            r#" {"workload": "bert-base", "seq": 256, "accel": "no-such-hw"},"#,
+            r#" {"workload": "bert-base", "seq": 256, "accel": "accel2"}]"#
+        ),
+        r#"{"workload": "bert-base", "seq": 256, "accel": "accel2", "objective": "energy"}"#,
+        r#"{"workload": "mlp", "accel": "accel1"}"#,
+    ];
+    let mut trace = lines.join("\n");
+    trace.push('\n');
+    trace
+}
+
+fn normalize_lines(text: &str) -> Vec<String> {
+    text.lines().map(proto::normalize_response).collect()
+}
+
+/// How many per-worker entries does an aggregated `stats` response carry?
+fn stats_worker_count(stats_line: &str) -> Option<usize> {
+    let j = Json::parse(stats_line.trim()).ok()?;
+    Some(j.get("stats")?.get("workers")?.as_arr()?.len())
+}
+
+fn check_eq(reference: &[String], got: &[String], label: &str) -> Result<(), MmeeError> {
+    if reference.len() != got.len() {
+        return Err(MmeeError::Internal(format!(
+            "{label}: {} response lines, reference has {}",
+            got.len(),
+            reference.len()
+        )));
+    }
+    for (i, (r, g)) in reference.iter().zip(got).enumerate() {
+        if r != g {
+            return Err(MmeeError::Internal(format!(
+                "{label}: line {i} differs\n  reference: {r}\n  cluster:   {g}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The `mmee cluster --smoke` check: spawn a real cluster from this
+/// binary, round-trip the mixed trace, kill a worker, and verify the
+/// re-run still matches a single-process reference byte-for-byte
+/// (after zeroing volatile timing/provenance fields) with the restart
+/// counted. Exercised in CI.
+pub fn smoke(workers: usize, worker_threads: usize) -> Result<(), MmeeError> {
+    let trace = smoke_trace();
+    eprintln!("cluster smoke: computing single-process reference");
+    let engine = MmeeEngine::native();
+    let mut reference = Vec::new();
+    service::serve_lines(&engine, trace.as_bytes(), &mut reference)?;
+    let reference = normalize_lines(&String::from_utf8(reference).expect("utf8"));
+
+    eprintln!("cluster smoke: starting {workers} workers");
+    let program = std::env::current_exe()?;
+    let mut cfg = ClusterConfig::new(program);
+    cfg.workers = workers;
+    cfg.worker_threads = worker_threads;
+    let cluster = Cluster::start(cfg)?;
+    let run = |label: &str| -> Result<Vec<String>, MmeeError> {
+        eprintln!("cluster smoke: routing trace ({label})");
+        let mut out = Vec::new();
+        cluster.route(trace.as_bytes(), &mut out)?;
+        Ok(normalize_lines(&String::from_utf8(out).expect("utf8")))
+    };
+
+    check_eq(&reference, &run("cold")?, "cold cluster")?;
+    eprintln!("cluster smoke: killing worker 0");
+    cluster.kill_worker(0);
+    check_eq(&reference, &run("after kill")?, "after killing worker 0")?;
+    if cluster.total_restarts() < 1 {
+        return Err(MmeeError::Internal("killed worker was never restarted".to_string()));
+    }
+
+    let mut out = Vec::new();
+    cluster.route(format!("{}\n", proto::STATS_LINE).as_bytes(), &mut out)?;
+    let stats = String::from_utf8(out).expect("utf8");
+    if stats_worker_count(&stats) != Some(cluster.pool().num_workers()) {
+        return Err(MmeeError::Internal(format!("malformed cluster stats: {stats}")));
+    }
+
+    let restarts = cluster.total_restarts();
+    cluster.shutdown();
+    println!(
+        "cluster smoke ok: {workers} workers, {} trace lines byte-identical \
+         to single-process (cold + after worker kill), {restarts} restart(s)",
+        reference.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Cluster wire helpers: the spawn-time readiness handshake, the
+//! control-op lines exchanged with workers, and response normalization
+//! for byte-comparing cluster output against a single-process
+//! reference.
+//!
+//! Workers speak the ordinary [`crate::coordinator::service`] line-JSON
+//! protocol — nothing here adds a second wire format. The only
+//! cluster-specific message is the readiness line a worker prints to
+//! *stdout* once its TCP listener is bound (`mmee serve --tcp
+//! 127.0.0.1:0 ... --announce`), which carries the ephemeral port back
+//! to the parent without any sleep-and-poll handshake.
+
+use std::net::SocketAddr;
+
+use crate::util::json::Json;
+
+/// Liveness probe sent to workers by the health monitor.
+pub const PING_LINE: &str = r#"{"op": "ping"}"#;
+
+/// Stats request forwarded to every worker by the front-end aggregator.
+pub const STATS_LINE: &str = r#"{"op": "stats"}"#;
+
+/// The one line a worker prints to stdout once its listener is bound:
+/// `{"ready": {"addr": "127.0.0.1:PORT", "pid": N}}`.
+pub fn ready_line(addr: SocketAddr) -> String {
+    let ready = Json::obj(vec![
+        ("addr", Json::str(addr.to_string())),
+        ("pid", Json::num(std::process::id() as f64)),
+    ]);
+    Json::obj(vec![("ready", ready)]).to_string()
+}
+
+/// Parse a worker's readiness line back into its bound address.
+pub fn parse_ready(line: &str) -> Option<SocketAddr> {
+    let j = Json::parse(line.trim()).ok()?;
+    j.get("ready")?.get("addr")?.as_str()?.parse().ok()
+}
+
+/// Zero a response line's volatile fields — timings and cache-hit
+/// provenance, which legitimately differ between a cold single process
+/// and a warm cluster worker — so everything else can be compared
+/// byte-for-byte (`Json::Obj` serializes with sorted keys, so the
+/// round-trip is canonical). Batch array lines are normalized
+/// element-wise; non-JSON input comes back trimmed but unchanged.
+pub fn normalize_response(line: &str) -> String {
+    match Json::parse(line.trim()) {
+        Ok(mut j) => {
+            normalize_json(&mut j);
+            format!("{j}")
+        }
+        Err(_) => line.trim().to_string(),
+    }
+}
+
+fn normalize_json(j: &mut Json) {
+    match j {
+        Json::Arr(items) => items.iter_mut().for_each(normalize_json),
+        Json::Obj(o) => {
+            if o.contains_key("elapsed_s") {
+                o.insert("elapsed_s".into(), Json::Num(0.0));
+            }
+            if let Some(Json::Obj(stats)) = o.get_mut("stats") {
+                if stats.contains_key("elapsed_s") {
+                    stats.insert("elapsed_s".into(), Json::Num(0.0));
+                }
+                if stats.contains_key("boundary_build_s") {
+                    stats.insert("boundary_build_s".into(), Json::Num(0.0));
+                }
+            }
+            if let Some(Json::Obj(prov)) = o.get_mut("provenance") {
+                prov.insert("cache_hit".into(), Json::Bool(false));
+                prov.insert("boundary_cache_hit".into(), Json::Bool(false));
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Does this line carry the `overloaded` load-shedding rejection? The
+/// router treats it as "worker saturated, connection closed": it
+/// reconnects (with the worker pool's backoff) and resends.
+pub fn is_overload_reject(line: &str) -> bool {
+    let Ok(j) = Json::parse(line.trim()) else {
+        return false;
+    };
+    j.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str) == Some("overloaded")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_line_roundtrips() {
+        let addr: SocketAddr = "127.0.0.1:48213".parse().unwrap();
+        let line = ready_line(addr);
+        assert_eq!(parse_ready(&line), Some(addr));
+        assert_eq!(parse_ready("not json"), None);
+        assert_eq!(parse_ready(r#"{"other": 1}"#), None);
+    }
+
+    #[test]
+    fn normalize_zeroes_volatile_fields_only() {
+        let raw = concat!(
+            r#"{"energy_j": 1.5, "elapsed_s": 0.25,"#,
+            r#" "stats": {"elapsed_s": 0.2, "boundary_build_s": 0.1, "tilings": 64},"#,
+            r#" "provenance": {"backend": "native", "cache_hit": true,"#,
+            r#" "boundary_cache_hit": true}}"#
+        );
+        let n = normalize_response(raw);
+        let j = Json::parse(&n).unwrap();
+        assert_eq!(j.get("elapsed_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("energy_j").unwrap().as_f64(), Some(1.5));
+        let stats = j.get("stats").unwrap();
+        assert_eq!(stats.get("elapsed_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(stats.get("boundary_build_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(stats.get("tilings").unwrap().as_usize(), Some(64));
+        let prov = j.get("provenance").unwrap();
+        assert_eq!(prov.get("cache_hit").unwrap().as_bool(), Some(false));
+        // Identical requests answered cold vs cached now normalize to
+        // the same bytes.
+        let cached = raw.replace("\"cache_hit\": true", "\"cache_hit\": false");
+        assert_eq!(normalize_response(raw), normalize_response(&cached));
+    }
+
+    #[test]
+    fn normalize_handles_batch_arrays_and_errors() {
+        let raw = concat!(
+            r#"[{"energy_j": 1.0, "elapsed_s": 0.5, "stats": {"elapsed_s": 1.0}},"#,
+            r#" {"error": {"kind": "infeasible", "message": "no"}}]"#
+        );
+        let j = Json::parse(&normalize_response(raw)).unwrap();
+        let items = j.as_arr().unwrap();
+        assert_eq!(items[0].get("elapsed_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            items[1].get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("infeasible")
+        );
+        // Error lines pass through untouched (no volatile fields).
+        let e = r#"{"error": {"kind": "parse", "message": "bad"}}"#;
+        assert_eq!(normalize_response(e), format!("{}", Json::parse(e).unwrap()));
+    }
+
+    #[test]
+    fn overload_rejects_are_recognized() {
+        let r = crate::error::MmeeError::Overloaded { pending: 2 };
+        let line = format!("{}", Json::obj(vec![("error", r.to_json())]));
+        assert!(is_overload_reject(&line));
+        assert!(!is_overload_reject(r#"{"error": {"kind": "io", "message": "x"}}"#));
+        assert!(!is_overload_reject(r#"{"energy_j": 1.0}"#));
+        assert!(!is_overload_reject("garbage"));
+    }
+}

@@ -1,0 +1,369 @@
+//! The cluster front-end: reads the ordinary line-JSON protocol,
+//! consistent-hashes each request's resolved (workload, accel) key to
+//! one worker process ([`crate::search::plan_shard_hash`] +
+//! [`crate::util::shard::shard_of`] — the same rule the in-process LRU
+//! uses to pick a shard, so every surface's repeat traffic lands on
+//! ONE worker and its warm caches), and re-sequences responses into
+//! arrival order with the coordinator's
+//! [`crate::coordinator::pool::Sequencer`].
+//!
+//! Unroutable lines (parse errors, unknown presets, `ping`) are
+//! answered locally — the front-end needs no engine for them. Batch
+//! array lines are split element-wise: each element routes to its own
+//! shard and the answers are reassembled positionally into the single
+//! array response line the protocol requires.
+//!
+//! Fault handling: a worker connection that dies mid-burst (or is shed
+//! with an `overloaded` rejection) is dropped, the worker is restarted
+//! through the pool's failure path, and the *unanswered* requests of
+//! the burst are re-sent — mapping queries are pure, so re-execution
+//! is safe. After bounded retries the survivors get structured `io`
+//! error lines instead of hanging the trace.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::cluster::proto;
+use crate::cluster::worker::{exchange_line, WorkerPool};
+use crate::coordinator::pool::{BoundedQueue, Sequencer};
+use crate::coordinator::service::{ping_json, Control, Request, Response};
+use crate::error::MmeeError;
+use crate::search::plan_shard_hash;
+use crate::util::json::Json;
+use crate::util::shard::shard_of;
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Per-response read timeout on worker connections.
+    pub read_timeout: Duration,
+    /// Max requests pipelined onto one worker connection before the
+    /// handler turns around to read responses.
+    pub max_burst: usize,
+    /// Per-worker routing queue capacity (backpressures the reader).
+    pub queue_capacity: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            read_timeout: Duration::from_secs(120),
+            max_burst: 16,
+            queue_capacity: 64,
+        }
+    }
+}
+
+/// Retries for one burst before its requests get `io` error lines.
+const BURST_ATTEMPTS: usize = 3;
+
+/// Where a worker's response line goes.
+enum Dest {
+    /// A whole-line request: complete response slot `seq` directly.
+    Seq(usize),
+    /// Element `idx` of a batch line; the last element completed
+    /// assembles and pushes the array response.
+    Batch(Arc<BatchSlot>, usize),
+}
+
+/// Reassembly state for one batch line whose elements fan out across
+/// workers.
+struct BatchSlot {
+    seq: usize,
+    slots: Mutex<Vec<Option<String>>>,
+    remaining: AtomicUsize,
+}
+
+struct Job {
+    dest: Dest,
+    line: String,
+}
+
+/// Deliver one finished response line to its destination.
+fn complete(seq: &Sequencer<String>, dest: Dest, line: String) {
+    match dest {
+        Dest::Seq(s) => seq.push(s, line),
+        Dest::Batch(slot, idx) => {
+            slot.slots.lock().unwrap()[idx] = Some(line);
+            if slot.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let parts = slot.slots.lock().unwrap();
+                let body: Vec<&str> =
+                    parts.iter().map(|p| p.as_deref().expect("all elements completed")).collect();
+                // Compact JSON arrays join with bare commas, so this
+                // byte-matches a single-process batch response line.
+                seq.push(slot.seq, format!("[{}]", body.join(",")));
+            }
+        }
+    }
+}
+
+fn error_line(e: MmeeError) -> String {
+    Response::Error(e).to_line()
+}
+
+/// Route requests from `input` across the pool until EOF, writing
+/// responses to `output` in arrival order. Returns requests served
+/// (batch lines count each element), matching
+/// [`crate::coordinator::service::serve_lines`].
+pub fn route_lines(
+    pool: &Arc<WorkerPool>,
+    input: impl BufRead,
+    output: impl Write + Send,
+    cfg: &RouterConfig,
+) -> io::Result<usize> {
+    let n = pool.num_workers();
+    let queues: Vec<BoundedQueue<Job>> =
+        (0..n).map(|_| BoundedQueue::new(cfg.queue_capacity.max(1))).collect();
+    // Reorder window with slack beyond the maximum number of jobs that
+    // can be outstanding at once (queued + in a burst, per worker).
+    let window = 1024usize.max(2 * n * (cfg.queue_capacity + cfg.max_burst));
+    let seq: Sequencer<String> = Sequencer::with_capacity(window);
+    let mut served = 0usize;
+    let mut jobs = 0usize;
+    let mut read_err: Option<io::Error> = None;
+    let write_result: io::Result<()> = std::thread::scope(|scope| {
+        for (i, queue) in queues.iter().enumerate() {
+            let (pool, seq) = (&**pool, &seq);
+            scope.spawn(move || run_worker(pool, i, queue, seq, cfg));
+        }
+        let writer = scope.spawn({
+            let seq = &seq;
+            let mut output = output;
+            move || -> io::Result<()> {
+                let mut result = Ok(());
+                while let Some((_, line)) = seq.next_in_order() {
+                    if result.is_ok() {
+                        result = writeln!(output, "{line}").and_then(|_| output.flush());
+                    }
+                }
+                result
+            }
+        });
+        for line in input.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+            };
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let seq_no = jobs;
+            jobs += 1;
+            served += dispatch(pool, trimmed, seq_no, &queues, &seq);
+        }
+        for q in &queues {
+            q.close();
+        }
+        seq.finish(jobs);
+        writer.join().expect("writer thread panicked")
+    });
+    if let Some(e) = read_err {
+        return Err(e);
+    }
+    write_result?;
+    Ok(served)
+}
+
+/// Parse one line, answer it locally if possible, otherwise enqueue it
+/// (or its batch elements) to the owning shard(s). Returns how many
+/// requests the line carries.
+fn dispatch(
+    pool: &Arc<WorkerPool>,
+    line: &str,
+    seq_no: usize,
+    queues: &[BoundedQueue<Job>],
+    seq: &Sequencer<String>,
+) -> usize {
+    let n = queues.len();
+    match Request::parse(line) {
+        Err(e) => {
+            seq.push(seq_no, error_line(e));
+            1
+        }
+        Ok(Request::Control(Control::Ping)) => {
+            seq.push(seq_no, ping_json().to_string());
+            1
+        }
+        Ok(Request::Control(Control::Stats)) => {
+            seq.push(seq_no, cluster_stats_line(pool, queues));
+            1
+        }
+        Ok(Request::One(req)) => {
+            match req.resolve() {
+                Err(e) => seq.push(seq_no, error_line(e)),
+                Ok((w, a)) => {
+                    let wi = shard_of(plan_shard_hash(&w, &a), n);
+                    enqueue(
+                        &queues[wi],
+                        Job { dest: Dest::Seq(seq_no), line: line.to_string() },
+                        seq,
+                    );
+                }
+            }
+            1
+        }
+        Ok(Request::Batch(batch)) => {
+            if batch.items.is_empty() {
+                seq.push(seq_no, "[]".to_string());
+                return 0;
+            }
+            let parsed = Json::parse(line).expect("line already parsed as a batch");
+            let elems = parsed.as_arr().expect("batch lines are arrays");
+            let slot = Arc::new(BatchSlot {
+                seq: seq_no,
+                slots: Mutex::new(vec![None; batch.items.len()]),
+                remaining: AtomicUsize::new(batch.items.len()),
+            });
+            for (idx, item) in batch.items.iter().enumerate() {
+                let resolved = match item {
+                    Err(e) => Err(e.clone()),
+                    Ok(req) => req.resolve(),
+                };
+                let dest = Dest::Batch(Arc::clone(&slot), idx);
+                match resolved {
+                    // Parse/resolution errors become error *elements*
+                    // at their position, exactly as `plan` would answer.
+                    Err(e) => complete(seq, dest, error_line(e)),
+                    Ok((w, a)) => {
+                        let wi = shard_of(plan_shard_hash(&w, &a), n);
+                        // Re-serialize the element as its own one-line
+                        // request for the shard worker.
+                        enqueue(&queues[wi], Job { dest, line: elems[idx].to_string() }, seq);
+                    }
+                }
+            }
+            batch.items.len()
+        }
+    }
+}
+
+fn enqueue(queue: &BoundedQueue<Job>, job: Job, seq: &Sequencer<String>) {
+    if let Err(job) = queue.push(job) {
+        complete(seq, job.dest, error_line(MmeeError::Io("router shutting down".into())));
+    }
+}
+
+/// Per-worker handler: drain the routing queue in bursts, pipeline
+/// each burst onto one worker connection, and read the responses back
+/// in order (the worker serves each connection FIFO).
+fn run_worker(
+    pool: &WorkerPool,
+    i: usize,
+    queue: &BoundedQueue<Job>,
+    seq: &Sequencer<String>,
+    cfg: &RouterConfig,
+) {
+    while let Some(first) = queue.pop() {
+        let mut burst = vec![first];
+        while burst.len() < cfg.max_burst {
+            match queue.try_pop() {
+                Some(j) => burst.push(j),
+                None => break,
+            }
+        }
+        serve_burst(pool, i, burst, seq, cfg);
+    }
+}
+
+fn serve_burst(
+    pool: &WorkerPool,
+    i: usize,
+    mut burst: Vec<Job>,
+    seq: &Sequencer<String>,
+    cfg: &RouterConfig,
+) {
+    let mut last_err = String::from("worker unavailable");
+    for _ in 0..BURST_ATTEMPTS {
+        if burst.is_empty() {
+            return;
+        }
+        match try_burst(pool, i, &mut burst, seq, cfg) {
+            Ok(()) => return,
+            // The failed connection was already dropped; the pool's
+            // failure path (inside `connect`) restarts the worker, and
+            // the still-unanswered jobs are re-sent. Pure mapping
+            // queries make re-execution safe.
+            Err(e) => last_err = e.to_string(),
+        }
+    }
+    for job in burst {
+        complete(seq, job.dest, error_line(MmeeError::Io(format!("worker {i}: {last_err}"))));
+    }
+}
+
+/// One attempt: write every pending request, then read one response
+/// per request in order, completing each as its line arrives. On any
+/// I/O failure the caller retries with whatever is left in `burst`.
+fn try_burst(
+    pool: &WorkerPool,
+    i: usize,
+    burst: &mut Vec<Job>,
+    seq: &Sequencer<String>,
+    cfg: &RouterConfig,
+) -> io::Result<()> {
+    let mut conn = pool.connect(i)?;
+    conn.set_read_timeout(Some(cfg.read_timeout))?;
+    conn.set_nodelay(true)?;
+    for job in burst.iter() {
+        writeln!(conn, "{}", job.line)?;
+    }
+    conn.flush()?;
+    let mut reader = BufReader::new(conn);
+    while !burst.is_empty() {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 || !line.ends_with('\n') {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "worker closed the connection mid-burst",
+            ));
+        }
+        if proto::is_overload_reject(&line) {
+            // Accept-time shedding: the worker served nothing on this
+            // connection; retry the whole remaining burst.
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionRefused,
+                "worker shed the connection (overloaded)",
+            ));
+        }
+        let job = burst.remove(0);
+        complete(seq, job.dest, line.trim_end().to_string());
+    }
+    Ok(())
+}
+
+/// Answer `{"op": "stats"}` at the front-end: per-worker engine stats
+/// (queried over short-lived connections) merged with the router's
+/// queue depths and the pool's restart counters.
+fn cluster_stats_line(pool: &Arc<WorkerPool>, queues: &[BoundedQueue<Job>]) -> String {
+    let workers: Vec<Json> = (0..pool.num_workers())
+        .map(|i| {
+            let mut fields = vec![
+                ("queue_depth", Json::num(queues[i].len() as f64)),
+                ("restarts", Json::num(pool.restarts(i) as f64)),
+                ("worker", Json::num(i as f64)),
+            ];
+            match exchange_line(pool, i, proto::STATS_LINE, Duration::from_secs(5)) {
+                Ok(line) => {
+                    let s = Json::parse(line.trim()).ok().and_then(|j| j.get("stats").cloned());
+                    if let Some(s) = s {
+                        fields.push(("stats", s));
+                    }
+                }
+                Err(e) => fields.push(("error", Json::str(e.to_string()))),
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let cluster = Json::obj(vec![
+        ("restarts", Json::num(pool.total_restarts() as f64)),
+        ("workers", Json::num(pool.num_workers() as f64)),
+    ]);
+    let stats = Json::obj(vec![("cluster", cluster), ("workers", Json::arr(workers))]);
+    Json::obj(vec![("stats", stats)]).to_string()
+}

@@ -1,0 +1,328 @@
+//! Worker-process lifecycle: spawn with a readiness handshake,
+//! restart-on-crash with bounded backoff, graceful drain on shutdown.
+//!
+//! Each worker is an `mmee serve --tcp 127.0.0.1:0 ... --announce`
+//! child process owning one shard of the (workload, accel) keyspace.
+//! The pool tracks each slot's current process behind a mutex plus a
+//! monotonically increasing *generation*: every failure report quotes
+//! the generation it observed, so N threads discovering the same dead
+//! process trigger exactly one restart, and a report against an
+//! already-replaced process is a no-op.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::proto;
+
+/// How to spawn one worker process.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// The `mmee` binary (usually `std::env::current_exe()`).
+    pub program: PathBuf,
+    /// `--workers` passed to each child's serve loop.
+    pub serve_threads: usize,
+    /// `--backend` passed to each child.
+    pub backend: String,
+}
+
+impl WorkerSpec {
+    pub fn new(program: PathBuf) -> WorkerSpec {
+        WorkerSpec { program, serve_threads: 2, backend: "native".to_string() }
+    }
+}
+
+/// Restart backoff bounds: first respawn after a crash waits
+/// `BACKOFF_BASE`, doubling per consecutive crash up to `BACKOFF_MAX`;
+/// a process that survived `STABLE_AFTER` is considered to have been
+/// healthy, so its crash resets the backoff to the base.
+const BACKOFF_BASE: Duration = Duration::from_millis(50);
+const BACKOFF_MAX: Duration = Duration::from_secs(2);
+const STABLE_AFTER: Duration = Duration::from_secs(10);
+
+/// How long shutdown waits for a worker to exit after SIGTERM before
+/// escalating to SIGKILL.
+const DRAIN_TIMEOUT: Duration = Duration::from_millis(500);
+
+#[derive(Debug)]
+struct Proc {
+    child: Child,
+    addr: SocketAddr,
+    spawned: Instant,
+}
+
+#[derive(Debug)]
+struct SlotState {
+    proc: Option<Proc>,
+    /// Bumped on every spawn AND every acknowledged failure, so a
+    /// failure report for generation G acts at most once.
+    generation: u64,
+    backoff: Duration,
+}
+
+#[derive(Debug)]
+struct Slot {
+    state: Mutex<SlotState>,
+    restarts: AtomicU64,
+}
+
+/// A fixed-size pool of worker processes, indexed by shard.
+#[derive(Debug)]
+pub struct WorkerPool {
+    spec: WorkerSpec,
+    slots: Vec<Slot>,
+    closed: AtomicBool,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers eagerly (each completes its readiness
+    /// handshake before this returns, so a broken binary or
+    /// environment fails fast instead of on the first request).
+    pub fn start(spec: WorkerSpec, n: usize) -> io::Result<Arc<WorkerPool>> {
+        let n = n.max(1);
+        let pool = Arc::new(WorkerPool {
+            spec,
+            slots: (0..n)
+                .map(|_| Slot {
+                    state: Mutex::new(SlotState {
+                        proc: None,
+                        generation: 0,
+                        backoff: Duration::ZERO,
+                    }),
+                    restarts: AtomicU64::new(0),
+                })
+                .collect(),
+            closed: AtomicBool::new(false),
+        });
+        for i in 0..n {
+            if let Err(e) = pool.addr(i) {
+                pool.shutdown();
+                return Err(e);
+            }
+        }
+        Ok(pool)
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spawn one worker child and complete the readiness handshake:
+    /// read the `--announce` line from its stdout to learn the
+    /// ephemeral port. The stdout pipe is dropped afterwards (workers
+    /// only write responses to their TCP connections; their stderr is
+    /// inherited for diagnostics).
+    fn spawn_worker(&self) -> io::Result<Proc> {
+        // `--announce` must come last: the CLI parser treats a `--flag`
+        // followed by a non-flag token as a key/value pair.
+        let mut child = Command::new(&self.spec.program)
+            .args([
+                "serve",
+                "--tcp",
+                "127.0.0.1:0",
+                "--workers",
+                &self.spec.serve_threads.to_string(),
+                "--backend",
+                &self.spec.backend,
+                "--announce",
+            ])
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let mut line = String::new();
+        let read = BufReader::new(stdout).read_line(&mut line);
+        let addr = match read {
+            Ok(0) | Err(_) => None,
+            Ok(_) => proto::parse_ready(&line),
+        };
+        match addr {
+            Some(addr) => Ok(Proc { child, addr, spawned: Instant::now() }),
+            None => {
+                let _ = child.kill();
+                let _ = child.wait();
+                Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    format!("worker exited before announcing readiness (got {line:?})"),
+                ))
+            }
+        }
+    }
+
+    /// The address of worker `i`'s current process and its generation,
+    /// spawning (with the slot's crash backoff) if the slot is empty.
+    /// Callers that later find the process dead report the generation
+    /// back through [`WorkerPool::report_failure`].
+    pub fn addr(&self, i: usize) -> io::Result<(SocketAddr, u64)> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(io::Error::new(io::ErrorKind::NotConnected, "worker pool shut down"));
+        }
+        let mut s = self.slots[i].state.lock().unwrap();
+        if let Some(p) = &s.proc {
+            return Ok((p.addr, s.generation));
+        }
+        // Holding the slot lock through backoff + spawn means
+        // concurrent callers wait for ONE respawn instead of racing.
+        if !s.backoff.is_zero() {
+            std::thread::sleep(s.backoff);
+        }
+        let p = self.spawn_worker()?;
+        let addr = p.addr;
+        s.proc = Some(p);
+        s.generation += 1;
+        Ok((addr, s.generation))
+    }
+
+    /// Connect to worker `i`, restarting it on connection failure:
+    /// each failed attempt reports the observed generation (killing
+    /// the dead process and arming the backoff) and the next attempt
+    /// respawns. Bounded attempts, so a persistently broken worker
+    /// surfaces as an error instead of an infinite loop.
+    pub fn connect(&self, i: usize) -> io::Result<TcpStream> {
+        let mut last = None;
+        for _ in 0..5 {
+            let (addr, generation) = self.addr(i)?;
+            match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    self.report_failure(i, generation);
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| io::Error::other("worker connect failed")))
+    }
+
+    /// Acknowledge that worker `i`'s process of `generation` is dead
+    /// (or unreachable): reap it, count the restart, and arm the
+    /// respawn backoff. No-op if that generation was already replaced,
+    /// so concurrent discoveries of one crash collapse to one restart.
+    pub fn report_failure(&self, i: usize, generation: u64) {
+        let mut s = self.slots[i].state.lock().unwrap();
+        if s.generation != generation {
+            return;
+        }
+        let lived = if let Some(mut p) = s.proc.take() {
+            let _ = p.child.kill();
+            let _ = p.child.wait();
+            p.spawned.elapsed()
+        } else {
+            Duration::ZERO
+        };
+        s.generation += 1;
+        s.backoff = if lived >= STABLE_AFTER {
+            BACKOFF_BASE
+        } else {
+            (s.backoff * 2).clamp(BACKOFF_BASE, BACKOFF_MAX)
+        };
+        self.slots[i].restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Has worker `i`'s process exited on its own? Returns the
+    /// generation to report if so (the caller decides whether to
+    /// restart). Used by the health monitor's crash sweep.
+    pub fn poll_exited(&self, i: usize) -> Option<u64> {
+        let mut s = self.slots[i].state.lock().unwrap();
+        let generation = s.generation;
+        match &mut s.proc {
+            None => None,
+            Some(p) => match p.child.try_wait() {
+                Ok(None) => None,
+                Ok(Some(_)) | Err(_) => Some(generation),
+            },
+        }
+    }
+
+    /// Test/fault-injection hook: kill worker `i`'s process WITHOUT
+    /// any bookkeeping, leaving the pool believing it is alive — the
+    /// recovery path (connect failure or health sweep → failure report
+    /// → respawn) must discover the crash on its own.
+    pub fn kill(&self, i: usize) {
+        let mut s = self.slots[i].state.lock().unwrap();
+        if let Some(p) = &mut s.proc {
+            let _ = p.child.kill();
+            let _ = p.child.wait();
+        }
+    }
+
+    /// Restarts of worker `i` so far.
+    pub fn restarts(&self, i: usize) -> u64 {
+        self.slots[i].restarts.load(Ordering::Relaxed)
+    }
+
+    /// Restarts across all workers.
+    pub fn total_restarts(&self) -> u64 {
+        (0..self.slots.len()).map(|i| self.restarts(i)).sum()
+    }
+
+    /// Graceful drain: stop handing out addresses, then terminate each
+    /// worker — SIGTERM first (closing its listener and letting
+    /// in-flight connections finish on POSIX semantics), escalating to
+    /// SIGKILL after [`DRAIN_TIMEOUT`]. Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        for slot in &self.slots {
+            let proc = slot.state.lock().unwrap().proc.take();
+            if let Some(mut p) = proc {
+                terminate(&mut p.child);
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// SIGTERM, bounded wait, then SIGKILL. Falls back to SIGKILL where
+/// no `kill` utility is available (non-unix, minimal containers).
+fn terminate(child: &mut Child) {
+    let polite = if cfg!(unix) {
+        Command::new("kill")
+            .args(["-TERM", &child.id().to_string()])
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false)
+    } else {
+        false
+    };
+    if polite {
+        let t0 = Instant::now();
+        while t0.elapsed() < DRAIN_TIMEOUT {
+            if let Ok(Some(_)) = child.try_wait() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+/// One short-lived request/response exchange with worker `i` — the
+/// health monitor's ping and the stats aggregator both use this shape.
+pub fn exchange_line(
+    pool: &WorkerPool,
+    i: usize,
+    request: &str,
+    timeout: Duration,
+) -> io::Result<String> {
+    let mut conn = pool.connect(i)?;
+    conn.set_read_timeout(Some(timeout))?;
+    conn.set_nodelay(true)?;
+    writeln!(conn, "{request}")?;
+    conn.flush()?;
+    let mut line = String::new();
+    let n = BufReader::new(conn).read_line(&mut line)?;
+    if n == 0 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "worker closed connection"));
+    }
+    Ok(line)
+}

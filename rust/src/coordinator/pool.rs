@@ -435,10 +435,23 @@ pub fn parallel_chunks<T: Send>(
     run_indexed(num_chunks, |i| f(i * chunk, ((i + 1) * chunk).min(n)))
 }
 
+/// Why [`BoundedQueue::try_push`] failed — carries the item back so
+/// the caller can shed it explicitly (e.g. answer `overloaded` on the
+/// wire) instead of silently dropping work.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue is at capacity; the caller should shed load.
+    Full(T),
+    /// The queue has been closed; no more items are accepted.
+    Closed(T),
+}
+
 /// A bounded blocking MPMC queue (Mutex + Condvars; no channel crate
 /// offline). `push` blocks while full, `pop` blocks while empty;
 /// `close` wakes everyone — pending items still drain, then `pop`
-/// returns `None` and further `push`es are rejected.
+/// returns `None` and further `push`es are rejected. The `try_*`
+/// variants never block — the load-shedding accept loop and the
+/// cluster router's burst drain are built on them.
 #[derive(Debug)]
 pub struct BoundedQueue<T> {
     state: Mutex<QueueState<T>>,
@@ -482,6 +495,42 @@ impl<T> BoundedQueue<T> {
             }
             s = self.not_full.wait(s).unwrap();
         }
+    }
+
+    /// Non-blocking enqueue: `Err(Full)` when at capacity (the caller
+    /// sheds load), `Err(Closed)` when shut down.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushError::Closed(item));
+        }
+        if s.items.len() >= s.capacity {
+            return Err(PushError::Full(item));
+        }
+        s.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking dequeue: `None` when currently empty (whether or
+    /// not the queue is closed).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        let item = s.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Current queue depth (observability; racy by nature).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// `true` when no items are queued right now.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Block until an item is available; `None` once closed and drained.
@@ -646,6 +695,26 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_try_ops_never_block() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert_eq!(q.try_pop(), None);
+        assert!(q.is_empty());
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        // At capacity: the item comes back instead of blocking.
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(3).unwrap();
+        q.close();
+        assert_eq!(q.try_push(4), Err(PushError::Closed(4)));
+        // Closed queues still drain through try_pop.
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
     }
 
     #[test]

@@ -49,7 +49,29 @@
 //! ```
 //!
 //! `kind` is one of `unknown_workload`, `unknown_accel`, `infeasible`,
-//! `backend`, `parse`, `io`, `internal`.
+//! `backend`, `parse`, `io`, `internal`, `overloaded`.
+//!
+//! `overloaded` is the load-shedding kind: when [`serve_tcp`]'s
+//! connection queue is saturated, a new connection receives ONE
+//! `{"error": {"kind": "overloaded", ...}}` line and is closed instead
+//! of blocking the acceptor (or silently queueing behind a stalled
+//! worker pool). It is always transient — back off and reconnect.
+//!
+//! ## Control operations
+//!
+//! A line holding an object with an `"op"` key is a control request,
+//! not a mapping query:
+//!
+//! ```json
+//! {"op": "ping"}
+//! {"op": "stats"}
+//! ```
+//!
+//! `ping` answers `{"ok": true, "op": "ping"}` (liveness — the cluster
+//! health monitor uses it); `stats` answers a `{"stats": {...}}`
+//! object with the engine's backend name, plan/boundary cache
+//! hit/miss counters, and cold boundary-build count (the cluster
+//! front-end aggregates these across workers).
 //!
 //! ## Concurrency
 //!
@@ -70,37 +92,55 @@ use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::pool::{BoundedQueue, Sequencer};
+use crate::coordinator::pool::{BoundedQueue, PushError, Sequencer};
 use crate::error::MmeeError;
 use crate::search::{BatchRequest, MappingPlan, MappingRequest, MmeeEngine};
 use crate::util::json::Json;
 
-/// Wire-side request: one mapping query, or a batch of them (a JSON
-/// array on the wire).
+/// Wire-side request: one mapping query, a batch of them (a JSON array
+/// on the wire), or a control operation (an object with an `"op"` key).
 #[derive(Debug, Clone)]
 pub enum Request {
     One(MappingRequest),
     Batch(BatchRequest),
+    Control(Control),
+}
+
+/// Non-mapping control operations (see the wire-format docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    /// Liveness probe: `{"op": "ping"}`.
+    Ping,
+    /// Engine observability snapshot: `{"op": "stats"}`.
+    Stats,
 }
 
 impl Request {
     pub fn parse(line: &str) -> Result<Request, MmeeError> {
         let j = Json::parse(line)?;
         if j.as_arr().is_some() {
-            Ok(Request::Batch(BatchRequest::from_json(&j)?))
-        } else {
-            Ok(Request::One(MappingRequest::from_json(&j)?))
+            return Ok(Request::Batch(BatchRequest::from_json(&j)?));
         }
+        if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
+            return match op {
+                "ping" => Ok(Request::Control(Control::Ping)),
+                "stats" => Ok(Request::Control(Control::Stats)),
+                other => Err(MmeeError::Parse(format!("unknown op '{other}', want ping|stats"))),
+            };
+        }
+        Ok(Request::One(MappingRequest::from_json(&j)?))
     }
 }
 
-/// Wire-side response: a plan, a structured error, or one element per
-/// batch request (positional).
+/// Wire-side response: a plan, a structured error, one element per
+/// batch request (positional), or a control-operation answer.
 #[derive(Debug)]
 pub enum Response {
     Plan(Box<MappingPlan>),
     Error(MmeeError),
     Batch(Vec<Response>),
+    /// Answer to a [`Control`] request, already in wire form.
+    Info(Json),
 }
 
 impl Response {
@@ -109,6 +149,7 @@ impl Response {
             Response::Plan(p) => p.to_json(),
             Response::Error(e) => Json::obj(vec![("error", e.to_json())]),
             Response::Batch(items) => Json::arr(items.iter().map(Response::to_json)),
+            Response::Info(j) => j.clone(),
         }
     }
 
@@ -139,7 +180,39 @@ pub fn handle(engine: &MmeeEngine, req: &Request) -> Response {
             Err(e) => Response::Error(e),
         },
         Request::Batch(batch) => Response::Batch(handle_batch(engine, batch)),
+        Request::Control(Control::Ping) => Response::Info(ping_json()),
+        Request::Control(Control::Stats) => Response::Info(engine_stats_json(engine)),
     }
+}
+
+/// The canonical `{"op": "ping"}` answer — shared by workers and the
+/// cluster front-end so both produce byte-identical ping lines
+/// (`Json::Obj` serializes with sorted keys).
+pub fn ping_json() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("op", Json::str("ping"))])
+}
+
+/// The `{"op": "stats"}` answer: this engine's observability counters
+/// in wire form. The cluster front-end aggregates one of these per
+/// worker into its own `stats` response.
+pub fn engine_stats_json(engine: &MmeeEngine) -> Json {
+    let (ph, pm) = engine.plan_cache_stats();
+    let (bh, bm) = engine.boundary_cache_stats();
+    let (hw, pw) = engine.boundary_cache_weight_stats();
+    let plan = Json::obj(vec![("hits", Json::num(ph as f64)), ("misses", Json::num(pm as f64))]);
+    let boundary = Json::obj(vec![
+        ("hits", Json::num(bh as f64)),
+        ("misses", Json::num(bm as f64)),
+        ("hit_weight", Json::num(hw as f64)),
+        ("put_weight", Json::num(pw as f64)),
+    ]);
+    let stats = Json::obj(vec![
+        ("backend", Json::str(engine.backend_name())),
+        ("plan_cache", plan),
+        ("boundary_cache", boundary),
+        ("boundary_builds", Json::num(engine.boundary_build_count() as f64)),
+    ]);
+    Json::obj(vec![("stats", stats)])
 }
 
 /// Schedule a batch through [`MmeeEngine::plan_batch`] and splice the
@@ -188,6 +261,13 @@ fn respond_line(engine: &MmeeEngine, line: &str) -> Option<(Response, usize)> {
 /// Per-connection I/O errors no longer kill the server: the first one
 /// is reported once the accept loop ends (`max_conns`); healthy
 /// connections are unaffected.
+///
+/// Load shedding: when every worker is busy AND the connection queue
+/// is full, a new connection is answered with one
+/// `{"error": {"kind": "overloaded", ...}}` line and closed — the
+/// acceptor never blocks, so a saturated pool degrades into fast
+/// structured rejections instead of unbounded connection queueing.
+/// Shed connections count toward `max_conns`.
 pub fn serve_tcp(
     engine: &MmeeEngine,
     addr: &str,
@@ -227,8 +307,15 @@ pub fn serve_tcp(
                     break;
                 }
                 Ok(s) => {
-                    if queue.push(s).is_err() {
-                        break;
+                    match queue.try_push(s) {
+                        Ok(()) => {}
+                        Err(PushError::Full(mut s)) => {
+                            // Shed: structured rejection, then close.
+                            let err = MmeeError::Overloaded { pending: queue.len() };
+                            let _ = writeln!(s, "{}", Response::Error(err).to_line());
+                            let _ = s.flush();
+                        }
+                        Err(PushError::Closed(_)) => break,
                     }
                     conns += 1;
                     if let Some(m) = max_conns {
@@ -665,6 +752,94 @@ mod tests {
             c.shutdown(std::net::Shutdown::Write).unwrap();
         }
         assert_eq!(server.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn control_ops_answer_ping_and_stats() {
+        let engine = MmeeEngine::native();
+        let input = concat!(
+            r#"{"op": "ping"}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n",
+            r#"{"op": "stats"}"#,
+            "\n",
+            r#"{"op": "reboot"}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 4);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let ping = Json::parse(lines[0]).unwrap();
+        assert_eq!(ping.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ping.get("op").unwrap().as_str(), Some("ping"));
+        let stats = Json::parse(lines[2]).unwrap();
+        let s = stats.get("stats").unwrap();
+        assert_eq!(s.get("backend").unwrap().as_str(), Some("native"));
+        // The mapping request in between left one plan-cache miss.
+        assert_eq!(s.get("plan_cache").unwrap().get("misses").unwrap().as_usize(), Some(1));
+        assert!(s.get("boundary_builds").unwrap().as_usize().is_some());
+        let bad = Json::parse(lines[3]).unwrap();
+        assert_eq!(bad.get("error").unwrap().get("kind").unwrap().as_str(), Some("parse"));
+    }
+
+    #[test]
+    fn serve_tcp_sheds_connections_past_queue_capacity() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::time::Duration;
+        let (tx, rx) = std::sync::mpsc::channel();
+        // ONE worker, queue capacity workers.max(2) == 2: with the
+        // worker pinned and two connections queued, the fourth must be
+        // shed with a structured `overloaded` line.
+        let server = std::thread::spawn(move || {
+            let engine = MmeeEngine::native();
+            serve_tcp(&engine, "127.0.0.1:0", Some(4), 1, |addr| tx.send(addr).unwrap())
+                .unwrap()
+        });
+        let addr = rx.recv().unwrap();
+        let mut pinned = std::net::TcpStream::connect(addr).unwrap();
+        pinned.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        pinned.write_all(b"{\"workload\": \"bert-base\", \"seq\": 512}\n").unwrap();
+        let mut pinned_reader = BufReader::new(pinned.try_clone().unwrap());
+        let mut line = String::new();
+        // Reading the response proves the worker owns this connection
+        // (and will stay blocked on it until we shut down writes).
+        pinned_reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("energy_j").is_some(), "{line}");
+        // Two connections fill the queue; they are accepted in order
+        // (the kernel completes their handshakes before we even start
+        // the connection that must be shed).
+        let queued: Vec<std::net::TcpStream> =
+            (0..2).map(|_| std::net::TcpStream::connect(addr).unwrap()).collect();
+        let shed = std::net::TcpStream::connect(addr).unwrap();
+        shed.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut shed_lines = Vec::new();
+        for l in BufReader::new(shed).lines() {
+            shed_lines.push(l.unwrap());
+        }
+        assert_eq!(shed_lines.len(), 1, "one rejection line, then EOF");
+        let j = Json::parse(&shed_lines[0]).unwrap();
+        assert_eq!(
+            j.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("overloaded"),
+            "{}",
+            shed_lines[0]
+        );
+        // Free the worker; the queued connections are still served.
+        pinned.shutdown(std::net::Shutdown::Write).unwrap();
+        for c in queued {
+            c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            let mut w = c.try_clone().unwrap();
+            w.write_all(b"{\"workload\": \"bert-base\", \"seq\": 512}\n").unwrap();
+            let mut r = BufReader::new(c);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(Json::parse(&line).unwrap().get("energy_j").is_some(), "{line}");
+            w.shutdown(std::net::Shutdown::Write).unwrap();
+        }
+        assert_eq!(server.join().unwrap(), 3, "three served; the shed conn served none");
     }
 
     #[test]

@@ -36,6 +36,10 @@ pub enum MmeeError {
     /// backends disagree, model/simulator drift) — a correctness
     /// regression in MMEE itself, never a caller mistake.
     Internal(String),
+    /// The server shed this request because its connection queue was
+    /// saturated — transient by construction; clients should back off
+    /// and retry. `pending` is the queue depth at rejection time.
+    Overloaded { pending: usize },
 }
 
 impl MmeeError {
@@ -49,6 +53,7 @@ impl MmeeError {
             MmeeError::Parse(_) => "parse",
             MmeeError::Io(_) => "io",
             MmeeError::Internal(_) => "internal",
+            MmeeError::Overloaded { .. } => "overloaded",
         }
     }
 
@@ -77,6 +82,9 @@ impl fmt::Display for MmeeError {
             MmeeError::Parse(msg) => write!(f, "parse: {msg}"),
             MmeeError::Io(msg) => write!(f, "io: {msg}"),
             MmeeError::Internal(msg) => write!(f, "internal invariant violated: {msg}"),
+            MmeeError::Overloaded { pending } => {
+                write!(f, "server overloaded: {pending} connections queued; retry later")
+            }
         }
     }
 }
@@ -125,5 +133,14 @@ mod tests {
     fn infeasible_display() {
         let e = MmeeError::Infeasible { workload: "w".into(), accel: "a".into() };
         assert_eq!(e.to_string(), "no feasible mapping for w on a");
+    }
+
+    #[test]
+    fn overloaded_kind_and_message() {
+        let e = MmeeError::Overloaded { pending: 4 };
+        assert_eq!(e.kind(), "overloaded");
+        assert!(e.to_string().contains("retry"), "{e}");
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("overloaded"));
     }
 }

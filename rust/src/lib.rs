@@ -45,7 +45,13 @@
 //! Entry points: [`search::MmeeEngine`] for optimization,
 //! [`sim::Simulator`] for validation, [`report`] for paper artifacts,
 //! [`coordinator::service`] for the `mmee serve` loops (sequential,
-//! concurrent, TCP connection pool).
+//! concurrent, TCP connection pool), and [`cluster`] for `mmee
+//! cluster` — multi-process sharded serving: a front-end that
+//! consistent-hashes each request's resolved (workload, accel) key to
+//! one of N `mmee serve` worker processes (so each worker's caches own
+//! a disjoint keyspace slice) with full worker lifecycle management
+//! (readiness handshake, health pings, restart-on-crash, graceful
+//! drain).
 
 pub mod error;
 pub mod util;
@@ -60,6 +66,7 @@ pub mod eval;
 pub mod runtime;
 pub mod search;
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod report;
 

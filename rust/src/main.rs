@@ -8,6 +8,9 @@
 //! mmee serve [--tcp host:port] [--workers N] [--route-above M]
 //!                                   # JSON-lines mapping service
 //! mmee serve --batch reqs.json      # one JSON-array file, batched
+//! mmee cluster [--workers N] [--worker-threads T] [--tcp host:port]
+//!                                   # multi-process sharded front-end
+//! mmee cluster --smoke              # spawn/kill/restart self-check
 //! mmee bench-fig <13..27|all>       # regenerate paper figures
 //! mmee bench-table <1..4|all>       # regenerate paper tables
 //! mmee bench-all [--out results]    # everything + summary.md
@@ -56,6 +59,7 @@ fn main() -> Result<()> {
         Some("pareto") => cmd_pareto(&args),
         Some("validate") => cmd_validate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("bench-fig") => cmd_bench_fig(&args),
         Some("bench-table") => cmd_bench_table(&args),
         Some("bench-all") => cmd_bench_all(&args),
@@ -67,7 +71,7 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "mmee — Matrix Multiplication Encoded Enumeration dataflow mapper
-subcommands: optimize | pareto | validate | serve | bench-fig | bench-table | bench-all
+subcommands: optimize | pareto | validate | serve | cluster | bench-fig | bench-table | bench-all
 see rust/src/main.rs header for flags";
 
 fn request_from(args: &Args) -> Result<MappingRequest> {
@@ -162,7 +166,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{:#}", resp.to_json());
         n
     } else if let Some(addr) = args.flag("tcp") {
-        service::serve_tcp(&engine, addr, None, workers, |_| {})?
+        let announce = args.has("announce");
+        service::serve_tcp(&engine, addr, None, workers, move |local| {
+            if announce {
+                // Cluster workers hand their ephemeral port back to the
+                // parent through stdout; it is block-buffered when
+                // piped, so flush or the parent hangs on the handshake.
+                use std::io::Write;
+                let mut out = std::io::stdout().lock();
+                let _ = writeln!(out, "{}", mmee::cluster::proto::ready_line(local));
+                let _ = out.flush();
+            }
+        })?
     } else {
         eprintln!(
             "mmee serve: JSON requests on stdin, one per line (backend: {}, {workers} workers)",
@@ -175,6 +190,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (bh, bm) = engine.boundary_cache_stats();
     eprintln!("served {n} requests (plan cache {ph}/{} hits, boundary cache {bh}/{})",
         ph + pm, bh + bm);
+    Ok(())
+}
+
+/// `mmee cluster`: a front-end that shards requests across N spawned
+/// `mmee serve --tcp` worker processes by (workload, accel) key, so
+/// each worker owns a disjoint slice of the plan/boundary-cache
+/// keyspace. Reads line-JSON from stdin (or serves `--tcp`), restarts
+/// crashed workers, and answers `{"op": "stats"}` with per-worker
+/// cache/restart counters.
+fn cmd_cluster(args: &Args) -> Result<()> {
+    if args.has("smoke") {
+        return mmee::cluster::smoke(
+            args.usize_flag("workers", 2),
+            args.usize_flag("worker-threads", 2),
+        );
+    }
+    let mut cfg = mmee::cluster::ClusterConfig::new(std::env::current_exe()?);
+    cfg.workers = args.usize_flag("workers", 2);
+    cfg.worker_threads = args.usize_flag("worker-threads", 2);
+    cfg.backend = args.flag_or("backend", "native").to_string();
+    let cluster = mmee::cluster::Cluster::start(cfg)?;
+    let served = if let Some(addr) = args.flag("tcp") {
+        cluster.serve_tcp(addr, None, |_| {})?
+    } else {
+        eprintln!(
+            "mmee cluster: JSON requests on stdin, one per line ({} workers)",
+            cluster.pool().num_workers()
+        );
+        let stdin = std::io::stdin();
+        cluster.route(stdin.lock(), std::io::stdout())?
+    };
+    eprintln!("cluster served {served} requests ({} restarts)", cluster.total_restarts());
+    cluster.shutdown();
     Ok(())
 }
 

@@ -240,6 +240,7 @@ impl EngineBuilder {
             boundary_flight: SingleFlight::new(),
             boundary_builds: AtomicU64::new(0),
             plan_cache: ShardedLru::new(self.cache_capacity),
+            plan_flight: SingleFlight::new(),
         }
     }
 }
@@ -267,6 +268,11 @@ pub struct MmeeEngine {
     /// client re-querying the same (workload, accel) under any
     /// objective never re-pays the surface pass.
     plan_cache: ShardedLru<PlanKey, Result<Arc<[MappingPlan; 3]>, MmeeError>>,
+    /// Per-key deduplication of concurrent plan-cache misses: the
+    /// boundary flight already collapsed the *construction*, but each
+    /// concurrent miss still ran its own surface pass (argmin3). One
+    /// leader now runs the pass; followers receive its plan group.
+    plan_flight: SingleFlight<PlanKey, (Result<Arc<[MappingPlan; 3]>, MmeeError>, bool)>,
 }
 
 // The engine must stay shareable across serving workers; if a field
@@ -343,6 +349,16 @@ impl ShardKey for PlanKey {
             .usize(self.accel.bytes_per_word)
             .finish()
     }
+}
+
+/// The stable routing fingerprint of a resolved (workload, accel)
+/// pair — exactly the plan cache's [`ShardKey`] hash, exposed so the
+/// cluster front-end partitions requests the same way the in-process
+/// cache shards them: all requests for one surface land on one worker
+/// and its warm caches. FNV-1a over explicit field bytes, so the value
+/// is identical across builds and processes (pinned by golden tests).
+pub fn plan_shard_hash(workload: &Workload, accel: &Accelerator) -> u64 {
+    PlanKey { workload: workload.clone(), accel: accel.clone() }.shard_hash()
 }
 
 fn obj_index(o: Objective) -> usize {
@@ -544,25 +560,45 @@ impl MmeeEngine {
     /// objectives. Returns the entry and whether it came from cache.
     /// `Infeasible` verdicts are memoized; backend failures may be
     /// transient and are not.
+    ///
+    /// Concurrent misses of one key are single-flight deduplicated the
+    /// same way the boundary build is: exactly one thread runs the
+    /// surface pass, the rest wait and are reported as cache hits
+    /// (they paid a wait, not a pass — the observable that matters for
+    /// `provenance.cache_hit` and the counting-backend tests).
     fn plan_group(&self, key: &PlanKey) -> (Result<Arc<[MappingPlan; 3]>, MmeeError>, bool) {
         if let Some(entry) = self.plan_cache.get(key) {
             return (entry, true);
         }
+        let ((entry, was_cached), leader) = self.plan_flight.run(key, || {
+            // A previous flight may have completed (and populated the
+            // cache) between this thread's probe and winning
+            // leadership: re-check before paying the pass (untracked —
+            // the one logical lookup was already counted as a miss).
+            if let Some(entry) = self.plan_cache.get_untracked(key) {
+                return (entry, true);
+            }
+            (self.compute_plan_group(key), false)
+        });
+        (entry, !leader || was_cached)
+    }
+
+    /// One cold plan-group computation: surface pass → feasibility →
+    /// packaged winners for all three objectives, inserted into the
+    /// plan cache (`Infeasible` verdicts included; backend failures
+    /// may be transient and are not memoized).
+    fn compute_plan_group(&self, key: &PlanKey) -> Result<Arc<[MappingPlan; 3]>, MmeeError> {
         let t0 = Instant::now();
         let (workload, accel) = (&key.workload, &key.accel);
         let q = self.table();
         // Backend failures may be transient — propagate without memoizing.
-        let (best, b, boundary_hit, boundary_build) =
-            match self.surface_argmin3(workload, accel, q) {
-                Ok(v) => v,
-                Err(e) => return (Err(e), false),
-            };
+        let (best, b, boundary_hit, boundary_build) = self.surface_argmin3(workload, accel, q)?;
         // Infeasibility is a property of the (workload, accel) pair:
         // memoize the verdict for all three objectives.
         let (score, _, _) = best[0];
         if let Err(e) = Self::check_feasible(score, workload, accel) {
             self.plan_cache.put(key.clone(), Err(e.clone()));
-            return (Err(e), false);
+            return Err(e);
         }
         let stats = SearchStats {
             candidates: q.num_candidates(),
@@ -589,7 +625,7 @@ impl MmeeEngine {
             make(Objective::Edp),
         ]);
         self.plan_cache.put(key.clone(), Ok(Arc::clone(&plans)));
-        (Ok(plans), false)
+        Ok(plans)
     }
 
     /// Answer one typed request: resolve specs, consult the plan cache,

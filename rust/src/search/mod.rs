@@ -17,7 +17,7 @@ pub mod plan;
 pub mod request;
 pub mod result;
 
-pub use engine::{EngineBuilder, MmeeEngine, SearchStats, DEFAULT_CACHE_CAPACITY};
+pub use engine::{plan_shard_hash, EngineBuilder, MmeeEngine, SearchStats, DEFAULT_CACHE_CAPACITY};
 pub use pareto::{pareto_front, ParetoPoint};
 pub use plan::{MappingPlan, Provenance};
 pub use request::{AccelSpec, BatchRequest, MappingRequest, WorkloadSpec};

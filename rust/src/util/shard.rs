@@ -83,6 +83,14 @@ impl Default for Fnv {
 /// still gets ≥2 entries per shard.
 pub const DEFAULT_SHARDS: usize = 8;
 
+/// Map a [`ShardKey`] fingerprint onto one of `n` partitions — the ONE
+/// place the hash→partition rule lives, shared by the in-process LRU
+/// shards and the cluster's hash→worker routing so both agree on which
+/// partition owns a key (`n == 0` is treated as one partition).
+pub fn shard_of(hash: u64, n: usize) -> usize {
+    (hash % n.max(1) as u64) as usize
+}
+
 /// A thread-safe LRU split into independently locked shards.
 ///
 /// `capacity` is the TOTAL entry budget: it is distributed across at
@@ -144,7 +152,7 @@ impl<K: ShardKey + PartialEq, V: Clone> ShardedLru<K, V> {
     }
 
     fn shard(&self, key: &K) -> &Mutex<LruCache<K, V>> {
-        &self.shards[(key.shard_hash() % self.shards.len() as u64) as usize]
+        &self.shards[shard_of(key.shard_hash(), self.shards.len())]
     }
 
     /// Look up `key`, cloning the value out (callers keep nothing
@@ -491,5 +499,29 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_ne!(Fnv::new().f64(1.0).finish(), Fnv::new().f64(-1.0).finish());
+    }
+
+    /// Golden pins: cross-process routing needs the fingerprint to be
+    /// identical in every build, so lock the FNV-1a primitives to
+    /// explicit expected values (computed against the reference
+    /// parameters: offset 0xcbf29ce484222325, prime 0x100000001b3,
+    /// little-endian integer packing, `f64::to_bits`).
+    #[test]
+    fn fnv_primitives_match_golden_values() {
+        assert_eq!(Fnv::new().finish(), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(Fnv::new().str("mmee").finish(), 0xfe74_c9a2_bc76_6801);
+        assert_eq!(Fnv::new().u64(0).finish(), 0xa8c7_f832_281a_39c5);
+        assert_eq!(Fnv::new().str("bert-base").usize(512).finish(), 0x4821_270e_dd68_ae72);
+        assert_eq!(Fnv::new().f64(10.0).finish(), 0xa84d_6032_27b1_db41);
+    }
+
+    #[test]
+    fn shard_of_is_modular_and_total() {
+        assert_eq!(shard_of(7, 2), 1);
+        assert_eq!(shard_of(8, 2), 0);
+        assert_eq!(shard_of(u64::MAX, 3), (u64::MAX % 3) as usize);
+        // Degenerate partition counts never panic.
+        assert_eq!(shard_of(42, 0), 0);
+        assert_eq!(shard_of(42, 1), 0);
     }
 }

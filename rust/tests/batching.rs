@@ -233,3 +233,39 @@ fn concurrent_hammering_keeps_cache_stats_consistent() {
     let (bh, bm) = engine.boundary_cache_stats();
     assert_eq!(bh + bm, misses, "boundary lookups happen only on plan misses");
 }
+
+/// Single-flight: 8 threads released simultaneously onto the SAME cold
+/// key perform exactly ONE backend evaluation — followers wait for the
+/// leader's in-flight surface pass instead of duplicating it, and all
+/// of them observe the identical plan.
+#[test]
+fn racing_cold_misses_collapse_to_one_evaluation() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let engine = MmeeEngine::builder()
+        .backend(Box::new(CountingBackend { argmin_calls: Arc::clone(&calls) }))
+        .build();
+    const THREADS: usize = 8;
+    let barrier = std::sync::Barrier::new(THREADS);
+    let plans: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let (engine, barrier) = (&engine, &barrier);
+                let req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+                scope.spawn(move || {
+                    barrier.wait();
+                    canonical_solution(&engine.plan(&req).unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(
+        calls.load(Ordering::Relaxed),
+        1,
+        "8 racing threads, one resolved surface, ONE evaluation"
+    );
+    assert!(plans.iter().all(|p| p == &plans[0]), "all threads must see the same plan");
+    let (hits, misses) = engine.plan_cache_stats();
+    assert_eq!(hits + misses, THREADS as u64, "one tracked lookup per plan call");
+    assert!(misses >= 1, "somebody had to take the cold miss");
+}

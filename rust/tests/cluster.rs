@@ -1,0 +1,167 @@
+//! Cluster integration: the multi-process sharded front-end must be
+//! observationally identical to a single in-process `serve_lines` —
+//! including across a worker crash — the routing fingerprint it shards
+//! by is pinned as an on-the-wire contract, and sharding must preserve
+//! per-worker cache locality (each distinct surface built exactly once
+//! cluster-wide).
+
+use mmee::cluster::{proto, Cluster, ClusterConfig};
+use mmee::coordinator::service;
+use mmee::search::{plan_shard_hash, AccelSpec, MmeeEngine, WorkloadSpec};
+use mmee::util::json::Json;
+use mmee::util::shard::shard_of;
+
+fn program() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_mmee"))
+}
+
+fn hash_of(workload: &str, seq: usize, accel: &str) -> u64 {
+    let w = WorkloadSpec::preset(workload, seq).resolve().expect("workload preset");
+    let a = AccelSpec::preset(accel).resolve().expect("accel preset");
+    plan_shard_hash(&w, &a)
+}
+
+/// The routing fingerprint is part of the cluster's wire contract: a
+/// front-end and workers from DIFFERENT builds must agree on which
+/// shard owns a key, so these values may never drift. (Golden values
+/// verified against an independent FNV-1a implementation.)
+#[test]
+fn preset_routing_hashes_are_pinned() {
+    let golden: &[(&str, usize, &str, u64)] = &[
+        ("bert-base", 512, "accel1", 0x6c66_78f4_133b_441d),
+        ("bert-base", 512, "accel2", 0xab7e_79aa_ae1e_ef52),
+        ("bert-base", 256, "accel1", 0x7ace_dc46_daf3_a724),
+        ("bert-base", 256, "accel2", 0x9079_4267_4460_2663),
+        ("cc1", 512, "accel1", 0x4ee6_2853_0763_3e3a),
+        ("mlp", 512, "accel1", 0xbcf4_2e8e_6c1a_2a03),
+        ("ffn", 512, "accel1", 0xae79_e28b_aed2_99e4),
+        ("gpt3-13b", 2048, "accel2", 0x80b6_d40d_0c98_14ab),
+    ];
+    for (w, seq, a, want) in golden {
+        assert_eq!(hash_of(w, *seq, a), *want, "plan_shard_hash({w} seq {seq}, {a}) drifted");
+    }
+    // Shard ownership the crash test below relies on: in a 2-worker
+    // cluster, mlp/accel1 lands on worker 1, bert-256/accel1 on 0.
+    assert_eq!(shard_of(hash_of("mlp", 512, "accel1"), 2), 1);
+    assert_eq!(shard_of(hash_of("bert-base", 256, "accel1"), 2), 0);
+    assert_eq!(shard_of(hash_of("bert-base", 256, "accel2"), 2), 1);
+}
+
+const FIRST_HALF: &str = concat!(
+    r#"{"workload": "mlp", "accel": "accel1"}"#,
+    "\n",
+    r#"{"workload": "bert-base", "seq": 256, "accel": "accel1", "objective": "latency"}"#,
+    "\n",
+    "this is not json\n",
+);
+
+const SECOND_HALF: &str = concat!(
+    r#"{"workload": "mlp", "accel": "accel1"}"#,
+    "\n",
+    r#"[{"workload": "bert-base", "seq": 256, "accel": "accel1"}, {"workload": "bad"},"#,
+    r#" {"workload": "mlp", "accel": "accel1", "objective": "edp"}]"#,
+    "\n",
+    r#"{"op": "ping"}"#,
+    "\n",
+    r#"{"workload": "bert-base", "seq": 256, "accel": "accel2"}"#,
+    "\n",
+);
+
+fn normalized(bytes: Vec<u8>) -> Vec<String> {
+    let text = String::from_utf8(bytes).expect("utf8 response stream");
+    text.lines().map(proto::normalize_response).collect()
+}
+
+/// A 2-worker cluster answers a shuffled mixed-preset trace (single
+/// requests, a batch, a parse error, a control ping) byte-identically
+/// to one in-process engine — before AND after one worker is killed
+/// mid-trace — modulo the volatile timing/cache-provenance fields.
+#[test]
+fn two_worker_cluster_matches_single_process_across_a_crash() {
+    let engine = MmeeEngine::native();
+    let full = format!("{FIRST_HALF}{SECOND_HALF}");
+    let mut reference = Vec::new();
+    service::serve_lines(&engine, full.as_bytes(), &mut reference).expect("reference serve");
+    let reference = normalized(reference);
+
+    let mut cfg = ClusterConfig::new(program());
+    cfg.workers = 2;
+    cfg.worker_threads = 1;
+    let cluster = Cluster::start(cfg).expect("cluster start");
+
+    let mut out1 = Vec::new();
+    cluster.route(FIRST_HALF.as_bytes(), &mut out1).expect("route first half");
+    // Kill the worker that owns mlp/accel1 — the second half routes to
+    // it again, so correct answers prove restart + re-serve, not luck.
+    cluster.kill_worker(1);
+    let mut out2 = Vec::new();
+    cluster.route(SECOND_HALF.as_bytes(), &mut out2).expect("route second half");
+
+    let got: Vec<String> = normalized(out1).into_iter().chain(normalized(out2)).collect();
+    assert_eq!(got.len(), reference.len(), "response line count");
+    for (i, (r, g)) in reference.iter().zip(&got).enumerate() {
+        assert_eq!(g, r, "response line {i} differs from single-process reference");
+    }
+    assert!(cluster.total_restarts() >= 1, "the killed worker must have been restarted");
+    cluster.shutdown();
+}
+
+/// Hash-sharded routing keeps every key on one worker, so a repeated
+/// trace pays each distinct surface exactly once CLUSTER-WIDE — the
+/// aggregate plan-cache hit rate matches a single process instead of
+/// being diluted by N independent cold caches.
+#[test]
+fn sharded_routing_preserves_cache_locality_on_repeated_traces() {
+    let mut cfg = ClusterConfig::new(program());
+    cfg.workers = 2;
+    cfg.worker_threads = 1;
+    // No health pings: the trace below is the workers' ONLY traffic,
+    // so the cache counters are exactly attributable.
+    cfg.health = None;
+    let cluster = Cluster::start(cfg).expect("cluster start");
+
+    let distinct = [
+        r#"{"workload": "mlp", "accel": "accel1"}"#,
+        r#"{"workload": "bert-base", "seq": 256, "accel": "accel1"}"#,
+        r#"{"workload": "cc1", "accel": "accel1"}"#,
+    ];
+    let mut trace = String::new();
+    for _ in 0..3 {
+        for line in distinct {
+            trace.push_str(line);
+            trace.push('\n');
+        }
+    }
+    let mut out = Vec::new();
+    cluster.route(trace.as_bytes(), &mut out).expect("route repeated trace");
+    let out = String::from_utf8(out).expect("utf8");
+    assert_eq!(out.lines().count(), 9);
+    for line in out.lines() {
+        let j = Json::parse(line).expect("response json");
+        assert!(j.get("error").is_none(), "unexpected error response: {line}");
+    }
+
+    let mut stats = Vec::new();
+    cluster.route(format!("{}\n", proto::STATS_LINE).as_bytes(), &mut stats).expect("stats");
+    let stats = String::from_utf8(stats).expect("utf8");
+    let j = Json::parse(stats.trim()).expect("stats json");
+    let workers = j
+        .get("stats")
+        .and_then(|s| s.get("workers"))
+        .and_then(Json::as_arr)
+        .expect("stats.workers array");
+    assert_eq!(workers.len(), 2);
+    let (mut hits, mut misses) = (0usize, 0usize);
+    for w in workers {
+        let pc = w
+            .get("stats")
+            .and_then(|s| s.get("plan_cache"))
+            .unwrap_or_else(|| panic!("worker stats missing plan_cache: {w}"));
+        hits += pc.get("hits").and_then(Json::as_usize).expect("hits");
+        misses += pc.get("misses").and_then(Json::as_usize).expect("misses");
+    }
+    assert_eq!(misses, 3, "each distinct surface must be built exactly once cluster-wide");
+    assert_eq!(hits, 6, "every repeat must hit the owning worker's warm cache");
+    assert_eq!(cluster.total_restarts(), 0, "no crashes in this scenario");
+    cluster.shutdown();
+}
