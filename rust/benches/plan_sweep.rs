@@ -1,0 +1,184 @@
+//! Dynamic-shape warm-start benchmark: cold per-shape planning vs
+//! `MmeeEngine::plan_sweep` (delta surface builds + incumbent-seeded
+//! passes) across sequence-length sweeps — a prefill doubling series
+//! (128→4096) and a decode trace (+1 steps). Also measures the
+//! seeded-prune effect at the kernel level: block/pair skip counts of
+//! a warm-seeded pass vs a cold pass over the same surface, with a
+//! bit-identical-results assertion. Emits `BENCH_sweep.json` with the
+//! amortized per-shape costs, the warm-vs-cold ratio, and a ≥2× target
+//! flag, so the warm-start trajectory is machine-trackable across PRs.
+//!
+//! `--smoke` (or `--test`) runs a tiny sweep with a small time budget
+//! and still writes the full JSON schema — CI runs it so the schema
+//! (and the warm == cold equality check) cannot rot unnoticed.
+
+use mmee::config::presets;
+use mmee::encode::{build_surface, BuildConfig};
+use mmee::eval::kernel::{fused_argmin3_seeded, TileConfig};
+use mmee::model::Multipliers;
+use mmee::search::{warm_seed, MappingRequest, MmeeEngine, Objective, SweepSpec};
+use mmee::tiling::Tiling;
+use mmee::util::bench::Bench;
+use mmee::util::json::Json;
+
+/// Engine with every cache disabled: each measured sweep pays its real
+/// surface work instead of replaying the previous iteration's cache.
+fn fresh() -> MmeeEngine {
+    MmeeEngine::builder().cache_capacity(0).build()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let cases: Vec<(&str, usize, Vec<usize>)> = if smoke {
+        vec![("smoke", 48, vec![48, 64, 96])]
+    } else {
+        vec![
+            ("prefill-doubling", 128, vec![128, 256, 512, 1024, 2048, 4096]),
+            ("decode-steps", 512, (512..528).collect()),
+        ]
+    };
+    let mut bench = if smoke {
+        Bench { budget: std::time::Duration::from_millis(40), ..Bench::new() }
+    } else {
+        Bench::new()
+    };
+    let accel = presets::accel1();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut any_met = false;
+
+    for (name, base_seq, values) in &cases {
+        let n = values.len();
+        let base = MappingRequest::preset("bert-base", *base_seq, "accel1", Objective::Latency);
+        let shapes: Vec<_> = values
+            .iter()
+            .map(|&v| {
+                let mut w = presets::bert_base(*base_seq);
+                w.gemm.i = v;
+                w.gemm.l = v;
+                w
+            })
+            .collect();
+
+        // Warm start must change cost, never results: check once,
+        // outside the timed loops, on every preset including smoke.
+        let report = fresh().plan_sweep(&base, &SweepSpec::seq(values.clone())).unwrap();
+        let eref = fresh();
+        for ((v, plan), w) in report.plans.iter().zip(&shapes) {
+            let p = plan.as_ref().unwrap();
+            let s = eref.optimize(w, &accel, Objective::Latency).unwrap();
+            assert_eq!(p.solution.candidate, s.candidate, "{name} seq {v}: candidate diverged");
+            assert_eq!(p.solution.tiling, s.tiling, "{name} seq {v}: tiling diverged");
+            assert_eq!(p.solution.metrics.latency, s.metrics.latency, "{name} seq {v}");
+        }
+
+        let cold = bench.run(&format!("{name} cold per-shape"), || {
+            let e = fresh();
+            let mut acc = 0.0;
+            for w in &shapes {
+                acc += e.optimize(w, &accel, Objective::Latency).unwrap().metrics.latency;
+            }
+            acc
+        });
+        let warm = bench.run(&format!("{name} warm plan_sweep"), || {
+            let e = fresh();
+            e.plan_sweep(&base, &SweepSpec::seq(values.clone())).unwrap().plans.len()
+        });
+        let (cold_s, warm_s) = (cold.median.as_secs_f64(), warm.median.as_secs_f64());
+        let ratio = cold_s / warm_s.max(1e-12);
+        let met = ratio >= 2.0;
+        any_met |= met;
+        println!(
+            "{name}: cold {:.1} us/shape vs warm {:.1} us/shape — {ratio:.2}x \
+             (target >= 2x, met: {met})",
+            cold_s * 1e6 / n as f64,
+            warm_s * 1e6 / n as f64
+        );
+        rows.push(Json::obj(vec![
+            ("preset", Json::str(*name)),
+            ("shapes", Json::num(n as f64)),
+            ("cold_per_shape_ns", Json::num(cold_s * 1e9 / n as f64)),
+            ("warm_per_shape_ns", Json::num(warm_s * 1e9 / n as f64)),
+            ("amortized_ratio", Json::num(ratio)),
+            ("met", Json::Bool(met)),
+        ]));
+    }
+
+    // Seeded-prune effect at the kernel level: the first case's first
+    // two shapes, previous winners seeding the next surface. Skip
+    // counters come from the kernel's PruneStats; results must match
+    // the unseeded pass bit-for-bit.
+    let (name, base_seq, values) = &cases[0];
+    let q = MmeeEngine::query();
+    let hw = accel.hw_vector();
+    let cap = accel.capacity_words() as f64;
+    let mut w1 = presets::bert_base(*base_seq);
+    w1.gemm.i = values[0];
+    w1.gemm.l = values[0];
+    let mut w2 = presets::bert_base(*base_seq);
+    w2.gemm.i = values[1];
+    w2.gemm.l = values[1];
+    let b1 = build_surface(&w1, &accel, Some(cap), &BuildConfig::serving());
+    let b2 = build_surface(&w2, &accel, Some(cap), &BuildConfig::serving());
+    let m1 = Multipliers::for_workload(&w1, &accel);
+    let m2 = Multipliers::for_workload(&w2, &accel);
+    let cold_seed = [f64::INFINITY; 3];
+    let (best1, _) =
+        fused_argmin3_seeded(q, &b1, &hw, &m1, true, TileConfig::serving(q), cold_seed);
+    let winners: Vec<(usize, Tiling)> =
+        best1.iter().map(|&(_, c, t)| (c, b1.tilings[t])).collect();
+    let seed = warm_seed(q, &w2, &accel, &hw, &m2, cap, &winners);
+    let (cold_best, cold_stats) =
+        fused_argmin3_seeded(q, &b2, &hw, &m2, true, TileConfig::serving(q), cold_seed);
+    let (warm_best, warm_stats) =
+        fused_argmin3_seeded(q, &b2, &hw, &m2, true, TileConfig::serving(q), seed);
+    assert_eq!(cold_best, warm_best, "seeded argmin diverged from unseeded");
+    println!(
+        "{name} seeded prune ({} -> {}): block skips {} -> {}, pair skips {} -> {} \
+         over {} tiles",
+        values[0],
+        values[1],
+        cold_stats.block_skips,
+        warm_stats.block_skips,
+        cold_stats.pair_skips,
+        warm_stats.pair_skips,
+        warm_stats.tiles
+    );
+    let skips = Json::obj(vec![
+        ("preset", Json::str(*name)),
+        ("tiles", Json::num(warm_stats.tiles as f64)),
+        ("cold_block_skips", Json::num(cold_stats.block_skips as f64)),
+        ("warm_block_skips", Json::num(warm_stats.block_skips as f64)),
+        ("cold_pair_skips", Json::num(cold_stats.pair_skips as f64)),
+        ("warm_pair_skips", Json::num(warm_stats.pair_skips as f64)),
+        ("seeded_equal", Json::Bool(true)),
+    ]);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("plan_sweep")),
+        ("smoke", Json::Bool(smoke)),
+        ("results", Json::arr(rows)),
+        ("seeded_prune", skips),
+        ("amortized_ratio_target", Json::num(2.0)),
+        ("amortized_ratio_met", Json::Bool(any_met)),
+    ]);
+    let text = format!("{report}\n");
+    // Schema keys are asserted on EVERY run (CI's --smoke step makes
+    // the check cheap and regular; full runs get the same guarantee).
+    for key in [
+        "cold_per_shape_ns",
+        "warm_per_shape_ns",
+        "amortized_ratio",
+        "seeded_prune",
+        "warm_block_skips",
+        "seeded_equal",
+        "amortized_ratio_target",
+        "amortized_ratio_met",
+    ] {
+        assert!(text.contains(key), "BENCH_sweep.json schema lost key {key}");
+    }
+    std::fs::write("BENCH_sweep.json", &text).expect("write BENCH_sweep.json");
+    println!(
+        "wrote BENCH_sweep.json (warm >=2x amortized target met: {any_met}){}",
+        if smoke { "  [smoke ok]" } else { "" }
+    );
+}

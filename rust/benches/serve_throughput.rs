@@ -154,6 +154,38 @@ fn main() {
         });
         report_rates(&engine, n, s.median.as_secs_f64());
     }
+    // Decode trace (dynamic shapes): an autoregressive client re-plans
+    // after every generated token, so L advances by one per request and
+    // NO line repeats a surface — the plan cache never hits. Serving
+    // the lines pays a cold build + pass per shape; `plan_sweep` chains
+    // delta builds and incumbent-seeded passes over the same shapes.
+    use mmee::search::{MappingRequest, SweepSpec};
+    let decode: Vec<String> = (0..16)
+        .map(|i| {
+            format!(
+                r#"{{"workload": "bert-base", "seq": {}, "objective": "latency", "accel": "accel1"}}"#,
+                512 + i
+            )
+        })
+        .collect();
+    let decode_text = decode.join("\n");
+    let engine = MmeeEngine::native();
+    let (line_by_line, n_dec) = bench.once("decode trace (16 steps, per-line)", || {
+        let mut out = Vec::new();
+        service::serve_lines(&engine, decode_text.as_bytes(), &mut out).unwrap()
+    });
+    report_rates(&engine, n_dec, line_by_line.median.as_secs_f64());
+    let engine = MmeeEngine::native();
+    let base = MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency);
+    let spec = SweepSpec::seq((512..528).collect());
+    let (swept, _) = bench.once("decode trace (16 steps, plan_sweep)", || {
+        engine.plan_sweep(&base, &spec).unwrap().plans.len()
+    });
+    println!(
+        "    decode warm-start: plan_sweep vs per-line serving: {:.2}x",
+        line_by_line.median.as_secs_f64() / swept.median.as_secs_f64().max(1e-12)
+    );
+
     println!(
         "\nbatched vs sequential (cold): {:.2}x  |  concurrent vs sequential (cold): {:.2}x",
         seq.median.as_secs_f64() / bat.median.as_secs_f64().max(1e-12),

@@ -129,6 +129,7 @@ impl Mapper for NoFusion {
             },
             evaluated: 0.0,
             elapsed: t0.elapsed(),
+            boundary_build: std::time::Duration::ZERO,
         })
     }
 }

@@ -404,6 +404,7 @@ impl TileFlow {
             metrics,
             evaluated: evals as f64,
             elapsed: t0.elapsed(),
+            boundary_build: std::time::Duration::ZERO,
         }
     }
 

@@ -22,6 +22,13 @@
 //!   dimension feature partials, no intermediate `Vec<Tiling>` before
 //!   the store is sized) and lands here — byte-identical to the
 //!   reference, columns in the same lexicographic order.
+//!
+//! For dynamic-shape sweeps (decode traffic incrementing L per step),
+//! the fused path additionally supports **delta builds**
+//! ([`crate::encode::build::build_surface_delta`]): per-dimension
+//! divisor pairs and partial columns are retained across neighboring
+//! shapes and only the swept dimensions' parts are recomputed before
+//! the cross-product fill — same byte-identical output contract.
 
 use std::sync::OnceLock;
 

@@ -35,11 +35,23 @@
 //!   any worker count**, so kernels, caches, and tie-break semantics
 //!   downstream are untouched.
 //!
+//! * **Delta builds for neighboring shapes.** The per-dimension
+//!   divisor pairs and partial columns are shape-local: a workload
+//!   differing from its neighbor in one dimension shares the other
+//!   three dimensions' columns verbatim. [`SurfaceParts`] retains them
+//!   behind `Arc`s, and [`build_surface_delta`] recomputes only the
+//!   changed dimensions' pairs/partials before rerunning the
+//!   cross-product fill — the warm path for decode-shaped L-sweeps
+//!   (`MmeeEngine::plan_sweep`). The fill itself must rerun (any dim
+//!   change shifts every survivor column), so the delta saves the
+//!   O(Σ|divisors|) derivation, not the O(Π) copy; the bigger sweep
+//!   lever is incumbent seeding in `eval::kernel`.
+//!
 //! Equivalence (values, ordering, and the survivor set, for pruning
-//! on/off × serial/pooled × capped/uncapped) is property-tested in
-//! `tests/surface_build.rs` against the retained serial reference;
-//! `benches/surface_build.rs` tracks the cold-build speedup in
-//! `BENCH_build.json`.
+//! on/off × serial/pooled × capped/uncapped, cold and delta) is
+//! property-tested in `tests/surface_build.rs` against the retained
+//! serial reference; `benches/surface_build.rs` tracks the cold-build
+//! speedup in `BENCH_build.json`.
 
 use crate::config::{Accelerator, Workload};
 use crate::coordinator::pool::{default_workers, EvalPool, FillBuf};
@@ -48,6 +60,7 @@ use crate::model::analytic::{constant_features, dim_partial, DIM_FEATURES};
 use crate::model::terms::NUM_FEATURES;
 use crate::tiling::factorize::factor_pairs_cached;
 use crate::tiling::{feasible_from, min_footprint, Tiling};
+use std::sync::Arc;
 
 /// How one [`build_surface`] call runs. Both toggles exist so the
 /// equivalence suite can exercise every combination; serving uses
@@ -76,6 +89,76 @@ impl BuildConfig<'static> {
     /// parallelism ablation.
     pub fn serial() -> BuildConfig<'static> {
         BuildConfig { prune: true, pool: None }
+    }
+}
+
+/// The retained per-dimension building blocks of one surface: divisor
+/// pair lists and partial feature columns, one `Arc` per dimension.
+/// [`build_surface`] derives these cold; [`SurfaceParts::delta`]
+/// re-derives only the dimensions that changed (or all of them when
+/// the PE geometry changed, since [`dim_partial`] folds in
+/// `pe_rows`/`pe_cols`), cloning the rest — `dim_partial` is a pure
+/// function of `(d, x_D, x_G, pe)`, so reused columns are bit-identical
+/// to freshly computed ones by construction.
+pub struct SurfaceParts {
+    dims: [usize; 4],
+    pe: (usize, usize),
+    pairs: [Arc<[(usize, usize)]>; 4],
+    partials: [Arc<[[f64; 4]]>; 4],
+}
+
+impl SurfaceParts {
+    /// Derive all four dimensions' pairs and partial columns cold.
+    pub fn new(workload: &Workload, accel: &Accelerator) -> SurfaceParts {
+        let g = &workload.gemm;
+        let dims = [g.i, g.k, g.l, g.j];
+        let pairs: [Arc<[(usize, usize)]>; 4] =
+            std::array::from_fn(|d| factor_pairs_cached(dims[d]));
+        let partials = std::array::from_fn(|d| {
+            pairs[d].iter().map(|&(xd, xg)| dim_partial(d, xd, xg, accel)).collect()
+        });
+        SurfaceParts { dims, pe: (accel.pe_rows, accel.pe_cols), pairs, partials }
+    }
+
+    /// The `[i, k, l, j]` dimension sizes these parts were derived for.
+    pub fn dims(&self) -> [usize; 4] {
+        self.dims
+    }
+
+    /// Parts for a neighboring shape: dimensions whose size is
+    /// unchanged (and with the PE geometry intact) reuse this handle's
+    /// pair list and partial column by `Arc` clone; the rest are
+    /// recomputed. Returns the new parts and how many dimensions were
+    /// reused.
+    pub fn delta(&self, workload: &Workload, accel: &Accelerator) -> (SurfaceParts, usize) {
+        let g = &workload.gemm;
+        let dims = [g.i, g.k, g.l, g.j];
+        let pe = (accel.pe_rows, accel.pe_cols);
+        let keep: [bool; 4] = std::array::from_fn(|d| pe == self.pe && dims[d] == self.dims[d]);
+        let pairs: [Arc<[(usize, usize)]>; 4] = std::array::from_fn(|d| {
+            if keep[d] {
+                self.pairs[d].clone()
+            } else {
+                factor_pairs_cached(dims[d])
+            }
+        });
+        let partials = std::array::from_fn(|d| {
+            if keep[d] {
+                self.partials[d].clone()
+            } else {
+                pairs[d].iter().map(|&(xd, xg)| dim_partial(d, xd, xg, accel)).collect()
+            }
+        });
+        let reused = keep.iter().filter(|&&k| k).count();
+        (SurfaceParts { dims, pe, pairs, partials }, reused)
+    }
+
+    /// Whether dimension `d`'s partial column is physically shared with
+    /// `other` (`Arc` identity) — lets the property suite observe that
+    /// a delta actually reused unchanged dimensions instead of quietly
+    /// recomputing everything.
+    pub fn shares_dim(&self, other: &SurfaceParts, d: usize) -> bool {
+        Arc::ptr_eq(&self.partials[d], &other.partials[d])
     }
 }
 
@@ -149,20 +232,44 @@ pub fn build_surface(
     capacity_words: Option<f64>,
     cfg: &BuildConfig,
 ) -> BoundaryMatrix {
-    let g = &workload.gemm;
-    let fi = factor_pairs_cached(g.i);
-    let fk = factor_pairs_cached(g.k);
-    let fl = factor_pairs_cached(g.l);
-    let fj = factor_pairs_cached(g.j);
+    let parts = SurfaceParts::new(workload, accel);
+    build_surface_from_parts(workload, accel, capacity_words, cfg, &parts)
+}
 
-    // Per-dimension partial feature columns: O(Σ|divisors|) feature
-    // derivation, done once, before the cross product.
-    let parts: [Vec<[f64; 4]>; 4] = [
-        fi.iter().map(|&(xd, xg)| dim_partial(0, xd, xg, accel)).collect(),
-        fk.iter().map(|&(xd, xg)| dim_partial(1, xd, xg, accel)).collect(),
-        fl.iter().map(|&(xd, xg)| dim_partial(2, xd, xg, accel)).collect(),
-        fj.iter().map(|&(xd, xg)| dim_partial(3, xd, xg, accel)).collect(),
-    ];
+/// Warm-path surface build: reuse a previous neighboring shape's
+/// [`SurfaceParts`], recomputing only the changed dimensions' divisor
+/// pairs and partial columns before the cross-product fill. Returns the
+/// matrix plus the new parts handle to chain into the next delta.
+/// Output is bit-identical to a cold [`build_surface`] of the same
+/// `(workload, accel, capacity)` — `prev` only changes where the
+/// partials come from, never their values.
+pub fn build_surface_delta(
+    workload: &Workload,
+    accel: &Accelerator,
+    capacity_words: Option<f64>,
+    cfg: &BuildConfig,
+    prev: &SurfaceParts,
+) -> (BoundaryMatrix, SurfaceParts) {
+    let (parts, _reused) = prev.delta(workload, accel);
+    let b = build_surface_from_parts(workload, accel, capacity_words, cfg, &parts);
+    (b, parts)
+}
+
+/// The fused count-then-fill pass over pre-derived [`SurfaceParts`] —
+/// the shared body of [`build_surface`] (cold parts) and
+/// [`build_surface_delta`] (partially reused parts).
+pub fn build_surface_from_parts(
+    workload: &Workload,
+    accel: &Accelerator,
+    capacity_words: Option<f64>,
+    cfg: &BuildConfig,
+    parts: &SurfaceParts,
+) -> BoundaryMatrix {
+    let g = &workload.gemm;
+    assert_eq!(parts.dims, [g.i, g.k, g.l, g.j], "SurfaceParts built for a different shape");
+    assert_eq!(parts.pe, (accel.pe_rows, accel.pe_cols), "SurfaceParts built for a different PE");
+    let [fi, fk, fl, fj]: [&[(usize, usize)]; 4] = std::array::from_fn(|d| &parts.pairs[d][..]);
+    let parts = &parts.partials;
 
     // Phase 1 — count survivors per (i-pair, k-pair) outer block.
     let blocks = fi.len() * fk.len();
@@ -255,6 +362,27 @@ mod tests {
             let fused = build_surface(&w, &accel, cap, &BuildConfig { prune, pool: None });
             assert_eq!(fused.tilings, reference.tilings, "prune={prune}");
             assert_eq!(fused.raw(), reference.raw(), "prune={prune}");
+        }
+    }
+
+    /// Delta smoke: changed dims recomputed, unchanged dims shared by
+    /// `Arc` identity, output bit-identical to cold. The randomized
+    /// multi-delta chains live in `tests/surface_build.rs`.
+    #[test]
+    fn delta_build_matches_cold_and_reuses_unchanged_dims() {
+        let accel = presets::accel1();
+        let w0 = presets::bert_base(512);
+        let mut w1 = w0.clone();
+        w1.gemm.i = 640;
+        w1.gemm.l = 640;
+        let cap = Some(accel.capacity_words() as f64);
+        let parts0 = SurfaceParts::new(&w0, &accel);
+        let (b, parts1) = build_surface_delta(&w1, &accel, cap, &BuildConfig::serial(), &parts0);
+        let cold = build_surface(&w1, &accel, cap, &BuildConfig::serial());
+        assert_eq!(b.tilings, cold.tilings);
+        assert_eq!(b.raw(), cold.raw());
+        for (d, shared) in [(0, false), (1, true), (2, false), (3, true)] {
+            assert_eq!(parts1.shares_dim(&parts0, d), shared, "dim {d}");
         }
     }
 

@@ -9,5 +9,7 @@ pub mod boundary;
 pub mod build;
 
 pub use boundary::BoundaryMatrix;
-pub use build::{build_surface, BuildConfig};
+pub use build::{
+    build_surface, build_surface_delta, build_surface_from_parts, BuildConfig, SurfaceParts,
+};
 pub use query::QueryMatrix;

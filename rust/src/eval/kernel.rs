@@ -32,7 +32,14 @@
 //!   (buffer-size, DRAM-access) — lower-bound corners are strictly
 //!   dominated by the shared achieved-point snapshot
 //!   ([`SharedFrontBound`]) is skipped, the dominance counterpart of
-//!   the paper's §VI-B pruning.
+//!   the paper's §VI-B pruning;
+//! * **incumbent seeding** — [`fused_argmin3_seeded`] /
+//!   [`fused_fronts_seeded`] warm-start those shared bounds from
+//!   externally *achieved* points before the first tile runs. The
+//!   dynamic-shape sweep (`MmeeEngine::plan_sweep`) re-scores the
+//!   previous shape's winners on the new surface and seeds them, so a
+//!   neighboring shape's pass prunes against a near-optimal bound from
+//!   tile zero instead of discovering one from scratch.
 //!
 //! Results are **bit-identical** to the Block-materializing reference:
 //! lane scores are quantized through `f32` exactly where the reference
@@ -504,6 +511,11 @@ fn add_lanes(out: &mut [f64], tmp: &[f64]) {
 #[derive(Debug)]
 pub struct Incumbents {
     bits: [AtomicU64; 3],
+    /// Regions skipped against these incumbents (whole candidate
+    /// blocks / pair×chunk combinations) — pure observability for the
+    /// warm-start amortization reports, never read by the reduction.
+    block_skips: AtomicU64,
+    pair_skips: AtomicU64,
 }
 
 impl Default for Incumbents {
@@ -520,7 +532,34 @@ impl Incumbents {
                 AtomicU64::new(f64::INFINITY.to_bits()),
                 AtomicU64::new(f64::INFINITY.to_bits()),
             ],
+            block_skips: AtomicU64::new(0),
+            pair_skips: AtomicU64::new(0),
         }
+    }
+
+    /// Warm-start the bounds with externally *achieved* per-objective
+    /// scores before the pass runs. Exactness contract: each entry must
+    /// be the `f32`-quantized score some mapping **present in the
+    /// swept surface** actually attains (e.g. the previous shape's
+    /// winner re-scored on this surface via `eval_block`) — then the
+    /// seed is an upper bound on the final minimum exactly like any
+    /// observed tile best, and pruning stays lossless.
+    /// `f64::INFINITY` entries are no-ops.
+    pub fn seed(&self, scores: [f64; 3]) {
+        self.observe(&[(scores[0], 0, 0), (scores[1], 0, 0), (scores[2], 0, 0)]);
+    }
+
+    /// `(block_skips, pair_skips)` recorded so far.
+    pub fn skip_counts(&self) -> (u64, u64) {
+        (self.block_skips.load(Ordering::Relaxed), self.pair_skips.load(Ordering::Relaxed))
+    }
+
+    fn note_block_skip(&self) {
+        self.block_skips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_pair_skip(&self) {
+        self.pair_skips.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> [f64; 3] {
@@ -711,12 +750,13 @@ pub fn chunk_argmin3_tied(
     let lanes = ws.lanes;
     let global = incumbents.map(|i| i.snapshot()).unwrap_or([f64::INFINITY; 3]);
     let mut out = TileArgmin::empty();
-    if incumbents.is_some() {
+    if let Some(inc) = incumbents {
         // Whole-block skip: decoupled pair/group minima bound every
         // candidate of the block from below.
         let fe = ws.blk_pair_min_e + ws.blk_grp_min_e;
         let fl = ws.blk_pair_min_l.max(ws.blk_grp_min_l);
         if region_beaten(fe, fl, ws.blk_pair_any_inf, &global) {
+            inc.note_block_skip();
             return out;
         }
     }
@@ -724,7 +764,7 @@ pub fn chunk_argmin3_tied(
     for c in c0..c1 {
         let p = cq.cand_pair[c] as usize;
         let g = cq.cand_group[c] as usize;
-        if incumbents.is_some() {
+        if let Some(inc) = incumbents {
             // Pair-level lower bounds (refined by this candidate's
             // group): no lane of this pair×chunk can score below them.
             let fe = ws.pair_min_e[p] + ws.grp_min_e[g];
@@ -735,6 +775,7 @@ pub fn chunk_argmin3_tied(
                 best[2].0.min(global[2]),
             ];
             if region_beaten(fe, fl, ws.pair_has_infeasible[p], &targets) {
+                inc.note_pair_skip();
                 continue;
             }
         }
@@ -914,11 +955,52 @@ pub fn fused_argmin3_tiled(
     prune: bool,
     tiles: TileConfig,
 ) -> Argmin3 {
+    fused_argmin3_seeded(q, b, hw, mult, prune, tiles, [f64::INFINITY; 3]).0
+}
+
+/// Skip observability for one fused pass — how much work the bound
+/// pruning (cold or warm-started) actually elided.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Tiles in the pass's 2-D grid.
+    pub tiles: u64,
+    /// Whole candidate-block×chunk tiles skipped by the global bound.
+    pub block_skips: u64,
+    /// Pair×chunk combinations skipped inside surviving tiles.
+    pub pair_skips: u64,
+}
+
+/// [`fused_argmin3_tiled`] with the shared [`Incumbents`] warm-started
+/// from `seed` before any tile runs — the dynamic-shape sweep path
+/// (`MmeeEngine::plan_sweep`): the previous shape's winners, re-scored
+/// on this surface, bound the search from the first tile instead of
+/// only after one tile completes.
+///
+/// Exactness contract (see [`Incumbents::seed`]): every finite seed
+/// entry must be an **achieved**, `f32`-quantized score of a mapping
+/// present in `(q, b)`. Under that contract the returned triple is
+/// bit-identical to the unseeded pass — every pruned region sits
+/// strictly above an achieved score beyond the quantization margin, so
+/// no winner or tie is dropped. `[f64::INFINITY; 3]` degrades to the
+/// plain pass. Also returns the pass's [`PruneStats`] (zeros when
+/// `prune` is off).
+pub fn fused_argmin3_seeded(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+    tiles: TileConfig,
+    seed: [f64; 3],
+) -> (Argmin3, PruneStats) {
     let grid = TileGrid::new(q, b, tiles);
     if grid.len() == 0 {
-        return [(f64::INFINITY, 0, 0); 3];
+        return ([(f64::INFINITY, 0, 0); 3], PruneStats::default());
     }
     let incumbents = Incumbents::new();
+    if prune {
+        incumbents.seed(seed);
+    }
     let parts = crate::coordinator::run_indexed(grid.len(), |i| {
         let (c_range, t_range) = grid.ranges(i);
         EvalWorkspace::with(|ws| {
@@ -928,7 +1010,9 @@ pub fn fused_argmin3_tiled(
             tile
         })
     });
-    merge_tiles(&parts, grid.n_c)
+    let (block_skips, pair_skips) = incumbents.skip_counts();
+    let stats = PruneStats { tiles: grid.len() as u64, block_skips, pair_skips };
+    (merge_tiles(&parts, grid.n_c), stats)
 }
 
 /// Full-surface fused argmin with the serving tile shape.
@@ -955,6 +1039,30 @@ pub fn fused_fronts_tiled(
     prune: bool,
     tiles: TileConfig,
 ) -> Fronts {
+    fused_fronts_seeded(q, b, hw, mult, prune, tiles, &[], &[])
+}
+
+/// [`fused_fronts_tiled`] with the shared [`SharedFrontBound`]s
+/// warm-started from previously achieved front points before any tile
+/// runs — the fronts counterpart of [`fused_argmin3_seeded`].
+///
+/// Exactness contract: every seed point must be an **achieved**,
+/// `f32`-quantized `(x, y)` coordinate of a mapping present in
+/// `(q, b)` (energy×latency seeds additionally feasible). A strictly
+/// dominated region then provably contains no front member and cannot
+/// perturb a coordinate tie, so the fronts are bit-identical to the
+/// unseeded pass. Empty slices degrade to the plain pass.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_fronts_seeded(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+    tiles: TileConfig,
+    seed_el: &[(f64, f64)],
+    seed_bsda: &[(f64, f64)],
+) -> Fronts {
     let grid = TileGrid::new(q, b, tiles);
     if grid.len() == 0 {
         return (Front::new(), Front::new());
@@ -964,6 +1072,14 @@ pub fn fused_fronts_tiled(
     } else {
         None
     };
+    if let Some((el_b, bsda_b)) = &bounds {
+        for &(x, y) in seed_el {
+            el_b.observe(x, y);
+        }
+        for &(x, y) in seed_bsda {
+            bsda_b.observe(x, y);
+        }
+    }
     let parts = crate::coordinator::run_indexed(grid.len(), |i| {
         let (c_range, t_range) = grid.ranges(i);
         EvalWorkspace::with(|ws| {

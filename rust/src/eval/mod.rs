@@ -172,6 +172,24 @@ pub trait EvalBackend {
         Ok(self.argmin3(q, b, hw, mult))
     }
 
+    /// Warm-started argmin: `seed` carries externally *achieved*,
+    /// `f32`-quantized per-objective scores of mappings present in
+    /// `(q, b)` (see `kernel::Incumbents::seed` for the exactness
+    /// contract); `f64::INFINITY` entries are no-ops. Backends without
+    /// incumbent pruning ignore the seed — the result is identical
+    /// either way, seeding only changes how much work the pass does.
+    fn try_argmin3_seeded(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed: [f64; 3],
+    ) -> Result<Argmin3, MmeeError> {
+        let _ = seed;
+        self.try_argmin3(q, b, hw, mult)
+    }
+
     /// Streamed Pareto fronts over the full surface.
     fn fronts(
         &self,
@@ -261,6 +279,17 @@ impl<B: EvalBackend + ?Sized> EvalBackend for Box<B> {
         mult: &Multipliers,
     ) -> Result<Argmin3, MmeeError> {
         (**self).try_argmin3(q, b, hw, mult)
+    }
+
+    fn try_argmin3_seeded(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed: [f64; 3],
+    ) -> Result<Argmin3, MmeeError> {
+        (**self).try_argmin3_seeded(q, b, hw, mult, seed)
     }
 
     fn fronts(

@@ -71,6 +71,22 @@ impl EvalBackend for NativeBackend {
         super::kernel::fused_argmin3(q, b, hw, mult, true)
     }
 
+    /// Warm-started fused argmin: the shared incumbents start at `seed`
+    /// (achieved scores from a neighboring shape's winners) instead of
+    /// `∞`, so pruning bites from the first tile. Bit-identical results
+    /// to [`EvalBackend::try_argmin3`] under the seed contract.
+    fn try_argmin3_seeded(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed: [f64; 3],
+    ) -> Result<super::Argmin3, crate::error::MmeeError> {
+        let tiles = super::kernel::TileConfig::serving(q);
+        Ok(super::kernel::fused_argmin3_seeded(q, b, hw, mult, true, tiles, seed).0)
+    }
+
     /// Fused lane-kernel Pareto fronts (no materialized block), with
     /// dominance pruning against the shared achieved-point snapshot
     /// (identical results to the unpruned path, property-tested).

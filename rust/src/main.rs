@@ -4,6 +4,10 @@
 //! mmee optimize --workload bert-base --seq 4096 --accel accel2 \
 //!               --objective energy [--backend native|xla|branchy]
 //! mmee pareto   --workload palm-62b --seq 4096 --accel accel2
+//! mmee sweep    --workload bert-base --accel accel1 --objective latency \
+//!               --dim seq --from 128 --to 4096 --step x2
+//!                                   # dynamic-shape warm-started sweep
+//! mmee sweep --smoke                # warm-vs-cold equality self-check
 //! mmee validate [--charts]          # model vs simulator
 //! mmee serve [--tcp host:port] [--workers N] [--route-above M]
 //!                                   # JSON-lines mapping service
@@ -57,6 +61,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("optimize") => cmd_optimize(&args),
         Some("pareto") => cmd_pareto(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("validate") => cmd_validate(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
@@ -71,7 +76,7 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "mmee — Matrix Multiplication Encoded Enumeration dataflow mapper
-subcommands: optimize | pareto | validate | serve | cluster | bench-fig | bench-table | bench-all
+subcommands: optimize | pareto | sweep | validate | serve | cluster | bench-fig | bench-table | bench-all
 see rust/src/main.rs header for flags";
 
 fn request_from(args: &Args) -> Result<MappingRequest> {
@@ -126,6 +131,131 @@ fn cmd_pareto(args: &Args) -> Result<()> {
             MmeeEngine::candidates()[p.candidate].recompute()
         );
     }
+    Ok(())
+}
+
+/// Parse `--dim`: `seq` (the attention convention, I and L) or a
+/// string of i/k/l/j letters naming the swept GEMM dims.
+fn parse_sweep_dims(s: &str) -> Result<Vec<usize>> {
+    if s.eq_ignore_ascii_case("seq") {
+        return Ok(vec![0, 2]);
+    }
+    s.chars()
+        .map(|c| match c.to_ascii_lowercase() {
+            'i' => Ok(0),
+            'k' => Ok(1),
+            'l' => Ok(2),
+            'j' => Ok(3),
+            other => Err(MmeeError::Parse(format!(
+                "--dim expects 'seq' or a string of i/k/l/j letters, got '{other}'"
+            ))),
+        })
+        .collect()
+}
+
+/// Expand `--from/--to/--step` into the swept values: `xN` multiplies
+/// (geometric sweeps, e.g. prefill doublings), `+N` or a bare `N` adds
+/// (decode traces step by 1).
+fn sweep_values(from: usize, to: usize, step: &str) -> Result<Vec<usize>> {
+    let bad = || MmeeError::Parse(format!("--step expects 'xN' or '+N', got '{step}'"));
+    let (mul, add) = if let Some(f) = step.strip_prefix('x') {
+        (f.parse::<usize>().map_err(|_| bad())?, 0)
+    } else {
+        let s = step.strip_prefix('+').unwrap_or(step);
+        (1, s.parse::<usize>().map_err(|_| bad())?)
+    };
+    if mul == 0 || (mul == 1 && add == 0) || from == 0 {
+        return Err(MmeeError::Parse(format!(
+            "non-advancing sweep: from {from} step {step}"
+        )));
+    }
+    let mut out = Vec::new();
+    let mut v = from;
+    while v <= to {
+        out.push(v);
+        v = v * mul + add;
+    }
+    if out.is_empty() {
+        return Err(MmeeError::Parse(format!("empty sweep: from {from} to {to}")));
+    }
+    Ok(out)
+}
+
+/// `mmee sweep`: plan a dynamic-shape sweep with warm-started search
+/// (delta surface builds + incumbent-seeded passes). `--smoke` runs a
+/// small built-in sweep and verifies every plan against a cold engine.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use mmee::search::SweepSpec;
+    if args.has("smoke") {
+        return sweep_smoke();
+    }
+    let base = request_from(args)?;
+    let dims = parse_sweep_dims(args.flag_or("dim", "seq"))?;
+    let from = args.usize_flag("from", 128);
+    let to = args.usize_flag("to", 4096);
+    let values = sweep_values(from, to, args.flag_or("step", "x2"))?;
+    let engine = engine_for(args)?;
+    let report = engine.plan_sweep(&base, &SweepSpec { dims, values })?;
+    for (v, plan) in &report.plans {
+        match plan {
+            Ok(p) => println!(
+                "{v}: {} / {} energy {:.3e} J latency {:.3e} s{}",
+                p.solution.candidate.name(),
+                p.solution.tiling.name(),
+                p.solution.metrics.energy,
+                p.solution.metrics.latency,
+                if p.provenance.cache_hit { " (cached)" } else { "" }
+            ),
+            Err(e) => println!("{v}: error: {e}"),
+        }
+    }
+    let s = &report.stats;
+    eprintln!(
+        "swept {} shapes in {:?}: {} plan hits, {} family hits, {} delta + {} cold builds \
+         ({:?} building), {} seeded passes",
+        s.shapes,
+        s.elapsed,
+        s.plan_hits,
+        s.family_hits,
+        s.delta_builds,
+        s.cold_builds,
+        s.boundary_build,
+        s.seeded_passes
+    );
+    Ok(())
+}
+
+/// CI self-check: a small sweep must return exactly what a cold engine
+/// returns per shape, and the build mix must show the warm-start chain.
+fn sweep_smoke() -> Result<()> {
+    use mmee::search::SweepSpec;
+    let base = MappingRequest::preset("bert-base", 64, "accel1", Objective::Energy);
+    let engine = MmeeEngine::native();
+    let report = engine.plan_sweep(&base, &SweepSpec::seq(vec![48, 64, 96]))?;
+    let cold = MmeeEngine::native();
+    let accel = AccelSpec::preset("accel1").resolve()?;
+    for (v, plan) in &report.plans {
+        let p = plan.as_ref().map_err(|e| e.clone())?;
+        let mut w = WorkloadSpec::preset("bert-base", 64).resolve()?;
+        w.gemm.i = *v;
+        w.gemm.l = *v;
+        let s = cold.optimize(&w, &accel, Objective::Energy)?;
+        if p.solution.candidate != s.candidate
+            || p.solution.tiling != s.tiling
+            || p.solution.metrics.energy != s.metrics.energy
+        {
+            return Err(MmeeError::Internal(format!(
+                "sweep smoke: warm plan diverges from cold optimize at seq {v}"
+            )));
+        }
+    }
+    if report.stats.cold_builds != 1 || report.stats.delta_builds != 2 {
+        return Err(MmeeError::Internal(format!(
+            "sweep smoke: unexpected build mix {:?}",
+            report.stats
+        )));
+    }
+    println!("sweep smoke ok: 3 shapes, warm == cold, 1 cold + 2 delta builds");
     Ok(())
 }
 

@@ -31,7 +31,13 @@ pub fn features(t: &Tiling, accel: &Accelerator, workload: &Workload) -> Feature
 /// vector couples two dimensions, which is what lets the fused surface
 /// builder ([`crate::encode::build`]) precompute one partial column per
 /// divisor pair per dimension (O(Σ|divisors|) feature work) and have
-/// the cross product only *copy* values into the raw store.
+/// the cross product only *copy* values into the raw store. The same
+/// independence makes partial columns reusable across *shapes*: a
+/// workload differing from its neighbor in one dimension shares the
+/// other dimensions' columns verbatim, which is what
+/// `encode::build::build_surface_delta` exploits for dynamic-shape
+/// sweeps ([`dim_partial`] is pure in `(d, x_D, x_G, pe)`, so reuse is
+/// bit-identical to recomputation).
 pub const DIM_FEATURES: [&[usize]; 4] = [
     &[feat::I_D, feat::I_G, feat::NI_R],
     &[feat::K_D, feat::K_G, feat::NK_R],

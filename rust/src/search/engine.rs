@@ -39,6 +39,19 @@
 //! resolved up front, grouped by resolved (workload, accel) pair, and
 //! every group — duplicates included — pays at most ONE surface pass.
 //!
+//! Dynamic shapes go through [`MmeeEngine::plan_sweep`]: a base request
+//! plus a swept dimension set. Neighboring shapes chain **delta surface
+//! builds** ([`crate::encode::build_surface_delta`] — unchanged
+//! dimensions' divisor pairs and partial feature columns are reused
+//! verbatim) and **incumbent-seeded** passes ([`warm_seed`] re-scores
+//! the previous shape's winners on the new surface and hands them to
+//! [`crate::eval::EvalBackend::try_argmin3_seeded`], so pruning bites
+//! from the first tile). Sweep boundaries live in a dedicated
+//! **shape-family slot** (the swept dims masked out of the key): an
+//! L-sweep occupies one weighted slot instead of evicting the whole
+//! boundary cache. Warm-start changes cost, never results — per-shape
+//! plans are bit-identical to cold [`MmeeEngine::plan`] calls.
+//!
 //! The surface pass itself goes through the backend's *fused streaming
 //! reductions* ([`crate::eval::EvalBackend::try_argmin3`] →
 //! [`crate::eval::kernel`] for the native backend), running as 2-D
@@ -55,8 +68,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::config::{Accelerator, Workload};
-use crate::encode::{build_surface, BoundaryMatrix, BuildConfig, QueryMatrix};
+use crate::config::{Accelerator, HwVector, Workload};
+use crate::encode::{
+    build_surface, build_surface_delta, build_surface_from_parts, BoundaryMatrix, BuildConfig,
+    QueryMatrix, SurfaceParts,
+};
 use crate::error::MmeeError;
 use crate::eval::{native::NativeBackend, EvalBackend, Router};
 use crate::loopnest::Candidate;
@@ -66,7 +82,8 @@ use crate::search::pareto::Front;
 use crate::search::plan::{MappingPlan, Provenance};
 use crate::search::request::MappingRequest;
 use crate::search::result::{Objective, Solution};
-use crate::tiling::Tiling;
+use crate::tiling::factorize::factor_pairs_cached;
+use crate::tiling::{min_footprint, Tiling};
 use crate::util::shard::{Fnv, ShardKey, ShardedLru, SingleFlight};
 
 /// Search statistics for runtime reporting (paper §VII-C/H).
@@ -239,6 +256,10 @@ impl EngineBuilder {
             },
             boundary_flight: SingleFlight::new(),
             boundary_builds: AtomicU64::new(0),
+            sweep_cache: match self.boundary_weight_budget {
+                None => ShardedLru::new(self.cache_capacity),
+                Some(w) => ShardedLru::weighted(self.cache_capacity, w),
+            },
             plan_cache: ShardedLru::new(self.cache_capacity),
             plan_flight: SingleFlight::new(),
         }
@@ -262,6 +283,14 @@ pub struct MmeeEngine {
     /// Cold boundary builds actually executed (cache hits and
     /// single-flight followers excluded) — the dedup observable.
     boundary_builds: AtomicU64,
+    /// Shape-family slots for [`MmeeEngine::plan_sweep`]: keyed by the
+    /// boundary key with the swept dims masked out, holding the full
+    /// key (for validation) plus the most recent shape's surface. A
+    /// whole L-sweep occupies ONE weighted slot here instead of
+    /// churning `boundary_cache` with hundreds of near-duplicate
+    /// matrices. Probed with a counter-free `peek` — a stale-shape
+    /// probe is the steady state of a sweep, not a miss worth counting.
+    sweep_cache: ShardedLru<BoundaryKey, (BoundaryKey, Arc<BoundaryMatrix>)>,
     /// Memoizes plans AND `Infeasible` verdicts. One surface pass
     /// yields the winner for all three objectives, so entries are keyed
     /// objective-free and hold all three packaged plans: a pipelined
@@ -303,6 +332,19 @@ impl BoundaryKey {
             pe: (accel.pe_rows, accel.pe_cols),
             smx_bits: smx.to_bits(),
         }
+    }
+
+    /// The shape-family key: this key with the swept dims zeroed out.
+    /// Every shape of one sweep shares a family key, so the sweep cache
+    /// retains one slot per family. `0` is never a real GEMM dim
+    /// (enumeration asserts positive extents), so masking cannot
+    /// collide with a genuine boundary key.
+    fn family(&self, swept: &[usize]) -> BoundaryKey {
+        let mut f = self.clone();
+        for &d in swept {
+            f.dims[d] = 0;
+        }
+        f
     }
 }
 
@@ -367,6 +409,90 @@ fn obj_index(o: Objective) -> usize {
         Objective::Latency => 1,
         Objective::Edp => 2,
     }
+}
+
+/// One dynamic-shape sweep for [`MmeeEngine::plan_sweep`]: which GEMM
+/// dimensions vary (`0..4` = I/K/L/J) and the values they take, in
+/// visit order. [`SweepSpec::seq`] covers the attention case where the
+/// sequence length appears as both the I and L extents.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// GEMM dimension indices (0=I, 1=K, 2=L, 3=J) set to each value.
+    pub dims: Vec<usize>,
+    /// The swept values, visited in order.
+    pub values: Vec<usize>,
+}
+
+impl SweepSpec {
+    /// Sequence-length sweep for attention shapes: `seq` appears as
+    /// both the I and L extents of the fused GEMM pair.
+    pub fn seq(values: Vec<usize>) -> SweepSpec {
+        SweepSpec { dims: vec![0, 2], values }
+    }
+
+    fn validate(&self) -> Result<(), MmeeError> {
+        if self.dims.is_empty() || self.dims.iter().any(|&d| d >= 4) {
+            return Err(MmeeError::Parse(format!(
+                "sweep dims must be a non-empty subset of 0..4 (I/K/L/J), got {:?}",
+                self.dims
+            )));
+        }
+        if self.values.is_empty() || self.values.iter().any(|&v| v == 0) {
+            return Err(MmeeError::Parse(
+                "sweep values must be non-empty and positive".to_string(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// `base` with the swept dims set to `value`, renamed (e.g.
+    /// `bert-base-512#il640`) so plan-cache keys and reports
+    /// distinguish the shapes.
+    fn apply(&self, base: &Workload, value: usize) -> Workload {
+        const LETTERS: [char; 4] = ['i', 'k', 'l', 'j'];
+        let mut w = base.clone();
+        let mut dims = w.gemm.dims();
+        let mut tag = String::new();
+        for &d in &self.dims {
+            dims[d] = value;
+            tag.push(LETTERS[d]);
+        }
+        w.gemm.i = dims[0];
+        w.gemm.k = dims[1];
+        w.gemm.l = dims[2];
+        w.gemm.j = dims[3];
+        w.name = format!("{}#{}{}", base.name, tag, value);
+        w
+    }
+}
+
+/// Amortization counters for one [`MmeeEngine::plan_sweep`] run.
+#[derive(Debug, Clone, Default)]
+pub struct SweepStats {
+    /// Shapes visited (one per swept value).
+    pub shapes: usize,
+    /// Shapes answered straight from the plan cache (no surface work).
+    pub plan_hits: usize,
+    /// Shapes whose surface came from the shape-family slot.
+    pub family_hits: usize,
+    /// Surfaces built as deltas from the previous shape's parts.
+    pub delta_builds: usize,
+    /// Surfaces built cold (start of a chain).
+    pub cold_builds: usize,
+    /// Passes that ran with a finite warm-start seed.
+    pub seeded_passes: usize,
+    /// Total boundary construction time across the sweep.
+    pub boundary_build: Duration,
+    /// Wall clock of the whole sweep.
+    pub elapsed: Duration,
+}
+
+/// What [`MmeeEngine::plan_sweep`] returns: one plan (or per-shape
+/// error) per swept value, in sweep order, plus amortization stats.
+#[derive(Debug)]
+pub struct SweepReport {
+    pub plans: Vec<(usize, Result<MappingPlan, MmeeError>)>,
+    pub stats: SweepStats,
 }
 
 impl MmeeEngine {
@@ -589,10 +715,30 @@ impl MmeeEngine {
     /// may be transient and are not memoized).
     fn compute_plan_group(&self, key: &PlanKey) -> Result<Arc<[MappingPlan; 3]>, MmeeError> {
         let t0 = Instant::now();
-        let (workload, accel) = (&key.workload, &key.accel);
         let q = self.table();
         // Backend failures may be transient — propagate without memoizing.
-        let (best, b, boundary_hit, boundary_build) = self.surface_argmin3(workload, accel, q)?;
+        let (best, b, boundary_hit, boundary_build) =
+            self.surface_argmin3(&key.workload, &key.accel, q)?;
+        self.package_group(key, q, best, &b, boundary_hit, boundary_build, t0)
+    }
+
+    /// Package one computed surface pass into the plan-cache entry:
+    /// feasibility verdict (memoized) or winners for all three
+    /// objectives (memoized). Shared by [`MmeeEngine::plan`]'s cold
+    /// path and [`MmeeEngine::plan_sweep`]'s warm-started passes, so
+    /// the packaging recipe cannot diverge between them.
+    #[allow(clippy::too_many_arguments)]
+    fn package_group(
+        &self,
+        key: &PlanKey,
+        q: &QueryMatrix,
+        best: crate::eval::Argmin3,
+        b: &BoundaryMatrix,
+        boundary_hit: bool,
+        boundary_build: Duration,
+        t0: Instant,
+    ) -> Result<Arc<[MappingPlan; 3]>, MmeeError> {
+        let (workload, accel) = (&key.workload, &key.accel);
         // Infeasibility is a property of the (workload, accel) pair:
         // memoize the verdict for all three objectives.
         let (score, _, _) = best[0];
@@ -610,7 +756,8 @@ impl MmeeEngine {
         let make = |objective: Objective| -> MappingPlan {
             let (_, c, t) = best[obj_index(objective)];
             MappingPlan {
-                solution: self.package(workload, accel, objective, q, &b.tilings, c, t, t0),
+                solution: self
+                    .package(workload, accel, objective, q, &b.tilings, c, t, boundary_build, t0),
                 stats: stats.clone(),
                 provenance: Provenance {
                     backend: self.backend_name().to_string(),
@@ -701,6 +848,131 @@ impl MmeeEngine {
             .collect()
     }
 
+    /// Plan a dynamic-shape sweep: `base` with its swept dims set to
+    /// each of `sweep.values` in turn. Three warm-start mechanisms
+    /// chain across consecutive shapes — per-shape plan-cache probes,
+    /// **delta surface builds** (the unchanged dims' divisor pairs and
+    /// feature partials are reused from the previous shape's
+    /// [`SurfaceParts`]), and **incumbent seeding** ([`warm_seed`]
+    /// re-scores the previous winners on the new shape, priming the
+    /// pruning bounds so the pass skips dominated regions from the
+    /// first tile). None of them change results: every returned plan
+    /// is bit-identical to a cold [`MmeeEngine::plan`] for that shape.
+    ///
+    /// Sweep surfaces live in the dedicated shape-family slot (see
+    /// `sweep_cache`), not the boundary cache, so a 100-shape sweep
+    /// cannot evict the steady-state serving working set. Per-shape
+    /// failures come back as error elements in the report; a backend
+    /// error on one shape never aborts the rest of the sweep.
+    pub fn plan_sweep(
+        &self,
+        base: &MappingRequest,
+        sweep: &SweepSpec,
+    ) -> Result<SweepReport, MmeeError> {
+        let t0 = Instant::now();
+        sweep.validate()?;
+        let (w0, accel) = base.resolve()?;
+        let q = self.table();
+        let hw = accel.hw_vector();
+        let cap = accel.capacity_words() as f64;
+        let mut stats = SweepStats::default();
+        let mut plans = Vec::with_capacity(sweep.values.len());
+        // The delta-build chain: divisor pairs + feature partials of
+        // the last shape a surface was actually built for.
+        let mut parts: Option<SurfaceParts> = None;
+        // The last computed shape's winners (one per objective) — the
+        // incumbent seeds for the next pass.
+        let mut prev: Option<[(usize, Tiling); 3]> = None;
+        for &v in &sweep.values {
+            let t_shape = Instant::now();
+            let w = sweep.apply(&w0, v);
+            stats.shapes += 1;
+            let key = PlanKey { workload: w.clone(), accel: accel.clone() };
+            if let Some(entry) = self.plan_cache.get(&key) {
+                stats.plan_hits += 1;
+                let plan = entry.map(|g| {
+                    let mut p = g[obj_index(base.objective)].clone();
+                    p.provenance.cache_hit = true;
+                    p.stats.elapsed = t_shape.elapsed();
+                    p.solution.elapsed = t_shape.elapsed();
+                    p
+                });
+                plans.push((v, plan));
+                continue;
+            }
+            let full = BoundaryKey::new(&w, &accel, Some(cap));
+            let famkey = full.family(&sweep.dims);
+            let (b, boundary_hit, build) = match self.sweep_cache.peek(&famkey) {
+                Some((k, b)) if k == full => {
+                    stats.family_hits += 1;
+                    (b, true, Duration::ZERO)
+                }
+                _ => {
+                    let tb = Instant::now();
+                    let (bm, new_parts) = match parts.take() {
+                        Some(p) => {
+                            stats.delta_builds += 1;
+                            build_surface_delta(&w, &accel, Some(cap), &BuildConfig::serving(), &p)
+                        }
+                        None => {
+                            stats.cold_builds += 1;
+                            let p = SurfaceParts::new(&w, &accel);
+                            let cfg = BuildConfig::serving();
+                            let bm = build_surface_from_parts(&w, &accel, Some(cap), &cfg, &p);
+                            (bm, p)
+                        }
+                    };
+                    self.boundary_builds.fetch_add(1, Ordering::Relaxed);
+                    parts = Some(new_parts);
+                    let b = Arc::new(bm);
+                    let build = tb.elapsed();
+                    stats.boundary_build += build;
+                    let weight = (b.num_tilings() * NUM_FEATURES) as u64;
+                    self.sweep_cache.put_weighted(famkey, (full, Arc::clone(&b)), weight);
+                    (b, false, build)
+                }
+            };
+            let mult = Multipliers::for_workload(&w, &accel);
+            let seed = match &prev {
+                Some(winners) => warm_seed(q, &w, &accel, &hw, &mult, cap, winners),
+                None => [f64::INFINITY; 3],
+            };
+            if seed.iter().any(|s| s.is_finite()) {
+                stats.seeded_passes += 1;
+            }
+            let pass = self
+                .on_backend(|be| be.try_argmin3_seeded(q, &b, &hw, &mult, seed))
+                .and_then(|r| r);
+            let best = match pass {
+                Ok(best) => best,
+                Err(e) => {
+                    // Transient backend failure: report it for this
+                    // shape, keep the chain state for the next one.
+                    plans.push((v, Err(e)));
+                    continue;
+                }
+            };
+            let entry = self.package_group(&key, q, best, &b, boundary_hit, build, t_shape);
+            prev = match &entry {
+                // An infeasible surface has no achieved winners.
+                Err(_) => None,
+                Ok(_) => Some(std::array::from_fn(|k| {
+                    let (_, c, t) = best[k];
+                    (c, b.tilings[t])
+                })),
+            };
+            plans.push((v, entry.map(|g| g[obj_index(base.objective)].clone())));
+        }
+        stats.elapsed = t0.elapsed();
+        Ok(SweepReport { plans, stats })
+    }
+
+    /// Number of retained shape-family slots (sweep observability: a
+    /// whole L-sweep should occupy exactly one).
+    pub fn sweep_family_len(&self) -> usize {
+        self.sweep_cache.len()
+    }
+
     /// Optimize one workload for one objective. One surface pass yields
     /// all three objectives (paper: "MMEE evaluates all dataflows and
     /// metrics simultaneously"); the requested one is returned.
@@ -724,10 +996,10 @@ impl MmeeEngine {
         q: &QueryMatrix,
     ) -> Result<Solution, MmeeError> {
         let t0 = Instant::now();
-        let (best, b, _, _) = self.surface_argmin3(workload, accel, q)?;
+        let (best, b, _, build) = self.surface_argmin3(workload, accel, q)?;
         let (score, c, t) = best[obj_index(objective)];
         Self::check_feasible(score, workload, accel)?;
-        Ok(self.package(workload, accel, objective, q, &b.tilings, c, t, t0))
+        Ok(self.package(workload, accel, objective, q, &b.tilings, c, t, build, t0))
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -740,6 +1012,7 @@ impl MmeeEngine {
         tilings: &[Tiling],
         c: usize,
         t: usize,
+        boundary_build: Duration,
         t0: Instant,
     ) -> Solution {
         let cand = q.candidates[c];
@@ -756,6 +1029,7 @@ impl MmeeEngine {
             metrics,
             evaluated: q.num_candidates() as f64 * tilings.len() as f64,
             elapsed: t0.elapsed(),
+            boundary_build,
         }
     }
 
@@ -823,11 +1097,76 @@ impl MmeeEngine {
             tilings: (s.evaluated / nc as f64) as usize,
             mappings: s.evaluated,
             elapsed: t0.elapsed(),
-            // The build time is not threaded through `optimize`'s
-            // Solution; serving traces read it from `plan` stats.
-            boundary_build: Duration::ZERO,
+            boundary_build: s.boundary_build,
         })
     }
+}
+
+/// Carry a winning tiling from one shape to a neighbor: per dimension,
+/// keep the `(x_D, x_G)` split if it still divides the new extent,
+/// otherwise snap to the valid split with the nearest granule size.
+/// The result is always a member of the new shape's enumeration (modulo
+/// the capacity cap, which [`warm_seed`] checks separately).
+pub fn adapt_tiling(t: &Tiling, dims: [usize; 4]) -> Tiling {
+    let mut out = *t;
+    for d in 0..4 {
+        let pairs = factor_pairs_cached(dims[d]);
+        if pairs.contains(&(t.xd[d], t.xg[d])) {
+            continue;
+        }
+        let (xd, xg) = *pairs
+            .iter()
+            .min_by_key(|&&(_, xg)| xg.abs_diff(t.xg[d]))
+            .expect("factor_pairs_cached is non-empty for positive dims");
+        out.xd[d] = xd;
+        out.xg[d] = xg;
+    }
+    out
+}
+
+/// Score a previous shape's winners on a new shape, producing the
+/// incumbent seed for [`crate::eval::EvalBackend::try_argmin3_seeded`].
+///
+/// Each `(candidate, tiling)` winner is adapted to the new dims
+/// ([`adapt_tiling`]), dropped if its minimum footprint exceeds the
+/// capacity cap (it would not be in the enumerated surface, so its
+/// score is not a sound bound), and scored through the same quantized
+/// block path the fused kernel reduces over — so every finite seed is
+/// an *achieved in-surface score*, which is exactly the exactness
+/// contract seeded pruning requires. Infeasible re-scores are skipped;
+/// with no usable winner the seed stays `∞` (a plain cold pass).
+pub fn warm_seed(
+    q: &QueryMatrix,
+    workload: &Workload,
+    accel: &Accelerator,
+    hw: &HwVector,
+    mult: &Multipliers,
+    capacity_words: f64,
+    prev: &[(usize, Tiling)],
+) -> [f64; 3] {
+    let dims = workload.gemm.dims();
+    let mut seed = [f64::INFINITY; 3];
+    let mut seen: Vec<(usize, Tiling)> = Vec::new();
+    for &(c, t0) in prev {
+        let t = adapt_tiling(&t0, dims);
+        if min_footprint(&t) > capacity_words {
+            continue;
+        }
+        if seen.contains(&(c, t)) {
+            continue;
+        }
+        seen.push((c, t));
+        let b1 = BoundaryMatrix::build(vec![t], accel, workload);
+        let blk = NativeBackend.eval_block(q, &b1, hw, mult, (c, c + 1), (0, 1));
+        let (e, l, _, _) = blk.at(c, 0);
+        if e >= 1e29 {
+            continue;
+        }
+        seed[0] = seed[0].min(e);
+        seed[1] = seed[1].min(l);
+        seed[2] = seed[2].min(e * l);
+    }
+    seed
 }
 
 #[cfg(test)]
@@ -1196,5 +1535,96 @@ mod tests {
         let direct = MmeeEngine::native().plan(&req).unwrap();
         assert_eq!(routed.solution.tiling, direct.solution.tiling);
         assert_eq!(routed.solution.metrics.energy, direct.solution.metrics.energy);
+    }
+
+    /// Warm start must change cost, never results: every sweep plan is
+    /// bit-identical to a cold per-shape optimize on a fresh engine.
+    #[test]
+    fn plan_sweep_matches_cold_per_shape_results_exactly() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let sweep = SweepSpec::seq(vec![128, 192, 256, 384]);
+        let report = engine.plan_sweep(&base, &sweep).unwrap();
+        assert_eq!(report.stats.shapes, 4);
+        assert_eq!(report.stats.cold_builds, 1, "only the first shape builds cold");
+        assert_eq!(report.stats.delta_builds, 3);
+        assert_eq!(report.stats.seeded_passes, 3, "every follow-up pass is seeded");
+        let cold = MmeeEngine::native();
+        let accel = presets::accel1();
+        for (v, plan) in &report.plans {
+            let plan = plan.as_ref().unwrap();
+            let mut w = presets::bert_base(128);
+            w.gemm.i = *v;
+            w.gemm.l = *v;
+            let s = cold.optimize(&w, &accel, Objective::Energy).unwrap();
+            assert_eq!(plan.solution.candidate, s.candidate, "seq {v}");
+            assert_eq!(plan.solution.tiling, s.tiling, "seq {v}");
+            assert_eq!(plan.solution.metrics.energy, s.metrics.energy);
+            assert_eq!(plan.solution.metrics.latency, s.metrics.latency);
+        }
+    }
+
+    #[test]
+    fn sweep_occupies_one_family_slot_and_leaves_the_boundary_cache_alone() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Latency);
+        let sweep = SweepSpec::seq(vec![128, 160, 192, 224, 256]);
+        let report = engine.plan_sweep(&base, &sweep).unwrap();
+        assert!(report.plans.iter().all(|(_, p)| p.is_ok()));
+        assert_eq!(engine.sweep_family_len(), 1, "an L-sweep is ONE family slot");
+        let (h, m) = engine.boundary_cache_stats();
+        assert_eq!((h, m), (0, 0), "sweep surfaces never touch the boundary cache");
+    }
+
+    #[test]
+    fn repeated_sweep_is_served_from_the_plan_cache() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Edp);
+        let sweep = SweepSpec::seq(vec![128, 192, 256]);
+        let first = engine.plan_sweep(&base, &sweep).unwrap();
+        assert_eq!(first.stats.plan_hits, 0);
+        let builds = engine.boundary_build_count();
+        let second = engine.plan_sweep(&base, &sweep).unwrap();
+        assert_eq!(second.stats.plan_hits, 3, "every shape served from the plan cache");
+        assert_eq!(engine.boundary_build_count(), builds, "no new surface work");
+        for ((v1, p1), (v2, p2)) in first.plans.iter().zip(&second.plans) {
+            assert_eq!(v1, v2);
+            let (p1, p2) = (p1.as_ref().unwrap(), p2.as_ref().unwrap());
+            assert!(p2.provenance.cache_hit);
+            assert_eq!(p1.solution.tiling, p2.solution.tiling);
+            assert_eq!(p1.solution.metrics.energy, p2.solution.metrics.energy);
+        }
+    }
+
+    #[test]
+    fn sweep_spec_validation_rejects_bad_input() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let bad_dim = SweepSpec { dims: vec![4], values: vec![128] };
+        assert_eq!(engine.plan_sweep(&base, &bad_dim).unwrap_err().kind(), "parse");
+        let no_vals = SweepSpec::seq(Vec::new());
+        assert_eq!(engine.plan_sweep(&base, &no_vals).unwrap_err().kind(), "parse");
+        let zero = SweepSpec::seq(vec![0]);
+        assert_eq!(engine.plan_sweep(&base, &zero).unwrap_err().kind(), "parse");
+    }
+
+    #[test]
+    fn stats_only_attributes_boundary_build_time() {
+        let engine = MmeeEngine::native();
+        let s = engine.stats_only(&presets::bert_base(512), &presets::accel1()).unwrap();
+        assert!(s.boundary_build > Duration::ZERO, "cold stats pass records construction");
+        assert!(s.boundary_build <= s.elapsed);
+    }
+
+    #[test]
+    fn adapt_tiling_snaps_to_valid_splits() {
+        let t = Tiling { xd: [4, 1, 8, 1], xg: [32, 64, 16, 64] };
+        // Dim 0: 4×32 = 128 does not divide 96; the nearest-granule
+        // valid split of 96 is 3×32. Dims 1..3 keep their splits.
+        let a = adapt_tiling(&t, [96, 64, 128, 64]);
+        assert_eq!((a.xd[0], a.xg[0]), (3, 32));
+        assert_eq!((a.xd[1], a.xg[1]), (1, 64));
+        assert_eq!((a.xd[2], a.xg[2]), (8, 16));
+        assert_eq!((a.xd[3], a.xg[3]), (1, 64));
     }
 }

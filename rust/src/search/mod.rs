@@ -17,7 +17,10 @@ pub mod plan;
 pub mod request;
 pub mod result;
 
-pub use engine::{plan_shard_hash, EngineBuilder, MmeeEngine, SearchStats, DEFAULT_CACHE_CAPACITY};
+pub use engine::{
+    adapt_tiling, plan_shard_hash, warm_seed, EngineBuilder, MmeeEngine, SearchStats, SweepReport,
+    SweepSpec, SweepStats, DEFAULT_CACHE_CAPACITY,
+};
 pub use pareto::{pareto_front, ParetoPoint};
 pub use plan::{MappingPlan, Provenance};
 pub use request::{AccelSpec, BatchRequest, MappingRequest, WorkloadSpec};

@@ -60,6 +60,11 @@ pub struct Solution {
     /// Mappings evaluated to find this solution.
     pub evaluated: f64,
     pub elapsed: std::time::Duration,
+    /// Boundary construction time attributed to this answer (zero when
+    /// the surface came from a cache or the path has no boundary
+    /// build). Kept out of `to_json` — the wire schema is pinned by
+    /// golden tests; serving traces read it from `SearchStats`.
+    pub boundary_build: std::time::Duration,
 }
 
 impl Solution {
@@ -177,6 +182,7 @@ mod tests {
             },
             evaluated: 1e6,
             elapsed: std::time::Duration::from_millis(42),
+            boundary_build: std::time::Duration::ZERO,
         }
     }
 

@@ -92,6 +92,16 @@ impl<K: PartialEq, V> LruCache<K, V> {
         }
     }
 
+    /// Counter-free, promotion-free probe: look up `key` without
+    /// touching recency order or the hit/miss statistics. The engine's
+    /// shape-family slots use this to check whether the retained entry
+    /// matches the *current* shape — a stale-shape probe there is the
+    /// expected steady state of a sweep, not a cache miss worth
+    /// reporting.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.entries.iter().find(|(k, _, _)| k == key).map(|(_, v, _)| v)
+    }
+
     /// Insert (or refresh) `key` with weight 1, evicting the
     /// least-recently-used entry when over capacity.
     pub fn put(&mut self, key: K, value: V) {
@@ -164,6 +174,19 @@ mod tests {
         c.put(1, 1);
         assert_eq!(c.get(&1), Some(&1));
         assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn peek_neither_promotes_nor_counts() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        c.put(1, "a");
+        c.put(2, "b");
+        assert_eq!(c.peek(&1), Some(&"a"));
+        assert_eq!(c.peek(&9), None);
+        assert_eq!(c.stats(), (0, 0), "peek leaves the counters alone");
+        c.put(3, "c"); // 1 was NOT promoted by the peek: it evicts
+        assert_eq!(c.peek(&1), None);
+        assert_eq!(c.peek(&2), Some(&"b"));
     }
 
     #[test]

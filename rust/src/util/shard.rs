@@ -181,6 +181,15 @@ impl<K: ShardKey + PartialEq, V: Clone> ShardedLru<K, V> {
         self.shard(key).lock().unwrap().get(key).cloned()
     }
 
+    /// Counter-free, promotion-free probe (see [`LruCache::peek`]):
+    /// neither recency order nor any hit/miss counter moves. The
+    /// engine's sweep family slots probe with this so a stale-shape
+    /// entry — the expected steady state while sweeping — doesn't read
+    /// as a cache miss in the serving hit rates.
+    pub fn peek(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().peek(key).cloned()
+    }
+
     /// Insert (or refresh) `key` in its shard with weight 1.
     pub fn put(&self, key: K, value: V) {
         self.put_weighted(key, value, 1);
@@ -366,6 +375,16 @@ mod tests {
         c.put(7, "VII".into());
         assert_eq!(c.get(&7).as_deref(), Some("VII"));
         assert_eq!(c.stats(), (2, 1));
+    }
+
+    #[test]
+    fn peek_is_invisible_to_counters() {
+        let c: ShardedLru<u64, u64> = ShardedLru::new(4);
+        c.put(1, 10);
+        assert_eq!(c.peek(&1), Some(10));
+        assert_eq!(c.peek(&2), None);
+        assert_eq!(c.stats(), (0, 0));
+        assert_eq!(c.weight_stats().0, 0, "peek hits carry no weight");
     }
 
     #[test]

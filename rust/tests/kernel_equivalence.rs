@@ -321,3 +321,121 @@ fn shared_incumbents_across_chunks_stay_exact() {
     }
     assert_eq!(merged, reference);
 }
+
+/// Incumbent seeding (`fused_argmin3_seeded`) under the warm-start
+/// contract — every finite seed entry is an *achieved*, in-surface
+/// score, obtained the way the pass itself scores (`eval_block`) —
+/// must reproduce the unseeded pass bit-for-bit: same scores, same
+/// indices, same tie-breaks. Covers random achieved seeds, the
+/// tightest legal seed (the optimum itself), and sanity-checks the
+/// returned `PruneStats` against the tile grid.
+#[test]
+fn prop_seeded_argmin_matches_unseeded_exactly() {
+    prop::quick(16, 0x5EED_A127, gen_case, |case| {
+        let (q, b, hw, mult) = build_surface(case);
+        let (nc, nt) = (q.num_candidates(), b.num_tilings());
+        let c_block = 1 + case.c_range.0 % nc.max(1);
+        let t_chunk = 1 + case.t_range.0 % nt.max(1);
+        let tiles = TileConfig { c_block, t_chunk };
+        let want = kernel::fused_argmin3_tiled(&q, &b, &hw, &mult, true, tiles);
+        // A handful of achieved points, scored exactly like the pass
+        // scores them; infeasible sentinels contribute nothing. The
+        // EDP seed is e*l of the quantized pair — the achieved edp.
+        let mut seed = [f64::INFINITY; 3];
+        for k in 0..6usize {
+            let c = (case.c_range.0 + 7 * k) % nc;
+            let t = (case.t_range.0 + 13 * k) % nt;
+            let blk = NativeBackend.eval_block(&q, &b, &hw, &mult, (c, c + 1), (t, t + 1));
+            let (e, l, _, _) = blk.at(c, t);
+            if e >= 1e29 {
+                continue;
+            }
+            seed[0] = seed[0].min(e);
+            seed[1] = seed[1].min(l);
+            seed[2] = seed[2].min(e * l);
+        }
+        let (got, stats) = kernel::fused_argmin3_seeded(&q, &b, &hw, &mult, true, tiles, seed);
+        if got != want {
+            return Err(format!(
+                "seeded argmin diverged: {} vs {}",
+                fmt_argmin(&got),
+                fmt_argmin(&want)
+            ));
+        }
+        // Tightest legal seed: the optimum's own achieved scores.
+        // Pruning may now skip everything that cannot tie the winner,
+        // but the returned triple must not move.
+        let optimum = [want[0].0, want[1].0, want[2].0];
+        let (tight, tight_stats) =
+            kernel::fused_argmin3_seeded(&q, &b, &hw, &mult, true, tiles, optimum);
+        if tight != want {
+            return Err(format!(
+                "optimum-seeded argmin diverged: {} vs {}",
+                fmt_argmin(&tight),
+                fmt_argmin(&want)
+            ));
+        }
+        // PruneStats plausibility: the grid is fixed by the tile
+        // shape and skips are bounded by it. (Skip *counts* are
+        // scheduling-dependent, so only bounds are asserted.)
+        let grid = (nc.div_ceil(c_block) * nt.div_ceil(t_chunk)) as u64;
+        for s in [&stats, &tight_stats] {
+            if s.tiles != grid {
+                return Err(format!("PruneStats.tiles {} != grid {grid}", s.tiles));
+            }
+            if s.block_skips > s.tiles {
+                return Err("block_skips exceeds tile count".into());
+            }
+        }
+        // With pruning off the seed is inert and no skips are counted.
+        let (off, off_stats) =
+            kernel::fused_argmin3_seeded(&q, &b, &hw, &mult, false, tiles, optimum);
+        if off != want {
+            return Err("prune=false pass must ignore the seed".into());
+        }
+        if off_stats.block_skips != 0 || off_stats.pair_skips != 0 {
+            return Err("prune=false pass must record no skips".into());
+        }
+        Ok(())
+    });
+}
+
+/// Fronts counterpart: `fused_fronts_seeded` warm-started from
+/// *achieved* front points — full previous fronts and every-other-point
+/// subsets (the mid-sweep partial warm start) — must reproduce the
+/// unseeded fronts exactly, points and provenance.
+#[test]
+fn prop_seeded_fronts_match_unseeded() {
+    prop::quick(10, 0x5EED_F707, gen_case, |case| {
+        let (q, b, hw, mult) = build_surface(case);
+        let (nc, nt) = (q.num_candidates(), b.num_tilings());
+        let c_block = 1 + case.c_range.0 % nc.max(1);
+        let t_chunk = 1 + case.t_range.0 % nt.max(1);
+        let tiles = TileConfig { c_block, t_chunk };
+        let (want_el, want_bsda) = kernel::fused_fronts_tiled(&q, &b, &hw, &mult, true, tiles);
+        let seed_el: Vec<(f64, f64)> = want_el.points().iter().map(|p| (p.x, p.y)).collect();
+        let seed_bsda: Vec<(f64, f64)> =
+            want_bsda.points().iter().map(|p| (p.x, p.y)).collect();
+        for keep in [1usize, 2] {
+            let el: Vec<_> = seed_el.iter().copied().step_by(keep).collect();
+            let bsda: Vec<_> = seed_bsda.iter().copied().step_by(keep).collect();
+            let (got_el, got_bsda) =
+                kernel::fused_fronts_seeded(&q, &b, &hw, &mult, true, tiles, &el, &bsda);
+            if got_el.points() != want_el.points() {
+                return Err(format!(
+                    "seeded EL front (every {keep}th point) diverged: {} vs {} points",
+                    got_el.len(),
+                    want_el.len()
+                ));
+            }
+            if got_bsda.points() != want_bsda.points() {
+                return Err(format!(
+                    "seeded BS-DA front (every {keep}th point) diverged: {} vs {} points",
+                    got_bsda.len(),
+                    want_bsda.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

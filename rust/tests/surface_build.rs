@@ -138,6 +138,85 @@ fn uncapped_sweep_path_matches_reference() {
 }
 
 #[test]
+fn prop_delta_builds_match_cold_builds_bit_for_bit() {
+    // Dynamic-shape chains: starting from a random shape, each step
+    // rewrites a random subset of dims (possibly none — the no-op
+    // delta) and rebuilds via `build_surface_delta` from the previous
+    // step's retained `SurfaceParts`. The result must be byte-identical
+    // to the serial reference for every (prune × pool) config, and the
+    // parts must reuse exactly the unchanged dims' partial columns.
+    use mmee::encode::{build_surface_delta, SurfaceParts};
+    let pool2 = EvalPool::new(2);
+    let pool8 = EvalPool::new(8);
+    let accels = [presets::accel1(), presets::accel2(), presets::coral()];
+    prop::quick(
+        48,
+        0xDE17A_B17D,
+        |rng, size| {
+            let w0 = random_workload(rng, size);
+            let steps: Vec<(usize, [usize; 4])> = (0..rng.range(1, 3))
+                .map(|_| {
+                    let mask = rng.below(16);
+                    let vals =
+                        [rng.range(1, 96), rng.range(1, 96), rng.range(1, 96), rng.range(1, 96)];
+                    (mask, vals)
+                })
+                .collect();
+            let cap = random_capacity(rng, &w0);
+            (w0, rng.below(3), steps, cap)
+        },
+        |(w0, ai, steps, cap)| {
+            let accel = &accels[*ai];
+            let mut w = w0.clone();
+            let mut parts = SurfaceParts::new(&w, accel);
+            for &(mask, vals) in steps {
+                let old_dims = w.gemm.dims();
+                let mut dims = old_dims;
+                for d in 0..4 {
+                    if mask & (1 << d) != 0 {
+                        dims[d] = vals[d];
+                    }
+                }
+                w.gemm.i = dims[0];
+                w.gemm.k = dims[1];
+                w.gemm.l = dims[2];
+                w.gemm.j = dims[3];
+                let want = reference(&w, accel, *cap);
+                let mut next_parts = None;
+                for prune in [false, true] {
+                    for (pname, pool) in
+                        [("serial", None), ("pool2", Some(&pool2)), ("pool8", Some(&pool8))]
+                    {
+                        let cfg = BuildConfig { prune, pool };
+                        let (got, np) = build_surface_delta(&w, accel, *cap, &cfg, &parts);
+                        let ctx = format!(
+                            "dims {old_dims:?} -> {dims:?} cap {cap:?} prune {prune} {pname}"
+                        );
+                        if got.tilings != want.tilings {
+                            return Err(format!("tiling order diverged: {ctx}"));
+                        }
+                        if got.raw() != want.raw() {
+                            return Err(format!("raw store diverged: {ctx}"));
+                        }
+                        for d in 0..4 {
+                            let kept = dims[d] == old_dims[d];
+                            if np.shares_dim(&parts, d) != kept {
+                                return Err(format!(
+                                    "dim {d} reuse mismatch (kept={kept}): {ctx}"
+                                ));
+                            }
+                        }
+                        next_parts = Some(np);
+                    }
+                }
+                parts = next_parts.expect("at least one config ran");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prune_toggle_is_independent_of_parallel_toggle() {
     // All four (prune × parallel) corners on one mid-capacity surface.
     let w = presets::bert_base(512);
