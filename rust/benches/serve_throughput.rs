@@ -186,6 +186,63 @@ fn main() {
         line_by_line.median.as_secs_f64() / swept.median.as_secs_f64().max(1e-12)
     );
 
+    // Deadline discipline (ROADMAP "tail-latency-grade serving"): the
+    // mixed trace again, now with per-request budgets — every fourth
+    // line gets a zero budget (shed at admission with a structured
+    // deadline_exceeded, no surface work), the rest a generous one
+    // (deadline met). The met/degraded/shed split is printed so a
+    // run's deadline behavior is visible at a glance.
+    use mmee::util::json::Json;
+    let engine = MmeeEngine::native();
+    let deadlined: Vec<String> = lines
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let ms = if i % 4 == 0 { 0 } else { 600_000u64 };
+            format!(r#"{}, "deadline_ms": {ms}}}"#, &l[..l.len() - 1])
+        })
+        .collect();
+    let deadline_text = deadlined.join("\n");
+    let (dl, n_dl) = bench.once("serve_lines (deadline trace, cold)", || {
+        let mut out = Vec::new();
+        service::serve_lines(&engine, deadline_text.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let (mut met, mut degraded, mut shed) = (0usize, 0usize, 0usize);
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            if j.get("error").is_some() {
+                shed += 1;
+            } else if j.get("degraded").is_some() {
+                degraded += 1;
+            } else {
+                met += 1;
+            }
+        }
+        println!("    deadlines: {met} met, {degraded} degraded, {shed} shed");
+        met + degraded + shed
+    });
+    report_rates(&engine, n_dl, dl.median.as_secs_f64());
+
+    // Anytime degradation, forced: a 2-tile-block cancellation budget
+    // against a cold engine shows how much surface an interrupted pass
+    // still covers (degraded results are never memoized, so every
+    // repetition pays the same partial pass).
+    use mmee::coordinator::CancelToken;
+    let cold_engine = MmeeEngine::native();
+    let anytime_req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+    let _ = bench.once("plan_cancellable (2 tile-block budget, cold)", || {
+        let token = CancelToken::after_checks(2);
+        let plan = cold_engine.plan_cancellable(&anytime_req, Some(&token)).unwrap();
+        assert!(plan.degraded, "a 2-block budget must degrade on a cold surface");
+        println!(
+            "    anytime: incumbent energy {:.3e} J after {} of {} tile blocks",
+            plan.solution.metrics.energy,
+            plan.stats.blocks_evaluated,
+            plan.stats.blocks_evaluated + plan.stats.blocks_cancelled,
+        );
+        1usize
+    });
+
     println!(
         "\nbatched vs sequential (cold): {:.2}x  |  concurrent vs sequential (cold): {:.2}x",
         seq.median.as_secs_f64() / bat.median.as_secs_f64().max(1e-12),

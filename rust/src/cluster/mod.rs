@@ -55,6 +55,10 @@ pub struct ClusterConfig {
     /// Health monitoring; `None` leaves crash recovery to the
     /// router's connect-retry path alone.
     pub health: Option<HealthConfig>,
+    /// Extra environment variables for each worker child — the hook
+    /// chaos tests use to hand workers a scoped `MMEE_FAULT` without
+    /// touching the front-end's own environment.
+    pub worker_env: Vec<(String, String)>,
 }
 
 impl ClusterConfig {
@@ -66,6 +70,7 @@ impl ClusterConfig {
             backend: "native".to_string(),
             router: RouterConfig::default(),
             health: Some(HealthConfig::default()),
+            worker_env: Vec::new(),
         }
     }
 }
@@ -86,6 +91,7 @@ impl Cluster {
         let mut spec = WorkerSpec::new(cfg.program);
         spec.serve_threads = cfg.worker_threads.max(1);
         spec.backend = cfg.backend;
+        spec.env = cfg.worker_env;
         let pool = WorkerPool::start(spec, cfg.workers)?;
         let health = cfg.health.map(|h| HealthMonitor::start(Arc::clone(&pool), h));
         Ok(Cluster { pool, health, router: cfg.router })

@@ -19,11 +19,20 @@
 //! the burst are re-sent — mapping queries are pure, so re-execution
 //! is safe. After bounded retries the survivors get structured `io`
 //! error lines instead of hanging the trace.
+//!
+//! Deadlines ride through unchanged: a request line carrying
+//! `deadline_ms` is forwarded verbatim (the worker re-arms the budget
+//! at its own parse time), but the router ALSO tracks the deadline it
+//! parsed at ingress — a job is never *retried* past its expiry (it
+//! gets a `deadline_exceeded` line instead of another worker
+//! round-trip), and a burst's read timeout is capped to its most
+//! urgent job's remaining budget, so the retry loop converts
+//! worker-failure budgets into remaining-deadline budgets.
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::cluster::proto;
 use crate::cluster::worker::{exchange_line, WorkerPool};
@@ -78,6 +87,16 @@ struct BatchSlot {
 struct Job {
     dest: Dest,
     line: String,
+    /// The deadline parsed at router ingress, with its original
+    /// millisecond budget (for the structured shed line). `None` for
+    /// deadline-free requests.
+    deadline: Option<(Instant, u64)>,
+}
+
+impl Job {
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|(at, _)| Instant::now() >= at)
+    }
 }
 
 /// Deliver one finished response line to its destination.
@@ -198,9 +217,10 @@ fn dispatch(
                 Err(e) => seq.push(seq_no, error_line(e)),
                 Ok((w, a)) => {
                     let wi = shard_of(plan_shard_hash(&w, &a), n);
+                    let deadline = req.deadline().map(|at| (at, req.deadline_ms.unwrap_or(0)));
                     enqueue(
                         &queues[wi],
-                        Job { dest: Dest::Seq(seq_no), line: line.to_string() },
+                        Job { dest: Dest::Seq(seq_no), line: line.to_string(), deadline },
                         seq,
                     );
                 }
@@ -222,18 +242,24 @@ fn dispatch(
             for (idx, item) in batch.items.iter().enumerate() {
                 let resolved = match item {
                     Err(e) => Err(e.clone()),
-                    Ok(req) => req.resolve(),
+                    Ok(req) => req.resolve().map(|wa| (wa, req)),
                 };
                 let dest = Dest::Batch(Arc::clone(&slot), idx);
                 match resolved {
                     // Parse/resolution errors become error *elements*
                     // at their position, exactly as `plan` would answer.
                     Err(e) => complete(seq, dest, error_line(e)),
-                    Ok((w, a)) => {
+                    Ok(((w, a), req)) => {
                         let wi = shard_of(plan_shard_hash(&w, &a), n);
+                        let deadline =
+                            req.deadline().map(|at| (at, req.deadline_ms.unwrap_or(0)));
                         // Re-serialize the element as its own one-line
                         // request for the shard worker.
-                        enqueue(&queues[wi], Job { dest, line: elems[idx].to_string() }, seq);
+                        enqueue(
+                            &queues[wi],
+                            Job { dest, line: elems[idx].to_string(), deadline },
+                            seq,
+                        );
                     }
                 }
             }
@@ -279,6 +305,10 @@ fn serve_burst(
 ) {
     let mut last_err = String::from("worker unavailable");
     for _ in 0..BURST_ATTEMPTS {
+        // A failure budget never extends a deadline budget: jobs whose
+        // deadline expired are shed with a structured line instead of
+        // being retried against the next worker incarnation.
+        shed_expired(&mut burst, seq);
         if burst.is_empty() {
             return;
         }
@@ -291,8 +321,24 @@ fn serve_burst(
             Err(e) => last_err = e.to_string(),
         }
     }
+    shed_expired(&mut burst, seq);
     for job in burst {
         complete(seq, job.dest, error_line(MmeeError::Io(format!("worker {i}: {last_err}"))));
+    }
+}
+
+/// Complete every expired job in `burst` with a `deadline_exceeded`
+/// line and drop it from the (re)send set.
+fn shed_expired(burst: &mut Vec<Job>, seq: &Sequencer<String>) {
+    let mut k = 0;
+    while k < burst.len() {
+        if burst[k].expired() {
+            let job = burst.remove(k);
+            let budget_ms = job.deadline.map(|(_, ms)| ms).unwrap_or(0);
+            complete(seq, job.dest, error_line(MmeeError::DeadlineExceeded { budget_ms }));
+        } else {
+            k += 1;
+        }
     }
 }
 
@@ -306,8 +352,22 @@ fn try_burst(
     seq: &Sequencer<String>,
     cfg: &RouterConfig,
 ) -> io::Result<()> {
+    crate::util::fault::check_io(None, crate::util::fault::Site::Io)?;
     let mut conn = pool.connect(i)?;
-    conn.set_read_timeout(Some(cfg.read_timeout))?;
+    // The most urgent job's remaining budget caps how long this burst
+    // may wait on the worker (floored so an almost-expired job still
+    // gets one fast round-trip rather than an invalid zero timeout —
+    // the next shed pass reaps it if the worker misses even that).
+    let tightest = burst
+        .iter()
+        .filter_map(|j| j.deadline.map(|(at, _)| at.saturating_duration_since(Instant::now())))
+        .min();
+    let floor = Duration::from_millis(10).min(cfg.read_timeout);
+    let timeout = match tightest {
+        Some(d) => d.clamp(floor, cfg.read_timeout),
+        None => cfg.read_timeout,
+    };
+    conn.set_read_timeout(Some(timeout))?;
     conn.set_nodelay(true)?;
     for job in burst.iter() {
         writeln!(conn, "{}", job.line)?;

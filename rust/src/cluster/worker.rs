@@ -28,11 +28,15 @@ pub struct WorkerSpec {
     pub serve_threads: usize,
     /// `--backend` passed to each child.
     pub backend: String,
+    /// Extra environment variables set on each child, on top of the
+    /// inherited environment. Lets a test scope chaos to the workers
+    /// (`MMEE_FAULT`) without mutating its own process environment.
+    pub env: Vec<(String, String)>,
 }
 
 impl WorkerSpec {
     pub fn new(program: PathBuf) -> WorkerSpec {
-        WorkerSpec { program, serve_threads: 2, backend: "native".to_string() }
+        WorkerSpec { program, serve_threads: 2, backend: "native".to_string(), env: Vec::new() }
     }
 }
 
@@ -117,6 +121,7 @@ impl WorkerPool {
     /// only write responses to their TCP connections; their stderr is
     /// inherited for diagnostics).
     fn spawn_worker(&self) -> io::Result<Proc> {
+        crate::util::fault::check_io(None, crate::util::fault::Site::Spawn)?;
         // `--announce` must come last: the CLI parser treats a `--flag`
         // followed by a non-flag token as a key/value pair.
         let mut child = Command::new(&self.spec.program)
@@ -130,6 +135,7 @@ impl WorkerPool {
                 &self.spec.backend,
                 "--announce",
             ])
+            .envs(self.spec.env.iter().map(|(k, v)| (k.as_str(), v.as_str())))
             .stdin(Stdio::null())
             .stdout(Stdio::piped())
             .stderr(Stdio::inherit())

@@ -12,5 +12,8 @@
 pub mod pool;
 pub mod service;
 
-pub use pool::{parallel_chunks, run_indexed, BoundedQueue, EvalPool, FillBuf, PushError, Sequencer};
+pub use pool::{
+    parallel_chunks, run_indexed, run_indexed_cancellable, BoundedQueue, CancelToken, EvalPool,
+    FillBuf, PushError, Sequencer,
+};
 pub use service::{serve_lines, serve_lines_concurrent, serve_tcp, Control, Request, Response};

@@ -25,8 +25,9 @@ use std::any::Any;
 use std::cell::UnsafeCell;
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Number of worker threads to use for surface evaluation. `MMEE_THREADS`
 /// overrides `available_parallelism`; the value is parsed once and cached
@@ -433,6 +434,148 @@ pub fn parallel_chunks<T: Send>(
     assert!(chunk > 0);
     let num_chunks = n.div_ceil(chunk);
     run_indexed(num_chunks, |i| f(i * chunk, ((i + 1) * chunk).min(n)))
+}
+
+/// Cooperative cancellation for in-flight surface passes.
+///
+/// A token is shared between a submitter (which arms it with a
+/// deadline or cancels it explicitly) and a pass's chunk runners
+/// (which probe it at tile-block boundaries via [`CancelToken::check`]).
+/// Once any probe observes a trip condition the token latches, so
+/// every later probe is a single atomic load — the wall clock is read
+/// at most once per unlatched probe, never on the latched fast path.
+///
+/// Determinism hook: [`CancelToken::after_checks`] trips the token
+/// after a fixed number of probes instead of a wall-clock deadline, so
+/// cancellation tests cut a pass after exactly N blocks instead of
+/// racing the scheduler.
+///
+/// An armed-but-never-tripped token changes nothing: the pass runs the
+/// same tiles through the same merge, so its result is bit-identical
+/// to the token-free path (property-tested in `eval::kernel`).
+#[derive(Debug)]
+pub struct CancelToken {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+    /// Deterministic trip: cancel once this many probes have run.
+    trip_after: Option<u64>,
+    checks: AtomicU64,
+    evaluated: AtomicU64,
+    skipped: AtomicU64,
+}
+
+impl CancelToken {
+    /// A token that trips only on an explicit [`CancelToken::cancel`].
+    pub fn new() -> CancelToken {
+        CancelToken::build(None, None)
+    }
+
+    /// A token that trips once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken::build(Some(deadline), None)
+    }
+
+    /// Deterministic trip: probes `1..=n` pass, probe `n + 1` cancels.
+    /// `n = 0` is cancelled from the first probe on.
+    pub fn after_checks(n: u64) -> CancelToken {
+        CancelToken::build(None, Some(n))
+    }
+
+    fn build(deadline: Option<Instant>, trip_after: Option<u64>) -> CancelToken {
+        CancelToken {
+            cancelled: AtomicBool::new(false),
+            deadline,
+            trip_after,
+            checks: AtomicU64::new(0),
+            evaluated: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+        }
+    }
+
+    /// Request cancellation: every in-flight pass sharing this token
+    /// observes it at its next block boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    /// Has the token tripped? (Pure observation — no probe bookkeeping.)
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// One cooperative probe, called by chunk runners at tile-block
+    /// boundaries: `true` once the token has tripped (explicit cancel,
+    /// expired deadline, or an exhausted deterministic check budget).
+    pub fn check(&self) -> bool {
+        if self.cancelled.load(Ordering::Acquire) {
+            return true;
+        }
+        let probes = self.checks.fetch_add(1, Ordering::AcqRel) + 1;
+        if let Some(n) = self.trip_after {
+            if probes > n {
+                self.cancel();
+                return true;
+            }
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                self.cancel();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Record one tile-block actually evaluated (degraded-plan
+    /// observability: `SearchStats` reports the evaluated/skipped split).
+    pub fn note_evaluated(&self) {
+        self.evaluated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one tile-block skipped because the token had tripped.
+    pub fn note_skipped(&self) {
+        self.skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tile-blocks evaluated before the trip.
+    pub fn blocks_evaluated(&self) -> u64 {
+        self.evaluated.load(Ordering::Relaxed)
+    }
+
+    /// Tile-blocks skipped after the trip.
+    pub fn blocks_skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken::new()
+    }
+}
+
+/// [`run_indexed`] with a cooperative cancellation probe at every chunk
+/// boundary: before chunk `i` runs, the token is checked — once it
+/// trips, every remaining chunk yields `skip(i)` (an identity element
+/// the caller's merge treats as "no work") instead of `f(i)`, so an
+/// in-flight pass stops within one chunk of cancellation while still
+/// returning a complete, mergeable result vector. The token's
+/// evaluated/skipped counters record the split.
+pub fn run_indexed_cancellable<T: Send>(
+    n: usize,
+    token: &CancelToken,
+    f: impl Fn(usize) -> T + Sync,
+    skip: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    run_indexed(n, |i| {
+        if token.check() {
+            token.note_skipped();
+            skip(i)
+        } else {
+            token.note_evaluated();
+            f(i)
+        }
+    })
 }
 
 /// Why [`BoundedQueue::try_push`] failed — carries the item back so
@@ -872,6 +1015,62 @@ mod tests {
             want.extend((0..c).map(|k| b * 1000 + k));
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cancel_token_after_checks_is_deterministic() {
+        let token = CancelToken::after_checks(3);
+        assert!(!token.is_cancelled());
+        assert!(!token.check());
+        assert!(!token.check());
+        assert!(!token.check());
+        assert!(token.check(), "probe 4 exceeds the budget of 3");
+        assert!(token.is_cancelled());
+        assert!(token.check(), "latched");
+        // Zero budget: cancelled from the first probe.
+        let zero = CancelToken::after_checks(0);
+        assert!(zero.check());
+    }
+
+    #[test]
+    fn cancel_token_deadline_latches() {
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        let token = CancelToken::with_deadline(past);
+        assert!(!token.is_cancelled(), "arming alone does not trip");
+        assert!(token.check(), "first probe observes the expired deadline");
+        assert!(token.is_cancelled());
+        let future = Instant::now() + std::time::Duration::from_secs(3600);
+        let open = CancelToken::with_deadline(future);
+        assert!(!open.check());
+        open.cancel();
+        assert!(open.check());
+    }
+
+    #[test]
+    fn run_indexed_cancellable_fills_skipped_chunks_with_identity() {
+        // Untripped token: identical to run_indexed, everything counted
+        // as evaluated.
+        let token = CancelToken::new();
+        let out = run_indexed_cancellable(10, &token, |i| i * i, |_| usize::MAX);
+        assert_eq!(out, (0..10).map(|i| i * i).collect::<Vec<_>>());
+        assert_eq!(token.blocks_evaluated(), 10);
+        assert_eq!(token.blocks_skipped(), 0);
+
+        // Pre-cancelled token: every chunk yields the skip identity.
+        let dead = CancelToken::after_checks(0);
+        let out = run_indexed_cancellable(10, &dead, |i| i * i, |_| usize::MAX);
+        assert!(out.iter().all(|&v| v == usize::MAX));
+        assert_eq!(dead.blocks_evaluated(), 0);
+        assert_eq!(dead.blocks_skipped(), 10);
+
+        // Partial trip: exactly N chunks evaluated, the rest skipped
+        // (which N is scheduling-dependent under the pool; the counts
+        // are not).
+        let some = CancelToken::after_checks(4);
+        let out = run_indexed_cancellable(16, &some, |i| i, |_| usize::MAX);
+        assert_eq!(some.blocks_evaluated(), 4);
+        assert_eq!(some.blocks_skipped(), 12);
+        assert_eq!(out.iter().filter(|&&v| v == usize::MAX).count(), 12);
     }
 
     #[test]

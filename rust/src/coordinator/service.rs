@@ -26,6 +26,22 @@
 //!            "dram_bw": 6.0e10, "freq": 1.0e9, "bytes_per_word": 2}}
 //! ```
 //!
+//! Two optional request keys control deadline-aware serving:
+//! `deadline_ms` (non-negative integer) arms a per-request deadline at
+//! **parse time** — so time spent waiting in a serving queue counts
+//! against the budget — and `priority` (integer, default 0) is carried
+//! for schedulers/routers to order work by. A request whose deadline
+//! expires before its surface pass starts is shed with a
+//! `deadline_exceeded` error (unless the plan cache already holds the
+//! answer — a cache hit needs no surface work and always wins); one
+//! that expires *mid-pass* degrades to the best incumbent achieved so
+//! far (see the response notes below). Requests without `deadline_ms`
+//! are served exactly as before, byte-identically.
+//!
+//! ```json
+//! {"workload": "bert-base", "seq": 4096, "deadline_ms": 50, "priority": 2}
+//! ```
+//!
 //! A line holding a JSON **array** of request objects is a batch: it is
 //! scheduled through [`MmeeEngine::plan_batch`] (requests sharing a
 //! resolved (workload, accel) pair are served from ONE surface pass)
@@ -42,6 +58,15 @@
 //! and `provenance` (`backend`/`cache_hit`/`boundary_cache_hit`)
 //! objects.
 //!
+//! A deadline that expires mid-pass adds `"degraded": true` at the top
+//! level plus `stats.blocks_evaluated` / `stats.blocks_cancelled`
+//! (anytime accounting: tile-blocks reduced vs skipped by the
+//! cancellation token). All three keys are **omitted** on complete
+//! plans, so responses to deadline-free requests are byte-identical to
+//! pre-deadline output. A degraded plan's mapping is always a real
+//! in-surface point that achieved the reported metrics — never an
+//! extrapolation.
+//!
 //! Error response — structured, machine-dispatchable:
 //!
 //! ```json
@@ -49,7 +74,15 @@
 //! ```
 //!
 //! `kind` is one of `unknown_workload`, `unknown_accel`, `infeasible`,
-//! `backend`, `parse`, `io`, `internal`, `overloaded`.
+//! `backend`, `parse`, `io`, `internal`, `overloaded`,
+//! `deadline_exceeded`, `fault`.
+//!
+//! `deadline_exceeded` means the budget ran out before *any* feasible
+//! incumbent was achieved (expired while queued, or cancelled before
+//! the first tile-block finished) — there was nothing sound to degrade
+//! to. `fault` is emitted only under the deterministic chaos harness
+//! ([`crate::util::fault`], `MMEE_FAULT`); production serving never
+//! produces it.
 //!
 //! `overloaded` is the load-shedding kind: when [`serve_tcp`]'s
 //! connection queue is saturated, a new connection receives ONE
@@ -840,6 +873,58 @@ mod tests {
             w.shutdown(std::net::Shutdown::Write).unwrap();
         }
         assert_eq!(server.join().unwrap(), 3, "three served; the shed conn served none");
+    }
+
+    #[test]
+    fn expired_deadline_line_is_shed_with_structured_error() {
+        let engine = MmeeEngine::native();
+        // deadline_ms: 0 expires between parse and planning on any
+        // machine — the queued-expiry path, deterministically.
+        let input = concat!(
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1", "deadline_ms": 0}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 2);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let shed = Json::parse(lines[0]).unwrap();
+        assert_eq!(
+            shed.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("deadline_exceeded"),
+            "{}",
+            lines[0]
+        );
+        // The loop survives and the engine did no surface work for the
+        // shed line (one miss for the follow-up request only).
+        assert!(Json::parse(lines[1]).unwrap().get("energy_j").is_some());
+        assert_eq!(engine.plan_cache_stats().1, 2, "shed probe + cold follow-up");
+    }
+
+    #[test]
+    fn generous_deadline_answers_byte_identically_to_no_deadline() {
+        let engine = MmeeEngine::native();
+        let no_deadline = r#"{"workload": "mlp", "accel": "accel1"}"#;
+        let mut base = Vec::new();
+        serve_lines(&engine, no_deadline.as_bytes(), &mut base).unwrap();
+        // Same surface, absurdly generous budget: the pass completes,
+        // so the response must carry no degraded/cancellation keys.
+        // (Plan caching would make this a cache hit; use a fresh engine
+        // so both runs are cold and the full wire lines can be
+        // compared after zeroing the timing fields.)
+        let cold = MmeeEngine::native();
+        let with_deadline = r#"{"workload": "mlp", "accel": "accel1", "deadline_ms": 600000}"#;
+        let mut out = Vec::new();
+        serve_lines(&cold, with_deadline.as_bytes(), &mut out).unwrap();
+        let strip = |bytes: &[u8]| {
+            crate::cluster::proto::normalize_response(std::str::from_utf8(bytes).unwrap())
+        };
+        assert_eq!(strip(&base), strip(&out), "deadline-met response must be identical");
+        let j = Json::parse(&strip(&out)).unwrap();
+        assert!(j.get("degraded").is_none());
     }
 
     #[test]

@@ -40,6 +40,18 @@ pub enum MmeeError {
     /// saturated — transient by construction; clients should back off
     /// and retry. `pending` is the queue depth at rejection time.
     Overloaded { pending: usize },
+    /// The request's deadline expired before any feasible incumbent was
+    /// found (or before the request left the queue). A deadline that
+    /// expires *mid-pass* instead yields a degraded [`crate::search::MappingPlan`]
+    /// carrying the best mapping achieved so far — this error is the
+    /// no-result-at-all case. `budget_ms` is the request's deadline
+    /// budget (0 when the deadline was armed without an explicit
+    /// millisecond budget).
+    DeadlineExceeded { budget_ms: u64 },
+    /// An injected fault from the deterministic chaos harness
+    /// ([`crate::util::fault`]) — only ever raised when `MMEE_FAULT` or a
+    /// builder-installed injector is active, never in production paths.
+    Fault { site: &'static str },
 }
 
 impl MmeeError {
@@ -54,6 +66,8 @@ impl MmeeError {
             MmeeError::Io(_) => "io",
             MmeeError::Internal(_) => "internal",
             MmeeError::Overloaded { .. } => "overloaded",
+            MmeeError::DeadlineExceeded { .. } => "deadline_exceeded",
+            MmeeError::Fault { .. } => "fault",
         }
     }
 
@@ -84,6 +98,12 @@ impl fmt::Display for MmeeError {
             MmeeError::Internal(msg) => write!(f, "internal invariant violated: {msg}"),
             MmeeError::Overloaded { pending } => {
                 write!(f, "server overloaded: {pending} connections queued; retry later")
+            }
+            MmeeError::DeadlineExceeded { budget_ms } => {
+                write!(f, "deadline exceeded ({budget_ms} ms budget): no incumbent found in time")
+            }
+            MmeeError::Fault { site } => {
+                write!(f, "injected fault at site '{site}' (chaos harness active)")
             }
         }
     }
@@ -142,5 +162,19 @@ mod tests {
         assert!(e.to_string().contains("retry"), "{e}");
         let j = e.to_json();
         assert_eq!(j.get("kind").unwrap().as_str(), Some("overloaded"));
+    }
+
+    #[test]
+    fn deadline_and_fault_kinds() {
+        let e = MmeeError::DeadlineExceeded { budget_ms: 25 };
+        assert_eq!(e.kind(), "deadline_exceeded");
+        assert!(e.to_string().contains("25 ms"), "{e}");
+        assert_eq!(
+            e.to_json().get("kind").unwrap().as_str(),
+            Some("deadline_exceeded")
+        );
+        let e = MmeeError::Fault { site: "eval" };
+        assert_eq!(e.kind(), "fault");
+        assert!(e.to_string().contains("eval"), "{e}");
     }
 }

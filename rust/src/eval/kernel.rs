@@ -59,6 +59,7 @@ use std::sync::{Mutex, OnceLock};
 
 use super::{Argmin3, Fronts, T_CHUNK};
 use crate::config::HwVector;
+use crate::coordinator::CancelToken;
 use crate::encode::query::{CMono, CompiledGroup, CompiledPair, CompiledQuery};
 use crate::encode::{BoundaryMatrix, QueryMatrix};
 use crate::model::{Metrics, Multipliers};
@@ -993,15 +994,44 @@ pub fn fused_argmin3_seeded(
     tiles: TileConfig,
     seed: [f64; 3],
 ) -> (Argmin3, PruneStats) {
+    let (best, stats, _) =
+        fused_argmin3_seeded_cancellable(q, b, hw, mult, prune, tiles, seed, None);
+    (best, stats)
+}
+
+/// [`fused_argmin3_seeded`] with a cooperative [`CancelToken`] probed
+/// once per (candidate-block × tiling-chunk) tile — the anytime serving
+/// path. Once the token trips, every not-yet-claimed tile is skipped
+/// (filled with the empty merge identity), so the pass stops within
+/// one tile-block of cancellation. The merge then runs over exactly
+/// the tiles that completed: the returned triple is the **achieved
+/// incumbent state** at cancellation — every finite winner is a real,
+/// in-surface mapping score, never a fabricated bound. The final
+/// `bool` is `partial`: `true` iff any tile of *this pass* was skipped.
+///
+/// A `None` or never-tripped token runs the same tiles through the
+/// same merge as [`fused_argmin3_seeded`], so the result is
+/// bit-identical to the uncancellable pass (property-tested).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_argmin3_seeded_cancellable(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+    tiles: TileConfig,
+    seed: [f64; 3],
+    cancel: Option<&CancelToken>,
+) -> (Argmin3, PruneStats, bool) {
     let grid = TileGrid::new(q, b, tiles);
     if grid.len() == 0 {
-        return ([(f64::INFINITY, 0, 0); 3], PruneStats::default());
+        return ([(f64::INFINITY, 0, 0); 3], PruneStats::default(), false);
     }
     let incumbents = Incumbents::new();
     if prune {
         incumbents.seed(seed);
     }
-    let parts = crate::coordinator::run_indexed(grid.len(), |i| {
+    let tile = |i: usize| {
         let (c_range, t_range) = grid.ranges(i);
         EvalWorkspace::with(|ws| {
             let inc = if prune { Some(&incumbents) } else { None };
@@ -1009,10 +1039,20 @@ pub fn fused_argmin3_seeded(
             incumbents.observe(&tile.best);
             tile
         })
-    });
+    };
+    let (parts, partial) = match cancel {
+        None => (crate::coordinator::run_indexed(grid.len(), tile), false),
+        Some(token) => {
+            let skipped0 = token.blocks_skipped();
+            let parts = crate::coordinator::run_indexed_cancellable(grid.len(), token, tile, |_| {
+                TileArgmin::empty()
+            });
+            (parts, token.blocks_skipped() > skipped0)
+        }
+    };
     let (block_skips, pair_skips) = incumbents.skip_counts();
     let stats = PruneStats { tiles: grid.len() as u64, block_skips, pair_skips };
-    (merge_tiles(&parts, grid.n_c), stats)
+    (merge_tiles(&parts, grid.n_c), stats, partial)
 }
 
 /// Full-surface fused argmin with the serving tile shape.
@@ -1063,9 +1103,31 @@ pub fn fused_fronts_seeded(
     seed_el: &[(f64, f64)],
     seed_bsda: &[(f64, f64)],
 ) -> Fronts {
+    fused_fronts_seeded_cancellable(q, b, hw, mult, prune, tiles, seed_el, seed_bsda, None).0
+}
+
+/// [`fused_fronts_seeded`] with a cooperative [`CancelToken`] probed
+/// once per tile — the fronts counterpart of
+/// [`fused_argmin3_seeded_cancellable`]. Skipped tiles contribute empty
+/// fronts (the merge identity), so the returned fronts are exactly the
+/// achieved front state over the tiles that completed. The `bool` is
+/// `partial`: `true` iff any tile of this pass was skipped. `None` (or
+/// a never-tripped token) is bit-identical to the uncancellable pass.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_fronts_seeded_cancellable(
+    q: &QueryMatrix,
+    b: &BoundaryMatrix,
+    hw: &HwVector,
+    mult: &Multipliers,
+    prune: bool,
+    tiles: TileConfig,
+    seed_el: &[(f64, f64)],
+    seed_bsda: &[(f64, f64)],
+    cancel: Option<&CancelToken>,
+) -> (Fronts, bool) {
     let grid = TileGrid::new(q, b, tiles);
     if grid.len() == 0 {
-        return (Front::new(), Front::new());
+        return ((Front::new(), Front::new()), false);
     }
     let bounds = if prune {
         Some((SharedFrontBound::new(), SharedFrontBound::new()))
@@ -1080,7 +1142,7 @@ pub fn fused_fronts_seeded(
             bsda_b.observe(x, y);
         }
     }
-    let parts = crate::coordinator::run_indexed(grid.len(), |i| {
+    let tile = |i: usize| {
         let (c_range, t_range) = grid.ranges(i);
         EvalWorkspace::with(|ws| {
             let bref = bounds.as_ref().map(|(el, bsda)| (el, bsda));
@@ -1091,14 +1153,24 @@ pub fn fused_fronts_seeded(
             }
             fr
         })
-    });
+    };
+    let (parts, partial) = match cancel {
+        None => (crate::coordinator::run_indexed(grid.len(), tile), false),
+        Some(token) => {
+            let skipped0 = token.blocks_skipped();
+            let parts = crate::coordinator::run_indexed_cancellable(grid.len(), token, tile, |_| {
+                (Front::new(), Front::new())
+            });
+            (parts, token.blocks_skipped() > skipped0)
+        }
+    };
     let mut el = Front::new();
     let mut bsda = Front::new();
     for (e, bd) in parts {
         el.merge(&e);
         bsda.merge(&bd);
     }
-    (el, bsda)
+    ((el, bsda), partial)
 }
 
 /// Full-surface fused Pareto fronts with the serving tile shape.
@@ -1178,6 +1250,143 @@ mod tests {
                 assert_eq!(el.points(), el_ref.points(), "c_block={c_block} prune={prune}");
                 assert_eq!(bsda.points(), bsda_ref.points(), "c_block={c_block} prune={prune}");
             }
+        }
+    }
+
+    /// An armed-but-never-tripped token must not perturb the pass: the
+    /// winners (and fronts) are bit-identical to the no-token path and
+    /// the pass reports `partial: false` with every tile evaluated.
+    #[test]
+    fn cancellable_pass_with_open_token_is_bit_identical() {
+        let (q, b, hw, mult) = surface(45, 150);
+        let tiles = TileConfig::serving(&q);
+        let no_seed = [f64::INFINITY; 3];
+        for prune in [false, true] {
+            let (best_ref, _) =
+                fused_argmin3_seeded(&q, &b, &hw, &mult, prune, tiles, no_seed);
+            let token = CancelToken::new();
+            let (best, stats, partial) = fused_argmin3_seeded_cancellable(
+                &q,
+                &b,
+                &hw,
+                &mult,
+                prune,
+                tiles,
+                no_seed,
+                Some(&token),
+            );
+            assert_eq!(best, best_ref, "prune={prune}");
+            assert!(!partial, "open token must not mark the pass partial");
+            assert_eq!(token.blocks_evaluated(), stats.tiles);
+            assert_eq!(token.blocks_skipped(), 0);
+
+            let (el_ref, bsda_ref) =
+                fused_fronts_seeded(&q, &b, &hw, &mult, prune, tiles, &[], &[]);
+            let token = CancelToken::new();
+            let ((el, bsda), partial) = fused_fronts_seeded_cancellable(
+                &q,
+                &b,
+                &hw,
+                &mult,
+                prune,
+                tiles,
+                &[],
+                &[],
+                Some(&token),
+            );
+            assert_eq!(el.points(), el_ref.points(), "prune={prune}");
+            assert_eq!(bsda.points(), bsda_ref.points(), "prune={prune}");
+            assert!(!partial);
+        }
+    }
+
+    /// Anytime exactness: a pass cancelled after N tile-blocks reports
+    /// exactly N evaluated, and every finite winner it returns is an
+    /// *achieved* in-surface mapping — re-scoring the reported (c, t)
+    /// through the materializing reference reproduces the reported
+    /// score bit-for-bit (never fabricated, never better than the full
+    /// surface's optimum).
+    #[test]
+    fn cancelled_pass_returns_achieved_in_surface_incumbent() {
+        let (q, b, hw, mult) = surface(45, 150);
+        // Narrow tiles so a small check budget spans a real grid.
+        let tiles = TileConfig { c_block: 8, t_chunk: 32 };
+        let full = fused_argmin3_tiled(&q, &b, &hw, &mult, true, tiles);
+        for n in [0u64, 1, 2, 5, 13] {
+            let token = CancelToken::after_checks(n);
+            let (best, stats, partial) = fused_argmin3_seeded_cancellable(
+                &q,
+                &b,
+                &hw,
+                &mult,
+                true,
+                tiles,
+                [f64::INFINITY; 3],
+                Some(&token),
+            );
+            assert!(partial, "n={n}: pass must report partial");
+            assert_eq!(token.blocks_evaluated(), n, "deterministic budget");
+            assert_eq!(token.blocks_evaluated() + token.blocks_skipped(), stats.tiles);
+            if n == 0 {
+                assert!(best[0].0.is_infinite(), "no tile ran, no incumbent");
+            }
+            for (k, &(score, c, t)) in best.iter().enumerate() {
+                if !score.is_finite() {
+                    continue;
+                }
+                let blk = NativeBackend.eval_block(&q, &b, &hw, &mult, (c, c + 1), (t, t + 1));
+                let (e, l, _, _) = blk.at(c, t);
+                let expected = [e, l, e * l][k];
+                assert_eq!(score, expected, "n={n} obj={k}: incumbent must be achieved");
+                assert!(score >= full[k].0, "partial result cannot beat the full optimum");
+            }
+        }
+    }
+
+    /// Fronts counterpart: every point a cancelled fronts pass reports
+    /// re-scores to itself — partial fronts are subsets of achieved
+    /// surface points, never fabricated.
+    #[test]
+    fn cancelled_fronts_contain_only_achieved_points() {
+        let (q, b, hw, mult) = surface(30, 120);
+        let tiles = TileConfig { c_block: 8, t_chunk: 32 };
+        let token = CancelToken::after_checks(3);
+        let ((el, bsda), partial) = fused_fronts_seeded_cancellable(
+            &q,
+            &b,
+            &hw,
+            &mult,
+            true,
+            tiles,
+            &[],
+            &[],
+            Some(&token),
+        );
+        assert!(partial);
+        assert_eq!(token.blocks_evaluated(), 3);
+        for p in el.points() {
+            let blk = NativeBackend.eval_block(
+                &q,
+                &b,
+                &hw,
+                &mult,
+                (p.candidate, p.candidate + 1),
+                (p.tiling, p.tiling + 1),
+            );
+            let (e, l, _, _) = blk.at(p.candidate, p.tiling);
+            assert_eq!((p.x, p.y), (e, l), "energy×latency point must be achieved");
+        }
+        for p in bsda.points() {
+            let blk = NativeBackend.eval_block(
+                &q,
+                &b,
+                &hw,
+                &mult,
+                (p.candidate, p.candidate + 1),
+                (p.tiling, p.tiling + 1),
+            );
+            let (_, _, da, bs) = blk.at(p.candidate, p.tiling);
+            assert_eq!((p.x, p.y), (bs, da), "bs×da point must be achieved");
         }
     }
 

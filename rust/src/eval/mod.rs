@@ -30,6 +30,7 @@ pub mod xla;
 pub use router::Router;
 
 use crate::config::{HwVector, Workload};
+use crate::coordinator::CancelToken;
 use crate::encode::{BoundaryMatrix, QueryMatrix};
 use crate::error::MmeeError;
 use crate::model::Multipliers;
@@ -190,6 +191,29 @@ pub trait EvalBackend {
         self.try_argmin3(q, b, hw, mult)
     }
 
+    /// Anytime variant of [`EvalBackend::try_argmin3_seeded`]: probe
+    /// `cancel` cooperatively (tile-block granularity on backends that
+    /// support it) and, once it trips, stop evaluating and return the
+    /// incumbent state achieved so far. The `bool` is `partial` —
+    /// `true` iff any work was skipped, in which case the argmin covers
+    /// only the evaluated subset (every reported winner is still a real
+    /// in-surface mapping, never fabricated). `None` — or a token that
+    /// never trips — must be bit-identical to the uncancellable path.
+    /// Backends without cooperative checks run to completion and report
+    /// `partial: false`.
+    fn try_argmin3_seeded_cancellable(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed: [f64; 3],
+        cancel: Option<&CancelToken>,
+    ) -> Result<(Argmin3, bool), MmeeError> {
+        let _ = cancel;
+        Ok((self.try_argmin3_seeded(q, b, hw, mult, seed)?, false))
+    }
+
     /// Streamed Pareto fronts over the full surface.
     fn fronts(
         &self,
@@ -199,6 +223,26 @@ pub trait EvalBackend {
         mult: &Multipliers,
     ) -> Fronts {
         serial_fronts(self, q, b, hw, mult)
+    }
+
+    /// Warm-started Pareto fronts: the seeds carry externally *achieved*
+    /// `(x, y)` points of mappings present in `(q, b)` (energy×latency
+    /// and buffer-size×DRAM-access respectively), used as initial
+    /// dominance bounds so pruning bites from the first tile. Backends
+    /// without dominance pruning ignore the seeds — the fronts are
+    /// identical either way, seeding only changes how much work the
+    /// pass does.
+    fn try_fronts_seeded(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed_el: &[(f64, f64)],
+        seed_bsda: &[(f64, f64)],
+    ) -> Result<Fronts, MmeeError> {
+        let _ = (seed_el, seed_bsda);
+        Ok(self.fronts(q, b, hw, mult))
     }
 
     /// Fused streaming argmin: consume evaluation lanes directly and
@@ -292,6 +336,18 @@ impl<B: EvalBackend + ?Sized> EvalBackend for Box<B> {
         (**self).try_argmin3_seeded(q, b, hw, mult, seed)
     }
 
+    fn try_argmin3_seeded_cancellable(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed: [f64; 3],
+        cancel: Option<&CancelToken>,
+    ) -> Result<(Argmin3, bool), MmeeError> {
+        (**self).try_argmin3_seeded_cancellable(q, b, hw, mult, seed, cancel)
+    }
+
     fn fronts(
         &self,
         q: &QueryMatrix,
@@ -300,6 +356,18 @@ impl<B: EvalBackend + ?Sized> EvalBackend for Box<B> {
         mult: &Multipliers,
     ) -> Fronts {
         (**self).fronts(q, b, hw, mult)
+    }
+
+    fn try_fronts_seeded(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed_el: &[(f64, f64)],
+        seed_bsda: &[(f64, f64)],
+    ) -> Result<Fronts, MmeeError> {
+        (**self).try_fronts_seeded(q, b, hw, mult, seed_el, seed_bsda)
     }
 
     fn reduce_argmin3(

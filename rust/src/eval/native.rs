@@ -87,6 +87,45 @@ impl EvalBackend for NativeBackend {
         Ok(super::kernel::fused_argmin3_seeded(q, b, hw, mult, true, tiles, seed).0)
     }
 
+    /// Anytime fused argmin: cooperative cancellation probed once per
+    /// (candidate-block × tiling-chunk) tile; on trip the pass returns
+    /// the exact incumbent state over the tiles that completed (see
+    /// [`super::kernel::fused_argmin3_seeded_cancellable`]).
+    fn try_argmin3_seeded_cancellable(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed: [f64; 3],
+        cancel: Option<&crate::coordinator::CancelToken>,
+    ) -> Result<(super::Argmin3, bool), crate::error::MmeeError> {
+        let tiles = super::kernel::TileConfig::serving(q);
+        let (best, _, partial) = super::kernel::fused_argmin3_seeded_cancellable(
+            q, b, hw, mult, true, tiles, seed, cancel,
+        );
+        Ok((best, partial))
+    }
+
+    /// Warm-started fused fronts: the shared dominance bounds start at
+    /// the seeded achieved points instead of empty, so front pruning
+    /// bites from the first tile. Bit-identical fronts to
+    /// [`EvalBackend::fronts`] under the seed contract.
+    fn try_fronts_seeded(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed_el: &[(f64, f64)],
+        seed_bsda: &[(f64, f64)],
+    ) -> Result<super::Fronts, crate::error::MmeeError> {
+        let tiles = super::kernel::TileConfig::serving(q);
+        Ok(super::kernel::fused_fronts_seeded(
+            q, b, hw, mult, true, tiles, seed_el, seed_bsda,
+        ))
+    }
+
     /// Fused lane-kernel Pareto fronts (no materialized block), with
     /// dominance pruning against the shared achieved-point snapshot
     /// (identical results to the unpruned path, property-tested).

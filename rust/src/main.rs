@@ -12,6 +12,7 @@
 //! mmee serve [--tcp host:port] [--workers N] [--route-above M]
 //!                                   # JSON-lines mapping service
 //! mmee serve --batch reqs.json      # one JSON-array file, batched
+//! mmee serve --smoke                # deadline/degradation self-check
 //! mmee cluster [--workers N] [--worker-threads T] [--tcp host:port]
 //!                                   # multi-process sharded front-end
 //! mmee cluster --smoke              # spawn/kill/restart self-check
@@ -283,7 +284,57 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// CI self-check for the deadline contract: an expired budget is shed
+/// with `deadline_exceeded`, a deterministically cancelled pass
+/// degrades to an achieved in-surface incumbent, and the same request
+/// without a deadline still returns the exact optimum.
+fn serve_smoke() -> Result<()> {
+    use mmee::coordinator::CancelToken;
+    let engine = MmeeEngine::native();
+    // (1) Queued-expiry shedding: a zero budget never reaches the
+    // surface and never builds a boundary.
+    let expired = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy)
+        .with_deadline_ms(0);
+    match engine.plan(&expired) {
+        Err(e) if e.kind() == "deadline_exceeded" => {}
+        other => {
+            return Err(MmeeError::Internal(format!(
+                "serve smoke: zero budget must shed with deadline_exceeded, got {other:?}"
+            )))
+        }
+    }
+    if engine.boundary_build_count() != 0 {
+        return Err(MmeeError::Internal(
+            "serve smoke: shed request paid for a boundary build".into(),
+        ));
+    }
+    // (2) Deterministic mid-pass cancellation (the same token the
+    // wall-clock deadline arms, tripped after exactly 2 tile-blocks)
+    // degrades to a feasible achieved incumbent.
+    let req = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+    let token = CancelToken::after_checks(2);
+    let p = engine.plan_cancellable(&req, Some(&token))?;
+    if !p.degraded || !p.solution.metrics.feasible || p.stats.blocks_cancelled == 0 {
+        return Err(MmeeError::Internal(
+            "serve smoke: cancelled pass must degrade to a feasible incumbent".into(),
+        ));
+    }
+    // (3) The deadline-free request still gets the exact optimum, and
+    // the anytime incumbent never beats it.
+    let full = engine.plan(&req)?;
+    if full.degraded || p.solution.metrics.energy < full.solution.metrics.energy {
+        return Err(MmeeError::Internal(
+            "serve smoke: degraded incumbent beat the full optimum".into(),
+        ));
+    }
+    println!("serve smoke ok: shed on expiry, degraded to achieved incumbent, full pass exact");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("smoke") {
+        return serve_smoke();
+    }
     let engine = engine_for(args)?;
     let workers = args.usize_flag("workers", mmee::coordinator::pool::default_workers());
     let n = if let Some(path) = args.flag("batch") {

@@ -69,6 +69,7 @@ use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::config::{Accelerator, HwVector, Workload};
+use crate::coordinator::CancelToken;
 use crate::encode::{
     build_surface, build_surface_delta, build_surface_from_parts, BoundaryMatrix, BuildConfig,
     QueryMatrix, SurfaceParts,
@@ -84,6 +85,7 @@ use crate::search::request::MappingRequest;
 use crate::search::result::{Objective, Solution};
 use crate::tiling::factorize::factor_pairs_cached;
 use crate::tiling::{min_footprint, Tiling};
+use crate::util::fault::{self, FaultInjector, Site};
 use crate::util::shard::{Fnv, ShardKey, ShardedLru, SingleFlight};
 
 /// Search statistics for runtime reporting (paper §VII-C/H).
@@ -102,6 +104,13 @@ pub struct SearchStats {
     /// retain the value recorded when the group was computed
     /// (`provenance.cache_hit` distinguishes them).
     pub boundary_build: std::time::Duration,
+    /// Tile-blocks the surface pass actually evaluated. Only populated
+    /// (non-zero `blocks_cancelled`) when a deadline cancelled the pass
+    /// mid-flight; complete passes leave both counters zero so their
+    /// wire form is unchanged.
+    pub blocks_evaluated: u64,
+    /// Tile-blocks skipped because the request's deadline expired.
+    pub blocks_cancelled: u64,
 }
 
 fn mmee_query() -> &'static QueryMatrix {
@@ -146,6 +155,7 @@ pub struct EngineBuilder {
     cache_capacity: usize,
     boundary_weight_budget: Option<u64>,
     route_above: Option<usize>,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl EngineBuilder {
@@ -225,6 +235,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Install a [`FaultInjector`] scoped to this engine (chaos tests):
+    /// the engine's `eval`/`boundary` sites draw from it instead of the
+    /// process-wide `MMEE_FAULT` injector. Deterministic in-process
+    /// chaos without touching the environment.
+    pub fn fault_injector(mut self, inj: Arc<FaultInjector>) -> EngineBuilder {
+        self.faults = Some(inj);
+        self
+    }
+
     pub fn build(self) -> MmeeEngine {
         let backend = self
             .backend
@@ -262,6 +281,7 @@ impl EngineBuilder {
             },
             plan_cache: ShardedLru::new(self.cache_capacity),
             plan_flight: SingleFlight::new(),
+            faults: self.faults,
         }
     }
 }
@@ -302,6 +322,9 @@ pub struct MmeeEngine {
     /// concurrent miss still ran its own surface pass (argmin3). One
     /// leader now runs the pass; followers receive its plan group.
     plan_flight: SingleFlight<PlanKey, (Result<Arc<[MappingPlan; 3]>, MmeeError>, bool)>,
+    /// Engine-scoped fault injector (chaos tests); `None` falls back to
+    /// the process-wide `MMEE_FAULT` injector (usually also `None`).
+    faults: Option<Arc<FaultInjector>>,
 }
 
 // The engine must stay shareable across serving workers; if a field
@@ -495,6 +518,16 @@ pub struct SweepReport {
     pub stats: SweepStats,
 }
 
+/// What [`MmeeEngine::pareto_sweep`] returns: one energy–latency front
+/// (or per-shape error) per swept value, in sweep order, plus the same
+/// amortization stats as a plan sweep (`plan_hits` stays 0 — fronts are
+/// not plan-cache entries).
+#[derive(Debug)]
+pub struct ParetoSweepReport {
+    pub fronts: Vec<(usize, Result<(Front, SearchStats), MmeeError>)>,
+    pub stats: SweepStats,
+}
+
 impl MmeeEngine {
     pub fn builder() -> EngineBuilder {
         EngineBuilder {
@@ -503,7 +536,14 @@ impl MmeeEngine {
             cache_capacity: DEFAULT_CACHE_CAPACITY,
             boundary_weight_budget: None,
             route_above: None,
+            faults: None,
         }
+    }
+
+    /// Visit one of this engine's fault-injection sites (no-op unless a
+    /// chaos injector is active — see [`crate::util::fault`]).
+    fn fault_check(&self, site: Site) -> Result<(), MmeeError> {
+        fault::check(self.faults.as_deref(), site)
     }
 
     /// Default engine: native backend over the full pruned space.
@@ -655,10 +695,12 @@ impl MmeeEngine {
         accel: &Accelerator,
         q: &QueryMatrix,
     ) -> Result<(crate::eval::Argmin3, Arc<BoundaryMatrix>, bool, Duration), MmeeError> {
+        self.fault_check(Site::Boundary)?;
         let (b, boundary_hit, build) =
             self.boundary_cached(workload, accel, Some(accel.capacity_words() as f64));
         let hw = accel.hw_vector();
         let mult = Multipliers::for_workload(workload, accel);
+        self.fault_check(Site::Eval)?;
         let best = self.on_backend(|be| be.try_argmin3(q, &b, &hw, &mult))??;
         Ok((best, b, boundary_hit, build))
     }
@@ -752,6 +794,8 @@ impl MmeeEngine {
             mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
             elapsed: t0.elapsed(),
             boundary_build,
+            blocks_evaluated: 0,
+            blocks_cancelled: 0,
         };
         let make = |objective: Objective| -> MappingPlan {
             let (_, c, t) = best[obj_index(objective)];
@@ -764,6 +808,7 @@ impl MmeeEngine {
                     cache_hit: false,
                     boundary_cache_hit: boundary_hit,
                 },
+                degraded: false,
             }
         };
         let plans = Arc::new([
@@ -782,17 +827,144 @@ impl MmeeEngine {
     /// *all three* objectives (the pass computes them anyway), so a
     /// follow-up request for the same (workload, accel) under any
     /// objective is a cache hit.
+    ///
+    /// Requests with an armed deadline take the **anytime path**: a
+    /// plan-cache hit answers instantly regardless of the deadline; an
+    /// already-expired request is shed with
+    /// [`MmeeError::DeadlineExceeded`] before any surface work; a cold
+    /// pass runs under a [`CancelToken`] armed from the deadline and,
+    /// if cancelled mid-pass, degrades to the best incumbent achieved
+    /// so far (`degraded: true`, never memoized) — or
+    /// `DeadlineExceeded` if no feasible incumbent exists yet.
+    /// Requests without a deadline are byte-identical to pre-deadline
+    /// behavior.
     pub fn plan(&self, req: &MappingRequest) -> Result<MappingPlan, MmeeError> {
+        self.plan_cancellable(req, None)
+    }
+
+    /// [`MmeeEngine::plan`] with an explicit [`CancelToken`]: the
+    /// deterministic entry point for cancellation tests
+    /// ([`CancelToken::after_checks`] trips after exactly N
+    /// tile-blocks) and for callers that cancel on their own signal
+    /// rather than a wall-clock deadline. With `cancel: None` and no
+    /// deadline on the request this IS the plain plan path.
+    pub fn plan_cancellable(
+        &self,
+        req: &MappingRequest,
+        cancel: Option<&CancelToken>,
+    ) -> Result<MappingPlan, MmeeError> {
         let t0 = Instant::now();
         let (workload, accel) = req.resolve()?;
         let key = PlanKey { workload, accel };
-        let (entry, cache_hit) = self.plan_group(&key);
-        let plans = entry?;
-        let mut p = plans[obj_index(req.objective)].clone();
-        p.provenance.cache_hit = cache_hit;
-        p.stats.elapsed = t0.elapsed();
-        p.solution.elapsed = t0.elapsed();
-        Ok(p)
+        if cancel.is_none() && req.deadline_at.is_none() {
+            let (entry, cache_hit) = self.plan_group(&key);
+            let plans = entry?;
+            let mut p = plans[obj_index(req.objective)].clone();
+            p.provenance.cache_hit = cache_hit;
+            p.stats.elapsed = t0.elapsed();
+            p.solution.elapsed = t0.elapsed();
+            return Ok(p);
+        }
+        // Anytime path. A cache hit needs no surface work, so it beats
+        // any deadline — probe before the expiry check.
+        if let Some(entry) = self.plan_cache.get(&key) {
+            let plans = entry?;
+            let mut p = plans[obj_index(req.objective)].clone();
+            p.provenance.cache_hit = true;
+            p.stats.elapsed = t0.elapsed();
+            p.solution.elapsed = t0.elapsed();
+            return Ok(p);
+        }
+        // Expired while queued (or a zero budget): shed before paying
+        // for boundary construction or evaluation.
+        if req.expired() {
+            return Err(MmeeError::DeadlineExceeded {
+                budget_ms: req.deadline_ms.unwrap_or(0),
+            });
+        }
+        let armed;
+        let token = match cancel {
+            Some(t) => t,
+            None => {
+                armed = CancelToken::with_deadline(
+                    req.deadline_at.expect("anytime path without a token has a deadline"),
+                );
+                &armed
+            }
+        };
+        // The cancellable pass deliberately bypasses the plan flight: a
+        // degraded result must never be handed to concurrent unbounded
+        // requests (they need the full optimum), and single-flight
+        // followers cannot tell the difference.
+        let q = self.table();
+        self.fault_check(Site::Boundary)?;
+        let cap = key.accel.capacity_words() as f64;
+        let (b, boundary_hit, boundary_build) =
+            self.boundary_cached(&key.workload, &key.accel, Some(cap));
+        let hw = key.accel.hw_vector();
+        let mult = Multipliers::for_workload(&key.workload, &key.accel);
+        self.fault_check(Site::Eval)?;
+        let (best, partial) = self
+            .on_backend(|be| {
+                be.try_argmin3_seeded_cancellable(
+                    q,
+                    &b,
+                    &hw,
+                    &mult,
+                    [f64::INFINITY; 3],
+                    Some(token),
+                )
+            })
+            .and_then(|r| r)?;
+        if !partial {
+            // Ran to completion inside the budget: identical to the
+            // unbounded path, so package and memoize as usual.
+            let plans = self.package_group(&key, q, best, &b, boundary_hit, boundary_build, t0)?;
+            let mut p = plans[obj_index(req.objective)].clone();
+            p.stats.elapsed = t0.elapsed();
+            p.solution.elapsed = t0.elapsed();
+            return Ok(p);
+        }
+        // Cancelled mid-pass: degrade to the achieved incumbent. The
+        // winner comes straight out of the pass's incumbent state, so
+        // it is always a real in-surface mapping — all-infinite (or
+        // all-infeasible-so-far) means there is nothing to degrade to.
+        let (score, c, t) = best[obj_index(req.objective)];
+        if Self::check_feasible(score, &key.workload, &key.accel).is_err() {
+            return Err(MmeeError::DeadlineExceeded {
+                budget_ms: req.deadline_ms.unwrap_or(0),
+            });
+        }
+        let stats = SearchStats {
+            candidates: q.num_candidates(),
+            tilings: b.num_tilings(),
+            mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+            elapsed: t0.elapsed(),
+            boundary_build,
+            blocks_evaluated: token.blocks_evaluated(),
+            blocks_cancelled: token.blocks_skipped(),
+        };
+        let solution = self.package(
+            &key.workload,
+            &key.accel,
+            req.objective,
+            q,
+            &b.tilings,
+            c,
+            t,
+            boundary_build,
+            t0,
+        );
+        Ok(MappingPlan {
+            solution,
+            stats,
+            provenance: Provenance {
+                backend: self.backend_name().to_string(),
+                cache_hit: false,
+                boundary_cache_hit: boundary_hit,
+            },
+            degraded: true,
+        })
     }
 
     /// Answer a batch of typed requests in one scheduling pass — the
@@ -900,6 +1072,12 @@ impl MmeeEngine {
                 plans.push((v, plan));
                 continue;
             }
+            // Fault sites mirror the cold plan path, but a sweep keeps
+            // going: an injected fault costs one shape, not the chain.
+            if let Err(e) = self.fault_check(Site::Boundary) {
+                plans.push((v, Err(e)));
+                continue;
+            }
             let full = BoundaryKey::new(&w, &accel, Some(cap));
             let famkey = full.family(&sweep.dims);
             let (b, boundary_hit, build) = match self.sweep_cache.peek(&famkey) {
@@ -941,7 +1119,8 @@ impl MmeeEngine {
                 stats.seeded_passes += 1;
             }
             let pass = self
-                .on_backend(|be| be.try_argmin3_seeded(q, &b, &hw, &mult, seed))
+                .fault_check(Site::Eval)
+                .and_then(|_| self.on_backend(|be| be.try_argmin3_seeded(q, &b, &hw, &mult, seed)))
                 .and_then(|r| r);
             let best = match pass {
                 Ok(best) => best,
@@ -971,6 +1150,113 @@ impl MmeeEngine {
     /// whole L-sweep should occupy exactly one).
     pub fn sweep_family_len(&self) -> usize {
         self.sweep_cache.len()
+    }
+
+    /// Energy–latency Pareto fronts across a dynamic-shape sweep, with
+    /// the same amortization machinery as [`MmeeEngine::plan_sweep`]:
+    /// surfaces chain through delta builds (and the shape-family slot),
+    /// and each pass is warm-started by re-scoring the *previous*
+    /// shape's front members on the new shape
+    /// ([`warm_front_seed`]) — achieved in-surface points that prime
+    /// the fronts kernel's dominance bound, so pruning bites from the
+    /// first block without changing the exact front (same exactness
+    /// contract as the argmin seed).
+    pub fn pareto_sweep(
+        &self,
+        base: &MappingRequest,
+        sweep: &SweepSpec,
+    ) -> Result<ParetoSweepReport, MmeeError> {
+        let t0 = Instant::now();
+        sweep.validate()?;
+        let (w0, accel) = base.resolve()?;
+        let q = self.table();
+        let hw = accel.hw_vector();
+        let cap = accel.capacity_words() as f64;
+        let mut stats = SweepStats::default();
+        let mut fronts = Vec::with_capacity(sweep.values.len());
+        let mut parts: Option<SurfaceParts> = None;
+        // The last computed shape's front membership — the warm seed
+        // for the next shape's dominance bound.
+        let mut prev: Option<Vec<(usize, Tiling)>> = None;
+        for &v in &sweep.values {
+            let t_shape = Instant::now();
+            let w = sweep.apply(&w0, v);
+            stats.shapes += 1;
+            if let Err(e) = self.fault_check(Site::Boundary) {
+                fronts.push((v, Err(e)));
+                continue;
+            }
+            let full = BoundaryKey::new(&w, &accel, Some(cap));
+            let famkey = full.family(&sweep.dims);
+            let (b, boundary_build) = match self.sweep_cache.peek(&famkey) {
+                Some((k, b)) if k == full => {
+                    stats.family_hits += 1;
+                    (b, Duration::ZERO)
+                }
+                _ => {
+                    let tb = Instant::now();
+                    let (bm, new_parts) = match parts.take() {
+                        Some(p) => {
+                            stats.delta_builds += 1;
+                            build_surface_delta(&w, &accel, Some(cap), &BuildConfig::serving(), &p)
+                        }
+                        None => {
+                            stats.cold_builds += 1;
+                            let p = SurfaceParts::new(&w, &accel);
+                            let cfg = BuildConfig::serving();
+                            let bm = build_surface_from_parts(&w, &accel, Some(cap), &cfg, &p);
+                            (bm, p)
+                        }
+                    };
+                    self.boundary_builds.fetch_add(1, Ordering::Relaxed);
+                    parts = Some(new_parts);
+                    let b = Arc::new(bm);
+                    let build = tb.elapsed();
+                    stats.boundary_build += build;
+                    let weight = (b.num_tilings() * NUM_FEATURES) as u64;
+                    self.sweep_cache.put_weighted(famkey, (full, Arc::clone(&b)), weight);
+                    (b, build)
+                }
+            };
+            let mult = Multipliers::for_workload(&w, &accel);
+            let seed_el = match &prev {
+                Some(members) => warm_front_seed(q, &w, &accel, &hw, &mult, cap, members),
+                None => Vec::new(),
+            };
+            if !seed_el.is_empty() {
+                stats.seeded_passes += 1;
+            }
+            let pass = self
+                .fault_check(Site::Eval)
+                .and_then(|_| {
+                    self.on_backend(|be| be.try_fronts_seeded(q, &b, &hw, &mult, &seed_el, &[]))
+                })
+                .and_then(|r| r);
+            let (el, _) = match pass {
+                Ok(fr) => fr,
+                Err(e) => {
+                    // Transient backend failure: report it for this
+                    // shape, keep the chain state for the next one.
+                    fronts.push((v, Err(e)));
+                    continue;
+                }
+            };
+            prev = Some(
+                el.points().iter().map(|p| (p.candidate, b.tilings[p.tiling])).collect(),
+            );
+            let shape_stats = SearchStats {
+                candidates: q.num_candidates(),
+                tilings: b.num_tilings(),
+                mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+                elapsed: t_shape.elapsed(),
+                boundary_build,
+                blocks_evaluated: 0,
+                blocks_cancelled: 0,
+            };
+            fronts.push((v, Ok((el, shape_stats))));
+        }
+        stats.elapsed = t0.elapsed();
+        Ok(ParetoSweepReport { fronts, stats })
     }
 
     /// Optimize one workload for one objective. One surface pass yields
@@ -1053,6 +1339,8 @@ impl MmeeEngine {
             mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
             elapsed: t0.elapsed(),
             boundary_build,
+            blocks_evaluated: 0,
+            blocks_cancelled: 0,
         };
         Ok((el, stats))
     }
@@ -1098,6 +1386,8 @@ impl MmeeEngine {
             mappings: s.evaluated,
             elapsed: t0.elapsed(),
             boundary_build: s.boundary_build,
+            blocks_evaluated: 0,
+            blocks_cancelled: 0,
         })
     }
 }
@@ -1165,6 +1455,48 @@ pub fn warm_seed(
         seed[0] = seed[0].min(e);
         seed[1] = seed[1].min(l);
         seed[2] = seed[2].min(e * l);
+    }
+    seed
+}
+
+/// [`warm_seed`]'s fronts twin: re-score a previous shape's front
+/// members on a new shape, producing achieved `(energy, latency)`
+/// points that seed
+/// [`crate::eval::EvalBackend::try_fronts_seeded`]'s dominance bound.
+/// The same soundness rules apply — adapt to the new dims, drop
+/// mappings the capacity cap excludes from the enumerated surface,
+/// score through the quantized block path, skip infeasible re-scores —
+/// so every returned point is achieved in-surface and pruning against
+/// it cannot change the exact front. An empty result means a plain
+/// cold fronts pass.
+pub fn warm_front_seed(
+    q: &QueryMatrix,
+    workload: &Workload,
+    accel: &Accelerator,
+    hw: &HwVector,
+    mult: &Multipliers,
+    capacity_words: f64,
+    prev: &[(usize, Tiling)],
+) -> Vec<(f64, f64)> {
+    let dims = workload.gemm.dims();
+    let mut seed = Vec::new();
+    let mut seen: Vec<(usize, Tiling)> = Vec::new();
+    for &(c, t0) in prev {
+        let t = adapt_tiling(&t0, dims);
+        if min_footprint(&t) > capacity_words {
+            continue;
+        }
+        if seen.contains(&(c, t)) {
+            continue;
+        }
+        seen.push((c, t));
+        let b1 = BoundaryMatrix::build(vec![t], accel, workload);
+        let blk = NativeBackend.eval_block(q, &b1, hw, mult, (c, c + 1), (0, 1));
+        let (e, l, _, _) = blk.at(c, 0);
+        if e >= 1e29 {
+            continue;
+        }
+        seed.push((e, l));
     }
     seed
 }
@@ -1606,6 +1938,90 @@ mod tests {
         assert_eq!(engine.plan_sweep(&base, &no_vals).unwrap_err().kind(), "parse");
         let zero = SweepSpec::seq(vec![0]);
         assert_eq!(engine.plan_sweep(&base, &zero).unwrap_err().kind(), "parse");
+    }
+
+    #[test]
+    fn cancelled_plan_degrades_to_achieved_incumbent() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let token = CancelToken::after_checks(2);
+        let p = engine.plan_cancellable(&req, Some(&token)).unwrap();
+        assert!(p.degraded, "cancelled mid-pass must report degradation");
+        assert_eq!(p.stats.blocks_evaluated, 2, "after_checks(2) admits exactly two blocks");
+        assert!(p.stats.blocks_cancelled > 0);
+        assert!(p.solution.metrics.feasible);
+        // The anytime incumbent is a real in-surface mapping, so it can
+        // never beat the surface optimum.
+        let full = MmeeEngine::native().plan(&req).unwrap();
+        assert!(p.solution.metrics.energy >= full.solution.metrics.energy);
+        // Degraded results are never memoized: the next unbounded
+        // request on the SAME engine runs the full pass and matches a
+        // fresh engine exactly.
+        let after = engine.plan(&req).unwrap();
+        assert!(!after.degraded);
+        assert!(!after.provenance.cache_hit, "degraded result must not populate the cache");
+        assert_eq!(after.solution.metrics.energy, full.solution.metrics.energy);
+        assert_eq!(after.solution.tiling, full.solution.tiling);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_any_surface_work() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy)
+            .with_deadline_ms(0);
+        let err = engine.plan(&req).unwrap_err();
+        assert_eq!(err.kind(), "deadline_exceeded");
+        assert_eq!(engine.boundary_build_count(), 0, "shed before boundary construction");
+    }
+
+    #[test]
+    fn plan_cache_hit_beats_an_expired_deadline() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let full = engine.plan(&req).unwrap();
+        let expired = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy)
+            .with_deadline_ms(0);
+        let p = engine.plan(&expired).unwrap();
+        assert!(p.provenance.cache_hit, "a cached answer needs no surface work");
+        assert!(!p.degraded);
+        assert_eq!(p.solution.metrics.energy, full.solution.metrics.energy);
+    }
+
+    #[test]
+    fn pareto_sweep_matches_cold_fronts_exactly() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let sweep = SweepSpec::seq(vec![128, 192, 256]);
+        let report = engine.pareto_sweep(&base, &sweep).unwrap();
+        assert_eq!(report.stats.shapes, 3);
+        assert_eq!(report.stats.cold_builds, 1, "only the first shape builds cold");
+        assert_eq!(report.stats.delta_builds, 2);
+        assert_eq!(report.stats.seeded_passes, 2, "every follow-up pass is front-seeded");
+        assert_eq!(report.stats.plan_hits, 0, "fronts never touch the plan cache");
+        let cold = MmeeEngine::native();
+        let accel = presets::accel1();
+        for (v, entry) in &report.fronts {
+            let (front, stats) = entry.as_ref().unwrap();
+            let mut w = presets::bert_base(128);
+            w.gemm.i = *v;
+            w.gemm.l = *v;
+            let (reference, _) = cold.pareto_energy_latency(&w, &accel).unwrap();
+            assert_eq!(front.points(), reference.points(), "seq {v}");
+            assert!(stats.mappings > 0.0);
+        }
+    }
+
+    #[test]
+    fn injected_faults_surface_as_structured_errors_and_are_not_memoized() {
+        let inj = Arc::new(FaultInjector::parse("err:1@eval").unwrap());
+        let engine = MmeeEngine::builder().fault_injector(inj).build();
+        let req = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let err = engine.plan(&req).unwrap_err();
+        assert_eq!(err.kind(), "fault");
+        // p=1 faults fire on every visit — the verdict is never cached.
+        assert_eq!(engine.plan(&req).unwrap_err().kind(), "fault");
+        // A fault-free engine answers the same request normally.
+        assert!(MmeeEngine::native().plan(&req).is_ok());
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod request;
 pub mod result;
 
 pub use engine::{
-    adapt_tiling, plan_shard_hash, warm_seed, EngineBuilder, MmeeEngine, SearchStats, SweepReport,
-    SweepSpec, SweepStats, DEFAULT_CACHE_CAPACITY,
+    adapt_tiling, plan_shard_hash, warm_front_seed, warm_seed, EngineBuilder, MmeeEngine,
+    ParetoSweepReport, SearchStats, SweepReport, SweepSpec, SweepStats, DEFAULT_CACHE_CAPACITY,
 };
 pub use pareto::{pareto_front, ParetoPoint};
 pub use plan::{MappingPlan, Provenance};

@@ -27,29 +27,39 @@ pub struct MappingPlan {
     pub solution: Solution,
     pub stats: SearchStats,
     pub provenance: Provenance,
+    /// The request's deadline expired mid-search and this plan carries
+    /// the best incumbent *achieved* before cancellation rather than the
+    /// surface optimum (anytime contract: the mapping is always a real
+    /// in-surface point, never fabricated). `false` for every complete
+    /// plan — and complete plans omit the wire key entirely, keeping
+    /// no-deadline responses byte-identical to pre-deadline output.
+    pub degraded: bool,
 }
 
 impl MappingPlan {
     /// Wire form: the solution fields flattened at the top level (so
     /// pre-redesign clients keep reading `energy_j` etc.), plus `stats`
-    /// and `provenance` objects.
+    /// and `provenance` objects. `degraded` and the cancellation
+    /// counters appear only on deadline-degraded plans.
     pub fn to_json(&self) -> Json {
         let mut obj = match self.solution.to_json() {
             Json::Obj(o) => o,
             _ => unreachable!("Solution::to_json returns an object"),
         };
-        obj.insert(
-            "stats".into(),
-            Json::obj(vec![
-                ("candidates", Json::num(self.stats.candidates as f64)),
-                ("tilings", Json::num(self.stats.tilings as f64)),
-                ("mappings", Json::num(self.stats.mappings)),
-                ("elapsed_s", Json::num(self.stats.elapsed.as_secs_f64())),
-                // Cold-start attribution: construction vs evaluation
-                // (zero when the boundary matrix came from cache).
-                ("boundary_build_s", Json::num(self.stats.boundary_build.as_secs_f64())),
-            ]),
-        );
+        let mut stats = vec![
+            ("candidates", Json::num(self.stats.candidates as f64)),
+            ("tilings", Json::num(self.stats.tilings as f64)),
+            ("mappings", Json::num(self.stats.mappings)),
+            ("elapsed_s", Json::num(self.stats.elapsed.as_secs_f64())),
+            // Cold-start attribution: construction vs evaluation
+            // (zero when the boundary matrix came from cache).
+            ("boundary_build_s", Json::num(self.stats.boundary_build.as_secs_f64())),
+        ];
+        if self.stats.blocks_cancelled > 0 {
+            stats.push(("blocks_evaluated", Json::num(self.stats.blocks_evaluated as f64)));
+            stats.push(("blocks_cancelled", Json::num(self.stats.blocks_cancelled as f64)));
+        }
+        obj.insert("stats".into(), Json::obj(stats));
         obj.insert(
             "provenance".into(),
             Json::obj(vec![
@@ -58,6 +68,9 @@ impl MappingPlan {
                 ("boundary_cache_hit", Json::Bool(self.provenance.boundary_cache_hit)),
             ]),
         );
+        if self.degraded {
+            obj.insert("degraded".into(), Json::Bool(true));
+        }
         Json::Obj(obj)
     }
 }
@@ -88,6 +101,27 @@ mod tests {
         let prov = j.get("provenance").unwrap();
         assert_eq!(prov.get("backend").unwrap().as_str(), Some("native"));
         assert_eq!(prov.get("cache_hit").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn degraded_key_is_omitted_on_complete_plans() {
+        let engine = MmeeEngine::native();
+        let req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let p = engine.plan(&req).unwrap();
+        assert!(!p.degraded);
+        let j = p.to_json();
+        assert!(j.get("degraded").is_none(), "complete plans must omit the key");
+        assert!(j.get("stats").unwrap().get("blocks_cancelled").is_none());
+
+        let mut d = p.clone();
+        d.degraded = true;
+        d.stats.blocks_evaluated = 3;
+        d.stats.blocks_cancelled = 7;
+        let j = d.to_json();
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(true));
+        let stats = j.get("stats").unwrap();
+        assert_eq!(stats.get("blocks_evaluated").unwrap().as_f64(), Some(3.0));
+        assert_eq!(stats.get("blocks_cancelled").unwrap().as_f64(), Some(7.0));
     }
 
     #[test]

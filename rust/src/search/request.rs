@@ -5,6 +5,8 @@
 //! values listed, and every other layer (CLI, serve loop, examples,
 //! report harness) speaks [`MappingRequest`].
 
+use std::time::{Duration, Instant};
+
 use crate::config::{presets, Accelerator, Workload, WorkloadKind};
 use crate::error::MmeeError;
 use crate::search::result::Objective;
@@ -162,11 +164,61 @@ pub struct MappingRequest {
     pub workload: WorkloadSpec,
     pub accel: AccelSpec,
     pub objective: Objective,
+    /// Latency budget in milliseconds (wire field `deadline_ms`).
+    /// `None` = unbounded — the pre-deadline behavior, bit-identical
+    /// output.
+    pub deadline_ms: Option<u64>,
+    /// Scheduling priority (wire field `priority`, default 0; higher is
+    /// more urgent). Carried through the stack and reported back;
+    /// deadline-aware shedding treats it as a tiebreaker hint.
+    pub priority: i32,
+    /// Absolute expiry, armed when the deadline is set (at parse time
+    /// for wire requests — so time spent queued counts against the
+    /// budget, and a request that expires while waiting is shed rather
+    /// than planned).
+    pub deadline_at: Option<Instant>,
 }
 
 impl MappingRequest {
     pub fn new(workload: WorkloadSpec, accel: AccelSpec, objective: Objective) -> MappingRequest {
-        MappingRequest { workload, accel, objective }
+        MappingRequest {
+            workload,
+            accel,
+            objective,
+            deadline_ms: None,
+            priority: 0,
+            deadline_at: None,
+        }
+    }
+
+    /// Arm a deadline `ms` milliseconds from now. The search degrades
+    /// to the best incumbent achieved when the budget expires mid-pass
+    /// (`degraded: true` in the plan), or fails with
+    /// [`MmeeError::DeadlineExceeded`] if nothing was achieved at all.
+    pub fn with_deadline_ms(mut self, ms: u64) -> MappingRequest {
+        self.deadline_ms = Some(ms);
+        self.deadline_at = Some(Instant::now() + Duration::from_millis(ms));
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> MappingRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// The absolute expiry instant, if a deadline is armed.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline_at
+    }
+
+    /// Has the armed deadline already passed? (`false` when unbounded.)
+    pub fn expired(&self) -> bool {
+        self.deadline_at.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Remaining budget (zero once expired; `None` when unbounded).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline_at.map(|d| d.saturating_duration_since(Instant::now()))
     }
 
     /// Convenience: both sides by preset name.
@@ -210,7 +262,28 @@ impl MappingRequest {
         let objective = Objective::parse(
             j.get("objective").and_then(Json::as_str).unwrap_or("energy"),
         )?;
-        Ok(MappingRequest { workload, accel, objective })
+        let mut req = MappingRequest::new(workload, accel, objective);
+        if let Some(d) = j.get("deadline_ms") {
+            match d.as_f64() {
+                Some(ms) if ms >= 0.0 && ms.fract() == 0.0 => {
+                    req = req.with_deadline_ms(ms as u64);
+                }
+                _ => {
+                    return Err(MmeeError::Parse(
+                        "'deadline_ms' must be a non-negative integer".into(),
+                    ))
+                }
+            }
+        }
+        if let Some(p) = j.get("priority") {
+            match p.as_f64() {
+                Some(v) if v.fract() == 0.0 && (i32::MIN as f64..=i32::MAX as f64).contains(&v) => {
+                    req.priority = v as i32;
+                }
+                _ => return Err(MmeeError::Parse("'priority' must be an integer".into())),
+            }
+        }
+        Ok(req)
     }
 
     /// Resolve both specs, reporting the first failure.
@@ -330,6 +403,42 @@ mod tests {
         assert!(e.to_string().contains("energy, latency, edp"), "{e}");
         let e = MappingRequest::parse(r#"{"workload": {"i": 8}}"#).unwrap_err();
         assert!(e.to_string().contains("missing dim"), "{e}");
+    }
+
+    #[test]
+    fn wire_parse_deadline_and_priority() {
+        let r = MappingRequest::parse(
+            r#"{"workload": "bert-base", "deadline_ms": 25000, "priority": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(r.deadline_ms, Some(25000));
+        assert_eq!(r.priority, 3);
+        assert!(r.deadline_at.is_some());
+        assert!(!r.expired(), "a 25 s budget cannot expire at parse time");
+        assert!(r.remaining().is_some());
+
+        // No deadline → unbounded, never expired.
+        let r = MappingRequest::parse(r#"{"workload": "bert-base"}"#).unwrap();
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.priority, 0);
+        assert!(!r.expired());
+        assert!(r.remaining().is_none());
+
+        // A zero budget is legal and immediately expired — the queue
+        // shedding path, not a parse error.
+        let r =
+            MappingRequest::parse(r#"{"workload": "bert-base", "deadline_ms": 0}"#).unwrap();
+        assert!(r.expired());
+        assert_eq!(r.remaining(), Some(Duration::ZERO));
+
+        for bad in [
+            r#"{"workload": "bert-base", "deadline_ms": -5}"#,
+            r#"{"workload": "bert-base", "deadline_ms": 1.5}"#,
+            r#"{"workload": "bert-base", "deadline_ms": "soon"}"#,
+            r#"{"workload": "bert-base", "priority": 0.5}"#,
+        ] {
+            assert_eq!(MappingRequest::parse(bad).unwrap_err().kind(), "parse", "{bad}");
+        }
     }
 
     #[test]

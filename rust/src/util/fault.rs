@@ -1,0 +1,393 @@
+//! Deterministic fault injection — the chaos harness behind the
+//! cluster's restart/retry/shed tests.
+//!
+//! Production code carries four named injection **sites**; each is a
+//! single [`check`] / [`check_io`] call that is a no-op unless an
+//! injector is active:
+//!
+//! | site       | where it fires                                         |
+//! |------------|--------------------------------------------------------|
+//! | `eval`     | engine surface pass, before the backend reduction      |
+//! | `boundary` | boundary-matrix construction, before the fused build   |
+//! | `spawn`    | cluster worker process spawn                           |
+//! | `io`       | cluster router ↔ worker pipe/socket exchange           |
+//!
+//! An injector is configured from the `MMEE_FAULT` environment variable
+//! (inherited by spawned cluster workers, so one variable drives the
+//! whole process tree) or installed programmatically ([`install`] for
+//! the process, [`crate::search::EngineBuilder::fault_injector`] for
+//! one engine). The spec grammar is comma-separated
+//! `kind:value[@site]` entries:
+//!
+//! ```text
+//! MMEE_FAULT="crash:0.25@eval,err:0.1@io,delay:5@boundary,seed:7"
+//! ```
+//!
+//! * `crash:p[@site]` — with probability `p`, terminate the process
+//!   (exit code 42) at the site: exercises the supervisor restart path.
+//! * `err:p[@site]` — with probability `p`, return a structured
+//!   [`MmeeError::Fault`] from the site: exercises retry/shed paths.
+//! * `delay:ms[@site]` — sleep `ms` milliseconds at every visit to the
+//!   site: exercises timeout/deadline paths.
+//! * `seed:n` — seed for the decision streams (default `0xC0FFEE`).
+//!
+//! Omitting `@site` applies the entry to all four sites. Malformed
+//! specs panic at first use — a chaos run with a typo'd spec silently
+//! testing nothing is worse than a loud failure.
+//!
+//! **Determinism.** Each site draws from its own seeded
+//! [`Rng`](crate::util::rng::Rng) stream (derived from the spec seed),
+//! so the k-th visit to a site makes the same crash/err decision in
+//! every run with that seed. Runs are bit-reproducible whenever the
+//! per-site visit *order* is deterministic — sequential request traces
+//! qualify; concurrent traces still see a deterministic decision
+//! multiset per site, but which request draws which decision depends
+//! on interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Duration;
+
+use crate::error::MmeeError;
+use crate::util::rng::Rng;
+
+/// Exit code of an injected crash — distinguishable from panics (101)
+/// and clean exits in supervisor logs and chaos-test assertions.
+pub const CRASH_EXIT_CODE: i32 = 42;
+
+const DEFAULT_SEED: u64 = 0xC0FFEE;
+
+/// A named injection point in production code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Engine surface pass (backend reduction call).
+    Eval,
+    /// Boundary-matrix construction.
+    Boundary,
+    /// Cluster worker process spawn.
+    Spawn,
+    /// Cluster router ↔ worker wire exchange.
+    Io,
+}
+
+impl Site {
+    pub const ALL: [Site; 4] = [Site::Eval, Site::Boundary, Site::Spawn, Site::Io];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::Eval => "eval",
+            Site::Boundary => "boundary",
+            Site::Spawn => "spawn",
+            Site::Io => "io",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Site> {
+        match s {
+            "eval" => Some(Site::Eval),
+            "boundary" => Some(Site::Boundary),
+            "spawn" => Some(Site::Spawn),
+            "io" => Some(Site::Io),
+            _ => None,
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Site::Eval => 0,
+            Site::Boundary => 1,
+            Site::Spawn => 2,
+            Site::Io => 3,
+        }
+    }
+}
+
+/// Per-site fault configuration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct SiteSpec {
+    crash_p: f64,
+    err_p: f64,
+    delay_ms: u64,
+}
+
+impl SiteSpec {
+    fn is_empty(&self) -> bool {
+        self.crash_p == 0.0 && self.err_p == 0.0 && self.delay_ms == 0
+    }
+}
+
+/// A parsed, seeded fault plan. Decisions are drawn from per-site
+/// deterministic streams; see the module docs for the grammar and the
+/// determinism contract.
+#[derive(Debug)]
+pub struct FaultInjector {
+    seed: u64,
+    specs: [SiteSpec; 4],
+    /// One decision stream per site so injection at one site never
+    /// perturbs another site's schedule.
+    streams: [Mutex<Rng>; 4],
+    /// Structured errors actually injected, per site (observability
+    /// for chaos-test assertions; crashes obviously don't count here).
+    injected: [AtomicU64; 4],
+}
+
+impl FaultInjector {
+    /// Parse a spec string (the `MMEE_FAULT` grammar).
+    pub fn parse(spec: &str) -> Result<FaultInjector, MmeeError> {
+        let mut specs = [SiteSpec::default(); 4];
+        let mut seed = DEFAULT_SEED;
+        let bad = |entry: &str, why: &str| {
+            Err(MmeeError::Parse(format!("MMEE_FAULT entry '{entry}': {why}")))
+        };
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = match entry.split_once(':') {
+                Some(kv) => kv,
+                None => return bad(entry, "expected kind:value"),
+            };
+            let (value, site) = match rest.split_once('@') {
+                Some((v, s)) => match Site::parse(s) {
+                    Some(site) => (v, Some(site)),
+                    None => return bad(entry, "unknown site (valid: eval, boundary, spawn, io)"),
+                },
+                None => (rest, None),
+            };
+            let targets: &[Site] = match site {
+                Some(ref s) => std::slice::from_ref(s),
+                None => &Site::ALL,
+            };
+            match kind {
+                "seed" => match value.parse::<u64>() {
+                    Ok(n) => seed = n,
+                    Err(_) => return bad(entry, "seed must be a u64"),
+                },
+                "crash" | "err" => {
+                    let p = match value.parse::<f64>() {
+                        Ok(p) if (0.0..=1.0).contains(&p) => p,
+                        _ => return bad(entry, "probability must be in [0, 1]"),
+                    };
+                    for t in targets {
+                        if kind == "crash" {
+                            specs[t.index()].crash_p = p;
+                        } else {
+                            specs[t.index()].err_p = p;
+                        }
+                    }
+                }
+                "delay" => {
+                    let ms = match value.parse::<u64>() {
+                        Ok(ms) => ms,
+                        Err(_) => return bad(entry, "delay must be milliseconds (u64)"),
+                    };
+                    for t in targets {
+                        specs[t.index()].delay_ms = ms;
+                    }
+                }
+                _ => return bad(entry, "unknown kind (valid: crash, err, delay, seed)"),
+            }
+        }
+        Ok(FaultInjector::with_specs(seed, specs))
+    }
+
+    fn with_specs(seed: u64, specs: [SiteSpec; 4]) -> FaultInjector {
+        // Distinct per-site streams derived from one seed (golden-ratio
+        // increment, the usual splitmix stream separator).
+        let stream =
+            |i: u64| Mutex::new(Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i + 1)));
+        FaultInjector {
+            seed,
+            specs,
+            streams: [stream(0), stream(1), stream(2), stream(3)],
+            injected: Default::default(),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Visit a site: sleep the configured delay, then draw the site's
+    /// stream — crash, inject a structured [`MmeeError::Fault`], or
+    /// pass. A site with no configuration draws nothing, so unrelated
+    /// sites never shift each other's schedules.
+    pub fn check(&self, site: Site) -> Result<(), MmeeError> {
+        let spec = self.specs[site.index()];
+        if spec.is_empty() {
+            return Ok(());
+        }
+        if spec.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(spec.delay_ms));
+        }
+        if spec.crash_p > 0.0 || spec.err_p > 0.0 {
+            let mut rng = self.streams[site.index()].lock().unwrap();
+            if spec.crash_p > 0.0 && rng.f64() < spec.crash_p {
+                eprintln!("mmee: injected crash at site '{}'", site.name());
+                std::process::exit(CRASH_EXIT_CODE);
+            }
+            if spec.err_p > 0.0 && rng.f64() < spec.err_p {
+                self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+                return Err(MmeeError::Fault { site: site.name() });
+            }
+        }
+        Ok(())
+    }
+
+    /// [`FaultInjector::check`] for `io::Result` call sites.
+    pub fn check_io(&self, site: Site) -> std::io::Result<()> {
+        self.check(site).map_err(|e| std::io::Error::other(e.to_string()))
+    }
+
+    /// Structured errors injected at `site` so far.
+    pub fn injected(&self, site: Site) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide injector slot: lazily seeded from `MMEE_FAULT`,
+/// replaceable by tests via [`install`]. `RwLock` (not `OnceLock`
+/// alone) so a test can install, run, and uninstall without leaking
+/// chaos into its neighbours.
+fn global_cell() -> &'static RwLock<Option<Arc<FaultInjector>>> {
+    static CELL: OnceLock<RwLock<Option<Arc<FaultInjector>>>> = OnceLock::new();
+    CELL.get_or_init(|| {
+        RwLock::new(match std::env::var("MMEE_FAULT") {
+            Ok(spec) if !spec.is_empty() => match FaultInjector::parse(&spec) {
+                Ok(inj) => Some(Arc::new(inj)),
+                // A typo'd chaos spec silently testing nothing is worse
+                // than a loud failure.
+                Err(e) => panic!("invalid MMEE_FAULT: {e}"),
+            },
+            _ => None,
+        })
+    })
+}
+
+/// Replace the process-wide injector (`None` disables injection).
+/// Returns the previous one so tests can restore it.
+pub fn install(inj: Option<Arc<FaultInjector>>) -> Option<Arc<FaultInjector>> {
+    std::mem::replace(&mut *global_cell().write().unwrap(), inj)
+}
+
+/// The currently active process-wide injector, if any.
+pub fn active() -> Option<Arc<FaultInjector>> {
+    global_cell().read().unwrap().clone()
+}
+
+/// Visit a site against `local` (a builder-installed injector) if
+/// given, else the process-wide one. The inactive path is one `RwLock`
+/// read — sites sit at request/build/spawn granularity, not in inner
+/// loops.
+pub fn check(local: Option<&FaultInjector>, site: Site) -> Result<(), MmeeError> {
+    if let Some(f) = local {
+        return f.check(site);
+    }
+    match active() {
+        Some(f) => f.check(site),
+        None => Ok(()),
+    }
+}
+
+/// [`check`] for `io::Result` call sites.
+pub fn check_io(local: Option<&FaultInjector>, site: Site) -> std::io::Result<()> {
+    if let Some(f) = local {
+        return f.check_io(site);
+    }
+    match active() {
+        Some(f) => f.check_io(site),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar_and_site_scoping() {
+        let inj = FaultInjector::parse("crash:0.25@eval,err:0.1@io,delay:5@boundary,seed:7")
+            .unwrap();
+        assert_eq!(inj.seed(), 7);
+        assert_eq!(inj.specs[Site::Eval.index()].crash_p, 0.25);
+        assert_eq!(inj.specs[Site::Eval.index()].err_p, 0.0);
+        assert_eq!(inj.specs[Site::Io.index()].err_p, 0.1);
+        assert_eq!(inj.specs[Site::Boundary.index()].delay_ms, 5);
+        assert!(inj.specs[Site::Spawn.index()].is_empty());
+        // No @site = all sites.
+        let all = FaultInjector::parse("err:0.5").unwrap();
+        for s in Site::ALL {
+            assert_eq!(all.specs[s.index()].err_p, 0.5, "{}", s.name());
+        }
+        // Empty spec parses to a no-op injector (default seed).
+        let noop = FaultInjector::parse("").unwrap();
+        assert_eq!(noop.seed(), DEFAULT_SEED);
+        for s in Site::ALL {
+            assert!(noop.check(s).is_ok());
+        }
+    }
+
+    #[test]
+    fn malformed_specs_are_structured_errors() {
+        for bad in [
+            "crash",
+            "crash:2.0",
+            "crash:-0.1@eval",
+            "err:0.5@nowhere",
+            "delay:fast@io",
+            "seed:abc",
+            "explode:0.5",
+        ] {
+            let e = FaultInjector::parse(bad).unwrap_err();
+            assert_eq!(e.kind(), "parse", "{bad}");
+            assert!(e.to_string().contains("MMEE_FAULT"), "{e}");
+        }
+    }
+
+    #[test]
+    fn decision_streams_are_deterministic_and_per_site() {
+        let decisions = |spec: &str, site: Site, n: usize| -> Vec<bool> {
+            let inj = FaultInjector::parse(spec).unwrap();
+            (0..n).map(|_| inj.check(site).is_err()).collect()
+        };
+        // Same seed → identical schedule, run after run.
+        let a = decisions("err:0.3,seed:11", Site::Eval, 64);
+        let b = decisions("err:0.3,seed:11", Site::Eval, 64);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p=0.3 mixes");
+        // Different seed → different schedule.
+        let c = decisions("err:0.3,seed:12", Site::Eval, 64);
+        assert_ne!(a, c);
+        // Visits to an unconfigured site draw nothing, so they cannot
+        // shift a configured site's schedule.
+        let inj = FaultInjector::parse("err:0.3@eval,seed:11").unwrap();
+        let mut interleaved = Vec::new();
+        for _ in 0..64 {
+            assert!(inj.check(Site::Io).is_ok());
+            interleaved.push(inj.check(Site::Eval).is_err());
+        }
+        assert_eq!(a, interleaved);
+        // The injected-error counter matches the schedule.
+        let expected = a.iter().filter(|&&x| x).count() as u64;
+        let counted = FaultInjector::parse("err:0.3,seed:11").unwrap();
+        for _ in 0..64 {
+            let _ = counted.check(Site::Eval);
+        }
+        assert_eq!(counted.injected(Site::Eval), expected);
+    }
+
+    #[test]
+    fn install_scopes_the_global_injector() {
+        // Serialize against any other test touching the global slot by
+        // doing the full install → use → restore cycle in one test.
+        let prev = install(Some(Arc::new(FaultInjector::parse("err:1.0@spawn").unwrap())));
+        let e = check(None, Site::Spawn).unwrap_err();
+        assert_eq!(e.kind(), "fault");
+        assert!(e.to_string().contains("spawn"), "{e}");
+        assert!(check(None, Site::Eval).is_ok(), "other sites unaffected");
+        let io_err = check_io(None, Site::Spawn).unwrap_err();
+        assert!(io_err.to_string().contains("spawn"));
+        // A local injector takes precedence over the global one.
+        let local = FaultInjector::parse("").unwrap();
+        assert!(check(Some(&local), Site::Spawn).is_ok());
+        install(prev);
+        assert!(check(None, Site::Spawn).is_ok(), "uninstalled = clean");
+    }
+}

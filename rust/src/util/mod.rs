@@ -2,6 +2,7 @@
 //! JSON, deterministic RNG, a property-test runner, a micro-bench harness
 //! and a small CLI parser (no serde / proptest / criterion / clap offline).
 
+pub mod fault;
 pub mod json;
 pub mod lru;
 pub mod rng;
