@@ -2,8 +2,10 @@
 //! matrix-encoded evaluation (native lane kernel / XLA) vs per-mapping
 //! "if-else parsing" (branchy), the fused lane-major kernel vs the
 //! Block-materializing scalar path, pool-cold (first pass: worker spawn
-//! + workspace warmup) vs pool-warm steady state, and fronts extraction
-//! with dominance pruning on vs off. Prints mappings/second per
+//! + workspace warmup) vs pool-warm steady state, fronts extraction
+//! with dominance pruning on vs off, every dispatchable lane ISA on
+//! the same surface, and the software-pipelined vs straight-line tile
+//! loop. Prints mappings/second per
 //! configuration and emits a machine-readable `BENCH_eval.json`
 //! (ns/point and points/s per series) so the perf trajectory is tracked
 //! across PRs.
@@ -15,6 +17,7 @@
 use mmee::config::presets;
 use mmee::coordinator::parallel_chunks;
 use mmee::encode::{BoundaryMatrix, QueryMatrix};
+use mmee::eval::simd::{self, Isa};
 use mmee::eval::{
     branchy::BranchyBackend, kernel, native::NativeBackend, parallel_argmin3, parallel_fronts,
     xla::XlaBackend, EvalBackend, T_CHUNK,
@@ -98,6 +101,46 @@ fn main() {
         kernel::fused_argmin3(q, &b, &hw, &mult, false)
     });
     rows.push(row("lane_kernel_argmin3_noprune", &lane_noprune, mappings));
+
+    // The ISA ladder: force each dispatchable lane tier in turn on the
+    // same surface. Every tier is bit-identical by contract, so only
+    // the ns/point moves.
+    let mut isa_samples: Vec<(Isa, Sample)> = Vec::new();
+    for isa in simd::available() {
+        simd::force(Some(isa));
+        let s = bench.run(&format!("lane kernel argmin3 [isa={}]", isa.name()), || {
+            kernel::fused_argmin3(q, &b, &hw, &mult, true)
+        });
+        rows.push(row(&format!("lane_kernel_argmin3_isa_{}", isa.name()), &s, mappings));
+        isa_samples.push((isa, s));
+    }
+    simd::force(None);
+    let isa_time = |want: Isa| {
+        isa_samples.iter().find(|(i, _)| *i == want).map(|(_, s)| s.median.as_secs_f64())
+    };
+    let avx2_vs_unroll = match (isa_time(Isa::Unroll), isa_time(Isa::Avx2)) {
+        (Some(u), Some(a)) => Some(u / a),
+        _ => None,
+    };
+    if let Some(r) = avx2_vs_unroll {
+        println!("  avx2 vs unroll: {r:.2}x (target >= 1.5x)");
+    }
+
+    // Software-pipelined vs straight-line tile loop, dispatch default
+    // ISA both times (the two schedules are bit-identical).
+    kernel::set_pipelined(Some(false));
+    let straight = bench.run("lane kernel argmin3 (pipelining off)", || {
+        kernel::fused_argmin3(q, &b, &hw, &mult, true)
+    });
+    rows.push(row("lane_kernel_argmin3_unpipelined", &straight, mappings));
+    kernel::set_pipelined(Some(true));
+    let piped = bench.run("lane kernel argmin3 (software-pipelined)", || {
+        kernel::fused_argmin3(q, &b, &hw, &mult, true)
+    });
+    rows.push(row("lane_kernel_argmin3_pipelined", &piped, mappings));
+    kernel::set_pipelined(None);
+    let pipeline_speedup = straight.median.as_secs_f64() / piped.median.as_secs_f64();
+    println!("  software pipelining: {pipeline_speedup:.2}x vs straight-line gather/fold");
 
     let speedup = scalar.median.as_secs_f64() / lane.median.as_secs_f64();
     let warm_vs_cold = cold.median.as_secs_f64() / lane.median.as_secs_f64();
@@ -202,6 +245,16 @@ fn main() {
         ("argmin_speedup_met", Json::Bool(speedup >= 2.0)),
         ("pool_warm_vs_cold_speedup", Json::num(warm_vs_cold)),
         ("fronts_pruned_vs_unpruned_speedup", Json::num(fronts_speedup)),
+        ("isa_default", Json::str(simd::active_name())),
+        // `null` when the host cannot dispatch AVX2 (the target only
+        // applies where the tier exists).
+        ("avx2_vs_unroll_speedup", avx2_vs_unroll.map_or(Json::Null, Json::num)),
+        ("avx2_vs_unroll_target", Json::num(1.5)),
+        (
+            "avx2_vs_unroll_met",
+            avx2_vs_unroll.map_or(Json::Null, |r| Json::Bool(r >= 1.5)),
+        ),
+        ("pipelined_vs_straight_speedup", Json::num(pipeline_speedup)),
     ]);
     let text = format!("{report}\n");
     // Schema keys are asserted on EVERY run (CI's --smoke step makes
@@ -212,6 +265,10 @@ fn main() {
         "lane_kernel_fronts_pruned",
         "pool_warm_vs_cold_speedup",
         "fronts_pruned_vs_unpruned_speedup",
+        "lane_kernel_argmin3_isa_scalar",
+        "lane_kernel_argmin3_pipelined",
+        "avx2_vs_unroll_speedup",
+        "pipelined_vs_straight_speedup",
     ] {
         assert!(text.contains(key), "BENCH_eval.json schema lost key {key}");
     }

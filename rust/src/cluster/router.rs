@@ -18,7 +18,10 @@
 //! through the pool's failure path, and the *unanswered* requests of
 //! the burst are re-sent — mapping queries are pure, so re-execution
 //! is safe. After bounded retries the survivors get structured `io`
-//! error lines instead of hanging the trace.
+//! error lines instead of hanging the trace. While a crashed worker
+//! sits in its restart backoff, NEW requests for its keyspace slice
+//! are redirected to the first live sibling instead of queueing behind
+//! the respawn sleep (counted per slot, surfaced by the `stats` op).
 //!
 //! Deadlines ride through unchanged: a request line carrying
 //! `deadline_ms` is forwarded verbatim (the worker re-arms the budget
@@ -121,6 +124,35 @@ fn error_line(e: MmeeError) -> String {
     Response::Error(e).to_line()
 }
 
+/// First worker at or clockwise from `home` that `down` does not flag;
+/// falls back to `home` when every sibling is down too. The `bool` is
+/// `true` iff the pick is a redirect away from `home`.
+fn first_up(home: usize, n: usize, down: impl Fn(usize) -> bool) -> (usize, bool) {
+    if n > 1 && down(home) {
+        for step in 1..n {
+            let sib = (home + step) % n;
+            if !down(sib) {
+                return (sib, true);
+            }
+        }
+    }
+    (home, false)
+}
+
+/// The shard's home worker — unless that slot is mid-restart, in which
+/// case the first live sibling clockwise takes its keyspace slice for
+/// the duration of the backoff. Shard routing is a cache-affinity
+/// optimization, not a correctness rule (every worker answers every
+/// request identically), so a redirected request pays at most a cold
+/// cache instead of queueing behind the respawn sleep.
+fn pick_worker(pool: &WorkerPool, home: usize) -> usize {
+    let (w, redirected) = first_up(home, pool.num_workers(), |i| pool.in_backoff(i));
+    if redirected {
+        pool.count_redirect(home);
+    }
+    w
+}
+
 /// Route requests from `input` across the pool until EOF, writing
 /// responses to `output` in arrival order. Returns requests served
 /// (batch lines count each element), matching
@@ -216,7 +248,7 @@ fn dispatch(
             match req.resolve() {
                 Err(e) => seq.push(seq_no, error_line(e)),
                 Ok((w, a)) => {
-                    let wi = shard_of(plan_shard_hash(&w, &a), n);
+                    let wi = pick_worker(pool, shard_of(plan_shard_hash(&w, &a), n));
                     let deadline = req.deadline().map(|at| (at, req.deadline_ms.unwrap_or(0)));
                     enqueue(
                         &queues[wi],
@@ -250,7 +282,7 @@ fn dispatch(
                     // at their position, exactly as `plan` would answer.
                     Err(e) => complete(seq, dest, error_line(e)),
                     Ok(((w, a), req)) => {
-                        let wi = shard_of(plan_shard_hash(&w, &a), n);
+                        let wi = pick_worker(pool, shard_of(plan_shard_hash(&w, &a), n));
                         let deadline =
                             req.deadline().map(|at| (at, req.deadline_ms.unwrap_or(0)));
                         // Re-serialize the element as its own one-line
@@ -405,6 +437,7 @@ fn cluster_stats_line(pool: &Arc<WorkerPool>, queues: &[BoundedQueue<Job>]) -> S
         .map(|i| {
             let mut fields = vec![
                 ("queue_depth", Json::num(queues[i].len() as f64)),
+                ("redirects", Json::num(pool.redirects(i) as f64)),
                 ("restarts", Json::num(pool.restarts(i) as f64)),
                 ("worker", Json::num(i as f64)),
             ];
@@ -421,9 +454,36 @@ fn cluster_stats_line(pool: &Arc<WorkerPool>, queues: &[BoundedQueue<Job>]) -> S
         })
         .collect();
     let cluster = Json::obj(vec![
+        ("redirects", Json::num(pool.total_redirects() as f64)),
         ("restarts", Json::num(pool.total_restarts() as f64)),
         ("workers", Json::num(pool.num_workers() as f64)),
     ]);
     let stats = Json::obj(vec![("cluster", cluster), ("workers", Json::arr(workers))]);
     Json::obj(vec![("stats", stats)]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::first_up;
+
+    #[test]
+    fn first_up_prefers_home_when_healthy() {
+        assert_eq!(first_up(2, 4, |_| false), (2, false));
+        // A single-worker pool has no sibling to redirect to.
+        assert_eq!(first_up(0, 1, |_| true), (0, false));
+    }
+
+    #[test]
+    fn first_up_walks_clockwise_past_down_workers() {
+        assert_eq!(first_up(1, 4, |w| w == 1), (2, true));
+        // Wraps around the ring.
+        assert_eq!(first_up(3, 4, |w| w == 3), (0, true));
+        // Skips consecutive down workers.
+        assert_eq!(first_up(1, 4, |w| w == 1 || w == 2), (3, true));
+    }
+
+    #[test]
+    fn first_up_falls_back_to_home_when_all_down() {
+        assert_eq!(first_up(2, 4, |_| true), (2, false));
+    }
 }

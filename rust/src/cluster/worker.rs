@@ -72,6 +72,9 @@ struct SlotState {
 struct Slot {
     state: Mutex<SlotState>,
     restarts: AtomicU64,
+    /// Requests the router sent to a sibling because this slot was
+    /// mid-restart (see [`WorkerPool::in_backoff`]).
+    redirects: AtomicU64,
 }
 
 /// A fixed-size pool of worker processes, indexed by shard.
@@ -98,6 +101,7 @@ impl WorkerPool {
                         backoff: Duration::ZERO,
                     }),
                     restarts: AtomicU64::new(0),
+                    redirects: AtomicU64::new(0),
                 })
                 .collect(),
             closed: AtomicBool::new(false),
@@ -254,6 +258,36 @@ impl WorkerPool {
             let _ = p.child.kill();
             let _ = p.child.wait();
         }
+    }
+
+    /// Is worker `i` mid-restart? True while its process is gone with
+    /// a respawn backoff armed, and (conservatively) while another
+    /// caller holds the slot lock — [`WorkerPool::addr`] holds it
+    /// through the backoff sleep and the spawn handshake, which is
+    /// exactly the window the router wants to route around. A spurious
+    /// `true` from brief lock contention on a healthy slot only costs
+    /// one redirected request a cold cache, never a wrong answer.
+    pub fn in_backoff(&self, i: usize) -> bool {
+        match self.slots[i].state.try_lock() {
+            Err(_) => true,
+            Ok(s) => s.proc.is_none() && !s.backoff.is_zero(),
+        }
+    }
+
+    /// Count one request redirected away from worker `i`'s keyspace
+    /// slice while the slot was mid-restart.
+    pub fn count_redirect(&self, i: usize) {
+        self.slots[i].redirects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests redirected away from worker `i` so far.
+    pub fn redirects(&self, i: usize) -> u64 {
+        self.slots[i].redirects.load(Ordering::Relaxed)
+    }
+
+    /// Redirected requests across all workers.
+    pub fn total_redirects(&self) -> u64 {
+        (0..self.slots.len()).map(|i| self.redirects(i)).sum()
     }
 
     /// Restarts of worker `i` so far.

@@ -241,6 +241,7 @@ pub fn engine_stats_json(engine: &MmeeEngine) -> Json {
     ]);
     let stats = Json::obj(vec![
         ("backend", Json::str(engine.backend_name())),
+        ("isa", Json::str(crate::eval::simd::active_name())),
         ("plan_cache", plan),
         ("boundary_cache", boundary),
         ("boundary_builds", Json::num(engine.boundary_build_count() as f64)),
@@ -811,6 +812,9 @@ mod tests {
         let stats = Json::parse(lines[2]).unwrap();
         let s = stats.get("stats").unwrap();
         assert_eq!(s.get("backend").unwrap().as_str(), Some("native"));
+        // The dispatched lane ISA is one of the known tier names.
+        let isa = s.get("isa").unwrap().as_str().unwrap();
+        assert!(["scalar", "unroll", "avx2", "avx512", "neon"].contains(&isa), "{isa}");
         // The mapping request in between left one plan-cache miss.
         assert_eq!(s.get("plan_cache").unwrap().get("misses").unwrap().as_usize(), Some(1));
         assert!(s.get("boundary_builds").unwrap().as_usize().is_some());

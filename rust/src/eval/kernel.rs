@@ -13,9 +13,17 @@
 //! Four mechanisms carry the speedup (see README §Performance):
 //!
 //! * **lane-major evaluation** — the monomial product loops stream
-//!   contiguous feature columns ([`BoundaryMatrix::feature_col`]) with a
-//!   manually 4-lane-unrolled inner loop (`mul_lanes`), so the hot
-//!   path does not depend on the autovectorizer;
+//!   contiguous feature columns ([`BoundaryMatrix::feature_col`])
+//!   through runtime-dispatched SIMD lane kernels ([`super::simd`]:
+//!   AVX-512 / AVX2 / NEON when the host has them, the manual 4-lane
+//!   unroll as the portable fallback), so the hot path depends on
+//!   neither the autovectorizer nor compile-time target flags. The
+//!   per-pair gather is additionally software-pipelined: pair k+1's
+//!   feature-column products (with prefetch hints on pair k+2's
+//!   columns) are issued before pair k's feasibility epilogue and
+//!   bound folds run, overlapping gather cache misses with reduction
+//!   arithmetic (double-buffered staging keeps it allocation-free;
+//!   `MMEE_PIPELINE=0` restores the straight-line loop);
 //! * **2-D tiling** — [`TileConfig`] splits the surface along *both*
 //!   axes: tiling chunks bound the lane length, and candidate blocks
 //!   (sized so one tile's lane slices fit L2, `MMEE_CBLOCK` overrides)
@@ -54,7 +62,7 @@
 //! shapes, and pruning on/off.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use super::{Argmin3, Fronts, T_CHUNK};
@@ -136,9 +144,14 @@ pub struct EvalWorkspace {
     mark_epoch: u32,
     pair_list: Vec<u32>,
     grp_list: Vec<u32>,
-    /// Monomial-product and second-operand staging lanes.
+    /// Monomial-product and second-operand staging lanes, double-
+    /// buffered (bank 0 / bank 1) so the software-pipelined pair loop
+    /// can issue pair k+1's gather before pair k's epilogue has
+    /// consumed its staged BS² lanes.
     tmp: Vec<f64>,
     stage: Vec<f64>,
+    tmp2: Vec<f64>,
+    stage2: Vec<f64>,
 }
 
 /// Warmed workspaces returned by dead threads, recycled by later
@@ -228,7 +241,7 @@ impl EvalWorkspace {
         if self.grp_mark.len() < groups {
             self.grp_mark.resize(groups, 0);
         }
-        for buf in [&mut self.tmp, &mut self.stage] {
+        for buf in [&mut self.tmp, &mut self.stage, &mut self.tmp2, &mut self.stage2] {
             if buf.len() < lanes {
                 buf.resize(lanes, 0.0);
             }
@@ -297,51 +310,52 @@ impl EvalWorkspace {
         self.blk_pair_any_inf = false;
         self.blk_grp_min_e = f64::INFINITY;
         self.blk_grp_min_l = f64::INFINITY;
-        for &p in &pair_ids {
-            let p = p as usize;
-            let o = p * self.lanes;
-            self.load_pair(&cq.pairs[p], b, hw, t0, t1, o);
-            if bounds == BoundKind::None {
-                continue;
-            }
-            let (mut min_e, mut min_l, mut any_inf) = (f64::INFINITY, f64::INFINITY, false);
-            for i in o..o + nt {
-                let (e, l) = (self.pair_e[i], self.pair_l[i]);
-                if e.is_finite() {
-                    min_e = min_e.min(e);
-                    min_l = min_l.min(l);
-                } else {
-                    any_inf = true;
+        let np = pair_ids.len();
+        if pipelined() && np > 1 {
+            // Software pipeline: pair j's feature-column gather (with
+            // prefetch hints on pair j+1's columns) is issued before
+            // pair j-1's feasibility epilogue and bound folds run, so
+            // the gather's cache misses overlap the fold arithmetic.
+            // Staging is double-buffered (bank = j % 2) because the
+            // deferred epilogue still reads its pair's staged BS²
+            // lanes. Every per-lane operation is unchanged — only the
+            // inter-pair schedule moves — so results are bit-identical
+            // to the straight-line loop (`MMEE_PIPELINE=0` restores it;
+            // unit-tested equal).
+            for j in 0..np {
+                let p = pair_ids[j] as usize;
+                if j + 1 < np {
+                    prefetch_pair_cols(&cq.pairs[pair_ids[j + 1] as usize], b, t0, t1);
+                }
+                self.gather_pair(&cq.pairs[p], b, t0, t1, p * self.lanes, j % 2);
+                if j > 0 {
+                    let prev = pair_ids[j - 1] as usize;
+                    self.finish_pair(hw, prev * self.lanes, nt, (j - 1) % 2);
+                    self.fold_pair_bounds(prev, nt, bounds);
                 }
             }
-            self.pair_min_e[p] = min_e;
-            self.pair_min_l[p] = min_l;
-            self.pair_has_infeasible[p] = any_inf;
-            self.blk_pair_min_e = self.blk_pair_min_e.min(min_e);
-            self.blk_pair_min_l = self.blk_pair_min_l.min(min_l);
-            self.blk_pair_any_inf |= any_inf;
-            if bounds == BoundKind::Fronts {
-                let (mut min_bs, mut min_da) = (f64::INFINITY, f64::INFINITY);
-                for i in o..o + nt {
-                    min_bs = min_bs.min(self.pair_bs[i]);
-                    min_da = min_da.min(self.pair_da[i]);
-                }
-                self.pair_min_bs[p] = min_bs;
-                self.pair_min_da[p] = min_da;
+            let last = pair_ids[np - 1] as usize;
+            self.finish_pair(hw, last * self.lanes, nt, (np - 1) % 2);
+            self.fold_pair_bounds(last, nt, bounds);
+        } else {
+            for &p in &pair_ids {
+                let p = p as usize;
+                self.load_pair(&cq.pairs[p], b, hw, t0, t1, p * self.lanes);
+                self.fold_pair_bounds(p, nt, bounds);
             }
         }
-        for &g in &grp_ids {
+        let ops = super::simd::ops();
+        for (j, &g) in grp_ids.iter().enumerate() {
+            if j + 1 < grp_ids.len() {
+                prefetch_group_cols(&cq.groups[grp_ids[j + 1] as usize], b, t0, t1);
+            }
             let g = g as usize;
             let o = g * self.lanes;
             self.load_group(&cq.groups[g], b, hw, t0, t1, o);
             if bounds == BoundKind::None {
                 continue;
             }
-            let (mut min_e, mut min_l) = (f64::INFINITY, f64::INFINITY);
-            for i in o..o + nt {
-                min_e = min_e.min(self.grp_e[i]);
-                min_l = min_l.min(self.grp_l[i]);
-            }
+            let (min_e, min_l) = (ops.min2)(&self.grp_e[o..o + nt], &self.grp_l[o..o + nt]);
             self.grp_min_e[g] = min_e;
             self.grp_min_l[g] = min_l;
             self.blk_grp_min_e = self.blk_grp_min_e.min(min_e);
@@ -351,10 +365,39 @@ impl EvalWorkspace {
         self.grp_list = grp_ids;
     }
 
+    /// Fold one already-loaded pair's chunk minima into the per-pair
+    /// and whole-block pruning bounds (no-op with bounds off). The
+    /// minima are exact folds — `min` introduces no rounding — so the
+    /// dispatched vector fold matches the scalar reference exactly.
+    fn fold_pair_bounds(&mut self, p: usize, nt: usize, bounds: BoundKind) {
+        if bounds == BoundKind::None {
+            return;
+        }
+        let o = p * self.lanes;
+        let ops = super::simd::ops();
+        let (min_e, min_l, any_inf) =
+            (ops.min_e_l)(&self.pair_e[o..o + nt], &self.pair_l[o..o + nt]);
+        self.pair_min_e[p] = min_e;
+        self.pair_min_l[p] = min_l;
+        self.pair_has_infeasible[p] = any_inf;
+        self.blk_pair_min_e = self.blk_pair_min_e.min(min_e);
+        self.blk_pair_min_l = self.blk_pair_min_l.min(min_l);
+        self.blk_pair_any_inf |= any_inf;
+        if bounds == BoundKind::Fronts {
+            let (min_bs, min_da) =
+                (ops.min2)(&self.pair_bs[o..o + nt], &self.pair_da[o..o + nt]);
+            self.pair_min_bs[p] = min_bs;
+            self.pair_min_da[p] = min_da;
+        }
+    }
+
     /// One pair's BS¹/BS²/DA monomial sums over the chunk, then the
     /// premultiplied energy / DRAM-latency lanes with the feasibility
     /// test folded in (the same expressions, in the same floating-point
-    /// order, as the scalar reference).
+    /// order, as the scalar reference). Split into [`Self::gather_pair`]
+    /// (the feature-column gather) and [`Self::finish_pair`] (the
+    /// epilogue reading the staged BS² lanes) so the pipelined pair
+    /// loop can interleave them across pairs.
     fn load_pair(
         &mut self,
         cp: &CompiledPair,
@@ -365,11 +408,41 @@ impl EvalWorkspace {
         o: usize,
     ) {
         let nt = t1 - t0;
-        accumulate_lanes(&cp.bs1, b, t0, t1, &mut self.tmp, &mut self.pair_bs[o..o + nt]);
-        accumulate_lanes(&cp.bs2, b, t0, t1, &mut self.tmp, &mut self.stage[..nt]);
-        accumulate_lanes(&cp.da, b, t0, t1, &mut self.tmp, &mut self.pair_da[o..o + nt]);
+        self.gather_pair(cp, b, t0, t1, o, 0);
+        self.finish_pair(hw, o, nt, 0);
+    }
+
+    /// Gather phase: the pair's three monomial sums over the chunk.
+    /// BS¹/DA land in their per-pair lane slices; BS² stays staged in
+    /// bank `bank` (0 → `tmp`/`stage`, 1 → `tmp2`/`stage2`) until
+    /// [`Self::finish_pair`] consumes it from the same bank.
+    fn gather_pair(
+        &mut self,
+        cp: &CompiledPair,
+        b: &BoundaryMatrix,
+        t0: usize,
+        t1: usize,
+        o: usize,
+        bank: usize,
+    ) {
+        let nt = t1 - t0;
+        let (tmp, stage) = if bank == 0 {
+            (&mut self.tmp, &mut self.stage)
+        } else {
+            (&mut self.tmp2, &mut self.stage2)
+        };
+        accumulate_lanes(&cp.bs1, b, t0, t1, tmp, &mut self.pair_bs[o..o + nt]);
+        accumulate_lanes(&cp.bs2, b, t0, t1, tmp, &mut stage[..nt]);
+        accumulate_lanes(&cp.da, b, t0, t1, tmp, &mut self.pair_da[o..o + nt]);
+    }
+
+    /// Epilogue phase: `bs = max(bs1, bs2)` from bank `bank`'s staged
+    /// lanes, then the energy / DRAM-latency lanes with the feasibility
+    /// test folded in.
+    fn finish_pair(&mut self, hw: &HwVector, o: usize, nt: usize, bank: usize) {
+        let stage = if bank == 0 { &self.stage } else { &self.stage2 };
         let bs = &mut self.pair_bs[o..o + nt];
-        for (v, &bs2) in bs.iter_mut().zip(self.stage[..nt].iter()) {
+        for (v, &bs2) in bs.iter_mut().zip(stage[..nt].iter()) {
             *v = v.max(bs2);
         }
         let (e, l) = (&mut self.pair_e[o..o + nt], &mut self.pair_l[o..o + nt]);
@@ -448,57 +521,88 @@ fn accumulate_lanes(
     }
 }
 
-/// `tmp[j] *= col[j]` — the kernel's innermost loop. Manually 4-lane
-/// unrolled so the hot path does not depend on the autovectorizer
-/// across toolchains; the `scalar-lanes` cargo feature restores the
-/// plain loop. Both are elementwise in the same per-lane order, so
-/// results are bit-identical (unit-tested against each other).
+/// `tmp[j] *= col[j]` — the kernel's innermost loop, dispatched to the
+/// active ISA tier ([`super::simd`]: AVX-512 / AVX2 / NEON when
+/// detected, the manual 4-lane unroll as the portable fallback). Every
+/// tier is elementwise in the same per-lane order, so results are
+/// bit-identical across tiers (property-tested in
+/// `tests/kernel_equivalence.rs`). The `scalar-lanes` cargo feature
+/// compiles the dispatch out and restores the plain loop.
 #[inline]
 fn mul_lanes(tmp: &mut [f64], col: &[f64]) {
     debug_assert_eq!(tmp.len(), col.len());
     #[cfg(not(feature = "scalar-lanes"))]
-    {
-        let n4 = tmp.len() - tmp.len() % 4;
-        let (t_head, t_tail) = tmp.split_at_mut(n4);
-        let (c_head, c_tail) = col.split_at(n4);
-        for (t4, c4) in t_head.chunks_exact_mut(4).zip(c_head.chunks_exact(4)) {
-            t4[0] *= c4[0];
-            t4[1] *= c4[1];
-            t4[2] *= c4[2];
-            t4[3] *= c4[3];
-        }
-        for (t, &c) in t_tail.iter_mut().zip(c_tail) {
-            *t *= c;
-        }
-    }
+    (super::simd::ops().mul)(tmp, col);
     #[cfg(feature = "scalar-lanes")]
     for (t, &c) in tmp.iter_mut().zip(col) {
         *t *= c;
     }
 }
 
-/// `out[j] += tmp[j]` — same unrolling contract as [`mul_lanes`].
+/// `out[j] += tmp[j]` — same dispatch contract as [`mul_lanes`].
 #[inline]
 fn add_lanes(out: &mut [f64], tmp: &[f64]) {
     debug_assert_eq!(out.len(), tmp.len());
     #[cfg(not(feature = "scalar-lanes"))]
-    {
-        let n4 = out.len() - out.len() % 4;
-        let (o_head, o_tail) = out.split_at_mut(n4);
-        let (t_head, t_tail) = tmp.split_at(n4);
-        for (o4, t4) in o_head.chunks_exact_mut(4).zip(t_head.chunks_exact(4)) {
-            o4[0] += t4[0];
-            o4[1] += t4[1];
-            o4[2] += t4[2];
-            o4[3] += t4[3];
-        }
-        for (o, &t) in o_tail.iter_mut().zip(t_tail) {
-            *o += t;
-        }
-    }
+    (super::simd::ops().add)(out, tmp);
     #[cfg(feature = "scalar-lanes")]
     for (o, &t) in out.iter_mut().zip(tmp) {
         *o += t;
+    }
+}
+
+/// Software-pipeline toggle for the pair loop: `0` = unset (follow the
+/// `MMEE_PIPELINE` env default, on unless set to `0`), `1` = forced
+/// off, `2` = forced on.
+static PIPELINE_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Force the software-pipelined pair loop on or off in-process (`None`
+/// restores the env default) — the bench's pipelined-vs-straight-line
+/// rows and the equivalence tests flip this. Safe to flip at any time:
+/// both schedules run the identical per-lane operations, so results
+/// never change.
+pub fn set_pipelined(on: Option<bool>) {
+    let mode = match on {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    PIPELINE_MODE.store(mode, Ordering::Relaxed);
+}
+
+fn pipelined() -> bool {
+    match PIPELINE_MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            static ENV: OnceLock<bool> = OnceLock::new();
+            *ENV.get_or_init(|| std::env::var("MMEE_PIPELINE").map_or(true, |v| v != "0"))
+        }
+    }
+}
+
+/// Prefetch hints for the next pair's gather: touch the head of the
+/// first feature columns its monomial products will stream, so the
+/// lines are (likely) in cache when the pipelined loop reaches them.
+/// Hints only — no effect on results.
+fn prefetch_pair_cols(cp: &CompiledPair, b: &BoundaryMatrix, t0: usize, t1: usize) {
+    for ms in [&cp.bs1, &cp.bs2, &cp.da] {
+        for m in ms.iter().take(2) {
+            if m.n > 0 {
+                super::simd::prefetch(b.feature_col(m.idx[0] as usize, t0, t1).as_ptr());
+            }
+        }
+    }
+}
+
+/// [`prefetch_pair_cols`] for a group's five monomial sums.
+fn prefetch_group_cols(cg: &CompiledGroup, b: &BoundaryMatrix, t0: usize, t1: usize) {
+    for ms in [&cg.br, &cg.mac, &cg.smx, &cg.cl1, &cg.cl2] {
+        if let Some(m) = ms.first() {
+            if m.n > 0 {
+                super::simd::prefetch(b.feature_col(m.idx[0] as usize, t0, t1).as_ptr());
+            }
+        }
     }
 }
 
@@ -780,28 +884,21 @@ pub fn chunk_argmin3_tied(
                 continue;
             }
         }
-        let pe = &ws.pair_e[p * lanes..p * lanes + nt];
-        let pl = &ws.pair_l[p * lanes..p * lanes + nt];
-        let ge = &ws.grp_e[g * lanes..g * lanes + nt];
-        let gl = &ws.grp_l[g * lanes..g * lanes + nt];
-        for i in 0..nt {
-            // Quantize through f32 exactly where the reference stores
-            // its surfaces, so scores (and ties) are bit-identical.
-            let (e, l) = if pe[i].is_finite() {
-                (((pe[i] + ge[i]) as f32) as f64, (pl[i].max(gl[i]) as f32) as f64)
-            } else {
-                (SENTINEL32, SENTINEL32)
-            };
-            let t = t0 + i;
-            let scores = [(e, l), (l, e), (e * l, e)];
-            for k in 0..3 {
-                let (s, sec) = scores[k];
-                if s < best[k].0 || (s == best[k].0 && sec < tie[k]) {
-                    best[k] = (s, c, t);
-                    tie[k] = sec;
-                }
-            }
-        }
+        // Dispatched score fold: the vertical sum/max runs on the
+        // active ISA tier; the f32 quantization (exactly where the
+        // reference stores its surfaces) and the lexicographic
+        // tie-break fold run per lane in serial order on every tier,
+        // so scores, winners, and ties are bit-identical.
+        (super::simd::ops().fold_argmin)(
+            &ws.pair_e[p * lanes..p * lanes + nt],
+            &ws.pair_l[p * lanes..p * lanes + nt],
+            &ws.grp_e[g * lanes..g * lanes + nt],
+            &ws.grp_l[g * lanes..g * lanes + nt],
+            t0,
+            c,
+            best,
+            tie,
+        );
     }
     out
 }
@@ -872,18 +969,21 @@ pub fn chunk_fronts_pruned(
                 continue;
             }
         }
-        let pe = &ws.pair_e[p * lanes..p * lanes + nt];
-        let pl = &ws.pair_l[p * lanes..p * lanes + nt];
+        // Dispatched quantization into the staging lanes (same
+        // vertical sum/max + serial f32 quantize as the argmin fold);
+        // the front insertions below consume them in lane order.
+        (super::simd::ops().quantize_el)(
+            &ws.pair_e[p * lanes..p * lanes + nt],
+            &ws.pair_l[p * lanes..p * lanes + nt],
+            &ws.grp_e[g * lanes..g * lanes + nt],
+            &ws.grp_l[g * lanes..g * lanes + nt],
+            &mut ws.tmp[..nt],
+            &mut ws.stage[..nt],
+        );
         let pda = &ws.pair_da[p * lanes..p * lanes + nt];
         let pbs = &ws.pair_bs[p * lanes..p * lanes + nt];
-        let ge = &ws.grp_e[g * lanes..g * lanes + nt];
-        let gl = &ws.grp_l[g * lanes..g * lanes + nt];
         for i in 0..nt {
-            let (e, l) = if pe[i].is_finite() {
-                (((pe[i] + ge[i]) as f32) as f64, (pl[i].max(gl[i]) as f32) as f64)
-            } else {
-                (SENTINEL32, SENTINEL32)
-            };
+            let (e, l) = (ws.tmp[i], ws.stage[i]);
             let t = t0 + i;
             if e < 1e29 {
                 el.insert(ParetoPoint { x: e, y: l, candidate: c, tiling: t });
@@ -1430,7 +1530,7 @@ mod tests {
     }
 
     #[test]
-    fn unrolled_lane_helpers_match_plain_loops() {
+    fn dispatched_lane_helpers_match_plain_loops() {
         let mut rng = crate::util::rng::Rng::new(0xAB5E);
         for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 63, 64, 65] {
             let a: Vec<f64> = (0..n).map(|_| rng.f64() * 1e3 - 500.0).collect();
@@ -1443,6 +1543,29 @@ mod tests {
             add_lanes(&mut s1, &c);
             let s2: Vec<f64> = a.iter().zip(&c).map(|(x, y)| x + y).collect();
             assert_eq!(s1, s2, "add_lanes diverged at n={n}");
+        }
+    }
+
+    /// The software-pipelined pair loop reorders only the inter-pair
+    /// schedule — winners, ties, and both fronts must be bit-identical
+    /// to the straight-line loop, pruning on or off. (Safe to flip the
+    /// global toggle under the parallel test runner: both schedules
+    /// produce identical results, so concurrent tests cannot observe
+    /// the switch.)
+    #[test]
+    fn pipelined_pair_loop_is_bit_identical_to_straight_line() {
+        let (q, b, hw, mult) = surface(45, 150);
+        for prune in [false, true] {
+            set_pipelined(Some(false));
+            let best_ref = fused_argmin3(&q, &b, &hw, &mult, prune);
+            let (el_ref, bsda_ref) = fused_fronts(&q, &b, &hw, &mult, prune);
+            set_pipelined(Some(true));
+            let best = fused_argmin3(&q, &b, &hw, &mult, prune);
+            let (el, bsda) = fused_fronts(&q, &b, &hw, &mult, prune);
+            set_pipelined(None);
+            assert_eq!(best, best_ref, "prune={prune}");
+            assert_eq!(el.points(), el_ref.points(), "prune={prune}");
+            assert_eq!(bsda.points(), bsda_ref.points(), "prune={prune}");
         }
     }
 }

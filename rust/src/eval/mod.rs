@@ -25,6 +25,7 @@ pub mod native;
 pub mod branchy;
 pub mod kernel;
 pub mod router;
+pub mod simd;
 pub mod xla;
 
 pub use router::Router;
@@ -245,6 +246,30 @@ pub trait EvalBackend {
         Ok(self.fronts(q, b, hw, mult))
     }
 
+    /// Anytime variant of [`EvalBackend::try_fronts_seeded`] — the
+    /// fronts counterpart of
+    /// [`EvalBackend::try_argmin3_seeded_cancellable`]: probe `cancel`
+    /// cooperatively and, once it trips, return the fronts achieved
+    /// over the evaluated subset (every point a real in-surface
+    /// mapping). The `bool` is `partial`. `None` — or a never-tripped
+    /// token — must be bit-identical to the uncancellable path;
+    /// backends without cooperative checks run to completion and report
+    /// `partial: false`.
+    #[allow(clippy::too_many_arguments)]
+    fn try_fronts_seeded_cancellable(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed_el: &[(f64, f64)],
+        seed_bsda: &[(f64, f64)],
+        cancel: Option<&CancelToken>,
+    ) -> Result<(Fronts, bool), MmeeError> {
+        let _ = cancel;
+        Ok((self.try_fronts_seeded(q, b, hw, mult, seed_el, seed_bsda)?, false))
+    }
+
     /// Fused streaming argmin: consume evaluation lanes directly and
     /// never materialize the `nc × nt` [`Block`]. The default falls
     /// back to the materializing reference; the native backend
@@ -368,6 +393,19 @@ impl<B: EvalBackend + ?Sized> EvalBackend for Box<B> {
         seed_bsda: &[(f64, f64)],
     ) -> Result<Fronts, MmeeError> {
         (**self).try_fronts_seeded(q, b, hw, mult, seed_el, seed_bsda)
+    }
+
+    fn try_fronts_seeded_cancellable(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed_el: &[(f64, f64)],
+        seed_bsda: &[(f64, f64)],
+        cancel: Option<&CancelToken>,
+    ) -> Result<(Fronts, bool), MmeeError> {
+        (**self).try_fronts_seeded_cancellable(q, b, hw, mult, seed_el, seed_bsda, cancel)
     }
 
     fn reduce_argmin3(

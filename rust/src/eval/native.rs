@@ -126,6 +126,26 @@ impl EvalBackend for NativeBackend {
         ))
     }
 
+    /// Anytime fused fronts: cooperative cancellation probed once per
+    /// tile; on trip the pass returns the achieved front state over the
+    /// tiles that completed (see
+    /// [`super::kernel::fused_fronts_seeded_cancellable`]).
+    fn try_fronts_seeded_cancellable(
+        &self,
+        q: &QueryMatrix,
+        b: &BoundaryMatrix,
+        hw: &HwVector,
+        mult: &Multipliers,
+        seed_el: &[(f64, f64)],
+        seed_bsda: &[(f64, f64)],
+        cancel: Option<&crate::coordinator::CancelToken>,
+    ) -> Result<(super::Fronts, bool), crate::error::MmeeError> {
+        let tiles = super::kernel::TileConfig::serving(q);
+        Ok(super::kernel::fused_fronts_seeded_cancellable(
+            q, b, hw, mult, true, tiles, seed_el, seed_bsda, cancel,
+        ))
+    }
+
     /// Fused lane-kernel Pareto fronts (no materialized block), with
     /// dominance pruning against the shared achieved-point snapshot
     /// (identical results to the unpruned path, property-tested).

@@ -1,0 +1,727 @@
+//! Runtime ISA dispatch for the kernel hot path.
+//!
+//! The fused lane kernel ([`super::kernel`]) spends its time in a small
+//! set of flat loops: the elementwise monomial product/accumulate pair
+//! (`mul_lanes` / `add_lanes`), the per-pair chunk-minimum folds that
+//! feed bound pruning, and the per-candidate score fold of
+//! `chunk_argmin3_tied` / `chunk_fronts_pruned`. This module provides
+//! one implementation of those loops per instruction set —
+//! AVX2 and AVX-512 on x86_64, NEON on aarch64, plus the portable
+//! 4-lane unroll and a plain scalar reference — selected **at runtime**
+//! via `is_x86_feature_detected!` / `is_aarch64_feature_detected!` and
+//! cached in a [`OnceLock`] function-pointer table, so one binary runs
+//! the widest vectors the host actually has.
+//!
+//! ## Exactness contract
+//!
+//! Every table is **bit-identical** to the scalar reference:
+//!
+//! * the elementwise kernels (`mul`, `add`, `sum_max`) perform exactly
+//!   one IEEE-754 operation per lane in the same per-lane order — wider
+//!   vectors change *which lanes share an instruction*, never the
+//!   arithmetic;
+//! * **no FMA contraction**: the value path multiplies and adds in
+//!   separate instructions even on FMA-capable hosts, because a fused
+//!   `a*b+c` rounds once where the reference rounds twice;
+//! * the chunk minima are exact folds (`min` introduces no rounding),
+//!   and infeasibility (`+inf` lanes) is detected by comparison, not
+//!   arithmetic;
+//! * the argmin / fronts folds vectorize only the *vertical* arithmetic
+//!   (sum, max); the `f32` quantization and the lexicographic
+//!   tie-break fold run per lane **in serial lane order**, so the
+//!   sequence of comparisons — and therefore every tie-break — is
+//!   identical to the scalar loop.
+//!
+//! `tests/kernel_equivalence.rs` enforces this with an ISA-matrix
+//! property: every table available on the host must reproduce the
+//! scalar oracle byte-for-byte, tail lengths `nt % 8 ∈ {0..7}`
+//! included.
+//!
+//! ## Forcing a path
+//!
+//! `MMEE_ISA=scalar|unroll|avx2|avx512|neon` pins the dispatch at
+//! process start (unavailable values fall back to the detected best,
+//! with a note on stderr). [`force`] re-pins it in-process for tests
+//! and benches that sweep several ISAs in one run; forcing an ISA the
+//! host does not support is rejected. The `scalar-lanes` cargo feature
+//! removes the dispatch at compile time: the kernel's lane helpers
+//! become plain loops and [`available`] reports only `scalar`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::Argmin3;
+use crate::model::Metrics;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// The infeasible sentinel exactly as the reference path reports it
+/// (stored as `f32`, read back widened) — kept in sync with the
+/// kernel's copy by the shared `Metrics` constant.
+const SENTINEL32: f64 = Metrics::INFEASIBLE_SENTINEL as f32 as f64;
+
+/// One dispatchable instruction-set tier, in detection-preference
+/// order: the widest available wins ([`Isa::Avx512`] > [`Isa::Avx2`] >
+/// [`Isa::Unroll`] on x86_64; [`Isa::Neon`] > [`Isa::Unroll`] on
+/// aarch64). `Scalar` and `Unroll` exist everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Isa {
+    /// Plain per-lane loops — the reference every other tier must match.
+    Scalar = 0,
+    /// The portable manual 4-lane unroll (the pre-dispatch behavior).
+    Unroll = 1,
+    /// 256-bit `std::arch::x86_64` path (4 × f64). FMA is detected with
+    /// this tier but deliberately unused in the value path.
+    Avx2 = 2,
+    /// 512-bit `avx512f` path (8 × f64).
+    Avx512 = 3,
+    /// 128-bit aarch64 NEON path (2 × f64).
+    Neon = 4,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Unroll => "unroll",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Case-insensitive parse of an `MMEE_ISA` value.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "unroll" => Some(Isa::Unroll),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Isa {
+        match v {
+            0 => Isa::Scalar,
+            1 => Isa::Unroll,
+            2 => Isa::Avx2,
+            3 => Isa::Avx512,
+            _ => Isa::Neon,
+        }
+    }
+}
+
+/// The function-pointer table one dispatch decision selects. All
+/// entries over the same slices produce bit-identical results across
+/// tables (see the module docs for the contract).
+pub(crate) struct LaneOps {
+    pub isa: Isa,
+    /// `tmp[j] *= col[j]` — the monomial-product inner loop.
+    pub mul: fn(&mut [f64], &[f64]),
+    /// `out[j] += tmp[j]` — the monomial accumulate.
+    pub add: fn(&mut [f64], &[f64]),
+    /// `(min(a), min(b))` over all lanes (exact fold, no rounding).
+    pub min2: fn(&[f64], &[f64]) -> (f64, f64),
+    /// `(min(e), min(l), any(e == +inf))` — the per-pair bound fold.
+    /// Infeasible lanes hold `+inf` in *both* slices, so the
+    /// unconditional minima equal the reference's feasible-only minima.
+    pub min_e_l: fn(&[f64], &[f64]) -> (f64, f64, bool),
+    /// The per-candidate argmin fold of `chunk_argmin3_tied`:
+    /// `(pe, pl, ge, gl, t0, c, best, tie)` — quantized scores folded
+    /// into `best`/`tie` in serial lane order.
+    pub fold_argmin: fn(&[f64], &[f64], &[f64], &[f64], usize, usize, &mut Argmin3, &mut [f64; 3]),
+    /// The fronts counterpart: quantized `(e, l)` per lane (sentinel
+    /// where infeasible) written to the two output slices.
+    pub quantize_el: fn(&[f64], &[f64], &[f64], &[f64], &mut [f64], &mut [f64]),
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference + portable unroll
+// ---------------------------------------------------------------------
+
+fn mul_scalar(tmp: &mut [f64], col: &[f64]) {
+    for (t, &c) in tmp.iter_mut().zip(col) {
+        *t *= c;
+    }
+}
+
+fn add_scalar(out: &mut [f64], tmp: &[f64]) {
+    for (o, &t) in out.iter_mut().zip(tmp) {
+        *o += t;
+    }
+}
+
+/// Manual 4-lane unroll of [`mul_scalar`] — elementwise in the same
+/// per-lane order, so results are bit-identical (unit-tested in the
+/// kernel module).
+fn mul_unroll(tmp: &mut [f64], col: &[f64]) {
+    let n4 = tmp.len() - tmp.len() % 4;
+    let (t_head, t_tail) = tmp.split_at_mut(n4);
+    let (c_head, c_tail) = col.split_at(n4);
+    for (t4, c4) in t_head.chunks_exact_mut(4).zip(c_head.chunks_exact(4)) {
+        t4[0] *= c4[0];
+        t4[1] *= c4[1];
+        t4[2] *= c4[2];
+        t4[3] *= c4[3];
+    }
+    for (t, &c) in t_tail.iter_mut().zip(c_tail) {
+        *t *= c;
+    }
+}
+
+/// Manual 4-lane unroll of [`add_scalar`].
+fn add_unroll(out: &mut [f64], tmp: &[f64]) {
+    let n4 = out.len() - out.len() % 4;
+    let (o_head, o_tail) = out.split_at_mut(n4);
+    let (t_head, t_tail) = tmp.split_at(n4);
+    for (o4, t4) in o_head.chunks_exact_mut(4).zip(t_head.chunks_exact(4)) {
+        o4[0] += t4[0];
+        o4[1] += t4[1];
+        o4[2] += t4[2];
+        o4[3] += t4[3];
+    }
+    for (o, &t) in o_tail.iter_mut().zip(t_tail) {
+        *o += t;
+    }
+}
+
+fn min2_scalar(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let (mut ma, mut mb) = (f64::INFINITY, f64::INFINITY);
+    for (&av, &bv) in a.iter().zip(b) {
+        ma = ma.min(av);
+        mb = mb.min(bv);
+    }
+    (ma, mb)
+}
+
+fn min_e_l_scalar(e: &[f64], l: &[f64]) -> (f64, f64, bool) {
+    let (mut min_e, mut min_l, mut any_inf) = (f64::INFINITY, f64::INFINITY, false);
+    for (&ev, &lv) in e.iter().zip(l) {
+        if ev.is_finite() {
+            min_e = min_e.min(ev);
+            min_l = min_l.min(lv);
+        } else {
+            any_inf = true;
+        }
+    }
+    (min_e, min_l, any_inf)
+}
+
+/// The scalar argmin fold — one candidate's lanes folded into the
+/// running best/tie in visit order. This is *the* reference loop every
+/// vector tier must reproduce: quantize through `f32` exactly where the
+/// materializing path stores its surfaces, then
+/// `s < best || (s == best && sec < tie)`.
+#[allow(clippy::too_many_arguments)]
+fn fold_argmin_scalar(
+    pe: &[f64],
+    pl: &[f64],
+    ge: &[f64],
+    gl: &[f64],
+    t0: usize,
+    c: usize,
+    best: &mut Argmin3,
+    tie: &mut [f64; 3],
+) {
+    for i in 0..pe.len() {
+        let (e, l) = if pe[i].is_finite() {
+            (((pe[i] + ge[i]) as f32) as f64, (pl[i].max(gl[i]) as f32) as f64)
+        } else {
+            (SENTINEL32, SENTINEL32)
+        };
+        let t = t0 + i;
+        let scores = [(e, l), (l, e), (e * l, e)];
+        for k in 0..3 {
+            let (s, sec) = scores[k];
+            if s < best[k].0 || (s == best[k].0 && sec < tie[k]) {
+                best[k] = (s, c, t);
+                tie[k] = sec;
+            }
+        }
+    }
+}
+
+fn quantize_el_scalar(
+    pe: &[f64],
+    pl: &[f64],
+    ge: &[f64],
+    gl: &[f64],
+    e_out: &mut [f64],
+    l_out: &mut [f64],
+) {
+    for i in 0..pe.len() {
+        if pe[i].is_finite() {
+            e_out[i] = ((pe[i] + ge[i]) as f32) as f64;
+            l_out[i] = (pl[i].max(gl[i]) as f32) as f64;
+        } else {
+            e_out[i] = SENTINEL32;
+            l_out[i] = SENTINEL32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic epilogues shared by the vector tiers
+// ---------------------------------------------------------------------
+
+/// One vectorizable elementwise stage: `e[j] = pe[j] + ge[j]`,
+/// `l[j] = max(pl[j], gl[j])`. Each tier provides one of these; the
+/// quantization + fold epilogue below is shared and strictly serial.
+type SumMax = fn(&[f64], &[f64], &[f64], &[f64], &mut [f64], &mut [f64]);
+
+fn sum_max_scalar(
+    pe: &[f64],
+    ge: &[f64],
+    pl: &[f64],
+    gl: &[f64],
+    e_out: &mut [f64],
+    l_out: &mut [f64],
+) {
+    for i in 0..pe.len() {
+        e_out[i] = pe[i] + ge[i];
+        l_out[i] = pl[i].max(gl[i]);
+    }
+}
+
+/// Argmin fold built from a vectorized [`SumMax`]: the vertical sum/max
+/// runs `BLK` lanes at a time through the tier's vector kernel, then
+/// the `f32` quantization, infeasibility branch, and lexicographic
+/// tie-break fold run per lane **in serial order** — the identical
+/// comparison sequence to [`fold_argmin_scalar`], hence bit-identical
+/// winners and ties.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fold_argmin_with(
+    sum_max: SumMax,
+    pe: &[f64],
+    pl: &[f64],
+    ge: &[f64],
+    gl: &[f64],
+    t0: usize,
+    c: usize,
+    best: &mut Argmin3,
+    tie: &mut [f64; 3],
+) {
+    const BLK: usize = 64;
+    let nt = pe.len();
+    let (mut eb, mut lb) = ([0.0f64; BLK], [0.0f64; BLK]);
+    let mut i0 = 0;
+    while i0 < nt {
+        let n = BLK.min(nt - i0);
+        sum_max(
+            &pe[i0..i0 + n],
+            &ge[i0..i0 + n],
+            &pl[i0..i0 + n],
+            &gl[i0..i0 + n],
+            &mut eb[..n],
+            &mut lb[..n],
+        );
+        for j in 0..n {
+            let i = i0 + j;
+            let (e, l) = if pe[i].is_finite() {
+                ((eb[j] as f32) as f64, (lb[j] as f32) as f64)
+            } else {
+                (SENTINEL32, SENTINEL32)
+            };
+            let t = t0 + i;
+            let scores = [(e, l), (l, e), (e * l, e)];
+            for k in 0..3 {
+                let (s, sec) = scores[k];
+                if s < best[k].0 || (s == best[k].0 && sec < tie[k]) {
+                    best[k] = (s, c, t);
+                    tie[k] = sec;
+                }
+            }
+        }
+        i0 += n;
+    }
+}
+
+/// Fronts quantization built from a vectorized [`SumMax`]: raw sums
+/// land in the output slices, then the quantization/sentinel pass runs
+/// per lane in place.
+#[inline]
+fn quantize_el_with(
+    sum_max: SumMax,
+    pe: &[f64],
+    pl: &[f64],
+    ge: &[f64],
+    gl: &[f64],
+    e_out: &mut [f64],
+    l_out: &mut [f64],
+) {
+    sum_max(pe, ge, pl, gl, e_out, l_out);
+    for i in 0..pe.len() {
+        if pe[i].is_finite() {
+            e_out[i] = (e_out[i] as f32) as f64;
+            l_out[i] = (l_out[i] as f32) as f64;
+        } else {
+            e_out[i] = SENTINEL32;
+            l_out[i] = SENTINEL32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------
+
+static SCALAR: LaneOps = LaneOps {
+    isa: Isa::Scalar,
+    mul: mul_scalar,
+    add: add_scalar,
+    min2: min2_scalar,
+    min_e_l: min_e_l_scalar,
+    fold_argmin: fold_argmin_scalar,
+    quantize_el: quantize_el_scalar,
+};
+
+/// The portable tier: only the two elementwise helpers are unrolled
+/// (the pre-dispatch kernel behavior); the folds stay scalar.
+static UNROLL: LaneOps = LaneOps {
+    isa: Isa::Unroll,
+    mul: mul_unroll,
+    add: add_unroll,
+    min2: min2_scalar,
+    min_e_l: min_e_l_scalar,
+    fold_argmin: fold_argmin_scalar,
+    quantize_el: quantize_el_scalar,
+};
+
+// Safety of every closure below: the table is only reachable through
+// `table(isa)` after `available()` confirmed the host supports the
+// tier (dispatch detection, `MMEE_ISA` validation, and `force` all
+// check), so the `#[target_feature]` kernels run on hardware that has
+// the feature.
+#[cfg(target_arch = "x86_64")]
+static AVX2: LaneOps = LaneOps {
+    isa: Isa::Avx2,
+    mul: |t, c| unsafe { x86::mul_avx2(t, c) },
+    add: |o, t| unsafe { x86::add_avx2(o, t) },
+    min2: |a, b| unsafe { x86::min2_avx2(a, b) },
+    min_e_l: |e, l| unsafe { x86::min_e_l_avx2(e, l) },
+    fold_argmin: |pe, pl, ge, gl, t0, c, best, tie| {
+        fold_argmin_with(|a, b, c2, d, e, f| unsafe { x86::sum_max_avx2(a, b, c2, d, e, f) },
+            pe, pl, ge, gl, t0, c, best, tie)
+    },
+    quantize_el: |pe, pl, ge, gl, eo, lo| {
+        quantize_el_with(|a, b, c2, d, e, f| unsafe { x86::sum_max_avx2(a, b, c2, d, e, f) },
+            pe, pl, ge, gl, eo, lo)
+    },
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX512: LaneOps = LaneOps {
+    isa: Isa::Avx512,
+    mul: |t, c| unsafe { x86::mul_avx512(t, c) },
+    add: |o, t| unsafe { x86::add_avx512(o, t) },
+    min2: |a, b| unsafe { x86::min2_avx512(a, b) },
+    min_e_l: |e, l| unsafe { x86::min_e_l_avx512(e, l) },
+    fold_argmin: |pe, pl, ge, gl, t0, c, best, tie| {
+        fold_argmin_with(|a, b, c2, d, e, f| unsafe { x86::sum_max_avx512(a, b, c2, d, e, f) },
+            pe, pl, ge, gl, t0, c, best, tie)
+    },
+    quantize_el: |pe, pl, ge, gl, eo, lo| {
+        quantize_el_with(|a, b, c2, d, e, f| unsafe { x86::sum_max_avx512(a, b, c2, d, e, f) },
+            pe, pl, ge, gl, eo, lo)
+    },
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: LaneOps = LaneOps {
+    isa: Isa::Neon,
+    mul: |t, c| unsafe { neon::mul_neon(t, c) },
+    add: |o, t| unsafe { neon::add_neon(o, t) },
+    min2: |a, b| unsafe { neon::min2_neon(a, b) },
+    min_e_l: |e, l| unsafe { neon::min_e_l_neon(e, l) },
+    fold_argmin: |pe, pl, ge, gl, t0, c, best, tie| {
+        fold_argmin_with(|a, b, c2, d, e, f| unsafe { neon::sum_max_neon(a, b, c2, d, e, f) },
+            pe, pl, ge, gl, t0, c, best, tie)
+    },
+    quantize_el: |pe, pl, ge, gl, eo, lo| {
+        quantize_el_with(|a, b, c2, d, e, f| unsafe { neon::sum_max_neon(a, b, c2, d, e, f) },
+            pe, pl, ge, gl, eo, lo)
+    },
+};
+
+fn table(isa: Isa) -> &'static LaneOps {
+    match isa {
+        Isa::Scalar => &SCALAR,
+        Isa::Unroll => &UNROLL,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => &AVX2,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => &AVX512,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => &NEON,
+        // Cross-arch names that cannot run here (never selected by
+        // detection; `force` rejects them before this is reached).
+        _ => &UNROLL,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Detection and dispatch
+// ---------------------------------------------------------------------
+
+/// Widest tier the host supports, in detection order.
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return Isa::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Unroll
+}
+
+/// Every tier the host can run, in escalation order — what the
+/// ISA-matrix property test and the per-ISA bench rows iterate. With
+/// the `scalar-lanes` feature the dispatch is compiled out and only
+/// the scalar tier exists.
+pub fn available() -> Vec<Isa> {
+    if cfg!(feature = "scalar-lanes") {
+        return vec![Isa::Scalar];
+    }
+    let mut v = vec![Isa::Scalar, Isa::Unroll];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Isa::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            v.push(Isa::Avx512);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(Isa::Neon);
+        }
+    }
+    v
+}
+
+/// The process-start dispatch decision: `MMEE_ISA` if set and
+/// available on this host (anything else falls back with a stderr
+/// note), otherwise the widest detected tier.
+fn default_isa() -> Isa {
+    if cfg!(feature = "scalar-lanes") {
+        return Isa::Scalar;
+    }
+    let detected = detect();
+    match std::env::var("MMEE_ISA") {
+        Err(_) => detected,
+        Ok(s) => match Isa::parse(&s) {
+            Some(isa) if available().contains(&isa) => isa,
+            Some(isa) => {
+                eprintln!(
+                    "mmee: MMEE_ISA={} is not available on this host; using {}",
+                    isa.name(),
+                    detected.name()
+                );
+                detected
+            }
+            None => {
+                eprintln!(
+                    "mmee: unrecognized MMEE_ISA value {s:?} \
+                     (valid: scalar|unroll|avx2|avx512|neon); using {}",
+                    detected.name()
+                );
+                detected
+            }
+        },
+    }
+}
+
+/// `0` = no in-process override (use the cached env/detection
+/// decision); otherwise `Isa as u8 + 1`.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+static DEFAULT: OnceLock<&'static LaneOps> = OnceLock::new();
+
+/// The active dispatch table. One relaxed atomic load on the hot path;
+/// the env/detection decision is made once per process.
+pub(crate) fn ops() -> &'static LaneOps {
+    match FORCED.load(Ordering::Relaxed) {
+        0 => DEFAULT.get_or_init(|| table(default_isa())),
+        n => table(Isa::from_u8(n - 1)),
+    }
+}
+
+/// Test/bench hook: pin the dispatch to `isa` for this process (or
+/// `None` to restore the env/detection default). Panics when `isa` is
+/// not in [`available`] — running a vector tier the host lacks would
+/// fault. Safe to flip while other threads evaluate: every tier is
+/// bit-identical, so a mid-pass switch cannot change any result.
+pub fn force(isa: Option<Isa>) {
+    match isa {
+        None => FORCED.store(0, Ordering::Relaxed),
+        Some(isa) => {
+            assert!(
+                available().contains(&isa),
+                "cannot force ISA '{}': not available on this host",
+                isa.name()
+            );
+            FORCED.store(isa as u8 + 1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The ISA the kernel is currently dispatching to.
+pub fn active() -> Isa {
+    if cfg!(feature = "scalar-lanes") {
+        Isa::Scalar
+    } else {
+        ops().isa
+    }
+}
+
+/// [`active`]'s name — what `mmee --version`, the serve `stats` op and
+/// the bench report print.
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+/// Best-effort prefetch hint for the cache line at `ptr` (no-op on
+/// architectures without a stable prefetch intrinsic). Purely a
+/// scheduling hint: it cannot change results or fault on any address.
+#[inline]
+pub fn prefetch(ptr: *const f64) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint; SSE is in the x86_64 baseline.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(ptr as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = ptr;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn lanes(rng: &mut Rng, n: usize, inf_every: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                if inf_every > 0 && i % inf_every == inf_every - 1 {
+                    f64::INFINITY
+                } else {
+                    rng.f64() * 1e3
+                }
+            })
+            .collect()
+    }
+
+    /// Every available table reproduces the scalar table exactly on
+    /// every helper, across tail lengths 0..=67 (all `n % 8` classes).
+    #[test]
+    fn all_available_tables_match_scalar_reference() {
+        let mut rng = Rng::new(0x51_AD);
+        for isa in available() {
+            let t = table(isa);
+            for n in (0..=17).chain([31, 32, 33, 63, 64, 65, 66, 67]) {
+                let a = lanes(&mut rng, n, 0);
+                let b = lanes(&mut rng, n, 0);
+                let pe = lanes(&mut rng, n, 5);
+                let pl: Vec<f64> = pe
+                    .iter()
+                    .map(|&e| if e.is_finite() { e * 0.5 + 1.0 } else { f64::INFINITY })
+                    .collect();
+                let ge = lanes(&mut rng, n, 0);
+                let gl = lanes(&mut rng, n, 0);
+
+                let mut m1 = a.clone();
+                (t.mul)(&mut m1, &b);
+                let mut m2 = a.clone();
+                (SCALAR.mul)(&mut m2, &b);
+                assert_eq!(m1, m2, "{}: mul n={n}", isa.name());
+
+                let mut s1 = a.clone();
+                (t.add)(&mut s1, &b);
+                let mut s2 = a.clone();
+                (SCALAR.add)(&mut s2, &b);
+                assert_eq!(s1, s2, "{}: add n={n}", isa.name());
+
+                assert_eq!((t.min2)(&a, &b), (SCALAR.min2)(&a, &b), "{}: min2 n={n}", isa.name());
+                assert_eq!(
+                    (t.min_e_l)(&pe, &pl),
+                    (SCALAR.min_e_l)(&pe, &pl),
+                    "{}: min_e_l n={n}",
+                    isa.name()
+                );
+
+                let mut best1 = [(f64::INFINITY, 0, 0); 3];
+                let mut tie1 = [f64::INFINITY; 3];
+                (t.fold_argmin)(&pe, &pl, &ge, &gl, 100, 7, &mut best1, &mut tie1);
+                let mut best2 = [(f64::INFINITY, 0, 0); 3];
+                let mut tie2 = [f64::INFINITY; 3];
+                (SCALAR.fold_argmin)(&pe, &pl, &ge, &gl, 100, 7, &mut best2, &mut tie2);
+                assert_eq!(best1, best2, "{}: fold_argmin n={n}", isa.name());
+                assert_eq!(tie1, tie2, "{}: fold_argmin tie n={n}", isa.name());
+
+                let (mut e1, mut l1) = (vec![0.0; n], vec![0.0; n]);
+                (t.quantize_el)(&pe, &pl, &ge, &gl, &mut e1, &mut l1);
+                let (mut e2, mut l2) = (vec![0.0; n], vec![0.0; n]);
+                (SCALAR.quantize_el)(&pe, &pl, &ge, &gl, &mut e2, &mut l2);
+                assert_eq!(e1, e2, "{}: quantize_el e n={n}", isa.name());
+                assert_eq!(l1, l2, "{}: quantize_el l n={n}", isa.name());
+            }
+        }
+    }
+
+    /// Ties that differ only in lane position must resolve to the
+    /// first-visited lane on every tier (the tie-break order contract).
+    #[test]
+    fn tie_breaks_resolve_in_lane_order_on_every_tier() {
+        let n = 19;
+        let pe = vec![2.0; n];
+        let pl = vec![3.0; n];
+        let ge = vec![1.0; n];
+        let gl = vec![1.0; n];
+        for isa in available() {
+            let t = table(isa);
+            let mut best = [(f64::INFINITY, 0, 0); 3];
+            let mut tie = [f64::INFINITY; 3];
+            (t.fold_argmin)(&pe, &pl, &ge, &gl, 40, 3, &mut best, &mut tie);
+            for k in 0..3 {
+                assert_eq!(best[k].2, 40, "{}: obj {k} must keep the first lane", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn detection_always_yields_an_available_tier() {
+        assert!(available().contains(&detect()) || detect() == Isa::Unroll);
+        assert!(available().contains(&active()));
+    }
+
+    #[test]
+    fn force_round_trips_through_every_available_tier() {
+        for isa in available() {
+            force(Some(isa));
+            assert_eq!(active(), isa);
+        }
+        force(None);
+        // Restoring the default must land back on a host-available tier.
+        assert!(available().contains(&active()));
+    }
+}

@@ -1,0 +1,156 @@
+//! NEON lane kernels (aarch64, 2 × f64).
+//!
+//! Same exactness contract as the x86 kernels: one IEEE-754 operation
+//! per lane in reference order, no fused multiply-add in the value
+//! path (`vmulq_f64`/`vaddq_f64` round separately, like the scalar
+//! `*`/`+`; `vfmaq_f64` is never used), exact `vminq`/`vmaxq`
+//! selections, infeasibility via `vceqq` against `+inf`. Lane data is
+//! always finite-or-`+inf`, never NaN.
+//!
+//! # Safety
+//!
+//! `#[target_feature(enable = "neon")]` kernels — callers must have
+//! confirmed NEON support (the dispatch tables do, via
+//! `is_aarch64_feature_detected!`; NEON is also baseline on aarch64).
+//! Paired slices must share a length.
+
+use std::arch::aarch64::*;
+
+/// `tmp[i] *= col[i]`, 2 lanes per instruction plus a scalar tail.
+///
+/// # Safety
+/// Requires NEON at runtime; `tmp.len() == col.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn mul_neon(tmp: &mut [f64], col: &[f64]) {
+    let n = tmp.len();
+    let t = tmp.as_mut_ptr();
+    let c = col.as_ptr();
+    let mut i = 0;
+    while i + 2 <= n {
+        vst1q_f64(t.add(i), vmulq_f64(vld1q_f64(t.add(i)), vld1q_f64(c.add(i))));
+        i += 2;
+    }
+    if i < n {
+        *t.add(i) *= *c.add(i);
+    }
+}
+
+/// `out[i] += tmp[i]`, 2 lanes per instruction plus a scalar tail.
+///
+/// # Safety
+/// Requires NEON at runtime; `out.len() == tmp.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn add_neon(out: &mut [f64], tmp: &[f64]) {
+    let n = out.len();
+    let o = out.as_mut_ptr();
+    let t = tmp.as_ptr();
+    let mut i = 0;
+    while i + 2 <= n {
+        vst1q_f64(o.add(i), vaddq_f64(vld1q_f64(o.add(i)), vld1q_f64(t.add(i))));
+        i += 2;
+    }
+    if i < n {
+        *o.add(i) += *t.add(i);
+    }
+}
+
+/// `(min(a), min(b))` over all lanes.
+///
+/// # Safety
+/// Requires NEON at runtime; `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn min2_neon(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let (mut ma, mut mb) = (f64::INFINITY, f64::INFINITY);
+    let mut i = 0;
+    if n >= 2 {
+        let mut va = vdupq_n_f64(f64::INFINITY);
+        let mut vb = va;
+        while i + 2 <= n {
+            va = vminq_f64(va, vld1q_f64(ap.add(i)));
+            vb = vminq_f64(vb, vld1q_f64(bp.add(i)));
+            i += 2;
+        }
+        ma = vgetq_lane_f64::<0>(va).min(vgetq_lane_f64::<1>(va));
+        mb = vgetq_lane_f64::<0>(vb).min(vgetq_lane_f64::<1>(vb));
+    }
+    while i < n {
+        ma = ma.min(*ap.add(i));
+        mb = mb.min(*bp.add(i));
+        i += 1;
+    }
+    (ma, mb)
+}
+
+/// `(min(e), min(l), any(e == +inf))`.
+///
+/// # Safety
+/// Requires NEON at runtime; `e.len() == l.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn min_e_l_neon(e: &[f64], l: &[f64]) -> (f64, f64, bool) {
+    let n = e.len();
+    let ep = e.as_ptr();
+    let lp = l.as_ptr();
+    let (mut me, mut ml, mut inf) = (f64::INFINITY, f64::INFINITY, false);
+    let mut i = 0;
+    if n >= 2 {
+        let infv = vdupq_n_f64(f64::INFINITY);
+        let mut vme = infv;
+        let mut vml = infv;
+        let mut vinf = vdupq_n_u64(0);
+        while i + 2 <= n {
+            let ve = vld1q_f64(ep.add(i));
+            vme = vminq_f64(vme, ve);
+            vml = vminq_f64(vml, vld1q_f64(lp.add(i)));
+            vinf = vorrq_u64(vinf, vceqq_f64(ve, infv));
+            i += 2;
+        }
+        me = vgetq_lane_f64::<0>(vme).min(vgetq_lane_f64::<1>(vme));
+        ml = vgetq_lane_f64::<0>(vml).min(vgetq_lane_f64::<1>(vml));
+        inf = (vgetq_lane_u64::<0>(vinf) | vgetq_lane_u64::<1>(vinf)) != 0;
+    }
+    while i < n {
+        let ev = *ep.add(i);
+        if ev == f64::INFINITY {
+            inf = true;
+        }
+        me = me.min(ev);
+        ml = ml.min(*lp.add(i));
+        i += 1;
+    }
+    (me, ml, inf)
+}
+
+/// `e_out[i] = pe[i] + ge[i]; l_out[i] = max(pl[i], gl[i])`.
+///
+/// # Safety
+/// Requires NEON at runtime; all six slices share one length.
+#[target_feature(enable = "neon")]
+pub unsafe fn sum_max_neon(
+    pe: &[f64],
+    ge: &[f64],
+    pl: &[f64],
+    gl: &[f64],
+    e_out: &mut [f64],
+    l_out: &mut [f64],
+) {
+    let n = pe.len();
+    let pep = pe.as_ptr();
+    let gep = ge.as_ptr();
+    let plp = pl.as_ptr();
+    let glp = gl.as_ptr();
+    let eo = e_out.as_mut_ptr();
+    let lo = l_out.as_mut_ptr();
+    let mut i = 0;
+    while i + 2 <= n {
+        vst1q_f64(eo.add(i), vaddq_f64(vld1q_f64(pep.add(i)), vld1q_f64(gep.add(i))));
+        vst1q_f64(lo.add(i), vmaxq_f64(vld1q_f64(plp.add(i)), vld1q_f64(glp.add(i))));
+        i += 2;
+    }
+    if i < n {
+        *eo.add(i) = *pep.add(i) + *gep.add(i);
+        *lo.add(i) = (*plp.add(i)).max(*glp.add(i));
+    }
+}

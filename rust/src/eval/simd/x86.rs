@@ -1,0 +1,368 @@
+//! AVX2 and AVX-512 lane kernels (x86_64).
+//!
+//! Every function here performs exactly one IEEE-754 operation per
+//! lane — the same operation, in the same per-lane order, as the
+//! scalar reference in the parent module — so results are bit-identical
+//! by construction. In particular there is **no FMA** anywhere in the
+//! value path: `vmulpd`/`vaddpd` round once each, exactly like the
+//! scalar `*` and `+`, whereas a fused multiply-add would round once
+//! where the reference rounds twice. `vminpd`/`vmaxpd` are exact
+//! selections (no rounding), and the lane values here are always
+//! finite-or-`+inf` (never NaN, never `-0.0`), which is the regime
+//! where `vminpd`'s "second operand on equality" quirk is
+//! value-indistinguishable from `f64::min`.
+//!
+//! # Safety
+//!
+//! All functions are `unsafe` because they are `#[target_feature]`
+//! kernels: callers must guarantee the host supports the named feature
+//! (the dispatch tables in the parent module only select them after
+//! `is_x86_feature_detected!` confirms it). Slice arguments of equal
+//! length are the only other requirement; all memory access is
+//! unaligned loads/stores within the given slices.
+
+use std::arch::x86_64::*;
+
+// ---------------------------------------------------------------------
+// AVX2 (4 × f64)
+// ---------------------------------------------------------------------
+
+/// `tmp[i] *= col[i]`, 4 lanes per instruction plus a scalar tail.
+///
+/// # Safety
+/// Requires AVX2 at runtime; `tmp.len() == col.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mul_avx2(tmp: &mut [f64], col: &[f64]) {
+    let n = tmp.len();
+    let t = tmp.as_mut_ptr();
+    let c = col.as_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_mul_pd(_mm256_loadu_pd(t.add(i)), _mm256_loadu_pd(c.add(i)));
+        _mm256_storeu_pd(t.add(i), v);
+        i += 4;
+    }
+    while i < n {
+        *t.add(i) *= *c.add(i);
+        i += 1;
+    }
+}
+
+/// `out[i] += tmp[i]`, 4 lanes per instruction plus a scalar tail.
+///
+/// # Safety
+/// Requires AVX2 at runtime; `out.len() == tmp.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn add_avx2(out: &mut [f64], tmp: &[f64]) {
+    let n = out.len();
+    let o = out.as_mut_ptr();
+    let t = tmp.as_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_add_pd(_mm256_loadu_pd(o.add(i)), _mm256_loadu_pd(t.add(i)));
+        _mm256_storeu_pd(o.add(i), v);
+        i += 4;
+    }
+    while i < n {
+        *o.add(i) += *t.add(i);
+        i += 1;
+    }
+}
+
+/// `(min(a), min(b))` over all lanes. Min folds are order-insensitive
+/// for NaN-free data, so vertical accumulators + a horizontal fold are
+/// exact.
+///
+/// # Safety
+/// Requires AVX2 at runtime; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn min2_avx2(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let (mut ma, mut mb) = (f64::INFINITY, f64::INFINITY);
+    let mut i = 0;
+    if n >= 4 {
+        let mut va = _mm256_set1_pd(f64::INFINITY);
+        let mut vb = va;
+        while i + 4 <= n {
+            va = _mm256_min_pd(va, _mm256_loadu_pd(ap.add(i)));
+            vb = _mm256_min_pd(vb, _mm256_loadu_pd(bp.add(i)));
+            i += 4;
+        }
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), va);
+        for v in buf {
+            ma = ma.min(v);
+        }
+        _mm256_storeu_pd(buf.as_mut_ptr(), vb);
+        for v in buf {
+            mb = mb.min(v);
+        }
+    }
+    while i < n {
+        ma = ma.min(*ap.add(i));
+        mb = mb.min(*bp.add(i));
+        i += 1;
+    }
+    (ma, mb)
+}
+
+/// `(min(e), min(l), any(e == +inf))`. Infeasible lanes hold `+inf` in
+/// both slices, so unconditional minima equal the reference's
+/// feasible-only minima; infeasibility is detected with an equality
+/// mask, not arithmetic.
+///
+/// # Safety
+/// Requires AVX2 at runtime; `e.len() == l.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn min_e_l_avx2(e: &[f64], l: &[f64]) -> (f64, f64, bool) {
+    let n = e.len();
+    let ep = e.as_ptr();
+    let lp = l.as_ptr();
+    let (mut me, mut ml, mut inf) = (f64::INFINITY, f64::INFINITY, false);
+    let mut i = 0;
+    if n >= 4 {
+        let infv = _mm256_set1_pd(f64::INFINITY);
+        let mut vme = infv;
+        let mut vml = infv;
+        let mut vinf = _mm256_setzero_pd();
+        while i + 4 <= n {
+            let ve = _mm256_loadu_pd(ep.add(i));
+            vme = _mm256_min_pd(vme, ve);
+            vml = _mm256_min_pd(vml, _mm256_loadu_pd(lp.add(i)));
+            vinf = _mm256_or_pd(vinf, _mm256_cmp_pd::<_CMP_EQ_OQ>(ve, infv));
+            i += 4;
+        }
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), vme);
+        for v in buf {
+            me = me.min(v);
+        }
+        _mm256_storeu_pd(buf.as_mut_ptr(), vml);
+        for v in buf {
+            ml = ml.min(v);
+        }
+        inf = _mm256_movemask_pd(vinf) != 0;
+    }
+    while i < n {
+        let ev = *ep.add(i);
+        if ev == f64::INFINITY {
+            inf = true;
+        }
+        me = me.min(ev);
+        ml = ml.min(*lp.add(i));
+        i += 1;
+    }
+    (me, ml, inf)
+}
+
+/// `e_out[i] = pe[i] + ge[i]; l_out[i] = max(pl[i], gl[i])` — the
+/// vertical stage of the argmin / fronts folds. Separate add and max
+/// instructions, one rounding each, matching the scalar reference.
+///
+/// # Safety
+/// Requires AVX2 at runtime; all six slices share one length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sum_max_avx2(
+    pe: &[f64],
+    ge: &[f64],
+    pl: &[f64],
+    gl: &[f64],
+    e_out: &mut [f64],
+    l_out: &mut [f64],
+) {
+    let n = pe.len();
+    let pep = pe.as_ptr();
+    let gep = ge.as_ptr();
+    let plp = pl.as_ptr();
+    let glp = gl.as_ptr();
+    let eo = e_out.as_mut_ptr();
+    let lo = l_out.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        _mm256_storeu_pd(
+            eo.add(i),
+            _mm256_add_pd(_mm256_loadu_pd(pep.add(i)), _mm256_loadu_pd(gep.add(i))),
+        );
+        _mm256_storeu_pd(
+            lo.add(i),
+            _mm256_max_pd(_mm256_loadu_pd(plp.add(i)), _mm256_loadu_pd(glp.add(i))),
+        );
+        i += 4;
+    }
+    while i < n {
+        *eo.add(i) = *pep.add(i) + *gep.add(i);
+        *lo.add(i) = (*plp.add(i)).max(*glp.add(i));
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX-512 (8 × f64)
+// ---------------------------------------------------------------------
+
+/// 8-wide counterpart of [`mul_avx2`].
+///
+/// # Safety
+/// Requires AVX-512F at runtime; `tmp.len() == col.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn mul_avx512(tmp: &mut [f64], col: &[f64]) {
+    let n = tmp.len();
+    let t = tmp.as_mut_ptr();
+    let c = col.as_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm512_mul_pd(_mm512_loadu_pd(t.add(i)), _mm512_loadu_pd(c.add(i)));
+        _mm512_storeu_pd(t.add(i), v);
+        i += 8;
+    }
+    while i < n {
+        *t.add(i) *= *c.add(i);
+        i += 1;
+    }
+}
+
+/// 8-wide counterpart of [`add_avx2`].
+///
+/// # Safety
+/// Requires AVX-512F at runtime; `out.len() == tmp.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn add_avx512(out: &mut [f64], tmp: &[f64]) {
+    let n = out.len();
+    let o = out.as_mut_ptr();
+    let t = tmp.as_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm512_add_pd(_mm512_loadu_pd(o.add(i)), _mm512_loadu_pd(t.add(i)));
+        _mm512_storeu_pd(o.add(i), v);
+        i += 8;
+    }
+    while i < n {
+        *o.add(i) += *t.add(i);
+        i += 1;
+    }
+}
+
+/// 8-wide counterpart of [`min2_avx2`].
+///
+/// # Safety
+/// Requires AVX-512F at runtime; `a.len() == b.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn min2_avx512(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let (mut ma, mut mb) = (f64::INFINITY, f64::INFINITY);
+    let mut i = 0;
+    if n >= 8 {
+        let mut va = _mm512_set1_pd(f64::INFINITY);
+        let mut vb = va;
+        while i + 8 <= n {
+            va = _mm512_min_pd(va, _mm512_loadu_pd(ap.add(i)));
+            vb = _mm512_min_pd(vb, _mm512_loadu_pd(bp.add(i)));
+            i += 8;
+        }
+        let mut buf = [0.0f64; 8];
+        _mm512_storeu_pd(buf.as_mut_ptr(), va);
+        for v in buf {
+            ma = ma.min(v);
+        }
+        _mm512_storeu_pd(buf.as_mut_ptr(), vb);
+        for v in buf {
+            mb = mb.min(v);
+        }
+    }
+    while i < n {
+        ma = ma.min(*ap.add(i));
+        mb = mb.min(*bp.add(i));
+        i += 1;
+    }
+    (ma, mb)
+}
+
+/// 8-wide counterpart of [`min_e_l_avx2`]; infeasibility accumulates
+/// in a `__mmask8`.
+///
+/// # Safety
+/// Requires AVX-512F at runtime; `e.len() == l.len()`.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn min_e_l_avx512(e: &[f64], l: &[f64]) -> (f64, f64, bool) {
+    let n = e.len();
+    let ep = e.as_ptr();
+    let lp = l.as_ptr();
+    let (mut me, mut ml, mut inf) = (f64::INFINITY, f64::INFINITY, false);
+    let mut i = 0;
+    if n >= 8 {
+        let infv = _mm512_set1_pd(f64::INFINITY);
+        let mut vme = infv;
+        let mut vml = infv;
+        let mut minf: __mmask8 = 0;
+        while i + 8 <= n {
+            let ve = _mm512_loadu_pd(ep.add(i));
+            vme = _mm512_min_pd(vme, ve);
+            vml = _mm512_min_pd(vml, _mm512_loadu_pd(lp.add(i)));
+            minf |= _mm512_cmp_pd_mask::<_CMP_EQ_OQ>(ve, infv);
+            i += 8;
+        }
+        let mut buf = [0.0f64; 8];
+        _mm512_storeu_pd(buf.as_mut_ptr(), vme);
+        for v in buf {
+            me = me.min(v);
+        }
+        _mm512_storeu_pd(buf.as_mut_ptr(), vml);
+        for v in buf {
+            ml = ml.min(v);
+        }
+        inf = minf != 0;
+    }
+    while i < n {
+        let ev = *ep.add(i);
+        if ev == f64::INFINITY {
+            inf = true;
+        }
+        me = me.min(ev);
+        ml = ml.min(*lp.add(i));
+        i += 1;
+    }
+    (me, ml, inf)
+}
+
+/// 8-wide counterpart of [`sum_max_avx2`].
+///
+/// # Safety
+/// Requires AVX-512F at runtime; all six slices share one length.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn sum_max_avx512(
+    pe: &[f64],
+    ge: &[f64],
+    pl: &[f64],
+    gl: &[f64],
+    e_out: &mut [f64],
+    l_out: &mut [f64],
+) {
+    let n = pe.len();
+    let pep = pe.as_ptr();
+    let gep = ge.as_ptr();
+    let plp = pl.as_ptr();
+    let glp = gl.as_ptr();
+    let eo = e_out.as_mut_ptr();
+    let lo = l_out.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        _mm512_storeu_pd(
+            eo.add(i),
+            _mm512_add_pd(_mm512_loadu_pd(pep.add(i)), _mm512_loadu_pd(gep.add(i))),
+        );
+        _mm512_storeu_pd(
+            lo.add(i),
+            _mm512_max_pd(_mm512_loadu_pd(plp.add(i)), _mm512_loadu_pd(glp.add(i))),
+        );
+        i += 8;
+    }
+    while i < n {
+        *eo.add(i) = *pep.add(i) + *gep.add(i);
+        *lo.add(i) = (*plp.add(i)).max(*glp.add(i));
+        i += 1;
+    }
+}

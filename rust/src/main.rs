@@ -69,15 +69,34 @@ fn main() -> Result<()> {
         Some("bench-fig") => cmd_bench_fig(&args),
         Some("bench-table") => cmd_bench_table(&args),
         Some("bench-all") => cmd_bench_all(&args),
+        Some("version") => {
+            print_version();
+            Ok(())
+        }
         _ => {
-            eprintln!("{HELP}");
+            if args.has("version") {
+                print_version();
+            } else {
+                eprintln!("{HELP}");
+            }
             Ok(())
         }
     }
 }
 
+/// `mmee version` / `mmee --version`: the build version plus the lane
+/// ISA the fused eval kernel dispatched to on this host (reflects an
+/// `MMEE_ISA` override — see README § Performance).
+fn print_version() {
+    println!(
+        "mmee {} (eval isa: {})",
+        env!("CARGO_PKG_VERSION"),
+        mmee::eval::simd::active_name()
+    );
+}
+
 const HELP: &str = "mmee — Matrix Multiplication Encoded Enumeration dataflow mapper
-subcommands: optimize | pareto | sweep | validate | serve | cluster | bench-fig | bench-table | bench-all
+subcommands: optimize | pareto | sweep | validate | serve | cluster | bench-fig | bench-table | bench-all | version
 see rust/src/main.rs header for flags";
 
 fn request_from(args: &Args) -> Result<MappingRequest> {

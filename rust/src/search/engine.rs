@@ -504,6 +504,14 @@ pub struct SweepStats {
     pub cold_builds: usize,
     /// Passes that ran with a finite warm-start seed.
     pub seeded_passes: usize,
+    /// Shapes that reached a final verdict — full passes, plan-cache
+    /// hits, and per-shape errors alike.
+    pub shapes_completed: usize,
+    /// Shapes cut short by cancellation: the in-flight shape that
+    /// degraded to a partial incumbent plus every shape never started.
+    /// `shapes_completed + shapes_cancelled == values.len()` whenever
+    /// the token trips; zero on an uncancelled sweep.
+    pub shapes_cancelled: usize,
     /// Total boundary construction time across the sweep.
     pub boundary_build: Duration,
     /// Wall clock of the whole sweep.
@@ -1041,9 +1049,39 @@ impl MmeeEngine {
         base: &MappingRequest,
         sweep: &SweepSpec,
     ) -> Result<SweepReport, MmeeError> {
+        self.plan_sweep_cancellable(base, sweep, None)
+    }
+
+    /// [`MmeeEngine::plan_sweep`] under cooperative cancellation. With
+    /// no explicit token, one is armed from `base.deadline_at` when the
+    /// request carries a deadline; with neither, the sweep runs
+    /// unbounded and this IS the plain sweep path. Once the token trips,
+    /// the report holds every shape already solved plus — when the pass
+    /// in flight has an achieved incumbent — one **degraded** plan for
+    /// that shape (`degraded: true`, never memoized into the plan
+    /// cache), and the sweep stops. [`SweepStats::shapes_completed`] /
+    /// [`SweepStats::shapes_cancelled`] record the split; the cancelled
+    /// count covers the in-flight shape and every value never started.
+    pub fn plan_sweep_cancellable(
+        &self,
+        base: &MappingRequest,
+        sweep: &SweepSpec,
+        cancel: Option<&CancelToken>,
+    ) -> Result<SweepReport, MmeeError> {
         let t0 = Instant::now();
         sweep.validate()?;
         let (w0, accel) = base.resolve()?;
+        let armed;
+        let token: Option<&CancelToken> = match cancel {
+            Some(t) => Some(t),
+            None => match base.deadline_at {
+                Some(at) => {
+                    armed = CancelToken::with_deadline(at);
+                    Some(&armed)
+                }
+                None => None,
+            },
+        };
         let q = self.table();
         let hw = accel.hw_vector();
         let cap = accel.capacity_words() as f64;
@@ -1056,12 +1094,19 @@ impl MmeeEngine {
         // incumbent seeds for the next pass.
         let mut prev: Option<[(usize, Tiling); 3]> = None;
         for &v in &sweep.values {
+            // Probe before starting the next shape: a tripped token
+            // sheds every remaining value in one step.
+            if token.is_some_and(|t| t.check()) {
+                stats.shapes_cancelled = sweep.values.len() - stats.shapes_completed;
+                break;
+            }
             let t_shape = Instant::now();
             let w = sweep.apply(&w0, v);
             stats.shapes += 1;
             let key = PlanKey { workload: w.clone(), accel: accel.clone() };
             if let Some(entry) = self.plan_cache.get(&key) {
                 stats.plan_hits += 1;
+                stats.shapes_completed += 1;
                 let plan = entry.map(|g| {
                     let mut p = g[obj_index(base.objective)].clone();
                     p.provenance.cache_hit = true;
@@ -1076,6 +1121,7 @@ impl MmeeEngine {
             // going: an injected fault costs one shape, not the chain.
             if let Err(e) = self.fault_check(Site::Boundary) {
                 plans.push((v, Err(e)));
+                stats.shapes_completed += 1;
                 continue;
             }
             let full = BoundaryKey::new(&w, &accel, Some(cap));
@@ -1120,17 +1166,65 @@ impl MmeeEngine {
             }
             let pass = self
                 .fault_check(Site::Eval)
-                .and_then(|_| self.on_backend(|be| be.try_argmin3_seeded(q, &b, &hw, &mult, seed)))
+                .and_then(|_| {
+                    self.on_backend(|be| {
+                        be.try_argmin3_seeded_cancellable(q, &b, &hw, &mult, seed, token)
+                    })
+                })
                 .and_then(|r| r);
-            let best = match pass {
-                Ok(best) => best,
+            let (best, partial) = match pass {
+                Ok(r) => r,
                 Err(e) => {
                     // Transient backend failure: report it for this
                     // shape, keep the chain state for the next one.
                     plans.push((v, Err(e)));
+                    stats.shapes_completed += 1;
                     continue;
                 }
             };
+            if partial {
+                // Tripped mid-pass: degrade this shape to its achieved
+                // incumbent (same recipe as `plan_cancellable` — never
+                // memoized, never used to seed a later shape) and shed
+                // the rest of the sweep.
+                let tok = token.expect("partial results only come from an armed token");
+                let (score, c, t) = best[obj_index(base.objective)];
+                if Self::check_feasible(score, &w, &accel).is_err() {
+                    plans.push((
+                        v,
+                        Err(MmeeError::DeadlineExceeded {
+                            budget_ms: base.deadline_ms.unwrap_or(0),
+                        }),
+                    ));
+                } else {
+                    let shape_stats = SearchStats {
+                        candidates: q.num_candidates(),
+                        tilings: b.num_tilings(),
+                        mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+                        elapsed: t_shape.elapsed(),
+                        boundary_build: build,
+                        blocks_evaluated: tok.blocks_evaluated(),
+                        blocks_cancelled: tok.blocks_skipped(),
+                    };
+                    let solution = self
+                        .package(&w, &accel, base.objective, q, &b.tilings, c, t, build, t_shape);
+                    plans.push((
+                        v,
+                        Ok(MappingPlan {
+                            solution,
+                            stats: shape_stats,
+                            provenance: Provenance {
+                                backend: self.backend_name().to_string(),
+                                cache_hit: false,
+                                boundary_cache_hit: boundary_hit,
+                            },
+                            degraded: true,
+                        }),
+                    ));
+                }
+                stats.shapes_cancelled = sweep.values.len() - stats.shapes_completed;
+                break;
+            }
             let entry = self.package_group(&key, q, best, &b, boundary_hit, build, t_shape);
             prev = match &entry {
                 // An infeasible surface has no achieved winners.
@@ -1141,6 +1235,7 @@ impl MmeeEngine {
                 })),
             };
             plans.push((v, entry.map(|g| g[obj_index(base.objective)].clone())));
+            stats.shapes_completed += 1;
         }
         stats.elapsed = t0.elapsed();
         Ok(SweepReport { plans, stats })
@@ -1166,9 +1261,38 @@ impl MmeeEngine {
         base: &MappingRequest,
         sweep: &SweepSpec,
     ) -> Result<ParetoSweepReport, MmeeError> {
+        self.pareto_sweep_cancellable(base, sweep, None)
+    }
+
+    /// [`MmeeEngine::pareto_sweep`] under cooperative cancellation,
+    /// mirroring [`MmeeEngine::plan_sweep_cancellable`]: no token and no
+    /// `base.deadline_at` means the plain unbounded sweep. Once the
+    /// token trips, the in-flight shape comes back as a **partial**
+    /// front — the achieved points only, its [`SearchStats`] carrying
+    /// the token's evaluated/cancelled block counts (a non-zero
+    /// `blocks_cancelled` marks the element as partial) — never used to
+    /// warm-seed a later shape, and the sweep stops with
+    /// completed/cancelled accounted in [`SweepStats`].
+    pub fn pareto_sweep_cancellable(
+        &self,
+        base: &MappingRequest,
+        sweep: &SweepSpec,
+        cancel: Option<&CancelToken>,
+    ) -> Result<ParetoSweepReport, MmeeError> {
         let t0 = Instant::now();
         sweep.validate()?;
         let (w0, accel) = base.resolve()?;
+        let armed;
+        let token: Option<&CancelToken> = match cancel {
+            Some(t) => Some(t),
+            None => match base.deadline_at {
+                Some(at) => {
+                    armed = CancelToken::with_deadline(at);
+                    Some(&armed)
+                }
+                None => None,
+            },
+        };
         let q = self.table();
         let hw = accel.hw_vector();
         let cap = accel.capacity_words() as f64;
@@ -1179,11 +1303,18 @@ impl MmeeEngine {
         // for the next shape's dominance bound.
         let mut prev: Option<Vec<(usize, Tiling)>> = None;
         for &v in &sweep.values {
+            // Probe before starting the next shape: a tripped token
+            // sheds every remaining value in one step.
+            if token.is_some_and(|t| t.check()) {
+                stats.shapes_cancelled = sweep.values.len() - stats.shapes_completed;
+                break;
+            }
             let t_shape = Instant::now();
             let w = sweep.apply(&w0, v);
             stats.shapes += 1;
             if let Err(e) = self.fault_check(Site::Boundary) {
                 fronts.push((v, Err(e)));
+                stats.shapes_completed += 1;
                 continue;
             }
             let full = BoundaryKey::new(&w, &accel, Some(cap));
@@ -1229,18 +1360,39 @@ impl MmeeEngine {
             let pass = self
                 .fault_check(Site::Eval)
                 .and_then(|_| {
-                    self.on_backend(|be| be.try_fronts_seeded(q, &b, &hw, &mult, &seed_el, &[]))
+                    self.on_backend(|be| {
+                        be.try_fronts_seeded_cancellable(q, &b, &hw, &mult, &seed_el, &[], token)
+                    })
                 })
                 .and_then(|r| r);
-            let (el, _) = match pass {
-                Ok(fr) => fr,
+            let ((el, _), partial) = match pass {
+                Ok(r) => r,
                 Err(e) => {
                     // Transient backend failure: report it for this
                     // shape, keep the chain state for the next one.
                     fronts.push((v, Err(e)));
+                    stats.shapes_completed += 1;
                     continue;
                 }
             };
+            if partial {
+                // Tripped mid-pass: the achieved points are a valid
+                // (under-filled) front — return them for this shape,
+                // skip the warm seed, and shed the rest of the sweep.
+                let tok = token.expect("partial results only come from an armed token");
+                let shape_stats = SearchStats {
+                    candidates: q.num_candidates(),
+                    tilings: b.num_tilings(),
+                    mappings: q.num_candidates() as f64 * b.num_tilings() as f64,
+                    elapsed: t_shape.elapsed(),
+                    boundary_build,
+                    blocks_evaluated: tok.blocks_evaluated(),
+                    blocks_cancelled: tok.blocks_skipped(),
+                };
+                fronts.push((v, Ok((el, shape_stats))));
+                stats.shapes_cancelled = sweep.values.len() - stats.shapes_completed;
+                break;
+            }
             prev = Some(
                 el.points().iter().map(|p| (p.candidate, b.tilings[p.tiling])).collect(),
             );
@@ -1254,6 +1406,7 @@ impl MmeeEngine {
                 blocks_cancelled: 0,
             };
             fronts.push((v, Ok((el, shape_stats))));
+            stats.shapes_completed += 1;
         }
         stats.elapsed = t0.elapsed();
         Ok(ParetoSweepReport { fronts, stats })
@@ -2008,6 +2161,92 @@ mod tests {
             let (reference, _) = cold.pareto_energy_latency(&w, &accel).unwrap();
             assert_eq!(front.points(), reference.points(), "seq {v}");
             assert!(stats.mappings > 0.0);
+        }
+    }
+
+    #[test]
+    fn cancelled_plan_sweep_returns_degraded_incumbent_and_sheds_the_rest() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let sweep = SweepSpec::seq(vec![128, 192, 256, 384]);
+        // Probe 1 is the sweep's loop-top check; probes 2 and 3 admit
+        // two tile-blocks of the first pass; probe 4 trips.
+        let token = CancelToken::after_checks(3);
+        let report = engine.plan_sweep_cancellable(&base, &sweep, Some(&token)).unwrap();
+        assert_eq!(report.plans.len(), 1, "only the in-flight shape is reported");
+        assert_eq!(report.stats.shapes_completed, 0);
+        assert_eq!(report.stats.shapes_cancelled, 4, "in-flight shape + three never started");
+        let (v, plan) = &report.plans[0];
+        assert_eq!(*v, 128);
+        let plan = plan.as_ref().unwrap();
+        assert!(plan.degraded, "mid-pass trip must report degradation");
+        assert_eq!(plan.stats.blocks_evaluated, 2);
+        assert!(plan.stats.blocks_cancelled > 0);
+        assert!(plan.solution.metrics.feasible);
+        // The incumbent is a real in-surface mapping: never better than
+        // the full optimum, and never memoized.
+        let full = MmeeEngine::native().plan(&base).unwrap();
+        assert!(plan.solution.metrics.energy >= full.solution.metrics.energy);
+        assert_eq!(engine.plan_cache_stats().0, 0, "degraded plans must not be cached");
+    }
+
+    #[test]
+    fn already_tripped_token_sheds_the_whole_sweep() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let sweep = SweepSpec::seq(vec![128, 192, 256]);
+        let token = CancelToken::after_checks(0);
+        let report = engine.plan_sweep_cancellable(&base, &sweep, Some(&token)).unwrap();
+        assert!(report.plans.is_empty());
+        assert_eq!(report.stats.shapes_completed, 0);
+        assert_eq!(report.stats.shapes_cancelled, 3);
+        assert_eq!(engine.boundary_build_count(), 0, "shed before any surface work");
+    }
+
+    #[test]
+    fn open_token_sweep_is_bit_identical_to_the_unbounded_sweep() {
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let sweep = SweepSpec::seq(vec![128, 192, 256]);
+        let plain = MmeeEngine::native().plan_sweep(&base, &sweep).unwrap();
+        assert_eq!(plain.stats.shapes_completed, 3);
+        assert_eq!(plain.stats.shapes_cancelled, 0);
+        let open = CancelToken::new();
+        let gated = MmeeEngine::native()
+            .plan_sweep_cancellable(&base, &sweep, Some(&open))
+            .unwrap();
+        assert_eq!(gated.stats.shapes_completed, 3);
+        for ((v1, p1), (v2, p2)) in plain.plans.iter().zip(&gated.plans) {
+            assert_eq!(v1, v2);
+            let (p1, p2) = (p1.as_ref().unwrap(), p2.as_ref().unwrap());
+            assert!(!p2.degraded);
+            assert_eq!(p1.solution.tiling, p2.solution.tiling);
+            assert_eq!(p1.solution.metrics.energy, p2.solution.metrics.energy);
+            assert_eq!(p1.solution.metrics.latency, p2.solution.metrics.latency);
+        }
+    }
+
+    #[test]
+    fn cancelled_pareto_sweep_returns_partial_front_and_counts_the_split() {
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 128, "accel1", Objective::Energy);
+        let sweep = SweepSpec::seq(vec![128, 192, 256]);
+        let token = CancelToken::after_checks(3);
+        let report = engine.pareto_sweep_cancellable(&base, &sweep, Some(&token)).unwrap();
+        assert_eq!(report.fronts.len(), 1, "only the in-flight shape is reported");
+        assert_eq!(report.stats.shapes_completed, 0);
+        assert_eq!(report.stats.shapes_cancelled, 3);
+        let (v, entry) = &report.fronts[0];
+        assert_eq!(*v, 128);
+        let (front, stats) = entry.as_ref().unwrap();
+        assert!(stats.blocks_cancelled > 0, "a partial front carries the trip counters");
+        // Every achieved point is a real mapping, so the full front
+        // dominates-or-equals each one.
+        let accel = presets::accel1();
+        let (reference, _) = MmeeEngine::native()
+            .pareto_energy_latency(&presets::bert_base(128), &accel)
+            .unwrap();
+        for p in front.points() {
+            assert!(reference.points().iter().any(|r| r.x <= p.x && r.y <= p.y));
         }
     }
 

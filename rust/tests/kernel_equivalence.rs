@@ -3,7 +3,9 @@
 //! same candidate and tiling indices, same tie-breaks — to the
 //! Block-materializing reference path, across randomized workloads,
 //! accelerators, chunk boundaries, randomized 2-D (candidate × tiling)
-//! tile shapes, and with bound/dominance pruning both on and off.
+//! tile shapes, with bound/dominance pruning both on and off, and
+//! under every SIMD lane tier the host can dispatch to (the ISA
+//! matrix: scalar / unrolled / AVX2 / AVX-512 / NEON, forced in turn).
 
 use mmee::config::{presets, Accelerator, HwVector, Workload};
 use mmee::encode::{BoundaryMatrix, QueryMatrix};
@@ -398,6 +400,83 @@ fn prop_seeded_argmin_matches_unseeded_exactly() {
         }
         Ok(())
     });
+}
+
+/// The ISA matrix: every runtime-dispatchable lane tier available on
+/// this host (scalar, unrolled, AVX2, AVX-512, NEON) must reproduce
+/// the scalar-forced pass byte-for-byte — same scores, same indices,
+/// same tie-breaks, same front provenance — across randomized
+/// workloads, accelerators, and 2-D tile shapes. Forcing is process
+/// global, but every tier is bit-identical by contract, so concurrent
+/// tests see correct results regardless of which tier they run under.
+#[test]
+fn prop_every_available_isa_matches_scalar_reference() {
+    use mmee::eval::simd::{self, Isa};
+    prop::quick(8, 0x15A_0A7B, gen_case, |case| {
+        let (q, b, hw, mult) = build_surface(case);
+        let (nc, nt) = (q.num_candidates(), b.num_tilings());
+        let c_block = 1 + case.c_range.0 % nc.max(1);
+        let t_chunk = 1 + case.t_range.0 % nt.max(1);
+        let tiles = TileConfig { c_block, t_chunk };
+        simd::force(Some(Isa::Scalar));
+        let want = kernel::fused_argmin3_tiled(&q, &b, &hw, &mult, true, tiles);
+        let (want_el, want_bsda) = kernel::fused_fronts_tiled(&q, &b, &hw, &mult, true, tiles);
+        let mut err = None;
+        for isa in simd::available() {
+            simd::force(Some(isa));
+            let got = kernel::fused_argmin3_tiled(&q, &b, &hw, &mult, true, tiles);
+            if got != want {
+                err = Some(format!(
+                    "{} argmin diverged from scalar: {} vs {}",
+                    isa.name(),
+                    fmt_argmin(&got),
+                    fmt_argmin(&want)
+                ));
+                break;
+            }
+            let (el, bsda) = kernel::fused_fronts_tiled(&q, &b, &hw, &mult, true, tiles);
+            if el.points() != want_el.points() || bsda.points() != want_bsda.points() {
+                err = Some(format!("{} fronts diverged from scalar", isa.name()));
+                break;
+            }
+        }
+        simd::force(None);
+        err.map_or(Ok(()), Err)
+    });
+}
+
+/// Partial-vector tails pinned: chunk lane counts with every remainder
+/// `nt % 8` ∈ {0..7} (covering the 8-wide AVX-512, 4-wide AVX2, and
+/// 2-wide NEON tails simultaneously) fold identically on every
+/// available tier. One chunk spans the whole tiling axis, so the lane
+/// slices have exactly the pinned length.
+#[test]
+fn isa_tails_are_exact_for_every_chunk_remainder() {
+    use mmee::eval::simd::{self, Isa};
+    let w = presets::bert_base(256);
+    let accel = presets::accel1();
+    let q = QueryMatrix::build(mmee::symbolic::pruned_table().candidates()[..12].to_vec());
+    let all_tilings: Vec<_> = enumerate_tilings(&w.gemm, None).into_iter().take(64).collect();
+    assert!(all_tilings.len() >= 63, "surface too small to pin every tail length");
+    let hw = accel.hw_vector();
+    let mult = Multipliers::for_workload(&w, &accel);
+    for extra in 0..8usize {
+        let nt = 56 + extra;
+        let b = BoundaryMatrix::build(all_tilings[..nt].to_vec(), &accel, &w);
+        let tiles = TileConfig { c_block: q.num_candidates(), t_chunk: nt };
+        simd::force(Some(Isa::Scalar));
+        let want = kernel::fused_argmin3_tiled(&q, &b, &hw, &mult, true, tiles);
+        let (want_el, want_bsda) = kernel::fused_fronts_tiled(&q, &b, &hw, &mult, true, tiles);
+        for isa in simd::available() {
+            simd::force(Some(isa));
+            let got = kernel::fused_argmin3_tiled(&q, &b, &hw, &mult, true, tiles);
+            assert_eq!(got, want, "{} argmin, tail nt % 8 == {extra}", isa.name());
+            let (el, bsda) = kernel::fused_fronts_tiled(&q, &b, &hw, &mult, true, tiles);
+            assert_eq!(el.points(), want_el.points(), "{} EL, tail {extra}", isa.name());
+            assert_eq!(bsda.points(), want_bsda.points(), "{} BSDA, tail {extra}", isa.name());
+        }
+        simd::force(None);
+    }
 }
 
 /// Fronts counterpart: `fused_fronts_seeded` warm-started from
