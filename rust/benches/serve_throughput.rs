@@ -1,6 +1,9 @@
 //! Serving-path throughput: sequential vs batched vs concurrent
 //! handling of a mixed preset trace (ROADMAP: "measure hit rates under
-//! real DSE traces").
+//! real DSE traces"), plus a threads-vs-epoll front-end A/B under an
+//! adversarial cold-cache trace with idle-connection ballast. Emits
+//! `BENCH_serve.json` so the serving trajectory is machine-trackable
+//! across PRs.
 //!
 //! The trace repeats 3 distinct (workload, accel) surfaces across 24
 //! requests with rotating objectives — the pipelined-compiler shape.
@@ -10,31 +13,56 @@
 //! * `concurrent`  — per-line serving with a worker pool sharing one
 //!                   `Send + Sync` engine.
 //!
+//! The front-end A/B is the tail-latency experiment: keep-alive ballast
+//! connections sit idle while client threads hammer cold-key requests
+//! through short-lived connections. On the thread-per-connection front
+//! end the ballast PINS workers, so active requests queue behind idle
+//! sockets; the epoll front end parks the ballast for free. `p99_ms`
+//! per mode plus a `p99_improvement` factor (target 1.2x) land in
+//! `BENCH_serve.json`.
+//!
 //! Each mode runs on a fresh engine (cold caches) so the printed
 //! boundary/plan hit rates describe the trace, not the harness.
+//! `--smoke` (or `--test`) shrinks every section to small surfaces and
+//! still writes the full JSON schema — CI runs it so the schema cannot
+//! rot unnoticed.
 
-use mmee::coordinator::service;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use mmee::coordinator::{service, serve_tcp_with, NetMode};
 use mmee::search::MmeeEngine;
 use mmee::util::bench::Bench;
+use mmee::util::json::Json;
 
-fn trace_lines() -> Vec<String> {
-    let surfaces = [
-        (r#""workload": "bert-base", "seq": 512, "accel": "accel1""#, "energy"),
-        (r#""workload": "bert-base", "seq": 512, "accel": "accel2""#, "latency"),
-        (r#""workload": "cc1", "accel": "accel1""#, "edp"),
-    ];
+fn trace_lines(small: bool) -> Vec<String> {
+    let surfaces: &[&str] = if small {
+        &[
+            r#""workload": "mlp", "accel": "accel1""#,
+            r#""workload": "bert-base", "seq": 256, "accel": "accel1""#,
+            r#""workload": "cc1", "accel": "accel1""#,
+        ]
+    } else {
+        &[
+            r#""workload": "bert-base", "seq": 512, "accel": "accel1""#,
+            r#""workload": "bert-base", "seq": 512, "accel": "accel2""#,
+            r#""workload": "cc1", "accel": "accel1""#,
+        ]
+    };
     let objectives = ["energy", "latency", "edp"];
-    let mut lines = Vec::new();
-    for i in 0..24 {
-        let (spec, _) = surfaces[i % surfaces.len()];
-        let obj = objectives[(i / surfaces.len()) % objectives.len()];
-        lines.push(format!(r#"{{{spec}, "objective": "{obj}"}}"#));
-    }
-    lines
+    let n = if small { 12 } else { 24 };
+    (0..n)
+        .map(|i| {
+            let spec = surfaces[i % surfaces.len()];
+            let obj = objectives[(i / surfaces.len()) % objectives.len()];
+            format!(r#"{{{spec}, "objective": "{obj}"}}"#)
+        })
+        .collect()
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample set.
-fn percentile(sorted: &[std::time::Duration], p: f64) -> std::time::Duration {
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
     sorted[((sorted.len() - 1) as f64 * p).round() as usize]
 }
 
@@ -58,8 +86,141 @@ fn report_rates(engine: &MmeeEngine, served: usize, secs: f64) {
     );
 }
 
+/// One short-lived client exchange: connect, send one line, read one
+/// response, close (the drop is the half-close).
+fn request(addr: SocketAddr, line: &str) -> String {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+    writeln!(conn, "{line}").expect("write request");
+    let mut resp = String::new();
+    BufReader::new(conn).read_line(&mut resp).expect("read response");
+    resp
+}
+
+/// The key every ballast connection asks for once (prewarmed, so the
+/// ballast costs one cache hit each — its job is to *idle*).
+const BALLAST_LINE: &str = r#"{"workload": "mlp", "accel": "accel1"}"#;
+
+/// Threads-vs-epoll A/B: `ballast` keep-alive connections idle while
+/// `clients` threads drive cold-key requests over short-lived
+/// connections. Returns the `front_end_ab` JSON object.
+fn front_end_ab(smoke: bool) -> Json {
+    let (ballast_n, clients, per_client) = if smoke { (4, 2, 4) } else { (6, 4, 16) };
+    let workers = 8usize;
+    let total_conns = 1 + ballast_n + clients * per_client;
+    let total_requests = total_conns; // one request per connection
+    println!(
+        "\nfront-end A/B: {ballast_n} idle keep-alive conns, {clients} clients x \
+         {per_client} cold-key requests, {workers} workers"
+    );
+    let modes: &[NetMode] = if NetMode::epoll_supported() {
+        &[NetMode::Threads, NetMode::Epoll]
+    } else {
+        &[NetMode::Threads]
+    };
+    // Every request names a distinct seq, so every plan is a cold
+    // surface build (`mlp` would ignore `seq` and collapse to one key).
+    let seq_base = if smoke { 64 } else { 200 };
+    let cold_line = move |i: usize| {
+        format!(r#"{{"workload": "bert-base", "seq": {}, "accel": "accel1"}}"#, seq_base + i)
+    };
+    let mut rows = Vec::new();
+    let mut p99_by_mode = Vec::new();
+    for &mode in modes {
+        let engine = MmeeEngine::native();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            serve_tcp_with(&engine, "127.0.0.1:0", Some(total_conns), workers, mode, |a| {
+                tx.send(a).unwrap()
+            })
+            .expect("serve_tcp_with")
+        });
+        let addr = rx.recv().expect("server ready");
+        let warm = request(addr, BALLAST_LINE);
+        assert!(warm.contains("energy_j"), "prewarm failed: {warm}");
+        // Keep-alive ballast: one warm request each, then pure idle.
+        // On the threads front end this pins a worker per connection.
+        let ballast: Vec<TcpStream> = (0..ballast_n)
+            .map(|_| {
+                let mut conn = TcpStream::connect(addr).expect("ballast connect");
+                conn.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+                writeln!(conn, "{BALLAST_LINE}").expect("ballast request");
+                let mut resp = String::new();
+                BufReader::new(conn.try_clone().expect("clone"))
+                    .read_line(&mut resp)
+                    .expect("ballast response");
+                assert!(resp.contains("energy_j"), "ballast request failed: {resp}");
+                conn
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut lat: Vec<Duration> = std::thread::scope(|scope| {
+            let cold_line = &cold_line;
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut samples = Vec::with_capacity(per_client);
+                        for k in 0..per_client {
+                            let line = cold_line(c * per_client + k);
+                            let t = Instant::now();
+                            let resp = request(addr, &line);
+                            samples.push(t.elapsed());
+                            assert!(resp.contains("energy_j"), "cold plan failed: {resp}");
+                        }
+                        samples
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        drop(ballast);
+        let served = server.join().expect("server thread");
+        assert_eq!(served, total_requests, "{} front end dropped requests", mode.name());
+        lat.sort();
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+        let req_per_s = (clients * per_client) as f64 / secs.max(1e-12);
+        println!(
+            "  {:<7}  p50 {p50:.3?}  p99 {p99:.3?}  ({req_per_s:.1} active req/s)",
+            mode.name()
+        );
+        p99_by_mode.push(p99.as_secs_f64() * 1e3);
+        rows.push(Json::obj(vec![
+            ("net", Json::str(mode.name())),
+            ("p50_ms", Json::num(p50.as_secs_f64() * 1e3)),
+            ("p99_ms", Json::num(p99.as_secs_f64() * 1e3)),
+            ("req_per_s", Json::num(req_per_s)),
+            ("served", Json::num(served as f64)),
+        ]));
+    }
+    const P99_TARGET: f64 = 1.2;
+    let (improvement, met) = match p99_by_mode.as_slice() {
+        [threads_p99, epoll_p99] => {
+            let x = threads_p99 / epoll_p99.max(1e-9);
+            println!(
+                "  p99 improvement threads/epoll: {x:.2}x (target {P99_TARGET:.1}x: {})",
+                if x >= P99_TARGET { "met" } else { "not met" }
+            );
+            (Json::num(x), x >= P99_TARGET)
+        }
+        // Off-Linux there is nothing to compare against.
+        _ => (Json::Null, false),
+    };
+    Json::obj(vec![
+        ("ballast_conns", Json::num(ballast_n as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("met", Json::Bool(met)),
+        ("p99_improvement", improvement),
+        ("p99_target", Json::num(P99_TARGET)),
+        ("requests_per_client", Json::num(per_client as f64)),
+        ("rows", Json::arr(rows)),
+        ("workers", Json::num(workers as f64)),
+    ])
+}
+
 fn main() {
-    let lines = trace_lines();
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let lines = trace_lines(smoke);
     let per_line = lines.join("\n");
     let as_batch = format!("[{}]", lines.join(","));
     println!("trace: {} requests over 3 distinct (workload, accel) surfaces", lines.len());
@@ -100,152 +261,190 @@ fn main() {
     });
     report_rates(&engine, n_warm, warm.median.as_secs_f64());
 
-    // Per-request latency distribution: every line served on its own,
-    // so the spread is visible, not just the aggregate rate. Cold pass
-    // first (surface builds dominate the tail), then the warm steady
-    // state the cluster front-end cares about.
-    let engine = MmeeEngine::native();
-    for pass in ["cold", "warm"] {
-        let mut lat = Vec::with_capacity(lines.len());
-        let t0 = std::time::Instant::now();
-        for line in &lines {
-            let t = std::time::Instant::now();
-            let mut out = Vec::new();
-            service::serve_lines(&engine, line.as_bytes(), &mut out).unwrap();
-            lat.push(t.elapsed());
+    if !smoke {
+        // Per-request latency distribution: every line served on its
+        // own, so the spread is visible, not just the aggregate rate.
+        // Cold pass first (surface builds dominate the tail), then the
+        // warm steady state the cluster front-end cares about.
+        let engine = MmeeEngine::native();
+        for pass in ["cold", "warm"] {
+            let mut lat = Vec::with_capacity(lines.len());
+            let t0 = Instant::now();
+            for line in &lines {
+                let t = Instant::now();
+                let mut out = Vec::new();
+                service::serve_lines(&engine, line.as_bytes(), &mut out).unwrap();
+                lat.push(t.elapsed());
+            }
+            let total = t0.elapsed().as_secs_f64();
+            lat.sort();
+            println!(
+                "per-request latency ({pass}): p50 {:.3?}  p99 {:.3?}  max {:.3?}  ({:.1} req/s)",
+                percentile(&lat, 0.50),
+                percentile(&lat, 0.99),
+                lat.last().unwrap(),
+                lines.len() as f64 / total.max(1e-12),
+            );
         }
-        let total = t0.elapsed().as_secs_f64();
-        lat.sort();
-        println!(
-            "per-request latency ({pass}): p50 {:.3?}  p99 {:.3?}  max {:.3?}  ({:.1} req/s)",
-            percentile(&lat, 0.50),
-            percentile(&lat, 0.99),
-            lat.last().unwrap(),
-            lines.len() as f64 / total.max(1e-12),
-        );
-    }
 
-    // Weight-bounded boundary cache (ROADMAP "cache policy" item):
-    // repeat optimize() rounds over the trace's surfaces — optimize
-    // bypasses the plan cache, so boundary retention differences show
-    // directly in the weighted hit rate ("fraction of boundary words
-    // served from cache"). The 1k-slot budget admits nothing: every
-    // round pays cold builds, the weighted floor of this trace.
-    use mmee::config::presets;
-    use mmee::search::Objective;
-    let surfaces = [
-        (presets::bert_base(512), presets::accel1()),
-        (presets::bert_base(512), presets::accel2()),
-        (presets::cc1(), presets::accel1()),
-    ];
-    for (label, engine) in [
-        ("unbounded weight budget", MmeeEngine::native()),
-        ("1k-slot weight budget", MmeeEngine::builder().boundary_weight_budget(1_000).build()),
-    ] {
-        let (s, n) = bench.once(&format!("optimize x2 rounds ({label})"), || {
-            let mut served = 0usize;
-            for _ in 0..2 {
-                for (w, a) in &surfaces {
-                    engine.optimize(w, a, Objective::Energy).unwrap();
-                    served += 1;
+        // Weight-bounded boundary cache (ROADMAP "cache policy" item):
+        // repeat optimize() rounds over the trace's surfaces — optimize
+        // bypasses the plan cache, so boundary retention differences
+        // show directly in the weighted hit rate ("fraction of boundary
+        // words served from cache"). The 1k-slot budget admits nothing:
+        // every round pays cold builds, the weighted floor of this
+        // trace.
+        use mmee::config::presets;
+        use mmee::search::Objective;
+        let surfaces = [
+            (presets::bert_base(512), presets::accel1()),
+            (presets::bert_base(512), presets::accel2()),
+            (presets::cc1(), presets::accel1()),
+        ];
+        for (label, engine) in [
+            ("unbounded weight budget", MmeeEngine::native()),
+            ("1k-slot weight budget", MmeeEngine::builder().boundary_weight_budget(1_000).build()),
+        ] {
+            let (s, n) = bench.once(&format!("optimize x2 rounds ({label})"), || {
+                let mut served = 0usize;
+                for _ in 0..2 {
+                    for (w, a) in &surfaces {
+                        engine.optimize(w, a, Objective::Energy).unwrap();
+                        served += 1;
+                    }
+                }
+                served
+            });
+            report_rates(&engine, n, s.median.as_secs_f64());
+        }
+        // Decode trace (dynamic shapes): an autoregressive client
+        // re-plans after every generated token, so L advances by one
+        // per request and NO line repeats a surface — the plan cache
+        // never hits. Serving the lines pays a cold build + pass per
+        // shape; `plan_sweep` chains delta builds and incumbent-seeded
+        // passes over the same shapes.
+        use mmee::search::{MappingRequest, SweepSpec};
+        let decode: Vec<String> = (0..16)
+            .map(|i| {
+                format!(
+                    r#"{{"workload": "bert-base", "seq": {}, "objective": "latency", "accel": "accel1"}}"#,
+                    512 + i
+                )
+            })
+            .collect();
+        let decode_text = decode.join("\n");
+        let engine = MmeeEngine::native();
+        let (line_by_line, n_dec) = bench.once("decode trace (16 steps, per-line)", || {
+            let mut out = Vec::new();
+            service::serve_lines(&engine, decode_text.as_bytes(), &mut out).unwrap()
+        });
+        report_rates(&engine, n_dec, line_by_line.median.as_secs_f64());
+        let engine = MmeeEngine::native();
+        let base = MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency);
+        let spec = SweepSpec::seq((512..528).collect());
+        let (swept, _) = bench.once("decode trace (16 steps, plan_sweep)", || {
+            engine.plan_sweep(&base, &spec).unwrap().plans.len()
+        });
+        println!(
+            "    decode warm-start: plan_sweep vs per-line serving: {:.2}x",
+            line_by_line.median.as_secs_f64() / swept.median.as_secs_f64().max(1e-12)
+        );
+
+        // Deadline discipline (ROADMAP "tail-latency-grade serving"):
+        // the mixed trace again, now with per-request budgets — every
+        // fourth line gets a zero budget (shed at admission with a
+        // structured deadline_exceeded, no surface work), the rest a
+        // generous one (deadline met). The met/degraded/shed split is
+        // printed so a run's deadline behavior is visible at a glance.
+        let engine = MmeeEngine::native();
+        let deadlined: Vec<String> = lines
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let ms = if i % 4 == 0 { 0 } else { 600_000u64 };
+                format!(r#"{}, "deadline_ms": {ms}}}"#, &l[..l.len() - 1])
+            })
+            .collect();
+        let deadline_text = deadlined.join("\n");
+        let (dl, n_dl) = bench.once("serve_lines (deadline trace, cold)", || {
+            let mut out = Vec::new();
+            service::serve_lines(&engine, deadline_text.as_bytes(), &mut out).unwrap();
+            let text = String::from_utf8(out).unwrap();
+            let (mut met, mut degraded, mut shed) = (0usize, 0usize, 0usize);
+            for line in text.lines() {
+                let j = Json::parse(line).unwrap();
+                if j.get("error").is_some() {
+                    shed += 1;
+                } else if j.get("degraded").is_some() {
+                    degraded += 1;
+                } else {
+                    met += 1;
                 }
             }
-            served
+            println!("    deadlines: {met} met, {degraded} degraded, {shed} shed");
+            met + degraded + shed
         });
-        report_rates(&engine, n, s.median.as_secs_f64());
+        report_rates(&engine, n_dl, dl.median.as_secs_f64());
+
+        // Anytime degradation, forced: a 2-tile-block cancellation
+        // budget against a cold engine shows how much surface an
+        // interrupted pass still covers (degraded results are never
+        // memoized, so every repetition pays the same partial pass).
+        use mmee::coordinator::CancelToken;
+        let cold_engine = MmeeEngine::native();
+        let anytime_req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
+        let _ = bench.once("plan_cancellable (2 tile-block budget, cold)", || {
+            let token = CancelToken::after_checks(2);
+            let plan = cold_engine.plan_cancellable(&anytime_req, Some(&token)).unwrap();
+            assert!(plan.degraded, "a 2-block budget must degrade on a cold surface");
+            println!(
+                "    anytime: incumbent energy {:.3e} J after {} of {} tile blocks",
+                plan.solution.metrics.energy,
+                plan.stats.blocks_evaluated,
+                plan.stats.blocks_evaluated + plan.stats.blocks_cancelled,
+            );
+            1usize
+        });
     }
-    // Decode trace (dynamic shapes): an autoregressive client re-plans
-    // after every generated token, so L advances by one per request and
-    // NO line repeats a surface — the plan cache never hits. Serving
-    // the lines pays a cold build + pass per shape; `plan_sweep` chains
-    // delta builds and incumbent-seeded passes over the same shapes.
-    use mmee::search::{MappingRequest, SweepSpec};
-    let decode: Vec<String> = (0..16)
-        .map(|i| {
-            format!(
-                r#"{{"workload": "bert-base", "seq": {}, "objective": "latency", "accel": "accel1"}}"#,
-                512 + i
-            )
-        })
-        .collect();
-    let decode_text = decode.join("\n");
-    let engine = MmeeEngine::native();
-    let (line_by_line, n_dec) = bench.once("decode trace (16 steps, per-line)", || {
-        let mut out = Vec::new();
-        service::serve_lines(&engine, decode_text.as_bytes(), &mut out).unwrap()
-    });
-    report_rates(&engine, n_dec, line_by_line.median.as_secs_f64());
-    let engine = MmeeEngine::native();
-    let base = MappingRequest::preset("bert-base", 512, "accel1", Objective::Latency);
-    let spec = SweepSpec::seq((512..528).collect());
-    let (swept, _) = bench.once("decode trace (16 steps, plan_sweep)", || {
-        engine.plan_sweep(&base, &spec).unwrap().plans.len()
-    });
-    println!(
-        "    decode warm-start: plan_sweep vs per-line serving: {:.2}x",
-        line_by_line.median.as_secs_f64() / swept.median.as_secs_f64().max(1e-12)
-    );
-
-    // Deadline discipline (ROADMAP "tail-latency-grade serving"): the
-    // mixed trace again, now with per-request budgets — every fourth
-    // line gets a zero budget (shed at admission with a structured
-    // deadline_exceeded, no surface work), the rest a generous one
-    // (deadline met). The met/degraded/shed split is printed so a
-    // run's deadline behavior is visible at a glance.
-    use mmee::util::json::Json;
-    let engine = MmeeEngine::native();
-    let deadlined: Vec<String> = lines
-        .iter()
-        .enumerate()
-        .map(|(i, l)| {
-            let ms = if i % 4 == 0 { 0 } else { 600_000u64 };
-            format!(r#"{}, "deadline_ms": {ms}}}"#, &l[..l.len() - 1])
-        })
-        .collect();
-    let deadline_text = deadlined.join("\n");
-    let (dl, n_dl) = bench.once("serve_lines (deadline trace, cold)", || {
-        let mut out = Vec::new();
-        service::serve_lines(&engine, deadline_text.as_bytes(), &mut out).unwrap();
-        let text = String::from_utf8(out).unwrap();
-        let (mut met, mut degraded, mut shed) = (0usize, 0usize, 0usize);
-        for line in text.lines() {
-            let j = Json::parse(line).unwrap();
-            if j.get("error").is_some() {
-                shed += 1;
-            } else if j.get("degraded").is_some() {
-                degraded += 1;
-            } else {
-                met += 1;
-            }
-        }
-        println!("    deadlines: {met} met, {degraded} degraded, {shed} shed");
-        met + degraded + shed
-    });
-    report_rates(&engine, n_dl, dl.median.as_secs_f64());
-
-    // Anytime degradation, forced: a 2-tile-block cancellation budget
-    // against a cold engine shows how much surface an interrupted pass
-    // still covers (degraded results are never memoized, so every
-    // repetition pays the same partial pass).
-    use mmee::coordinator::CancelToken;
-    let cold_engine = MmeeEngine::native();
-    let anytime_req = MappingRequest::preset("bert-base", 512, "accel1", Objective::Energy);
-    let _ = bench.once("plan_cancellable (2 tile-block budget, cold)", || {
-        let token = CancelToken::after_checks(2);
-        let plan = cold_engine.plan_cancellable(&anytime_req, Some(&token)).unwrap();
-        assert!(plan.degraded, "a 2-block budget must degrade on a cold surface");
-        println!(
-            "    anytime: incumbent energy {:.3e} J after {} of {} tile blocks",
-            plan.solution.metrics.energy,
-            plan.stats.blocks_evaluated,
-            plan.stats.blocks_evaluated + plan.stats.blocks_cancelled,
-        );
-        1usize
-    });
 
     println!(
         "\nbatched vs sequential (cold): {:.2}x  |  concurrent vs sequential (cold): {:.2}x",
         seq.median.as_secs_f64() / bat.median.as_secs_f64().max(1e-12),
         seq.median.as_secs_f64() / conc.median.as_secs_f64().max(1e-12),
     );
+
+    let ab = front_end_ab(smoke);
+    let report = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("front_end_ab", ab),
+        (
+            "modes",
+            Json::obj(vec![
+                ("batched_s", Json::num(bat.median.as_secs_f64())),
+                ("concurrent_s", Json::num(conc.median.as_secs_f64())),
+                ("sequential_s", Json::num(seq.median.as_secs_f64())),
+                ("warm_s", Json::num(warm.median.as_secs_f64())),
+            ]),
+        ),
+        ("smoke", Json::Bool(smoke)),
+        ("trace_requests", Json::num(lines.len() as f64)),
+    ]);
+    let text = format!("{report}\n");
+    for key in [
+        "front_end_ab",
+        "ballast_conns",
+        "net",
+        "p50_ms",
+        "p99_ms",
+        "req_per_s",
+        "p99_improvement",
+        "p99_target",
+        "met",
+        "sequential_s",
+        "warm_s",
+    ] {
+        assert!(text.contains(key), "BENCH_serve.json schema lost key {key}");
+    }
+    std::fs::write("BENCH_serve.json", &text).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json{}", if smoke { "  [smoke ok]" } else { "" });
 }

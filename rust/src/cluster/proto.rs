@@ -20,6 +20,11 @@ pub const PING_LINE: &str = r#"{"op": "ping"}"#;
 /// Stats request forwarded to every worker by the front-end aggregator.
 pub const STATS_LINE: &str = r#"{"op": "stats"}"#;
 
+/// Metrics request forwarded to every worker by the front-end
+/// aggregator; answers carry sparse latency-histogram buckets that the
+/// router merges bucket-wise for exact cluster-level percentiles.
+pub const METRICS_LINE: &str = r#"{"op": "metrics"}"#;
+
 /// The one line a worker prints to stdout once its listener is bound:
 /// `{"ready": {"addr": "127.0.0.1:PORT", "pid": N}}`.
 pub fn ready_line(addr: SocketAddr) -> String {

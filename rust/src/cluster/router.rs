@@ -32,6 +32,7 @@
 //! urgent job's remaining budget, so the retry loop converts
 //! worker-failure budgets into remaining-deadline budgets.
 
+use std::collections::BTreeMap;
 use std::io::{self, BufRead, BufReader, Write};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -43,6 +44,7 @@ use crate::coordinator::pool::{BoundedQueue, Sequencer};
 use crate::coordinator::service::{ping_json, Control, Request, Response};
 use crate::error::MmeeError;
 use crate::search::plan_shard_hash;
+use crate::util::hist::HistSnapshot;
 use crate::util::json::Json;
 use crate::util::shard::shard_of;
 
@@ -242,6 +244,10 @@ fn dispatch(
         }
         Ok(Request::Control(Control::Stats)) => {
             seq.push(seq_no, cluster_stats_line(pool, queues));
+            1
+        }
+        Ok(Request::Control(Control::Metrics)) => {
+            seq.push(seq_no, cluster_metrics_line(pool, queues));
             1
         }
         Ok(Request::One(req)) => {
@@ -460,6 +466,75 @@ fn cluster_stats_line(pool: &Arc<WorkerPool>, queues: &[BoundedQueue<Job>]) -> S
     ]);
     let stats = Json::obj(vec![("cluster", cluster), ("workers", Json::arr(workers))]);
     Json::obj(vec![("stats", stats)]).to_string()
+}
+
+/// Answer `{"op": "metrics"}` at the front-end: per-worker latency
+/// histograms fetched over short-lived connections and merged
+/// *bucket-wise* — quantiles over summed bucket counts are exact,
+/// unlike averaging per-worker percentiles — plus summed outcome and
+/// connection counters. Each worker's full report also rides along
+/// under `workers` for per-shard drill-down.
+fn cluster_metrics_line(pool: &Arc<WorkerPool>, queues: &[BoundedQueue<Job>]) -> String {
+    const OPS: [&str; 3] = ["batch", "control", "plan"];
+    let mut merged = vec![HistSnapshot::empty(); OPS.len()];
+    let mut outcomes: BTreeMap<String, f64> = BTreeMap::new();
+    let mut connections: BTreeMap<String, f64> = BTreeMap::new();
+    let workers: Vec<Json> = (0..pool.num_workers())
+        .map(|i| {
+            let mut fields = vec![
+                ("queue_depth", Json::num(queues[i].len() as f64)),
+                ("worker", Json::num(i as f64)),
+            ];
+            match exchange_line(pool, i, proto::METRICS_LINE, Duration::from_secs(5)) {
+                Ok(line) => {
+                    let m = Json::parse(line.trim()).ok().and_then(|j| j.get("metrics").cloned());
+                    if let Some(m) = m {
+                        for (key, acc) in OPS.iter().zip(merged.iter_mut()) {
+                            let snap = m
+                                .get("ops")
+                                .and_then(|ops| ops.get(key))
+                                .and_then(HistSnapshot::from_json);
+                            if let Some(snap) = snap {
+                                acc.merge(&snap);
+                            }
+                        }
+                        accumulate(&mut outcomes, m.get("outcomes"));
+                        accumulate(&mut connections, m.get("connections"));
+                        fields.push(("metrics", m));
+                    }
+                }
+                Err(e) => fields.push(("error", Json::str(e.to_string()))),
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let ops =
+        Json::obj(OPS.iter().zip(merged.iter()).map(|(key, acc)| (*key, acc.to_json())).collect());
+    let cluster = Json::obj(vec![
+        ("connections", counters_json(&connections)),
+        ("ops", ops),
+        ("outcomes", counters_json(&outcomes)),
+        ("workers", Json::num(pool.num_workers() as f64)),
+    ]);
+    let metrics = Json::obj(vec![("cluster", cluster), ("workers", Json::arr(workers))]);
+    Json::obj(vec![("metrics", metrics)]).to_string()
+}
+
+/// Sum a flat `{name: number}` object into the accumulator (missing or
+/// non-numeric fields are skipped, so a degraded worker report can't
+/// poison the merge).
+fn accumulate(acc: &mut BTreeMap<String, f64>, obj: Option<&Json>) {
+    if let Some(Json::Obj(o)) = obj {
+        for (k, v) in o {
+            if let Some(x) = v.as_f64() {
+                *acc.entry(k.clone()).or_insert(0.0) += x;
+            }
+        }
+    }
+}
+
+fn counters_json(acc: &BTreeMap<String, f64>) -> Json {
+    Json::Obj(acc.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect())
 }
 
 #[cfg(test)]

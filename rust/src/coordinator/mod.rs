@@ -7,13 +7,20 @@
 //! every surface pass (with the `parallel_chunks` / [`pool::run_indexed`]
 //! shims) plus the bounded-queue/sequencer pair behind the concurrent
 //! serving loops; [`service`] speaks the JSON-lines wire format (single
-//! requests and batch arrays) over stdin or TCP.
+//! requests and batch arrays) over stdin or TCP; [`net`] is the
+//! readiness-based (epoll) TCP front end selected with `MMEE_NET=epoll`,
+//! which serves the same wire bytes without a thread per connection.
 
+pub mod net;
 pub mod pool;
 pub mod service;
 
+pub use net::NetMode;
 pub use pool::{
     parallel_chunks, run_indexed, run_indexed_cancellable, BoundedQueue, CancelToken, EvalPool,
     FillBuf, PushError, Sequencer,
 };
-pub use service::{serve_lines, serve_lines_concurrent, serve_tcp, Control, Request, Response};
+pub use service::{
+    handle_metered, metrics_json, serve_lines, serve_lines_concurrent, serve_tcp, serve_tcp_with,
+    Control, Request, Response, ServiceMetrics,
+};

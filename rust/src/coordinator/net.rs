@@ -1,0 +1,848 @@
+//! Readiness-based TCP front end (`MMEE_NET=epoll`): a Linux
+//! edge-triggered epoll event loop that serves the exact wire protocol
+//! of [`crate::coordinator::service`] without a thread per connection.
+//!
+//! ## Why
+//!
+//! The thread-per-connection front end pins one pool worker for the
+//! whole life of a connection — an *idle* keep-alive client costs a
+//! blocked thread, and tail latency collapses once connections
+//! outnumber the pool. Here a connection costs a few hundred bytes of
+//! state: N event-loop threads (`MMEE_NET_LOOPS`, default 2) multiplex
+//! every socket, decode requests in place, and hand them to `workers`
+//! plan threads through the same bounded queue discipline the rest of
+//! the stack uses. Thread count is `loops + workers`, independent of
+//! connection count.
+//!
+//! ## Mechanics
+//!
+//! * **Raw syscalls, zero dependencies** — `epoll_create1` /
+//!   `epoll_ctl` / `epoll_wait` / `eventfd` are declared `extern "C"`
+//!   against libc (which std already links); sockets stay ordinary
+//!   nonblocking [`std::net::TcpStream`]s, so all the actual I/O goes
+//!   through std's vetted read/`write_vectored` paths.
+//! * **Listener sharing** — every loop registers the listener
+//!   level-triggered with `EPOLLEXCLUSIVE`, so the kernel wakes ONE
+//!   loop per pending connection instead of thundering all of them.
+//! * **Connection state machines** — each connection owns a grow-only
+//!   read buffer framed in place (newline scan over the buffer; no
+//!   per-request `String` on the hot path), a pipeline window
+//!   (backpressure: at most [`MAX_INFLIGHT`] undecided requests per
+//!   connection), a reorder map that restores request order however
+//!   the plan workers finish, and a write queue flushed with vectored
+//!   writes under `EPOLLOUT` backpressure.
+//! * **Edge-triggered discipline** — conn sockets are registered once
+//!   with `EPOLLIN | EPOLLOUT | EPOLLRDHUP | EPOLLET` (no per-event
+//!   `EPOLL_CTL_MOD` churn): reads always drain to `WouldBlock`, and
+//!   writes are attempted eagerly after every enqueue so a pending
+//!   `EPOLLOUT` edge is only ever *needed* after a genuine
+//!   `WouldBlock`.
+//! * **eventfd wakeups** — plan workers push completions into the
+//!   owning loop's mailbox and write the loop's `eventfd`; the loop
+//!   re-arms writers when it wakes. No spinning, no wake pipes per
+//!   connection.
+//! * **Deadlines/priorities/overload ride through unchanged** —
+//!   requests are parsed at framing time (so `deadline_ms` starts
+//!   counting while the request waits in the plan queue, exactly as
+//!   documented), and a full plan queue answers with the same
+//!   structured `overloaded` error the threads front end uses — per
+//!   *request* here, since no connection needs shedding when
+//!   connections are cheap.
+//! * **Graceful drain** — once `max_conns` connections have been
+//!   accepted (or accept fails), every loop deregisters the listener,
+//!   keeps serving until each remaining connection has reached EOF
+//!   with every response flushed, and only then closes. Zero accepted
+//!   requests are ever dropped.
+//!
+//! Non-Linux builds fall back to the threads front end (the wire
+//! bytes are identical either way); [`NetMode::resolved`] is the one
+//! place that decides.
+
+/// Which connection front end [`crate::coordinator::service::serve_tcp`]
+/// uses. Selected by `MMEE_NET` (`threads` | `epoll`), default
+/// `threads`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetMode {
+    /// Thread-per-connection pool (the portable default).
+    Threads,
+    /// Edge-triggered epoll event loops (Linux only).
+    Epoll,
+}
+
+impl NetMode {
+    /// Wire/metrics name (`metrics.net` reports this).
+    pub fn name(self) -> &'static str {
+        match self {
+            NetMode::Threads => "threads",
+            NetMode::Epoll => "epoll",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "threads" | "thread" => Some(NetMode::Threads),
+            "epoll" => Some(NetMode::Epoll),
+            _ => None,
+        }
+    }
+
+    /// Read `MMEE_NET`. Deliberately re-read on every server start (no
+    /// `OnceLock`): one process can host both front ends — the A/B
+    /// bench and the equivalence tests do. Unknown values fall back to
+    /// `threads` with a note on stderr.
+    pub fn from_env() -> NetMode {
+        match std::env::var("MMEE_NET") {
+            Err(_) => NetMode::Threads,
+            Ok(v) => NetMode::parse(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "mmee serve: unknown MMEE_NET='{v}' (want threads|epoll), using threads"
+                );
+                NetMode::Threads
+            }),
+        }
+    }
+
+    /// Can `Epoll` run on this build target?
+    pub fn epoll_supported() -> bool {
+        cfg!(target_os = "linux")
+    }
+
+    /// Downgrade `Epoll` to `Threads` off-Linux. The wire protocol is
+    /// byte-identical either way, so this is an implementation swap,
+    /// not a behavior change.
+    pub fn resolved(self) -> NetMode {
+        if self == NetMode::Epoll && !NetMode::epoll_supported() {
+            eprintln!("mmee serve: MMEE_NET=epoll needs Linux, using the threads front end");
+            return NetMode::Threads;
+        }
+        self
+    }
+}
+
+/// Per-connection pipeline window: at most this many requests may be
+/// in flight or reordering per connection before framing pauses (the
+/// unread bytes simply stay in the connection's buffer — TCP
+/// backpressure does the rest).
+pub const MAX_INFLIGHT: usize = 64;
+
+#[cfg(target_os = "linux")]
+pub(crate) use linux::serve_epoll;
+
+/// Stub for non-Linux targets. Unreachable through [`serve_tcp`]
+/// (`NetMode::resolved` downgrades first); callers holding a raw
+/// `NetMode::Epoll` get a structured error.
+///
+/// [`serve_tcp`]: crate::coordinator::service::serve_tcp
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn serve_epoll(
+    _engine: &crate::search::MmeeEngine,
+    _listener: std::net::TcpListener,
+    _max_conns: Option<usize>,
+    _workers: usize,
+    _metrics: &crate::coordinator::service::ServiceMetrics,
+) -> std::io::Result<usize> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "MMEE_NET=epoll requires Linux (use MMEE_NET=threads)",
+    ))
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use std::collections::{BTreeMap, HashMap, VecDeque};
+    use std::io::{self, IoSlice, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::os::raw::{c_int, c_uint, c_void};
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    use super::MAX_INFLIGHT;
+    use crate::coordinator::pool::{BoundedQueue, PushError};
+    use crate::coordinator::service::{self, OpClass, Request, Response, ServiceMetrics};
+    use crate::error::MmeeError;
+    use crate::search::MmeeEngine;
+
+    // ---- raw epoll/eventfd FFI (libc is already linked by std) ----
+
+    /// `struct epoll_event`; packed on x86_64 (the kernel ABI).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLLEXCLUSIVE: u32 = 1 << 28;
+    const EPOLLET: u32 = 1 << 31;
+    const EFD_CLOEXEC: c_int = 0o2000000;
+    const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// Owned raw fd (epoll instances and eventfds; sockets stay inside
+    /// std types). Closed on drop — which only happens when
+    /// `serve_epoll`'s scope is fully joined, so a worker's late wake
+    /// can never hit a recycled fd number.
+    struct Fd(c_int);
+
+    impl Drop for Fd {
+        fn drop(&mut self) {
+            let _ = unsafe { close(self.0) };
+        }
+    }
+
+    fn cvt(ret: c_int) -> io::Result<c_int> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    fn ep_add(ep: c_int, fd: c_int, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        cvt(unsafe { epoll_ctl(ep, EPOLL_CTL_ADD, fd, &mut ev) }).map(|_| ())
+    }
+
+    fn ep_del(ep: c_int, fd: c_int) -> io::Result<()> {
+        // A dummy event: pre-2.6.9 kernels reject a null pointer.
+        let mut ev = EpollEvent { events: 0, data: 0 };
+        cvt(unsafe { epoll_ctl(ep, EPOLL_CTL_DEL, fd, &mut ev) }).map(|_| ())
+    }
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKE: u64 = 1;
+    const FIRST_CONN_TOKEN: u64 = 2;
+
+    /// Socket buffers per vectored write.
+    const MAX_IOV: usize = 16;
+    const READ_CHUNK: usize = 4096;
+
+    /// Event loops per epoll server: `MMEE_NET_LOOPS`, default 2,
+    /// clamped to 1..=16. Two loops saturate the framing side long
+    /// before the plan workers saturate; more only helps at extreme
+    /// accept/framing rates.
+    fn event_loops() -> usize {
+        std::env::var("MMEE_NET_LOOPS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .map(|n| n.clamp(1, 16))
+            .unwrap_or(2)
+    }
+
+    /// A finished response on its way back to the owning event loop.
+    struct Completion {
+        token: u64,
+        seq: u64,
+        line: String,
+        requests: usize,
+    }
+
+    /// A decoded request headed for the plan workers.
+    struct Job {
+        loop_id: usize,
+        token: u64,
+        seq: u64,
+        req: Request,
+        t0: Instant,
+    }
+
+    /// One event loop's kernel handles + completion mailbox.
+    struct LoopShared {
+        ep: Fd,
+        wake: Fd,
+        completions: Mutex<Vec<Completion>>,
+    }
+
+    impl LoopShared {
+        /// Signal the loop's eventfd. Failure is benign: the loop has
+        /// either already been woken or is already draining the
+        /// mailbox.
+        fn wake(&self) {
+            let one: u64 = 1;
+            let _ = unsafe { write(self.wake.0, &one as *const u64 as *const c_void, 8) };
+        }
+    }
+
+    struct Ctx<'a> {
+        engine: &'a MmeeEngine,
+        metrics: &'a ServiceMetrics,
+        listener: TcpListener,
+        listener_fd: c_int,
+        max_conns: Option<usize>,
+        loops: Vec<LoopShared>,
+        queue: BoundedQueue<Job>,
+        accepted: AtomicUsize,
+        served: AtomicUsize,
+        draining: AtomicBool,
+        accept_err: Mutex<Option<io::Error>>,
+        next_token: AtomicU64,
+    }
+
+    impl Ctx<'_> {
+        /// Stop accepting everywhere: set the flag and wake every loop
+        /// so each deregisters the listener and starts its drain.
+        fn start_drain(&self) {
+            self.draining.store(true, Ordering::SeqCst);
+            for l in &self.loops {
+                l.wake();
+            }
+        }
+
+        fn note_accept_err(&self, e: io::Error) {
+            self.accept_err.lock().unwrap_or_else(|p| p.into_inner()).get_or_insert(e);
+        }
+    }
+
+    /// Per-connection state machine. Owned by exactly one event loop;
+    /// plan workers only ever see the decoded [`Request`]s.
+    struct Conn {
+        stream: TcpStream,
+        /// Grow-only read buffer; bytes `parsed..rlen` are unframed.
+        rbuf: Vec<u8>,
+        rlen: usize,
+        parsed: usize,
+        /// Next request seq to assign / next response seq to emit.
+        next_seq: u64,
+        next_write: u64,
+        /// Out-of-order completions: seq -> (line, requests answered).
+        ready: BTreeMap<u64, (String, usize)>,
+        /// Wire bytes awaiting the socket; head partially written.
+        wq: VecDeque<Vec<u8>>,
+        wq_head: usize,
+        /// Requests at the plan workers.
+        inflight: usize,
+        /// Mirrors the metrics busy gauge (idle = open - busy).
+        busy: bool,
+        eof: bool,
+        dead: bool,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                rbuf: vec![0; READ_CHUNK],
+                rlen: 0,
+                parsed: 0,
+                next_seq: 0,
+                next_write: 0,
+                ready: BTreeMap::new(),
+                wq: VecDeque::new(),
+                wq_head: 0,
+                inflight: 0,
+                busy: false,
+                eof: false,
+                dead: false,
+            }
+        }
+
+        /// Make room to read: reclaim the consumed prefix first, and
+        /// only grow when one line genuinely exceeds the buffer.
+        fn make_room(&mut self) {
+            if self.parsed > 0 {
+                self.rbuf.copy_within(self.parsed..self.rlen, 0);
+                self.rlen -= self.parsed;
+                self.parsed = 0;
+            }
+            if self.rlen == self.rbuf.len() {
+                let doubled = self.rbuf.len().max(READ_CHUNK / 2) * 2;
+                self.rbuf.resize(doubled, 0);
+            }
+        }
+
+        fn pipeline_full(&self) -> bool {
+            self.inflight + self.ready.len() >= MAX_INFLIGHT
+        }
+    }
+
+    /// Serve the epoll front end until drain completes. Returns
+    /// requests served (batch lines count each element; per-request
+    /// `overloaded` rejections count zero, matching the threads front
+    /// end's accounting for shed work).
+    pub(crate) fn serve_epoll(
+        engine: &MmeeEngine,
+        listener: TcpListener,
+        max_conns: Option<usize>,
+        workers: usize,
+        metrics: &ServiceMetrics,
+    ) -> io::Result<usize> {
+        listener.set_nonblocking(true)?;
+        let listener_fd = listener.as_raw_fd();
+        let nloops = event_loops();
+        let mut loops = Vec::with_capacity(nloops);
+        for _ in 0..nloops {
+            let ep = Fd(cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?);
+            let wake = Fd(cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?);
+            // The wake channel is level-triggered: a completion pushed
+            // while the loop is busy stays visible at the next wait.
+            ep_add(ep.0, wake.0, EPOLLIN, TOKEN_WAKE)?;
+            ep_add(ep.0, listener_fd, EPOLLIN | EPOLLEXCLUSIVE, TOKEN_LISTENER)?;
+            loops.push(LoopShared { ep, wake, completions: Mutex::new(Vec::new()) });
+        }
+        let ctx = Ctx {
+            engine,
+            metrics,
+            listener,
+            listener_fd,
+            max_conns,
+            loops,
+            queue: BoundedQueue::new((workers * 2).max(4)),
+            accepted: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            accept_err: Mutex::new(None),
+            next_token: AtomicU64::new(FIRST_CONN_TOKEN),
+        };
+        if ctx.max_conns == Some(0) {
+            ctx.start_drain();
+        }
+        let mut loop_panic = false;
+        std::thread::scope(|scope| {
+            let ctx = &ctx;
+            for _ in 0..workers {
+                scope.spawn(move || worker_loop(ctx));
+            }
+            let handles: Vec<_> =
+                (0..nloops).map(|i| scope.spawn(move || run_loop(ctx, i))).collect();
+            for h in handles {
+                loop_panic |= h.join().is_err();
+            }
+            // Every loop has drained its connections: nothing pushes
+            // jobs anymore; release the plan workers.
+            ctx.queue.close();
+        });
+        if let Some(e) = ctx.accept_err.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            return Err(e);
+        }
+        if loop_panic {
+            return Err(io::Error::other("epoll event loop panicked"));
+        }
+        Ok(ctx.served.load(Ordering::Relaxed))
+    }
+
+    /// Plan worker: pop decoded requests, plan them on the shared
+    /// engine, mail the response back to the owning loop and ring its
+    /// eventfd.
+    fn worker_loop(ctx: &Ctx<'_>) {
+        while let Some(job) = ctx.queue.pop() {
+            ctx.metrics.set_queue_depth(ctx.queue.len());
+            let resp = service::handle_metered(ctx.engine, ctx.metrics, &job.req);
+            let requests = resp.count();
+            ctx.metrics.record(OpClass::of(&job.req), job.t0.elapsed(), &resp);
+            let target = &ctx.loops[job.loop_id];
+            target
+                .completions
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(Completion { token: job.token, seq: job.seq, line: resp.to_line(), requests });
+            target.wake();
+        }
+    }
+
+    /// One event loop: wait, dispatch, repeat until drained.
+    fn run_loop(ctx: &Ctx<'_>, me: usize) {
+        let ls = &ctx.loops[me];
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 256];
+        let mut accepting = true;
+        loop {
+            if ctx.draining.load(Ordering::SeqCst) {
+                if accepting {
+                    // EPOLLEXCLUSIVE forbids MOD but allows DEL.
+                    let _ = ep_del(ls.ep.0, ctx.listener_fd);
+                    accepting = false;
+                }
+                deliver_completions(ctx, me, &mut conns);
+                if conns.is_empty() {
+                    return;
+                }
+            }
+            let n = unsafe {
+                epoll_wait(ls.ep.0, events.as_mut_ptr(), events.len() as c_int, -1)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                ctx.note_accept_err(e);
+                ctx.start_drain();
+                continue;
+            }
+            for ev in &events[..n as usize] {
+                let (token, bits) = (ev.data, ev.events);
+                match token {
+                    TOKEN_LISTENER => accept_ready(ctx, me, &mut conns, accepting),
+                    TOKEN_WAKE => {
+                        drain_eventfd(ls.wake.0);
+                        deliver_completions(ctx, me, &mut conns);
+                    }
+                    _ => conn_event(ctx, me, &mut conns, token, bits),
+                }
+            }
+        }
+    }
+
+    fn drain_eventfd(fd: c_int) {
+        let mut counter: u64 = 0;
+        // One read zeroes the (nonblocking) counter.
+        let _ = unsafe { read(fd, &mut counter as *mut u64 as *mut c_void, 8) };
+    }
+
+    /// Accept until `WouldBlock` (or drain starts). Level-triggered +
+    /// `EPOLLEXCLUSIVE` means pending connections re-notify some loop
+    /// even if this one stops early.
+    fn accept_ready(ctx: &Ctx<'_>, me: usize, conns: &mut HashMap<u64, Conn>, accepting: bool) {
+        if !accepting {
+            return;
+        }
+        while !ctx.draining.load(Ordering::SeqCst) {
+            match ctx.listener.accept() {
+                Ok((stream, _)) => {
+                    let total = ctx.accepted.fetch_add(1, Ordering::SeqCst) + 1;
+                    register_conn(ctx, me, conns, stream);
+                    if ctx.max_conns.is_some_and(|m| total >= m) {
+                        ctx.start_drain();
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Fatal accept error: report it and drain, exactly
+                    // like the threads front end's accept loop.
+                    ctx.note_accept_err(e);
+                    ctx.start_drain();
+                    break;
+                }
+            }
+        }
+    }
+
+    fn register_conn(ctx: &Ctx<'_>, me: usize, conns: &mut HashMap<u64, Conn>, s: TcpStream) {
+        if s.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = s.set_nodelay(true);
+        let token = ctx.next_token.fetch_add(1, Ordering::Relaxed);
+        let fd = s.as_raw_fd();
+        ctx.metrics.conn_accepted();
+        // Registered ONCE, edge-triggered, with both directions armed:
+        // the kernel reports current readiness as the first edge, so
+        // bytes that raced ahead of the ADD are not lost.
+        let flags = EPOLLIN | EPOLLOUT | EPOLLRDHUP | EPOLLET;
+        if ep_add(ctx.loops[me].ep.0, fd, flags, token).is_err() {
+            ctx.metrics.conn_closed();
+            return;
+        }
+        conns.insert(token, Conn::new(s));
+    }
+
+    /// Dispatch one readiness event for a connection, then reap it if
+    /// it finished or died.
+    fn conn_event(ctx: &Ctx<'_>, me: usize, conns: &mut HashMap<u64, Conn>, token: u64, bits: u32) {
+        if let Some(conn) = conns.get_mut(&token) {
+            if bits & (EPOLLERR | EPOLLHUP) != 0 {
+                conn.dead = true;
+            }
+            if !conn.dead && bits & (EPOLLIN | EPOLLRDHUP) != 0 {
+                read_ready(ctx, me, token, conn);
+            }
+            if !conn.dead && bits & EPOLLOUT != 0 {
+                flush_writes(conn);
+            }
+        }
+        maybe_remove(ctx, conns, token);
+    }
+
+    /// Drain the socket to `WouldBlock` (edge-triggered contract),
+    /// then frame and dispatch whatever arrived.
+    fn read_ready(ctx: &Ctx<'_>, me: usize, token: u64, conn: &mut Conn) {
+        loop {
+            if conn.rlen == conn.rbuf.len() {
+                conn.make_room();
+            }
+            match (&conn.stream).read(&mut conn.rbuf[conn.rlen..]) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => conn.rlen += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        pump_conn(ctx, me, token, conn);
+    }
+
+    /// Frame → dispatch → order → write: the whole per-connection
+    /// pipeline, run after reads and after completion deliveries.
+    fn pump_conn(ctx: &Ctx<'_>, me: usize, token: u64, conn: &mut Conn) {
+        frame_requests(ctx, me, token, conn);
+        flush_ready(ctx, conn);
+        flush_writes(conn);
+    }
+
+    /// Parse one framed line (borrowing the read buffer in place).
+    /// `None` for blank lines.
+    fn parse_slice(raw: &[u8]) -> Option<Result<Request, MmeeError>> {
+        let raw = raw.trim_ascii();
+        if raw.is_empty() {
+            return None;
+        }
+        Some(match std::str::from_utf8(raw) {
+            Ok(s) => Request::parse(s),
+            Err(_) => Err(MmeeError::Parse("request line is not valid UTF-8".into())),
+        })
+    }
+
+    /// Frame complete lines out of the read buffer and dispatch each,
+    /// bounded by the pipeline window. Zero-copy: requests are parsed
+    /// straight out of `rbuf`; only the decoded [`Request`] travels.
+    fn frame_requests(ctx: &Ctx<'_>, me: usize, token: u64, conn: &mut Conn) {
+        while !conn.pipeline_full() {
+            let window = &conn.rbuf[conn.parsed..conn.rlen];
+            let Some(pos) = window.iter().position(|&b| b == b'\n') else {
+                break;
+            };
+            let start = conn.parsed;
+            conn.parsed = start + pos + 1;
+            let parsed = parse_slice(&conn.rbuf[start..start + pos]);
+            if let Some(p) = parsed {
+                submit(ctx, me, token, conn, p);
+            }
+        }
+        // A final unterminated line becomes a request at EOF —
+        // `BufRead::lines` on the threads path does the same.
+        if conn.eof && !conn.pipeline_full() && conn.parsed < conn.rlen {
+            let tail = &conn.rbuf[conn.parsed..conn.rlen];
+            if !tail.contains(&b'\n') {
+                let parsed = parse_slice(tail);
+                conn.parsed = conn.rlen;
+                if let Some(p) = parsed {
+                    submit(ctx, me, token, conn, p);
+                }
+            }
+        }
+        if conn.parsed == conn.rlen {
+            // Everything framed: rewind so the buffer never grows for
+            // well-behaved clients.
+            conn.parsed = 0;
+            conn.rlen = 0;
+        }
+    }
+
+    /// Route one parsed request: control ops and parse errors answer
+    /// on the loop thread; mapping work goes to the plan workers with
+    /// per-request overload shedding.
+    fn submit(
+        ctx: &Ctx<'_>,
+        me: usize,
+        token: u64,
+        conn: &mut Conn,
+        parsed: Result<Request, MmeeError>,
+    ) {
+        let seq = conn.next_seq;
+        conn.next_seq += 1;
+        let t0 = Instant::now();
+        match parsed {
+            Err(e) => {
+                let resp = Response::Error(e);
+                ctx.metrics.record(OpClass::Plan, t0.elapsed(), &resp);
+                conn.ready.insert(seq, (resp.to_line(), 1));
+            }
+            Ok(req @ Request::Control(_)) => {
+                // Cheap and latency-sensitive: answered inline so a
+                // metrics/ping probe never queues behind plan work.
+                let resp = service::handle_metered(ctx.engine, ctx.metrics, &req);
+                let requests = resp.count();
+                ctx.metrics.record(OpClass::Control, t0.elapsed(), &resp);
+                conn.ready.insert(seq, (resp.to_line(), requests));
+            }
+            Ok(req) => {
+                match ctx.queue.try_push(Job { loop_id: me, token, seq, req, t0 }) {
+                    Ok(()) => {
+                        conn.inflight += 1;
+                        ctx.metrics.set_queue_depth(ctx.queue.len());
+                        if !conn.busy {
+                            conn.busy = true;
+                            ctx.metrics.conn_busy(true);
+                        }
+                    }
+                    Err(PushError::Full(job)) => {
+                        // Same structured rejection the threads front
+                        // end sheds with — per request, not per
+                        // connection, because connections are cheap
+                        // here. Counts zero toward `served`, matching
+                        // the threads path's shed accounting.
+                        let err = MmeeError::Overloaded { pending: ctx.queue.len() };
+                        let resp = Response::Error(err);
+                        ctx.metrics.record(OpClass::of(&job.req), job.t0.elapsed(), &resp);
+                        conn.ready.insert(seq, (resp.to_line(), 0));
+                    }
+                    Err(PushError::Closed(_)) => {
+                        let resp = Response::Error(MmeeError::Io("server draining".into()));
+                        conn.ready.insert(seq, (resp.to_line(), 0));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move completed responses into the write queue in request order.
+    fn flush_ready(ctx: &Ctx<'_>, conn: &mut Conn) {
+        while let Some((line, requests)) = conn.ready.remove(&conn.next_write) {
+            conn.next_write += 1;
+            ctx.served.fetch_add(requests, Ordering::Relaxed);
+            let mut bytes = line.into_bytes();
+            bytes.push(b'\n');
+            conn.wq.push_back(bytes);
+        }
+        if conn.inflight == 0 && conn.busy {
+            conn.busy = false;
+            ctx.metrics.conn_busy(false);
+        }
+    }
+
+    /// Vectored-write the queue until empty or `WouldBlock`. Always
+    /// attempted eagerly after enqueue — an `EPOLLOUT` edge is only
+    /// relied on after a genuine `WouldBlock`, which is exactly when
+    /// the kernel guarantees one.
+    fn flush_writes(conn: &mut Conn) {
+        while !conn.wq.is_empty() {
+            let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity(conn.wq.len().min(MAX_IOV));
+            for (i, buf) in conn.wq.iter().take(MAX_IOV).enumerate() {
+                let slice = if i == 0 { &buf[conn.wq_head..] } else { &buf[..] };
+                iov.push(IoSlice::new(slice));
+            }
+            match (&conn.stream).write_vectored(&iov) {
+                Ok(0) => {
+                    conn.dead = true;
+                    return;
+                }
+                Ok(mut n) => {
+                    while n > 0 {
+                        let head_left = conn.wq[0].len() - conn.wq_head;
+                        if n >= head_left {
+                            n -= head_left;
+                            conn.wq.pop_front();
+                            conn.wq_head = 0;
+                        } else {
+                            conn.wq_head += n;
+                            n = 0;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Deliver the mailbox: hand each completion to its connection's
+    /// reorder map, then pump every touched connection (framing may
+    /// resume now that pipeline room opened).
+    fn deliver_completions(ctx: &Ctx<'_>, me: usize, conns: &mut HashMap<u64, Conn>) {
+        let batch = std::mem::take(
+            &mut *ctx.loops[me].completions.lock().unwrap_or_else(|p| p.into_inner()),
+        );
+        if batch.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::with_capacity(batch.len());
+        for c in batch {
+            // The connection may have died while its request was in
+            // flight; its completion is simply dropped.
+            if let Some(conn) = conns.get_mut(&c.token) {
+                conn.inflight -= 1;
+                conn.ready.insert(c.seq, (c.line, c.requests));
+                touched.push(c.token);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for token in touched {
+            if let Some(conn) = conns.get_mut(&token) {
+                pump_conn(ctx, me, token, conn);
+            }
+            maybe_remove(ctx, conns, token);
+        }
+    }
+
+    /// Reap a connection that died, or finished cleanly: EOF seen,
+    /// every framed request answered, every byte flushed. Dropping the
+    /// `TcpStream` closes the fd, which the kernel auto-deregisters
+    /// from epoll.
+    fn maybe_remove(ctx: &Ctx<'_>, conns: &mut HashMap<u64, Conn>, token: u64) {
+        let Some(conn) = conns.get(&token) else {
+            return;
+        };
+        let finished = conn.eof
+            && conn.inflight == 0
+            && conn.ready.is_empty()
+            && conn.wq.is_empty()
+            && conn.parsed == conn.rlen;
+        if conn.dead || finished {
+            let conn = conns.remove(&token).expect("checked above");
+            if conn.busy {
+                ctx.metrics.conn_busy(false);
+            }
+            ctx.metrics.conn_closed();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::NetMode;
+
+    #[test]
+    fn mode_parsing_and_names() {
+        assert_eq!(NetMode::parse("epoll"), Some(NetMode::Epoll));
+        assert_eq!(NetMode::parse(" THREADS "), Some(NetMode::Threads));
+        assert_eq!(NetMode::parse("thread"), Some(NetMode::Threads));
+        assert_eq!(NetMode::parse("uring"), None);
+        assert_eq!(NetMode::Epoll.name(), "epoll");
+        assert_eq!(NetMode::Threads.name(), "threads");
+        // `resolved` is the identity on Linux and a downgrade elsewhere.
+        let r = NetMode::Epoll.resolved();
+        if NetMode::epoll_supported() {
+            assert_eq!(r, NetMode::Epoll);
+        } else {
+            assert_eq!(r, NetMode::Threads);
+        }
+        assert_eq!(NetMode::Threads.resolved(), NetMode::Threads);
+    }
+}

@@ -98,6 +98,7 @@
 //! ```json
 //! {"op": "ping"}
 //! {"op": "stats"}
+//! {"op": "metrics"}
 //! ```
 //!
 //! `ping` answers `{"ok": true, "op": "ping"}` (liveness — the cluster
@@ -105,6 +106,49 @@
 //! object with the engine's backend name, plan/boundary cache
 //! hit/miss counters, and cold boundary-build count (the cluster
 //! front-end aggregates these across workers).
+//!
+//! `metrics` answers a `{"metrics": {...}}` snapshot of the *serving
+//! loop* this connection is attached to:
+//!
+//! ```json
+//! {"metrics": {
+//!    "connections": {"accepted": 7, "idle": 3, "open": 4, "shed": 0},
+//!    "engine": {"backend": "native", "plan_cache": {"hits": 9, "misses": 3}, "...": "..."},
+//!    "net": "epoll",
+//!    "ops": {"batch": {"...": "..."},
+//!            "control": {"...": "..."},
+//!            "plan": {"count": 12, "mean_ns": 812000, "p50_ns": 700000,
+//!                     "p90_ns": 2100000, "p99_ns": 4200000, "max_ns": 4512340,
+//!                     "sum_ns": 9744000, "buckets": [[112, 3], [139, 9]]}},
+//!    "outcomes": {"degraded": 1, "error": 0, "met": 10, "shed": 1},
+//!    "queue_depth": 2}}
+//! ```
+//!
+//! * `net` — which front end answered (`threads`, `epoll`, `stdin`).
+//! * `engine` — the same object `stats` reports (cache hit rates,
+//!   `boundary_builds`), so one op carries both layers.
+//! * `ops` — per-op-class latency histograms
+//!   ([`crate::util::hist::HistSnapshot`] wire form): `plan` is single
+//!   mapping lines (malformed lines included), `batch` is array lines,
+//!   `control` is `ping`/`stats`/`metrics`. Latency is measured from
+//!   parse to response line, so queue wait counts. `buckets` is the
+//!   sparse `[[bucket, count], ...]` form the cluster router merges
+//!   exactly; percentile values are rank-exact with ≤ 1/16 relative
+//!   value error (see `util::hist`).
+//! * `outcomes` — per *request*: `met` (complete plan), `degraded`
+//!   (mid-pass deadline, incumbent returned), `shed`
+//!   (`deadline_exceeded`), `error` (everything else). Control ops and
+//!   a `metrics` probe itself are not outcomes.
+//! * `connections` / `queue_depth` — front-end gauges: connections
+//!   accepted / currently open / open-but-idle / shed with
+//!   `overloaded`, and the instantaneous request-queue depth. The
+//!   stdin loops report zero connections.
+//!
+//! A `metrics` line is answered by the serving loop it arrives on, so
+//! its latency histograms cover exactly the requests that loop served
+//! (the response does not include the probe itself). The cluster
+//! front-end answers `metrics` by merging every worker's histograms
+//! bucket-wise — see [`crate::cluster`].
 //!
 //! ## Concurrency
 //!
@@ -119,15 +163,22 @@
 //!   arrival order.
 //! * [`serve_tcp`] — a pool of connection workers, so concurrent
 //!   clients are served in parallel: an idle or slow connection no
-//!   longer head-of-line blocks the ones behind it.
+//!   longer head-of-line blocks the ones behind it. With
+//!   `MMEE_NET=epoll` (Linux) the same wire protocol is served by the
+//!   readiness-based front end in [`crate::coordinator::net`] instead:
+//!   idle keep-alive connections cost a few hundred bytes of state,
+//!   not a pinned worker thread.
 
 use std::io::{BufRead, Write};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
+use crate::coordinator::net::NetMode;
 use crate::coordinator::pool::{BoundedQueue, PushError, Sequencer};
 use crate::error::MmeeError;
 use crate::search::{BatchRequest, MappingPlan, MappingRequest, MmeeEngine};
+use crate::util::hist::Histogram;
 use crate::util::json::Json;
 
 /// Wire-side request: one mapping query, a batch of them (a JSON array
@@ -146,6 +197,9 @@ pub enum Control {
     Ping,
     /// Engine observability snapshot: `{"op": "stats"}`.
     Stats,
+    /// Serving-loop observability snapshot (latency histograms,
+    /// outcome counters, connection gauges): `{"op": "metrics"}`.
+    Metrics,
 }
 
 impl Request {
@@ -158,7 +212,10 @@ impl Request {
             return match op {
                 "ping" => Ok(Request::Control(Control::Ping)),
                 "stats" => Ok(Request::Control(Control::Stats)),
-                other => Err(MmeeError::Parse(format!("unknown op '{other}', want ping|stats"))),
+                "metrics" => Ok(Request::Control(Control::Metrics)),
+                other => Err(MmeeError::Parse(format!(
+                    "unknown op '{other}', want ping|stats|metrics"
+                ))),
             };
         }
         Ok(Request::One(MappingRequest::from_json(&j)?))
@@ -195,7 +252,7 @@ impl Response {
     }
 
     /// Requests answered by this response (batch = element count).
-    fn count(&self) -> usize {
+    pub(crate) fn count(&self) -> usize {
         match self {
             Response::Batch(items) => items.len(),
             _ => 1,
@@ -215,6 +272,21 @@ pub fn handle(engine: &MmeeEngine, req: &Request) -> Response {
         Request::Batch(batch) => Response::Batch(handle_batch(engine, batch)),
         Request::Control(Control::Ping) => Response::Info(ping_json()),
         Request::Control(Control::Stats) => Response::Info(engine_stats_json(engine)),
+        // Outside a serving loop there are no latency histograms to
+        // report; a detached snapshot still carries the engine half.
+        Request::Control(Control::Metrics) => {
+            Response::Info(metrics_json(engine, &ServiceMetrics::new("detached")))
+        }
+    }
+}
+
+/// Like [`handle`], but `{"op": "metrics"}` answers with the calling
+/// serving loop's [`ServiceMetrics`] — every serving loop routes
+/// through this.
+pub fn handle_metered(engine: &MmeeEngine, metrics: &ServiceMetrics, req: &Request) -> Response {
+    match req {
+        Request::Control(Control::Metrics) => Response::Info(metrics_json(engine, metrics)),
+        other => handle(engine, other),
     }
 }
 
@@ -249,6 +321,170 @@ pub fn engine_stats_json(engine: &MmeeEngine) -> Json {
     Json::obj(vec![("stats", stats)])
 }
 
+/// Which latency histogram a wire line lands in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum OpClass {
+    Plan,
+    Batch,
+    Control,
+}
+
+impl OpClass {
+    pub(crate) fn of(req: &Request) -> OpClass {
+        match req {
+            Request::One(_) => OpClass::Plan,
+            Request::Batch(_) => OpClass::Batch,
+            Request::Control(_) => OpClass::Control,
+        }
+    }
+}
+
+/// One serving loop's lock-free observability state: per-op latency
+/// histograms, request-outcome counters, and front-end gauges. Every
+/// serving entry point ([`serve_lines`], [`serve_lines_concurrent`],
+/// [`serve_tcp`] in both front ends) owns ONE instance for its
+/// lifetime, so a `{"op": "metrics"}` probe reports exactly that
+/// loop's traffic — deterministic for tests, no process-global state.
+pub struct ServiceMetrics {
+    /// Front-end name reported as `metrics.net`.
+    front: &'static str,
+    plan: Histogram,
+    batch: Histogram,
+    control: Histogram,
+    met: AtomicU64,
+    degraded: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+    conns_accepted: AtomicU64,
+    conns_shed: AtomicU64,
+    /// Gauges: currently-open connections and how many of them have a
+    /// request in flight right now (idle = open - active).
+    conns_open: AtomicU64,
+    conns_active: AtomicU64,
+    /// Gauge: request/connection queue depth, updated at push/pop.
+    queue_depth: AtomicU64,
+}
+
+impl ServiceMetrics {
+    pub fn new(front: &'static str) -> ServiceMetrics {
+        ServiceMetrics {
+            front,
+            plan: Histogram::new(),
+            batch: Histogram::new(),
+            control: Histogram::new(),
+            met: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            conns_accepted: AtomicU64::new(0),
+            conns_shed: AtomicU64::new(0),
+            conns_open: AtomicU64::new(0),
+            conns_active: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one answered wire line: latency into the op-class
+    /// histogram, outcome tallies per request answered.
+    pub(crate) fn record(&self, op: OpClass, elapsed: std::time::Duration, resp: &Response) {
+        let hist = match op {
+            OpClass::Plan => &self.plan,
+            OpClass::Batch => &self.batch,
+            OpClass::Control => &self.control,
+        };
+        hist.record_duration(elapsed);
+        self.note_outcome(resp);
+    }
+
+    fn note_outcome(&self, resp: &Response) {
+        match resp {
+            Response::Plan(p) => {
+                let c = if p.degraded { &self.degraded } else { &self.met };
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+            Response::Error(e) => {
+                let c = match e {
+                    MmeeError::DeadlineExceeded { .. } => &self.shed,
+                    _ => &self.errors,
+                };
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+            Response::Batch(items) => items.iter().for_each(|r| self.note_outcome(r)),
+            Response::Info(_) => {}
+        }
+    }
+
+    pub(crate) fn conn_accepted(&self) {
+        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        self.conns_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn conn_closed(&self) {
+        self.conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn conn_shed(&self) {
+        self.conns_shed.fetch_add(1, Ordering::Relaxed);
+        self.conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Flip a connection's busy gauge as its first in-flight request
+    /// starts / last one finishes.
+    pub(crate) fn conn_busy(&self, busy: bool) {
+        if busy {
+            self.conns_active.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.conns_active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    fn outcomes_json(&self) -> Json {
+        Json::obj(vec![
+            ("degraded", Json::num(self.degraded.load(Ordering::Relaxed) as f64)),
+            ("error", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("met", Json::num(self.met.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+
+    fn connections_json(&self) -> Json {
+        let open = self.conns_open.load(Ordering::Relaxed);
+        let active = self.conns_active.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("accepted", Json::num(self.conns_accepted.load(Ordering::Relaxed) as f64)),
+            ("idle", Json::num(open.saturating_sub(active) as f64)),
+            ("open", Json::num(open as f64)),
+            ("shed", Json::num(self.conns_shed.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// The `{"op": "metrics"}` answer: the serving loop's histograms and
+/// gauges plus the engine's `stats` object (see the wire-format docs
+/// for the field inventory). The cluster front-end merges one of these
+/// per worker into a cluster-wide view.
+pub fn metrics_json(engine: &MmeeEngine, m: &ServiceMetrics) -> Json {
+    let engine_stats = engine_stats_json(engine).get("stats").cloned().unwrap_or(Json::Null);
+    let ops = Json::obj(vec![
+        ("batch", m.batch.snapshot().to_json()),
+        ("control", m.control.snapshot().to_json()),
+        ("plan", m.plan.snapshot().to_json()),
+    ]);
+    let metrics = Json::obj(vec![
+        ("connections", m.connections_json()),
+        ("engine", engine_stats),
+        ("net", Json::str(m.front)),
+        ("ops", ops),
+        ("outcomes", m.outcomes_json()),
+        ("queue_depth", Json::num(m.queue_depth.load(Ordering::Relaxed) as f64)),
+    ]);
+    Json::obj(vec![("metrics", metrics)])
+}
+
 /// Schedule a batch through [`MmeeEngine::plan_batch`] and splice the
 /// per-element parse errors back into their positions.
 fn handle_batch(engine: &MmeeEngine, batch: &BatchRequest) -> Vec<Response> {
@@ -268,17 +504,25 @@ fn handle_batch(engine: &MmeeEngine, batch: &BatchRequest) -> Vec<Response> {
 }
 
 /// Parse + handle one wire line; `None` for blank lines. Returns the
-/// response and how many requests it answers.
-fn respond_line(engine: &MmeeEngine, line: &str) -> Option<(Response, usize)> {
+/// response and how many requests it answers. Latency (parse through
+/// handling) and the outcome land in `metrics`; malformed lines count
+/// under the `plan` histogram.
+fn respond_line(
+    engine: &MmeeEngine,
+    metrics: &ServiceMetrics,
+    line: &str,
+) -> Option<(Response, usize)> {
     let line = line.trim();
     if line.is_empty() {
         return None;
     }
-    let resp = match Request::parse(line) {
-        Ok(req) => handle(engine, &req),
-        Err(e) => Response::Error(e),
+    let t0 = Instant::now();
+    let (op, resp) = match Request::parse(line) {
+        Ok(req) => (OpClass::of(&req), handle_metered(engine, metrics, &req)),
+        Err(e) => (OpClass::Plan, Response::Error(e)),
     };
     let count = resp.count();
+    metrics.record(op, t0.elapsed(), &resp);
     Some((resp, count))
 }
 
@@ -302,6 +546,13 @@ fn respond_line(engine: &MmeeEngine, line: &str) -> Option<(Response, usize)> {
 /// acceptor never blocks, so a saturated pool degrades into fast
 /// structured rejections instead of unbounded connection queueing.
 /// Shed connections count toward `max_conns`.
+///
+/// The front end is picked by `MMEE_NET` (`threads` | `epoll`, default
+/// `threads`; see [`crate::coordinator::net`]) — both serve this wire
+/// protocol byte-identically. Graceful drain is shared: once
+/// `max_conns` connections have been accepted (or accept fails), the
+/// listener stops, every in-flight response is flushed, and only then
+/// do the connections close — no accepted request is ever dropped.
 pub fn serve_tcp(
     engine: &MmeeEngine,
     addr: &str,
@@ -309,11 +560,44 @@ pub fn serve_tcp(
     workers: usize,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> std::io::Result<usize> {
+    serve_tcp_with(engine, addr, max_conns, workers, NetMode::from_env(), on_ready)
+}
+
+/// [`serve_tcp`] with the front end picked by the caller instead of
+/// `MMEE_NET` (the A/B bench and the equivalence tests run both modes
+/// in one process).
+pub fn serve_tcp_with(
+    engine: &MmeeEngine,
+    addr: &str,
+    max_conns: Option<usize>,
+    workers: usize,
+    mode: NetMode,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<usize> {
     let listener = std::net::TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    eprintln!("mmee serve: listening on {local}");
+    let mode = mode.resolved();
+    eprintln!("mmee serve: listening on {local} ({} front end)", mode.name());
     on_ready(local);
     let workers = workers.max(1);
+    let metrics = ServiceMetrics::new(mode.name());
+    match mode {
+        NetMode::Epoll => {
+            crate::coordinator::net::serve_epoll(engine, listener, max_conns, workers, &metrics)
+        }
+        NetMode::Threads => serve_tcp_threads(engine, listener, max_conns, workers, &metrics),
+    }
+}
+
+/// The thread-per-connection front end: a pool of `workers` threads
+/// drains a bounded queue of accepted connections.
+fn serve_tcp_threads(
+    engine: &MmeeEngine,
+    listener: std::net::TcpListener,
+    max_conns: Option<usize>,
+    workers: usize,
+    metrics: &ServiceMetrics,
+) -> std::io::Result<usize> {
     let queue: BoundedQueue<std::net::TcpStream> = BoundedQueue::new(workers.max(2));
     let total = AtomicUsize::new(0);
     let conn_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
@@ -321,7 +605,10 @@ pub fn serve_tcp(
         for _ in 0..workers {
             scope.spawn(|| {
                 while let Some(stream) = queue.pop() {
-                    match serve_conn(engine, &stream) {
+                    metrics.set_queue_depth(queue.len());
+                    let result = serve_conn(engine, metrics, &stream);
+                    metrics.conn_closed();
+                    match result {
                         Ok(n) => {
                             total.fetch_add(n, Ordering::Relaxed);
                         }
@@ -341,13 +628,15 @@ pub fn serve_tcp(
                     break;
                 }
                 Ok(s) => {
+                    metrics.conn_accepted();
                     match queue.try_push(s) {
-                        Ok(()) => {}
+                        Ok(()) => metrics.set_queue_depth(queue.len()),
                         Err(PushError::Full(mut s)) => {
                             // Shed: structured rejection, then close.
                             let err = MmeeError::Overloaded { pending: queue.len() };
                             let _ = writeln!(s, "{}", Response::Error(err).to_line());
                             let _ = s.flush();
+                            metrics.conn_shed();
                         }
                         Err(PushError::Closed(_)) => break,
                     }
@@ -361,7 +650,9 @@ pub fn serve_tcp(
             }
         }
         // Close before the scope joins the workers, or they would wait
-        // on the queue forever.
+        // on the queue forever. Connections already queued are still
+        // served to EOF (graceful drain): `pop` drains the queue before
+        // reporting closed.
         queue.close();
         accepted
     });
@@ -374,9 +665,13 @@ pub fn serve_tcp(
 
 /// One connection, served sequentially (request order == response
 /// order on the wire).
-fn serve_conn(engine: &MmeeEngine, stream: &std::net::TcpStream) -> std::io::Result<usize> {
+fn serve_conn(
+    engine: &MmeeEngine,
+    metrics: &ServiceMetrics,
+    stream: &std::net::TcpStream,
+) -> std::io::Result<usize> {
     let reader = std::io::BufReader::new(stream.try_clone()?);
-    serve_lines(engine, reader, stream)
+    serve_lines_metered(engine, metrics, reader, stream)
 }
 
 /// Serve requests line-by-line until EOF, sequentially on the calling
@@ -385,12 +680,27 @@ fn serve_conn(engine: &MmeeEngine, stream: &std::net::TcpStream) -> std::io::Res
 pub fn serve_lines(
     engine: &MmeeEngine,
     input: impl BufRead,
+    output: impl Write,
+) -> std::io::Result<usize> {
+    serve_lines_metered(engine, &ServiceMetrics::new("stdin"), input, output)
+}
+
+/// [`serve_lines`] against a caller-owned [`ServiceMetrics`] (the TCP
+/// front ends share one instance across all of a server's
+/// connections).
+fn serve_lines_metered(
+    engine: &MmeeEngine,
+    metrics: &ServiceMetrics,
+    input: impl BufRead,
     mut output: impl Write,
 ) -> std::io::Result<usize> {
     let mut served = 0;
     for line in input.lines() {
         let line = line?;
-        if let Some((resp, n)) = respond_line(engine, &line) {
+        metrics.conn_busy(true);
+        let answered = respond_line(engine, metrics, &line);
+        metrics.conn_busy(false);
+        if let Some((resp, n)) = answered {
             writeln!(output, "{}", resp.to_line())?;
             output.flush()?;
             served += n;
@@ -412,7 +722,11 @@ pub fn serve_lines_concurrent<W: Write + Send>(
     workers: usize,
 ) -> std::io::Result<usize> {
     let workers = workers.max(1);
-    let queue: BoundedQueue<(usize, Result<Request, MmeeError>)> =
+    let metrics = ServiceMetrics::new("stdin");
+    let metrics = &metrics;
+    // Each job carries its parse instant so the recorded latency
+    // includes queue wait (that is the number a deadline feels).
+    let queue: BoundedQueue<(usize, Result<Request, MmeeError>, Instant)> =
         BoundedQueue::new(workers * 2);
     // Bounded reorder window: responses completed behind a slow
     // head-of-line request (or a slow output sink) stay bounded — the
@@ -425,16 +739,21 @@ pub fn serve_lines_concurrent<W: Write + Send>(
     let write_result: std::io::Result<()> = std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
-                while let Some((i, parsed)) = queue.pop() {
+                while let Some((i, parsed, t0)) = queue.pop() {
+                    metrics.set_queue_depth(queue.len());
                     // After a writer failure the responses go nowhere:
                     // drain the queue without paying for planning.
                     let line = if stop.load(Ordering::Relaxed) {
                         String::new()
                     } else {
-                        match parsed {
-                            Ok(req) => handle(engine, &req).to_line(),
-                            Err(e) => Response::Error(e).to_line(),
-                        }
+                        let (op, resp) = match parsed {
+                            Ok(req) => {
+                                (OpClass::of(&req), handle_metered(engine, metrics, &req))
+                            }
+                            Err(e) => (OpClass::Plan, Response::Error(e)),
+                        };
+                        metrics.record(op, t0.elapsed(), &resp);
+                        resp.to_line()
                     };
                     seq.push(i, line);
                 }
@@ -479,9 +798,10 @@ pub fn serve_lines_concurrent<W: Write + Send>(
                 Ok(Request::Batch(b)) => b.len(),
                 _ => 1,
             };
-            if queue.push((jobs, parsed)).is_err() {
+            if queue.push((jobs, parsed, Instant::now())).is_err() {
                 break;
             }
+            metrics.set_queue_depth(queue.len());
             jobs += 1;
         }
         queue.close();
@@ -820,6 +1140,63 @@ mod tests {
         assert!(s.get("boundary_builds").unwrap().as_usize().is_some());
         let bad = Json::parse(lines[3]).unwrap();
         assert_eq!(bad.get("error").unwrap().get("kind").unwrap().as_str(), Some("parse"));
+    }
+
+    #[test]
+    fn metrics_op_reports_ops_outcomes_and_engine_counters() {
+        let engine = MmeeEngine::native();
+        // 1 control (ping) + 4 plan-class lines (cold, cache hit,
+        // deadline shed, unknown workload) + 1 batch line, then the
+        // probe. The probe's own latency is recorded AFTER its response
+        // is built, so the counts below exclude it.
+        let input = concat!(
+            r#"{"op": "ping"}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n",
+            r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+            "\n",
+            // A *cold* key: a cache hit would answer instead of shedding.
+            r#"{"workload": "mlp", "accel": "accel1", "deadline_ms": 0}"#,
+            "\n",
+            r#"{"workload": "nope"}"#,
+            "\n",
+            r#"[{"workload": "mlp"}, {"workload": "nope"}]"#,
+            "\n",
+            r#"{"op": "metrics"}"#,
+            "\n"
+        );
+        let mut out = Vec::new();
+        let served = serve_lines(&engine, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(served, 8, "5 single lines + 2 batch elements + the probe");
+        let text = String::from_utf8(out).unwrap();
+        let last = text.lines().last().unwrap();
+        let m = Json::parse(last).unwrap();
+        let m = m.get("metrics").expect("metrics envelope");
+        assert_eq!(m.get("net").unwrap().as_str(), Some("stdin"));
+        let count = |h: &Json| h.get("count").unwrap().as_usize().unwrap();
+        let ops = m.get("ops").unwrap();
+        assert_eq!(count(ops.get("plan").unwrap()), 4);
+        assert_eq!(count(ops.get("batch").unwrap()), 1);
+        assert_eq!(count(ops.get("control").unwrap()), 1, "ping only, not the probe");
+        // Percentiles come from util::hist and must be populated.
+        let plan = ops.get("plan").unwrap();
+        for k in ["p50_ns", "p90_ns", "p99_ns", "max_ns", "mean_ns"] {
+            assert!(plan.get(k).unwrap().as_f64().unwrap() > 0.0, "{k}");
+        }
+        assert!(plan.get("p50_ns").unwrap().as_f64() <= plan.get("p99_ns").unwrap().as_f64());
+        let outcome = |k: &str| m.get("outcomes").unwrap().get(k).unwrap().as_usize().unwrap();
+        assert_eq!(outcome("met"), 3, "cold + cache hit + batch mlp element");
+        assert_eq!(outcome("shed"), 1);
+        assert_eq!(outcome("error"), 2, "unknown workload line + batch element");
+        assert_eq!(outcome("degraded"), 0);
+        // The engine half matches the stats op's counters.
+        let eng = m.get("engine").unwrap();
+        assert_eq!(eng.get("backend").unwrap().as_str(), Some("native"));
+        assert_eq!(eng.get("plan_cache").unwrap().get("hits").unwrap().as_usize(), Some(1));
+        // stdin serving has no connection front end.
+        let conns = m.get("connections").unwrap();
+        assert_eq!(conns.get("open").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! mmee validate [--charts]          # model vs simulator
 //! mmee serve [--tcp host:port] [--workers N] [--route-above M]
 //!                                   # JSON-lines mapping service
+//!                                   # (MMEE_NET=threads|epoll picks the
+//!                                   #  TCP front end; see README)
 //! mmee serve --batch reqs.json      # one JSON-array file, batched
 //! mmee serve --smoke                # deadline/degradation self-check
 //! mmee cluster [--workers N] [--worker-threads T] [--tcp host:port]
@@ -306,7 +308,9 @@ fn cmd_validate(args: &Args) -> Result<()> {
 /// CI self-check for the deadline contract: an expired budget is shed
 /// with `deadline_exceeded`, a deterministically cancelled pass
 /// degrades to an achieved in-surface incumbent, and the same request
-/// without a deadline still returns the exact optimum.
+/// without a deadline still returns the exact optimum. Finishes with a
+/// TCP round-trip through whichever front end `MMEE_NET` selects
+/// (threads or epoll), so CI exercises both wire paths.
 fn serve_smoke() -> Result<()> {
     use mmee::coordinator::CancelToken;
     let engine = MmeeEngine::native();
@@ -346,7 +350,64 @@ fn serve_smoke() -> Result<()> {
             "serve smoke: degraded incumbent beat the full optimum".into(),
         ));
     }
-    println!("serve smoke ok: shed on expiry, degraded to achieved incumbent, full pass exact");
+    // (4) TCP round-trip through the MMEE_NET-selected front end: one
+    // plan and one `{"op": "metrics"}` probe over a real socket, so the
+    // smoke covers the wire path CI runs under both MMEE_NET values.
+    let net = mmee::coordinator::NetMode::from_env().resolved();
+    let tcp_engine = MmeeEngine::native();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        service::serve_tcp(&tcp_engine, "127.0.0.1:0", Some(1), 2, |a| {
+            let _ = tx.send(a);
+        })
+    });
+    let addr = rx
+        .recv()
+        .map_err(|_| MmeeError::Internal("serve smoke: server never bound".into()))?;
+    let served = (|| -> std::io::Result<()> {
+        use std::io::{BufRead, BufReader, Write};
+        let mut conn = std::net::TcpStream::connect(addr)?;
+        conn.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let mut ask = |line: &str| -> std::io::Result<String> {
+            writeln!(conn, "{line}")?;
+            let mut resp = String::new();
+            reader.read_line(&mut resp)?;
+            Ok(resp)
+        };
+        let plan = ask(r#"{"workload": "bert-base", "seq": 128, "accel": "accel1"}"#)?;
+        let metrics = ask(r#"{"op": "metrics"}"#)?;
+        let bad = |msg: &str, got: &str| {
+            std::io::Error::other(format!("serve smoke: {msg}, got {got}"))
+        };
+        if !plan.contains("energy_j") {
+            return Err(bad("TCP plan must answer with energy_j", &plan));
+        }
+        if !metrics.contains(&format!(r#""net":"{}""#, net.name())) {
+            return Err(bad("metrics op must name the front end", &metrics));
+        }
+        if !metrics.contains(r#""p99_ns""#) {
+            return Err(bad("metrics op must carry latency percentiles", &metrics));
+        }
+        Ok(())
+    })();
+    // Propagate a client-side failure before joining: if the client
+    // never connected, the server is still blocked in accept and the
+    // error exit (not the join) is what ends the process.
+    served.map_err(|e| MmeeError::Internal(e.to_string()))?;
+    let n = server
+        .join()
+        .map_err(|_| MmeeError::Internal("serve smoke: server panicked".into()))??;
+    if n != 2 {
+        return Err(MmeeError::Internal(format!(
+            "serve smoke: TCP front end served {n} requests, expected 2"
+        )));
+    }
+    println!(
+        "serve smoke ok: shed on expiry, degraded to achieved incumbent, full pass exact, \
+         {} front end round-trip",
+        net.name()
+    );
     Ok(())
 }
 

@@ -1,0 +1,340 @@
+//! Lock-free fixed-bucket log-scale latency histograms for the serving
+//! observability layer (`{"op": "metrics"}`).
+//!
+//! A [`Histogram`] is an array of relaxed [`AtomicU64`] counters over a
+//! log2 × 16-sublinear bucket grid (HDR-histogram style): values below
+//! 16 get exact unit buckets; above that, each power-of-two octave is
+//! split into 16 equal sub-buckets, so every bucket's width is at most
+//! 1/16 of its lower bound. Recording is a single relaxed
+//! `fetch_add` — no locks, no allocation, safe to hammer from every
+//! serving worker at once — and quantile extraction is *rank-exact*:
+//! the reported pXX is the upper bound of the bucket holding the
+//! nearest-rank element, so it can overshoot a sort-based oracle by at
+//! most one part in sixteen (+1 for the unit rounding). The max is
+//! tracked exactly via `fetch_max`.
+//!
+//! Snapshots ([`HistSnapshot`]) are plain owned data: they serialize to
+//! a sparse `[[bucket, count], ...]` JSON form and merge exactly
+//! (bucket-wise sums), which is how the cluster router aggregates
+//! per-worker percentiles into cluster-wide ones without shipping raw
+//! samples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Buckets 0..16 are exact; octaves 4..=63 contribute 16 sub-buckets
+/// each: `(63 - 3) * 16 + 16 = 976`.
+pub const NUM_BUCKETS: usize = 976;
+
+/// Bucket index for a value: exact below 16, then
+/// `16 * (octave - 3) + sub` where `sub` is the top four bits below
+/// the leading one.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < 16 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (msb - 4)) & 0xF) as usize;
+        (msb - 3) * 16 + sub
+    }
+}
+
+/// Smallest value mapping to bucket `i` (inverse of [`bucket_of`]).
+#[inline]
+pub fn bucket_low(i: usize) -> u64 {
+    if i < 16 {
+        i as u64
+    } else {
+        let msb = i / 16 + 3;
+        (1u64 << msb) | (((i % 16) as u64) << (msb - 4))
+    }
+}
+
+/// Largest value mapping to bucket `i`.
+#[inline]
+pub fn bucket_high(i: usize) -> u64 {
+    if i + 1 < NUM_BUCKETS {
+        bucket_low(i + 1) - 1
+    } else {
+        u64::MAX
+    }
+}
+
+/// Lock-free log-scale histogram of `u64` samples (nanoseconds, by
+/// convention of the serving layer — the math is unit-agnostic).
+pub struct Histogram {
+    counts: Box<[AtomicU64; NUM_BUCKETS]>,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // `AtomicU64` is not `Copy`; build the boxed array in place.
+        let counts: Box<[AtomicU64; NUM_BUCKETS]> =
+            (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().try_into().unwrap();
+        Histogram { counts, sum: AtomicU64::new(0), max: AtomicU64::new(0) }
+    }
+
+    /// Record one sample. Relaxed ordering: counters are statistics,
+    /// not synchronization — readers tolerate (bounded) staleness.
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] in nanoseconds (saturating).
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Consistent-enough point-in-time copy. Concurrent recorders can
+    /// skew `sum`/`max` relative to `counts` by the in-flight samples;
+    /// each field is individually monotone, which is all the metrics
+    /// op promises.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> =
+            self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        HistSnapshot {
+            counts,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Owned, mergeable copy of a [`Histogram`]'s state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot::empty()
+    }
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { counts: vec![0; NUM_BUCKETS], sum: 0, max: 0 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            0
+        } else {
+            self.sum / n
+        }
+    }
+
+    /// Nearest-rank quantile, `q` in `[0, 1]`. The *rank* is exact; the
+    /// value is the holding bucket's upper bound capped by the exact
+    /// max, so `oracle <= quantile(q) <= oracle * 17/16 + 1`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_high(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Exact bucket-wise merge: quantiles of the merged snapshot are
+    /// what a single histogram fed both sample streams would report.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Wire form: summary percentiles plus the sparse bucket vector
+    /// (`[[index, count], ...]`, non-zero buckets only) that
+    /// [`HistSnapshot::from_json`] needs for exact cross-process merge.
+    pub fn to_json(&self) -> Json {
+        let buckets = Json::arr(self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(
+            |(i, &c)| Json::arr(vec![Json::num(i as f64), Json::num(c as f64)]),
+        ));
+        Json::obj(vec![
+            ("buckets", buckets),
+            ("count", Json::num(self.count() as f64)),
+            ("max_ns", Json::num(self.max as f64)),
+            ("mean_ns", Json::num(self.mean() as f64)),
+            ("p50_ns", Json::num(self.quantile(0.50) as f64)),
+            ("p90_ns", Json::num(self.quantile(0.90) as f64)),
+            ("p99_ns", Json::num(self.quantile(0.99) as f64)),
+            ("sum_ns", Json::num(self.sum as f64)),
+        ])
+    }
+
+    /// Rebuild from [`HistSnapshot::to_json`] output. Returns `None`
+    /// on a shape mismatch (missing keys, out-of-range bucket index).
+    pub fn from_json(j: &Json) -> Option<HistSnapshot> {
+        let mut snap = HistSnapshot::empty();
+        snap.sum = j.get("sum_ns")?.as_f64()? as u64;
+        snap.max = j.get("max_ns")?.as_f64()? as u64;
+        for pair in j.get("buckets")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            let (i, c) = (pair.first()?.as_usize()?, pair.get(1)?.as_f64()? as u64);
+            if i >= NUM_BUCKETS {
+                return None;
+            }
+            snap.counts[i] += c;
+        }
+        Some(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Exact sort-based nearest-rank oracle.
+    fn oracle(sorted: &[u64], q: f64) -> u64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    fn assert_close(h: u64, exact: u64, q: f64) {
+        assert!(h >= exact, "p{q}: histogram {h} under-reports exact {exact}");
+        let bound = exact + exact / 16 + 1;
+        assert!(h <= bound, "p{q}: histogram {h} exceeds error bound {bound} (exact {exact})");
+    }
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_self_inverse() {
+        // Every bucket boundary maps back to its own bucket, and the
+        // mapping never moves backwards as values grow.
+        for i in 0..NUM_BUCKETS {
+            assert_eq!(bucket_of(bucket_low(i)), i, "low of bucket {i}");
+            assert_eq!(bucket_of(bucket_high(i)), i, "high of bucket {i}");
+        }
+        let probes = [0, 1, 15, 16, 17, 255, 256, 1 << 20, (1 << 20) + 1, u64::MAX];
+        for w in probes.windows(2) {
+            assert!(bucket_of(w[0]) <= bucket_of(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        assert_eq!(bucket_of(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_match_sort_oracle_within_bucket_error() {
+        // Mixed magnitudes: exact-bucket range, mid-range, and huge
+        // values, the shape of real latency distributions.
+        let mut rng = Rng::new(0xB0C3);
+        let h = Histogram::new();
+        let mut values = Vec::new();
+        for _ in 0..10_000 {
+            let magnitude = 10u64.pow(rng.below(8) as u32);
+            let v = rng.below(magnitude as usize * 9 + 1) as u64 + magnitude;
+            h.record(v);
+            values.push(v);
+        }
+        values.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 10_000);
+        assert_eq!(snap.max(), *values.last().unwrap(), "max is tracked exactly");
+        for q in [0.0, 0.01, 0.25, 0.50, 0.90, 0.99, 0.999, 1.0] {
+            assert_close(snap.quantile(q), oracle(&values, q), q);
+        }
+    }
+
+    #[test]
+    fn small_exact_range_is_bucket_exact() {
+        // Below 16 every value has its own bucket: quantiles are exact.
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 5);
+        assert_eq!(s.quantile(1.0), 10);
+        assert_eq!(s.mean(), 5);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let s = Histogram::new().snapshot();
+        assert_eq!((s.count(), s.max(), s.mean(), s.quantile(0.99)), (0, 0, 0, 0));
+        assert_eq!(s, HistSnapshot::empty());
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let mut rng = Rng::new(7);
+        let (a, b) = (Histogram::new(), Histogram::new());
+        let combined = Histogram::new();
+        for i in 0..4_000 {
+            let v = rng.below(1_000_000) as u64;
+            let target = if i % 2 == 0 { &a } else { &b };
+            target.record(v);
+            combined.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, combined.snapshot());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_bucket() {
+        let mut rng = Rng::new(42);
+        let h = Histogram::new();
+        for _ in 0..2_000 {
+            h.record(rng.below(50_000_000) as u64);
+        }
+        let snap = h.snapshot();
+        let j = snap.to_json();
+        assert_eq!(HistSnapshot::from_json(&j), Some(snap.clone()));
+        // Summary keys carry the same numbers the snapshot computes.
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(snap.count() as f64));
+        assert_eq!(j.get("p99_ns").unwrap().as_f64(), Some(snap.quantile(0.99) as f64));
+        assert_eq!(HistSnapshot::from_json(&Json::Null), None);
+        assert_eq!(HistSnapshot::from_json(&Json::obj(vec![])), None);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    let mut rng = Rng::new(t as u64);
+                    for _ in 0..10_000 {
+                        h.record(rng.below(1_000_000) as u64);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.snapshot().count(), 40_000);
+    }
+}

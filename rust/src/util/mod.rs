@@ -3,6 +3,7 @@
 //! and a small CLI parser (no serde / proptest / criterion / clap offline).
 
 pub mod fault;
+pub mod hist;
 pub mod json;
 pub mod lru;
 pub mod rng;

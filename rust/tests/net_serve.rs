@@ -1,0 +1,462 @@
+//! Front-end equivalence: `MMEE_NET=epoll` must serve the TCP wire
+//! protocol byte-identically to the thread-per-connection front end —
+//! across single requests, batch lines, parse errors, deadline sheds
+//! and overload rejections — while its thread count scales with the
+//! worker pool, not with connection count. Also pins graceful drain
+//! (zero dropped responses), the `{"op": "metrics"}` control op at
+//! worker level, and the router's bucket-wise cluster merge.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use mmee::cluster::{proto, Cluster, ClusterConfig};
+use mmee::coordinator::{serve_tcp_with, NetMode};
+use mmee::search::MmeeEngine;
+use mmee::util::fault::FaultInjector;
+use mmee::util::json::Json;
+
+/// Every test here spawns a server (and one counts OS threads), so
+/// they serialize within this binary to keep measurements attributable.
+fn serial_lock() -> MutexGuard<'static, ()> {
+    static SERIAL: OnceLock<Mutex<()>> = OnceLock::new();
+    SERIAL.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Server {
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<usize>,
+}
+
+fn start_with(engine: MmeeEngine, mode: NetMode, max_conns: usize, workers: usize) -> Server {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve_tcp_with(&engine, "127.0.0.1:0", Some(max_conns), workers, mode, |a| {
+            tx.send(a).unwrap()
+        })
+        .expect("serve_tcp_with")
+    });
+    Server { addr: rx.recv().expect("server ready callback"), handle }
+}
+
+fn start(mode: NetMode, max_conns: usize, workers: usize) -> Server {
+    start_with(MmeeEngine::native(), mode, max_conns, workers)
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+    conn
+}
+
+/// One-shot client: pipeline `bytes`, half-close, read every response
+/// line until EOF.
+fn roundtrip(addr: SocketAddr, bytes: &[u8]) -> Vec<String> {
+    let mut conn = connect(addr);
+    conn.write_all(bytes).expect("write trace");
+    conn.shutdown(Shutdown::Write).expect("half-close");
+    BufReader::new(conn).lines().map(|l| l.expect("response line")).collect()
+}
+
+fn normalized(lines: &[String]) -> Vec<String> {
+    lines.iter().map(|l| proto::normalize_response(l)).collect()
+}
+
+/// Write one request line, read one response line (sequential
+/// request/response — the probe pattern a real client uses).
+fn ask(w: &mut TcpStream, r: &mut BufReader<TcpStream>, line: &str) -> Json {
+    writeln!(w, "{line}").expect("write request");
+    let mut resp = String::new();
+    r.read_line(&mut resp).expect("read response");
+    assert!(resp.ends_with('\n'), "truncated response: {resp:?}");
+    Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e:?}"))
+}
+
+/// The equivalence trace: a plan, an unknown-workload error, a blank
+/// line (ignored), a batch with an error element, a non-JSON line, a
+/// control ping, a deterministic deadline shed on a cold key, and a
+/// final request with NO trailing newline (both front ends must treat
+/// EOF as the terminator, like `BufRead::lines`).
+const TRACE: &str = concat!(
+    r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+    "\n\n",
+    r#"{"workload": "nope"}"#,
+    "\n",
+    r#"[{"workload": "mlp", "accel": "accel1"}, {"workload": "bad"},"#,
+    r#" {"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "edp"}]"#,
+    "\n",
+    "this is not json\n",
+    r#"{"op": "ping"}"#,
+    "\n",
+    r#"{"workload": "bert-base", "seq": 256, "accel": "accel1", "deadline_ms": 0}"#,
+    "\n",
+    r#"{"workload": "mlp", "accel": "accel1", "objective": "latency"}"#,
+);
+
+/// 9 requests: 1 + 1 + 3 (batch) + 1 + 1 + 1 + 1.
+const TRACE_REQUESTS: usize = 9;
+
+#[test]
+fn epoll_front_end_is_byte_identical_to_threads() {
+    let _g = serial_lock();
+    // 4 workers: the trace queues 4 plan jobs, and the epoll plan queue
+    // (workers * 2 = 8 slots) must hold all of them without shedding.
+    let reference = {
+        let server = start(NetMode::Threads, 1, 4);
+        let lines = roundtrip(server.addr, TRACE.as_bytes());
+        assert_eq!(server.handle.join().unwrap(), TRACE_REQUESTS);
+        lines
+    };
+    let server = start(NetMode::Epoll, 1, 4);
+    let got = roundtrip(server.addr, TRACE.as_bytes());
+    assert_eq!(
+        server.handle.join().unwrap(),
+        TRACE_REQUESTS,
+        "served-request accounting must match the threads front end"
+    );
+    assert_eq!(got.len(), reference.len(), "response line count");
+    for (i, (r, g)) in normalized(&reference).iter().zip(normalized(&got)).enumerate() {
+        assert_eq!(&g, r, "response line {i} differs between front ends");
+    }
+}
+
+/// Graceful drain: once `max_conns` connections are accepted the
+/// listener stops, but every pipelined in-flight request is still
+/// answered — in order (pinned by per-request objectives) — before the
+/// connections close. Zero dropped responses, in both modes.
+#[test]
+fn drain_flushes_every_inflight_response_in_both_modes() {
+    let _g = serial_lock();
+    for mode in [NetMode::Threads, NetMode::Epoll] {
+        // 10 workers so the epoll plan queue (workers * 2 = 20 slots)
+        // can hold every pipelined request below even if no plan worker
+        // has woken yet — this test pins drain, not overload shedding.
+        let server = start(mode, 4, 10);
+        let conns: Vec<TcpStream> = (0..4).map(|_| connect(server.addr)).collect();
+        // All four connections pipeline five requests each BEFORE any
+        // response is read, so the final accept (which triggers the
+        // drain) races real in-flight work.
+        for (c, conn) in conns.iter().enumerate() {
+            let mut w = conn;
+            for k in 0..5 {
+                let obj = if (c + k) % 2 == 0 { "edp" } else { "latency" };
+                writeln!(
+                    w,
+                    r#"{{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "{obj}"}}"#
+                )
+                .expect("pipeline request");
+            }
+            conn.shutdown(Shutdown::Write).expect("half-close");
+        }
+        for (c, conn) in conns.into_iter().enumerate() {
+            let lines: Vec<String> =
+                BufReader::new(conn).lines().map(|l| l.expect("line")).collect();
+            assert_eq!(lines.len(), 5, "{} mode: conn {c} dropped responses", mode.name());
+            for (k, line) in lines.iter().enumerate() {
+                let want = if (c + k) % 2 == 0 { "edp" } else { "latency" };
+                let j = Json::parse(line).expect("response json");
+                assert_eq!(
+                    j.get("objective").and_then(Json::as_str),
+                    Some(want),
+                    "{} mode: conn {c} response {k} out of order: {line}",
+                    mode.name()
+                );
+            }
+        }
+        assert_eq!(
+            server.handle.join().unwrap(),
+            20,
+            "{} mode: drain must serve all 20 requests",
+            mode.name()
+        );
+    }
+}
+
+/// Overload rides through the epoll front end as the same structured
+/// `overloaded` rejection the threads path sheds with — per request
+/// (connections are cheap here), counting zero toward `served`.
+#[test]
+fn epoll_sheds_overflow_requests_with_structured_overload_errors() {
+    let _g = serial_lock();
+    if !NetMode::epoll_supported() {
+        eprintln!("skipping: epoll needs Linux");
+        return;
+    }
+    // Every plan holds the single worker >= 40ms, and each request uses
+    // a cold key (distinct seq), so a 12-deep pipelined burst must
+    // overflow the depth-4 plan queue.
+    let engine = MmeeEngine::builder()
+        .fault_injector(Arc::new(FaultInjector::parse("delay:40@eval").expect("fault spec")))
+        .build();
+    let server = start_with(engine, NetMode::Epoll, 1, 1);
+    let mut burst = String::new();
+    for k in 0..12usize {
+        burst.push_str(&format!(
+            r#"{{"workload": "bert-base", "seq": {}, "accel": "accel1"}}"#,
+            128 + 32 * k
+        ));
+        burst.push('\n');
+    }
+    let lines = roundtrip(server.addr, burst.as_bytes());
+    assert_eq!(lines.len(), 12, "every request gets a response line");
+    let mut planned = 0usize;
+    let mut shed = 0usize;
+    for line in &lines {
+        let j = Json::parse(line).expect("response json");
+        if j.get("energy_j").is_some() {
+            planned += 1;
+        } else {
+            let err = j.get("error").unwrap_or_else(|| panic!("plan or error: {line}"));
+            assert_eq!(err.get("kind").and_then(Json::as_str), Some("overloaded"), "{line}");
+            assert!(
+                err.get("pending").and_then(Json::as_usize).is_some(),
+                "overload line must carry the queue depth: {line}"
+            );
+            shed += 1;
+        }
+    }
+    assert_eq!(planned + shed, 12);
+    assert!(planned >= 4, "the queue window must admit at least its capacity: {planned}");
+    assert!(shed >= 1, "a 12-deep burst against one slow worker must shed");
+    assert_eq!(
+        server.handle.join().unwrap(),
+        planned,
+        "shed requests must not count as served"
+    );
+}
+
+fn os_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .expect("/proc/self/status")
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line")
+}
+
+const STRESS_TRAFFIC: &str = concat!(
+    r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#,
+    "\n",
+    r#"[{"workload": "mlp", "accel": "accel1"}, {"workload": "bert-base", "seq": 512}]"#,
+    "\n",
+    r#"{"workload": "bert-base", "seq": 512, "accel": "accel1", "objective": "edp"}"#,
+    "\n",
+);
+
+/// The tentpole claim: 256 idle keep-alive connections cost the epoll
+/// front end ZERO additional threads (the pool, not the connection
+/// count, bounds parallelism), while traffic on 4 active connections
+/// answers byte-identically to the threads front end.
+#[test]
+fn idle_connections_add_no_threads_and_answers_match_threads_mode() {
+    let _g = serial_lock();
+    if !NetMode::epoll_supported() {
+        eprintln!("skipping: epoll needs Linux");
+        return;
+    }
+    const BALLAST: usize = 256;
+    const ACTIVE: usize = 4;
+
+    // Reference answers from the threads front end: 4 persistent
+    // connections, conn 0 running a warmup probe first (mirrored below
+    // so cache states match).
+    let run_active = |addr: SocketAddr, mode: NetMode| -> Vec<Vec<String>> {
+        let conns: Vec<TcpStream> = (0..ACTIVE).map(|_| connect(addr)).collect();
+        let mut w0 = conns[0].try_clone().expect("clone");
+        let mut r0 = BufReader::new(conns[0].try_clone().expect("clone"));
+        let warm = ask(&mut w0, &mut r0, r#"{"workload": "bert-base", "seq": 512}"#);
+        assert!(warm.get("energy_j").is_some(), "warmup must plan");
+
+        if mode == NetMode::Epoll {
+            // Open the ballast, then poll the metrics op until every
+            // connection is accepted — no sleeps-as-synchronization.
+            let ballast: Vec<TcpStream> =
+                (0..BALLAST).map(|_| TcpStream::connect(addr).expect("ballast conn")).collect();
+            let before = os_threads();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                let m = ask(&mut w0, &mut r0, r#"{"op": "metrics"}"#);
+                let accepted = m
+                    .get("metrics")
+                    .and_then(|m| m.get("connections"))
+                    .and_then(|c| c.get("accepted"))
+                    .and_then(Json::as_usize)
+                    .expect("metrics.connections.accepted");
+                if accepted >= BALLAST + ACTIVE {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "ballast never accepted: {accepted}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let after = os_threads();
+            assert_eq!(
+                after, before,
+                "256 idle connections must not grow the process thread count"
+            );
+            // Traffic + response collection below runs with the
+            // ballast still open; `ballast` drops (EOF) at scope end
+            // so the server can finish its drain.
+            let outs = collect_traffic(&conns);
+            drop(ballast);
+            return outs;
+        }
+        collect_traffic(&conns)
+    };
+
+    // 6 workers: the epoll plan queue (workers * 2 = 12 slots) holds
+    // all 4 * 3 pipelined traffic jobs outright, so no request can shed
+    // and diverge from the threads reference on a slow pop.
+    let reference = {
+        let server = start(NetMode::Threads, ACTIVE, 6);
+        let outs = run_active(server.addr, NetMode::Threads);
+        server.handle.join().expect("threads server");
+        outs
+    };
+    let server = start(NetMode::Epoll, BALLAST + ACTIVE, 6);
+    let got = run_active(server.addr, NetMode::Epoll);
+    server.handle.join().expect("epoll server");
+
+    for (c, (r, g)) in reference.iter().zip(&got).enumerate() {
+        assert_eq!(normalized(r), normalized(g), "active conn {c} answers differ");
+    }
+}
+
+/// Pipeline [`STRESS_TRAFFIC`] on every connection, half-close, and
+/// collect each connection's remaining response lines.
+fn collect_traffic(conns: &[TcpStream]) -> Vec<Vec<String>> {
+    for conn in conns {
+        let mut w = conn;
+        w.write_all(STRESS_TRAFFIC.as_bytes()).expect("write traffic");
+        conn.shutdown(Shutdown::Write).expect("half-close");
+    }
+    conns
+        .iter()
+        .map(|conn| {
+            BufReader::new(conn.try_clone().expect("clone"))
+                .lines()
+                .map(|l| l.expect("line"))
+                .collect()
+        })
+        .collect()
+}
+
+/// `{"op": "metrics"}` over TCP reports the active front end, per-op
+/// latency percentiles, outcome counters, engine cache counters and
+/// live connection gauges — in both modes.
+#[test]
+fn metrics_op_reports_percentiles_and_gauges_over_tcp() {
+    let _g = serial_lock();
+    for mode in [NetMode::Threads, NetMode::Epoll] {
+        let server = start(mode, 1, 2);
+        let conn = connect(server.addr);
+        let mut w = conn.try_clone().expect("clone");
+        let mut r = BufReader::new(conn.try_clone().expect("clone"));
+        let plan = r#"{"workload": "bert-base", "seq": 512, "accel": "accel1"}"#;
+        assert!(ask(&mut w, &mut r, plan).get("energy_j").is_some());
+        assert!(ask(&mut w, &mut r, plan).get("energy_j").is_some(), "second hit");
+        let pong = ask(&mut w, &mut r, r#"{"op": "ping"}"#);
+        assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+        let m = ask(&mut w, &mut r, r#"{"op": "metrics"}"#);
+        let m = m.get("metrics").unwrap_or_else(|| panic!("metrics envelope"));
+        // Off-Linux, `epoll` resolves to the threads front end.
+        assert_eq!(m.get("net").and_then(Json::as_str), Some(mode.resolved().name()));
+        let plan_hist = m.get("ops").and_then(|o| o.get("plan")).expect("ops.plan");
+        assert_eq!(plan_hist.get("count").and_then(Json::as_usize), Some(2));
+        let p50 = plan_hist.get("p50_ns").and_then(Json::as_f64).expect("p50");
+        let p99 = plan_hist.get("p99_ns").and_then(Json::as_f64).expect("p99");
+        assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+        // The ping is the only control op recorded so far: the metrics
+        // probe excludes itself from its own report.
+        let control = m.get("ops").and_then(|o| o.get("control")).expect("ops.control");
+        assert_eq!(control.get("count").and_then(Json::as_usize), Some(1));
+        let outcomes = m.get("outcomes").expect("outcomes");
+        assert_eq!(outcomes.get("met").and_then(Json::as_usize), Some(2));
+        assert_eq!(outcomes.get("shed").and_then(Json::as_usize), Some(0));
+        let conns = m.get("connections").expect("connections");
+        assert_eq!(conns.get("accepted").and_then(Json::as_usize), Some(1));
+        assert_eq!(conns.get("open").and_then(Json::as_usize), Some(1));
+        let engine = m.get("engine").expect("engine stats");
+        assert_eq!(
+            engine.get("plan_cache").and_then(|c| c.get("hits")).and_then(Json::as_usize),
+            Some(1),
+            "second identical plan must be a cache hit"
+        );
+        conn.shutdown(Shutdown::Write).expect("half-close");
+        assert_eq!(server.handle.join().unwrap(), 4, "{} mode", mode.name());
+    }
+}
+
+fn program() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_mmee"))
+}
+
+/// The cluster front end answers `{"op": "metrics"}` by merging worker
+/// histograms bucket-wise: cluster-level counts are exact sums and the
+/// per-worker reports ride along for drill-down.
+#[test]
+fn cluster_metrics_merge_worker_histograms_bucket_wise() {
+    let _g = serial_lock();
+    let mut cfg = ClusterConfig::new(program());
+    cfg.workers = 2;
+    cfg.worker_threads = 1;
+    // No health pings: the trace is the only traffic, so every counter
+    // below is exactly attributable.
+    cfg.health = None;
+    let cluster = Cluster::start(cfg).expect("cluster start");
+    // Keys on both shards (ownership pinned by the routing-hash test):
+    // mlp/accel1 -> worker 1, bert-256/accel1 -> worker 0.
+    let trace = concat!(
+        r#"{"workload": "mlp", "accel": "accel1"}"#,
+        "\n",
+        r#"{"workload": "bert-base", "seq": 256, "accel": "accel1"}"#,
+        "\n",
+        r#"{"workload": "bert-base", "seq": 256, "accel": "accel2"}"#,
+        "\n",
+    );
+    let mut out = Vec::new();
+    cluster.route(trace.as_bytes(), &mut out).expect("route plans");
+    // Separate route call: route() completes every in-flight job before
+    // returning, so the metrics snapshot observes all three plans.
+    let mut mout = Vec::new();
+    cluster.route(b"{\"op\": \"metrics\"}\n", &mut mout).expect("route metrics");
+    let line = String::from_utf8(mout).expect("utf8");
+    let j = Json::parse(line.trim()).expect("metrics json");
+    let m = j.get("metrics").expect("metrics envelope");
+    let cluster_m = m.get("cluster").expect("cluster rollup");
+    assert_eq!(cluster_m.get("workers").and_then(Json::as_usize), Some(2));
+    let plan = cluster_m.get("ops").and_then(|o| o.get("plan")).expect("cluster ops.plan");
+    assert_eq!(plan.get("count").and_then(Json::as_usize), Some(3), "{line}");
+    let p50 = plan.get("p50_ns").and_then(Json::as_f64).expect("p50");
+    let p99 = plan.get("p99_ns").and_then(Json::as_f64).expect("p99");
+    assert!(p50 > 0.0 && p99 >= p50, "merged quantiles: p50={p50} p99={p99}");
+    assert_eq!(
+        cluster_m.get("outcomes").and_then(|o| o.get("met")).and_then(Json::as_usize),
+        Some(3)
+    );
+    let workers = m.get("workers").and_then(Json::as_arr).expect("per-worker reports");
+    assert_eq!(workers.len(), 2);
+    let per_worker_plans: usize = workers
+        .iter()
+        .map(|w| {
+            w.get("metrics")
+                .and_then(|m| m.get("ops"))
+                .and_then(|o| o.get("plan"))
+                .and_then(|p| p.get("count"))
+                .and_then(Json::as_usize)
+                .unwrap_or_else(|| panic!("worker report missing plan count: {w}"))
+        })
+        .sum();
+    assert_eq!(per_worker_plans, 3, "sharded plans must sum to the cluster count");
+    for w in workers {
+        let count = w
+            .get("metrics")
+            .and_then(|m| m.get("ops"))
+            .and_then(|o| o.get("plan"))
+            .and_then(|p| p.get("count"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert!(count >= 1, "both shards must have taken traffic: {w}");
+    }
+    cluster.shutdown();
+}
